@@ -1,0 +1,89 @@
+//! RF dynamic-energy deep dive: per-event breakdown from the rust model,
+//! cross-checked against the AOT `rf_energy` artifact (the L1 Pallas
+//! matvec) through the PJRT runtime.
+//!
+//!     cargo run --release --example energy_report [bench]
+
+use malekeh::config::{GpuConfig, Scheme};
+use malekeh::energy::{EnergyModel, EventKind, EVENT_NAMES, NEVENTS};
+use malekeh::harness::Table;
+use malekeh::sim::run_benchmark;
+
+fn main() {
+    let bench = std::env::args().nth(1).unwrap_or_else(|| "rnn_t2".to_string());
+    let schemes = [Scheme::Baseline, Scheme::Malekeh, Scheme::Bow];
+
+    let mut per_scheme = Vec::new();
+    for s in schemes {
+        let mut cfg = GpuConfig::table1_baseline().with_scheme(s);
+        cfg.num_sms = 2;
+        let stats = run_benchmark(&cfg, &bench, 2);
+        let model = EnergyModel::for_config(&cfg);
+        per_scheme.push((s, stats, model));
+    }
+
+    // per-event breakdown table
+    let mut t = Table::new(
+        &format!("RF energy breakdown for `{bench}` (relative units)"),
+        &["event", "baseline", "malekeh", "bow"],
+    );
+    for ev in 0..NEVENTS {
+        let kind = [
+            EventKind::BankRead,
+            EventKind::BankWrite,
+            EventKind::CcuRead,
+            EventKind::CcuWrite,
+            EventKind::XbarTransfer,
+            EventKind::ArbiterOp,
+            EventKind::OctOp,
+            EventKind::LeakProxy,
+        ][ev];
+        let vals: Vec<f64> = per_scheme
+            .iter()
+            .map(|(_, st, m)| st.energy.get(kind) as f64 * m.costs()[ev])
+            .collect();
+        t.row_f(EVENT_NAMES[ev], &vals, 0);
+    }
+    let totals: Vec<f64> = per_scheme
+        .iter()
+        .map(|(_, st, m)| m.total(&st.energy))
+        .collect();
+    t.row_f("TOTAL", &totals, 0);
+    t.print();
+    println!(
+        "normalised: baseline 1.000, malekeh {:.3}, bow {:.3}",
+        totals[1] / totals[0],
+        totals[2] / totals[0]
+    );
+
+    // cross-check through the AOT artifact
+    match malekeh::runtime::Runtime::open_default() {
+        Ok(mut rt) => {
+            let rows = rt.manifest.energy_rows;
+            let mut counts = vec![0f32; rows * NEVENTS];
+            for (i, (_, st, _)) in per_scheme.iter().enumerate() {
+                counts[i * NEVENTS..(i + 1) * NEVENTS]
+                    .copy_from_slice(&st.energy.as_f32_row());
+            }
+            // artifact applies ONE cost vector; evaluate with each scheme's
+            // costs and read back its own row
+            let mut artifact_totals = Vec::new();
+            for (i, (_, _, model)) in per_scheme.iter().enumerate() {
+                let (energy, _) = rt
+                    .rf_energy(&counts, &model.costs_f32())
+                    .expect("rf_energy artifact");
+                artifact_totals.push(energy[i] as f64);
+            }
+            println!("\nPJRT rf_energy artifact cross-check:");
+            for ((s, _, _), (rust_t, art_t)) in per_scheme
+                .iter()
+                .zip(totals.iter().zip(artifact_totals.iter()))
+            {
+                let rel = (rust_t - art_t).abs() / rust_t.max(1.0);
+                println!("  {s:<10} rust {rust_t:.0} vs artifact {art_t:.0} (rel err {rel:.2e})");
+                assert!(rel < 1e-3, "artifact/model divergence");
+            }
+        }
+        Err(e) => println!("(artifacts not built; skipping PJRT cross-check: {e})"),
+    }
+}

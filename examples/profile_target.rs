@@ -1,0 +1,9 @@
+//! Profiling helper for the §Perf pass: a fixed Malekeh/kmeans workload
+//! repeated 5x, used as the `perf record` target (see EXPERIMENTS.md §Perf).
+use malekeh::config::{GpuConfig, Scheme};
+use malekeh::sim::run_benchmark;
+fn main() {
+    let mut cfg = GpuConfig::table1_baseline().with_scheme(Scheme::Malekeh);
+    cfg.num_sms = 1;
+    for _ in 0..5 { run_benchmark(&cfg, "kmeans", 2); }
+}

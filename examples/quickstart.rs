@@ -1,0 +1,55 @@
+//! Quickstart: simulate one benchmark under the baseline and under Malekeh,
+//! and print the comparison the paper is about.
+//!
+//!     cargo run --release --example quickstart [bench]
+
+use malekeh::config::{GpuConfig, Scheme};
+use malekeh::energy::EnergyModel;
+use malekeh::sim::run_benchmark;
+
+fn main() {
+    let bench = std::env::args().nth(1).unwrap_or_else(|| "kmeans".to_string());
+
+    // Table I baseline config, scaled to 2 SMs for a fast first run.
+    let mut base_cfg = GpuConfig::table1_baseline();
+    base_cfg.num_sms = 2;
+    let mal_cfg = base_cfg.clone().with_scheme(Scheme::Malekeh);
+
+    println!("simulating `{bench}` on {} SMs...\n", base_cfg.num_sms);
+    let base = run_benchmark(&base_cfg, &bench, 2);
+    let mal = run_benchmark(&mal_cfg, &bench, 2);
+
+    let base_e = EnergyModel::for_config(&base_cfg).total(&base.energy);
+    let mal_e = EnergyModel::for_config(&mal_cfg).total(&mal.energy);
+
+    println!("{:<28}{:>14}{:>14}", "", "baseline", "malekeh");
+    println!("{:<28}{:>14}{:>14}", "cycles", base.cycles, mal.cycles);
+    println!(
+        "{:<28}{:>14.3}{:>14.3}",
+        "IPC",
+        base.ipc(),
+        mal.ipc()
+    );
+    println!(
+        "{:<28}{:>14}{:>14}",
+        "RF bank reads", base.rf_bank_reads, mal.rf_bank_reads
+    );
+    println!(
+        "{:<28}{:>14.1}{:>14.1}",
+        "RF cache hit ratio (%)",
+        base.rf_hit_ratio() * 100.0,
+        mal.rf_hit_ratio() * 100.0
+    );
+    println!(
+        "{:<28}{:>14.0}{:>14.0}",
+        "RF dynamic energy (rel)", base_e, mal_e
+    );
+    println!();
+    println!(
+        "Malekeh: {:+.1}% IPC, {:.1}% of bank reads eliminated, {:+.1}% RF energy",
+        (mal.ipc() / base.ipc() - 1.0) * 100.0,
+        mal.bank_read_reduction_vs(&base) * 100.0,
+        (mal_e / base_e - 1.0) * 100.0
+    );
+    println!("(paper, 10-SM average over Table II: +6.1% IPC, 46.4% fewer bank reads, -28.3% energy)");
+}

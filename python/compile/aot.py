@@ -1,0 +1,126 @@
+"""AOT pipeline: lower the L2 entry points to HLO *text* artifacts.
+
+HLO text — NOT `lowered.compile()` / serialized HloModuleProto — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the rust side's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/load_hlo and its README).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Also emits `manifest.txt` (artifact name, entry shapes, constants) that the
+rust runtime parses to validate it is feeding the right tensors.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .constants import (
+    ENERGY_NEVENTS,
+    ENERGY_ROWS,
+    GEMM_K,
+    GEMM_M,
+    GEMM_N,
+    HIST_BUCKETS,
+    PROFILE_WARPS,
+    RTHLD,
+    TRACE_LEN,
+    WINDOW,
+    CAP,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+ARTIFACTS = {
+    # name -> (fn, arg specs, human-readable signature for the manifest)
+    "reuse_annotate": (
+        model.annotate,
+        (
+            _spec((PROFILE_WARPS, TRACE_LEN), jnp.int32),
+            _spec((PROFILE_WARPS, TRACE_LEN), jnp.int32),
+            _spec((PROFILE_WARPS, TRACE_LEN), jnp.int32),
+        ),
+        f"ids:i32[{PROFILE_WARPS},{TRACE_LEN}] pos:i32[{PROFILE_WARPS},{TRACE_LEN}]"
+        f" rw:i32[{PROFILE_WARPS},{TRACE_LEN}]"
+        f" -> dist:i32[{PROFILE_WARPS},{TRACE_LEN}]"
+        f" near:i32[{PROFILE_WARPS},{TRACE_LEN}] hist:i32[{HIST_BUCKETS}]",
+    ),
+    "rf_energy": (
+        model.energy,
+        (
+            _spec((ENERGY_ROWS, ENERGY_NEVENTS), jnp.float32),
+            _spec((ENERGY_NEVENTS,), jnp.float32),
+        ),
+        f"counts:f32[{ENERGY_ROWS},{ENERGY_NEVENTS}] costs:f32[{ENERGY_NEVENTS}]"
+        f" -> energy:f32[{ENERGY_ROWS}] normalized:f32[{ENERGY_ROWS}]",
+    ),
+    "mma_gemm": (
+        model.gemm,
+        (
+            _spec((GEMM_M, GEMM_K), jnp.float32),
+            _spec((GEMM_K, GEMM_N), jnp.float32),
+        ),
+        f"x:f32[{GEMM_M},{GEMM_K}] y:f32[{GEMM_K},{GEMM_N}]"
+        f" -> c:f32[{GEMM_M},{GEMM_N}]",
+    ),
+}
+
+
+def build(out_dir: str, only=None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = [
+        "# malekeh AOT artifact manifest (parsed by rust/src/runtime/manifest.rs)",
+        f"rthld={RTHLD}",
+        f"window={WINDOW}",
+        f"cap={CAP}",
+        f"profile_warps={PROFILE_WARPS}",
+        f"trace_len={TRACE_LEN}",
+        f"hist_buckets={HIST_BUCKETS}",
+        f"energy_rows={ENERGY_ROWS}",
+        f"energy_events={ENERGY_NEVENTS}",
+    ]
+    for name, (fn, specs, sig) in ARTIFACTS.items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"artifact={name}.hlo.txt :: {sig}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(out_dir, 'manifest.txt')}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None, choices=list(ARTIFACTS))
+    # kept for the scaffold Makefile's `--out ../artifacts/model.hlo.txt` shape
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = args.out_dir if args.out is None else os.path.dirname(args.out)
+    build(out_dir, args.only)
+
+
+if __name__ == "__main__":
+    main()

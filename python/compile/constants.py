@@ -1,0 +1,58 @@
+"""Shared constants between the compile path (L1/L2) and the rust side.
+
+The rust runtime mirrors these in `rust/src/runtime/manifest.rs`; aot.py also
+emits `artifacts/manifest.txt` so the two can never silently diverge.
+"""
+
+# --- Reuse-distance annotation (paper §III-A) -------------------------------
+# Binary approximation threshold: reuse distances (in dynamic instructions)
+# strictly greater than RTHLD are "far", otherwise "near". The paper found 12
+# empirically best for its benchmark set.
+RTHLD = 12
+
+# Forward-scan window of the Pallas kernel, in *accesses*: a reuse farther
+# than WINDOW accesses ahead is reported as CAP. Worst case is tensor-core
+# code at 8 operands/instruction: 96 accesses = 12 instructions = RTHLD, so
+# a capped distance is always genuinely "far" and the binary answer is
+# exact.
+WINDOW = 96
+
+# Distance value meaning "no reuse found within WINDOW" (always far).
+CAP = 255
+
+# Marker for a value that is redefined (written) before any read: dead, no
+# reuse. Treated as far by the annotation; excluded from Fig-1 histograms
+# ("register values used at least once").
+DEAD = -2
+
+# AOT shapes for the reuse-annotation artifact: [PROFILE_WARPS, TRACE_LEN]
+# padded access streams (id < 0 = padding).
+PROFILE_WARPS = 8
+TRACE_LEN = 2048
+
+# Fig-1 histogram buckets over reuse distance d (instructions):
+# d==1, d==2, d==3, 4<=d<=10, d>10   (paper's Fig. 1 x-axis).
+HIST_BUCKETS = 5
+
+# --- RF dynamic-energy model (paper §V, AccelWattch-derived) ----------------
+# Event kinds, in artifact column order. Mirrored by rust energy::EventKind.
+ENERGY_EVENTS = [
+    "bank_read",      # read of one 128B operand from an RF bank
+    "bank_write",     # write of one 128B operand to an RF bank
+    "ccu_read",       # operand served from a CCU/BOC/RFC cache entry
+    "ccu_write",      # operand written into a cache entry
+    "xbar_transfer",  # crossbar traversal bank -> collector
+    "arbiter_op",     # arbiter decision
+    "oct_op",         # collector bookkeeping (tag check, OCT update)
+    "leak_proxy",     # per-cycle structure-size proxy (relative)
+]
+ENERGY_NEVENTS = len(ENERGY_EVENTS)
+ENERGY_ROWS = 32  # max benchmarks per energy-model batch
+
+# --- Tensor-core workload GEMM (Deepbench stand-in) --------------------------
+GEMM_M = 256
+GEMM_N = 256
+GEMM_K = 256
+GEMM_BM = 128
+GEMM_BN = 128
+GEMM_BK = 128

@@ -1,0 +1,35 @@
+"""L1 Pallas kernel: RF dynamic-energy evaluation (event-count matvec).
+
+The AccelWattch-style RF energy model is E[b] = sum_e counts[b, e] *
+cost[e] over per-benchmark event counts. Tiny, but kept as a Pallas kernel
+so the whole compiler-side analysis pipeline lowers into a single HLO
+artifact the rust runtime executes. One grid step per row block; counts and
+costs live in VMEM (32×8 and 8 f32 — trivially resident).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _energy_kernel(counts_ref, costs_ref, energy_ref):
+    counts = counts_ref[...]  # [B, E]
+    costs = costs_ref[...]    # [1, E] (kept 2D for TPU-friendly layout)
+    energy_ref[...] = jnp.sum(counts * costs, axis=1, keepdims=True)
+
+
+@jax.jit
+def rf_energy(counts, costs):
+    """Per-benchmark RF dynamic energy.
+
+    counts: [B, E] f32 event counts; costs: [E] f32 per-event energy.
+    Returns [B] f32 total energy.
+    """
+    b, e = counts.shape
+    assert costs.shape == (e,)
+    out = pl.pallas_call(
+        _energy_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        interpret=True,
+    )(counts.astype(jnp.float32), costs.reshape(1, e).astype(jnp.float32))
+    return out[:, 0]

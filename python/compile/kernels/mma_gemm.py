@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: tiled MXU-shaped GEMM — the tensor-core workload.
+
+The paper studies register traffic of Turing HMMA kernels (Deepbench). On
+TPU the same insight — *accumulator fragments have near reuse across the
+K-loop, A/B fragments stream with far reuse* — is expressed spatially by
+the BlockSpec schedule below:
+
+- the C accumulator block (BM×BN f32) stays resident in VMEM across the
+  whole K grid dimension (its index_map ignores `k`): this is the "near
+  reuse kept in the RF cache" decision, made at compile time;
+- the A (BM×BK) and B (BK×BN) blocks stream HBM→VMEM once per K step and
+  are never revisited: "far reuse, do not cache".
+
+The Deepbench trace generators in `rust/src/trace/` emit register access
+patterns that mirror exactly this allocation (see DESIGN.md §7), so the
+simulated SASS stream and this kernel describe the same computation.
+
+VMEM footprint at the default BM=BN=BK=128 (f32): C 64 KB + A 64 KB +
+B 64 KB = 192 KB single-buffered (< 1 MB with double buffering), safely
+inside a TPU core's ~16 MB VMEM; the MXU sees full 128×128 tiles.
+
+interpret=True for CPU PJRT; numerics validated against ref.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..constants import GEMM_BK, GEMM_BM, GEMM_BN
+
+
+def _gemm_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """Grid (m, n, k): o block revisited across k, so it acts as the
+    VMEM-resident accumulator (near reuse)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def mma_gemm(x, y, *, bm: int = GEMM_BM, bn: int = GEMM_BN, bk: int = GEMM_BK):
+    """C = X @ Y with an MXU-shaped block schedule.
+
+    X: [M, K], Y: [K, N], f32 or bf16 (accumulation always f32).
+    M, N, K must be multiples of the block sizes.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims differ: {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{n},{k}) not divisible by blocks ({bm},{bn},{bk})"
+    )
+    nk = k // bk
+    kernel = functools.partial(_gemm_kernel, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            # A block: row follows i, streams along k (far reuse).
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            # B block: column follows j, streams along k (far reuse).
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        # C block: ignores k — VMEM-resident accumulator (near reuse).
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+    return out

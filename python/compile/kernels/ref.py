@@ -1,0 +1,80 @@
+"""Pure-jnp/numpy oracles for the Pallas kernels — the correctness anchors.
+
+Deliberately written in the most obvious way possible (quadratic scans,
+direct matmul) so that pytest comparisons against the kernels are a real
+signal, not two copies of the same trick.
+"""
+
+import numpy as np
+
+from ..constants import CAP, DEAD, RTHLD, WINDOW
+
+
+def reuse_distances_ref(ids, pos, rw, window: int = WINDOW, cap: int = CAP):
+    """O(W·L·window) scalar reference of kernels.reuse.reuse_distances."""
+    ids = np.asarray(ids)
+    pos = np.asarray(pos)
+    rw = np.asarray(rw)
+    w, l = ids.shape
+    out = np.full((w, l), -1, dtype=np.int32)
+    for r in range(w):
+        for i in range(l):
+            if ids[r, i] < 0:
+                continue
+            d = cap
+            for j in range(i + 1, min(i + window + 1, l)):
+                if ids[r, j] == ids[r, i]:
+                    if rw[r, j] == 1:
+                        d = min(max(int(pos[r, j]) - int(pos[r, i]), 0), cap)
+                    else:
+                        d = DEAD  # redefined before any read
+                    break
+            out[r, i] = d
+    return out
+
+
+def binarize_ref(dist, rthld: int = RTHLD, cap: int = CAP):
+    """near=1 / far=0 bit per access; dead values (DEAD) are far; padding
+    (-1) stays -1."""
+    dist = np.asarray(dist)
+    near = ((dist >= 0) & (dist <= rthld)).astype(np.int32)
+    out = np.where(dist == DEAD, 0, near)
+    return np.where(dist == -1, -1, out)
+
+
+def histogram_ref(dist):
+    """Fig-1 buckets over valid reuses: [d<=1, d==2, d==3, 4<=d<=10, d>10].
+
+    d==0 (reuse within the same dynamic instruction) folds into the first
+    bucket. Accesses with no observed reuse inside the window (dist == CAP)
+    count in the >10 bucket (any such reuse is certainly >10 instructions
+    away); dead values (DEAD) and padding are excluded — the paper's Fig 1
+    plots values "used at least once".
+    """
+    dist = np.asarray(dist)
+    valid = dist >= 0
+    d = dist[valid]
+    return np.array(
+        [
+            int((d <= 1).sum()),
+            int((d == 2).sum()),
+            int((d == 3).sum()),
+            int(((d >= 4) & (d <= 10)).sum()),
+            int((d > 10).sum()),
+        ],
+        dtype=np.int32,
+    )
+
+
+def gemm_ref(x, y):
+    """Direct f32 matmul reference."""
+    return np.matmul(
+        np.asarray(x, dtype=np.float32), np.asarray(y, dtype=np.float32)
+    )
+
+
+def rf_energy_ref(counts, costs):
+    """E[b] = sum_e counts[b, e] * costs[e]."""
+    return (np.asarray(counts, np.float32) * np.asarray(costs, np.float32)).sum(
+        axis=1
+    )

@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: forward register reuse-distance annotation.
+
+This is the compute hot-spot of the paper's *compiler* contribution
+(§III-A): given a per-warp stream of register accesses (one row per
+profiled warp), compute for every access the distance — in dynamic
+*instructions* — to the next access of the same register, then binarise it
+against RTHLD into the near/far bit the hardware consumes.
+
+Value semantics: a reuse is the next *read* of the register. If the first
+following access is a *write* (redefinition), the current value is dead —
+reported as DEAD and treated as far by the annotation (caching a dying
+value is pure pollution; the paper's Fig 1 likewise counts only "register
+values used at least once").
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's pass runs
+over SASS traces on a CPU; here it is expressed as a data-parallel TPU
+kernel. Each grid step owns one warp's access row resident in VMEM
+(3 × TRACE_LEN × 4B = 24 KB per row — far below VMEM capacity) and performs
+a windowed forward scan: WINDOW shifted compares instead of an O(L²)
+all-pairs table, which would need L²×4B = 16 MB and not fit VMEM. Any reuse
+beyond WINDOW accesses is ≥ RTHLD instructions away and therefore *far*, so
+capping preserves the binary answer exactly.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are validated against ref.py by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..constants import CAP, DEAD, WINDOW
+
+
+def _reuse_kernel(ids_ref, pos_ref, rw_ref, dist_ref, *, window: int, cap: int):
+    """One warp row: forward reuse distance per access.
+
+    ids_ref:  [1, L] int32 register id per access, -1 for padding.
+    pos_ref:  [1, L] int32 dynamic-instruction index of each access.
+    rw_ref:   [1, L] int32 access type (1 = read, 0 = write).
+    dist_ref: [1, L] int32 out; distance to the next read of the same
+              register; DEAD if the register is redefined first; cap if no
+              access within `window`; -1 on padding lanes.
+    """
+    ids = ids_ref[0, :]
+    pos = pos_ref[0, :]
+    rw = rw_ref[0, :]
+    n = ids.shape[0]
+    lane = jax.lax.iota(jnp.int32, n)
+
+    best = jnp.full((n,), cap, dtype=jnp.int32)
+    found = jnp.zeros((n,), dtype=jnp.bool_)
+    # Static unroll: `window` shifted compares. Each iteration is a pure
+    # vector op over the row; on TPU this maps onto the VPU with the row in
+    # VMEM, no gathers, no data-dependent control flow.
+    for k in range(1, window + 1):
+        ids_k = jnp.roll(ids, -k)
+        pos_k = jnp.roll(pos, -k)
+        rw_k = jnp.roll(rw, -k)
+        in_row = lane + k < n
+        match = in_row & (ids_k == ids) & (ids >= 0)
+        d_read = jnp.clip(pos_k - pos, 0, cap).astype(jnp.int32)
+        d = jnp.where(rw_k == 1, d_read, DEAD)  # write first -> value dead
+        best = jnp.where(match & ~found, d, best)
+        found = found | match
+    dist_ref[0, :] = jnp.where(ids >= 0, best, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "cap"))
+def reuse_distances(ids, pos, rw, *, window: int = WINDOW, cap: int = CAP):
+    """Forward reuse distances for a [W, L] batch of access streams.
+
+    Grid = one program per warp row; the BlockSpec pins a full row in VMEM.
+    Returns [W, L] int32 distances (cap = none-within-window, DEAD = value
+    redefined before any read, -1 = padding).
+    """
+    w, l = ids.shape
+    assert pos.shape == (w, l) and rw.shape == (w, l)
+    kernel = functools.partial(_reuse_kernel, window=window, cap=cap)
+    return pl.pallas_call(
+        kernel,
+        grid=(w,),
+        in_specs=[
+            pl.BlockSpec((1, l), lambda i: (i, 0)),
+            pl.BlockSpec((1, l), lambda i: (i, 0)),
+            pl.BlockSpec((1, l), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, l), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((w, l), jnp.int32),
+        interpret=True,
+    )(ids.astype(jnp.int32), pos.astype(jnp.int32), rw.astype(jnp.int32))

@@ -1,0 +1,62 @@
+"""L2 JAX model: the compiler-side analysis pipeline, composed from the L1
+Pallas kernels. These are the functions aot.py lowers to HLO text for the
+rust runtime; Python never runs after `make artifacts`.
+
+Entry points (fixed AOT shapes in constants.py):
+
+  annotate(ids, pos)      -> (dist, near, hist)   — reuse annotation (§III-A)
+  energy(counts, costs)   -> (energy, normalized) — AccelWattch-style RF model
+  gemm(x, y)              -> (c,)                 — tensor-core workload
+"""
+
+import jax.numpy as jnp
+
+from .constants import RTHLD
+from .kernels.energy import rf_energy
+from .kernels.mma_gemm import mma_gemm
+from .kernels.reuse import reuse_distances
+
+
+def annotate(ids, pos, rw):
+    """Full reuse annotation of a profiled trace batch.
+
+    ids, pos, rw: [W, L] int32 (id < 0 = padding; rw 1 = read, 0 = write).
+    Returns:
+      dist: [W, L] int32 forward reuse distance (CAP-capped, DEAD = value
+            redefined before read, -1 pad),
+      near: [W, L] int32 near(1)/far(0) bit (dead = far, -1 pad),
+      hist: [5] int32 Fig-1 buckets (d<=1, ==2, ==3, 4..10, >10) over all
+            warps, live values only.
+    """
+    dist = reuse_distances(ids, pos, rw)
+    valid = dist >= 0  # excludes padding (-1) and dead values (DEAD)
+    pad = ids < 0
+    near = jnp.where(valid, (dist <= RTHLD).astype(jnp.int32), 0)
+    near = jnp.where(pad, -1, near)
+    d = jnp.where(valid, dist, 0)
+    hist = jnp.stack(
+        [
+            jnp.sum(valid & (d <= 1)),
+            jnp.sum(valid & (d == 2)),
+            jnp.sum(valid & (d == 3)),
+            jnp.sum(valid & (d >= 4) & (d <= 10)),
+            jnp.sum(valid & (d > 10)),
+        ]
+    ).astype(jnp.int32)
+    return dist, near, hist
+
+
+def energy(counts, costs):
+    """RF dynamic energy per benchmark and values normalized to row 0.
+
+    counts: [B, E] f32, costs: [E] f32. Row 0 is by convention the baseline
+    configuration; `normalized[b] = energy[b] / energy[0]`.
+    """
+    e = rf_energy(counts, costs)
+    denom = jnp.where(e[0] != 0.0, e[0], 1.0)
+    return e, e / denom
+
+
+def gemm(x, y):
+    """Tensor-core workload GEMM (tuple-wrapped for uniform AOT plumbing)."""
+    return (mma_gemm(x, y),)

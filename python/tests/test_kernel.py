@@ -1,0 +1,205 @@
+"""Kernel-vs-reference correctness: the CORE numeric signal of the compile
+path. Hypothesis sweeps shapes/contents for the reuse kernel and the GEMM."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.constants import CAP, DEAD, WINDOW
+from compile.kernels import ref
+from compile.kernels.energy import rf_energy
+from compile.kernels.mma_gemm import mma_gemm
+from compile.kernels.reuse import reuse_distances
+
+
+def make_stream(rng, w, l, nregs, pad_frac=0.1, read_frac=0.7):
+    """Random access stream: ids in [0, nregs), monotone instruction pos,
+    mixed read/write accesses, trailing padding."""
+    ids = rng.integers(0, nregs, size=(w, l)).astype(np.int32)
+    # positions: accesses grouped ~3 per instruction
+    pos = np.cumsum(rng.integers(0, 2, size=(w, l)), axis=1).astype(np.int32)
+    rw = (rng.random(size=(w, l)) < read_frac).astype(np.int32)
+    npad = int(l * pad_frac)
+    if npad:
+        ids[:, l - npad :] = -1
+    return ids, pos, rw
+
+
+def all_reads(ids):
+    return np.ones_like(ids, dtype=np.int32)
+
+
+# ---------------------------------------------------------------- reuse ----
+
+
+class TestReuseKernel:
+    def test_simple_known_answer(self):
+        # ids: r5 reused at distance 2 instructions, r7 never reused
+        ids = np.array([[5, 7, 5, -1]], dtype=np.int32)
+        pos = np.array([[0, 1, 2, 3]], dtype=np.int32)
+        out = np.asarray(reuse_distances(ids, pos, all_reads(ids)))
+        assert out[0, 0] == 2  # r5 -> next use 2 instructions later
+        assert out[0, 1] == CAP  # r7 never reused within window
+        assert out[0, 2] == CAP
+        assert out[0, 3] == -1  # padding
+
+    def test_redefinition_marks_value_dead(self):
+        # r5 read, then WRITTEN before any read -> first access is dead
+        ids = np.array([[5, 5, 5]], dtype=np.int32)
+        pos = np.array([[0, 1, 2]], dtype=np.int32)
+        rw = np.array([[1, 0, 1]], dtype=np.int32)  # read, write, read
+        out = np.asarray(reuse_distances(ids, pos, rw))
+        assert out[0, 0] == DEAD  # killed by the write at pos 1
+        assert out[0, 1] == 1  # the write's value is read at distance 1
+
+    def test_same_instruction_reuse_is_zero(self):
+        ids = np.array([[3, 3]], dtype=np.int32)
+        pos = np.array([[4, 4]], dtype=np.int32)  # same dynamic instruction
+        out = np.asarray(reuse_distances(ids, pos, all_reads(ids)))
+        assert out[0, 0] == 0
+
+    def test_reuse_beyond_window_is_capped(self):
+        l = WINDOW + 8
+        ids = np.full((1, l), 100, dtype=np.int32)
+        ids[0, 1:-1] = np.arange(l - 2)  # middle all distinct
+        pos = np.arange(l, dtype=np.int32).reshape(1, l)
+        out = np.asarray(reuse_distances(ids, pos, all_reads(ids)))
+        # first access's reuse is l-1 > WINDOW accesses away -> capped
+        assert out[0, 0] == CAP
+
+    def test_matches_reference_dense(self):
+        rng = np.random.default_rng(0)
+        ids, pos, rw = make_stream(rng, 4, 96, nregs=12)
+        got = np.asarray(reuse_distances(ids, pos, rw))
+        want = ref.reuse_distances_ref(ids, pos, rw)
+        np.testing.assert_array_equal(got, want)
+
+    def test_matches_reference_sparse_ids(self):
+        rng = np.random.default_rng(1)
+        ids, pos, rw = make_stream(rng, 2, 128, nregs=200)  # few repeats
+        got = np.asarray(reuse_distances(ids, pos, rw))
+        want = ref.reuse_distances_ref(ids, pos, rw)
+        np.testing.assert_array_equal(got, want)
+
+    def test_all_padding_row(self):
+        ids = np.full((2, 16), -1, dtype=np.int32)
+        pos = np.zeros((2, 16), dtype=np.int32)
+        out = np.asarray(reuse_distances(ids, pos, all_reads(ids)))
+        assert (out == -1).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        w=st.integers(1, 4),
+        l=st.integers(8, 160),
+        nregs=st.integers(1, 64),
+        seed=st.integers(0, 2**32 - 1),
+        pad=st.sampled_from([0.0, 0.1, 0.5]),
+    )
+    def test_property_matches_reference(self, w, l, nregs, seed, pad):
+        rng = np.random.default_rng(seed)
+        ids, pos, rw = make_stream(rng, w, l, nregs, pad_frac=pad)
+        got = np.asarray(reuse_distances(ids, pos, rw))
+        want = ref.reuse_distances_ref(ids, pos, rw)
+        np.testing.assert_array_equal(got, want)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1))
+    def test_property_distances_bounded(self, seed):
+        rng = np.random.default_rng(seed)
+        ids, pos, rw = make_stream(rng, 2, 64, 8)
+        out = np.asarray(reuse_distances(ids, pos, rw))
+        valid = out[ids >= 0]
+        assert (((valid >= 0) & (valid <= CAP)) | (valid == DEAD)).all()
+        assert (out[ids < 0] == -1).all()
+
+
+# ----------------------------------------------------------------- gemm ----
+
+
+class TestGemmKernel:
+    @pytest.mark.parametrize(
+        "m,n,k,bm,bn,bk",
+        [
+            (128, 128, 128, 128, 128, 128),  # single block
+            (256, 128, 128, 128, 128, 128),  # grid over m
+            (128, 256, 256, 128, 128, 128),  # grid over n and k
+            (64, 64, 192, 32, 64, 64),       # non-square blocks, 3 k-steps
+        ],
+    )
+    def test_matches_reference_shapes(self, m, n, k, bm, bn, bk):
+        rng = np.random.default_rng(m + n + k)
+        x = rng.standard_normal((m, k), dtype=np.float32)
+        y = rng.standard_normal((k, n), dtype=np.float32)
+        got = np.asarray(mma_gemm(x, y, bm=bm, bn=bn, bk=bk))
+        np.testing.assert_allclose(got, ref.gemm_ref(x, y), rtol=1e-4, atol=1e-4)
+
+    def test_bf16_inputs_accumulate_f32(self):
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(7)
+        x = rng.standard_normal((128, 128)).astype(np.float32)
+        y = rng.standard_normal((128, 128)).astype(np.float32)
+        got = np.asarray(
+            mma_gemm(jnp.asarray(x, jnp.bfloat16), jnp.asarray(y, jnp.bfloat16))
+        )
+        assert got.dtype == np.float32
+        np.testing.assert_allclose(got, ref.gemm_ref(x, y), rtol=5e-2, atol=5e-1)
+
+    def test_identity(self):
+        x = np.eye(128, dtype=np.float32)
+        y = np.arange(128 * 128, dtype=np.float32).reshape(128, 128) / 1e3
+        got = np.asarray(mma_gemm(x, y))
+        np.testing.assert_allclose(got, y, rtol=1e-6)
+
+    def test_shape_mismatch_raises(self):
+        x = np.zeros((128, 128), np.float32)
+        y = np.zeros((64, 128), np.float32)
+        with pytest.raises(AssertionError):
+            mma_gemm(x, y)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        mi=st.integers(1, 2),
+        ni=st.integers(1, 2),
+        ki=st.integers(1, 3),
+        seed=st.integers(0, 2**32 - 1),
+    )
+    def test_property_block_multiples(self, mi, ni, ki, seed):
+        bm = bn = bk = 32
+        m, n, k = mi * bm, ni * bn, ki * bk
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((m, k), dtype=np.float32)
+        y = rng.standard_normal((k, n), dtype=np.float32)
+        got = np.asarray(mma_gemm(x, y, bm=bm, bn=bn, bk=bk))
+        np.testing.assert_allclose(got, ref.gemm_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------- energy ----
+
+
+class TestEnergyKernel:
+    def test_matches_reference(self):
+        rng = np.random.default_rng(3)
+        counts = rng.uniform(0, 1e6, size=(32, 8)).astype(np.float32)
+        costs = rng.uniform(0.1, 10, size=(8,)).astype(np.float32)
+        got = np.asarray(rf_energy(counts, costs))
+        np.testing.assert_allclose(
+            got, ref.rf_energy_ref(counts, costs), rtol=1e-5
+        )
+
+    def test_zero_costs(self):
+        counts = np.ones((4, 8), np.float32)
+        costs = np.zeros((8,), np.float32)
+        assert np.asarray(rf_energy(counts, costs)).sum() == 0.0
+
+    @settings(max_examples=10, deadline=None)
+    @given(b=st.integers(1, 32), e=st.integers(1, 12), seed=st.integers(0, 999))
+    def test_property_shapes(self, b, e, seed):
+        rng = np.random.default_rng(seed)
+        counts = rng.uniform(0, 100, size=(b, e)).astype(np.float32)
+        costs = rng.uniform(0, 5, size=(e,)).astype(np.float32)
+        got = np.asarray(rf_energy(counts, costs))
+        assert got.shape == (b,)
+        np.testing.assert_allclose(
+            got, ref.rf_energy_ref(counts, costs), rtol=1e-5
+        )

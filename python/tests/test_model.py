@@ -1,0 +1,108 @@
+"""L2 model tests: annotation composition, histogram semantics, energy
+normalisation, and AOT lowering (HLO text emission)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.constants import CAP, RTHLD
+from compile.kernels import ref
+
+
+class TestAnnotate:
+    def test_near_far_binarisation(self):
+        # distances: 1 (near), RTHLD (near), RTHLD+1 (far), CAP (far)
+        ids = np.array([[1, 1, 2, 2, 3, 3, 4]], dtype=np.int32)
+        pos = np.array([[0, 1, 2, 2 + RTHLD, 20, 21 + RTHLD, 99]], dtype=np.int32)
+        rw = np.ones_like(ids)
+        dist, near, hist = model.annotate(ids, pos, rw)
+        dist, near = np.asarray(dist), np.asarray(near)
+        assert dist[0, 0] == 1 and near[0, 0] == 1
+        assert dist[0, 2] == RTHLD and near[0, 2] == 1
+        assert dist[0, 4] == RTHLD + 1 and near[0, 4] == 0
+        assert dist[0, 6] == CAP and near[0, 6] == 0
+
+    def test_dead_value_is_far_and_not_in_histogram(self):
+        ids = np.array([[9, 9]], dtype=np.int32)
+        pos = np.array([[0, 5]], dtype=np.int32)
+        rw = np.array([[1, 0]], dtype=np.int32)  # read then redefinition
+        dist, near, hist = model.annotate(ids, pos, rw)
+        assert np.asarray(dist)[0, 0] == -2  # DEAD
+        assert np.asarray(near)[0, 0] == 0  # far
+        # only the write's own (capped) reuse shows up
+        assert np.asarray(hist).sum() == 1
+
+    def test_histogram_matches_ref(self):
+        rng = np.random.default_rng(5)
+        ids = rng.integers(0, 10, size=(3, 64)).astype(np.int32)
+        pos = np.cumsum(rng.integers(0, 2, size=(3, 64)), axis=1).astype(np.int32)
+        rw = (rng.random(size=(3, 64)) < 0.7).astype(np.int32)
+        dist, _, hist = model.annotate(ids, pos, rw)
+        np.testing.assert_array_equal(
+            np.asarray(hist), ref.histogram_ref(np.asarray(dist))
+        )
+
+    def test_padding_ignored_in_histogram(self):
+        ids = np.full((1, 32), -1, dtype=np.int32)
+        pos = np.zeros((1, 32), dtype=np.int32)
+        _, near, hist = model.annotate(ids, pos, np.ones_like(ids))
+        assert np.asarray(hist).sum() == 0
+        assert (np.asarray(near) == -1).all()
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31))
+    def test_property_hist_total_equals_live_accesses(self, seed):
+        rng = np.random.default_rng(seed)
+        ids = rng.integers(-1, 8, size=(2, 48)).astype(np.int32)
+        pos = np.cumsum(rng.integers(0, 2, size=(2, 48)), axis=1).astype(np.int32)
+        rw = (rng.random(size=(2, 48)) < 0.6).astype(np.int32)
+        dist, _, hist = model.annotate(ids, pos, rw)
+        live = int((np.asarray(dist) >= 0).sum())
+        assert np.asarray(hist).sum() == live
+        assert live <= int((ids >= 0).sum())
+
+
+class TestEnergyModel:
+    def test_normalized_row0_is_one(self):
+        rng = np.random.default_rng(11)
+        counts = rng.uniform(1, 100, size=(8, 8)).astype(np.float32)
+        costs = rng.uniform(0.5, 2, size=(8,)).astype(np.float32)
+        e, norm = model.energy(counts, costs)
+        assert abs(float(np.asarray(norm)[0]) - 1.0) < 1e-6
+        np.testing.assert_allclose(
+            np.asarray(e), ref.rf_energy_ref(counts, costs), rtol=1e-5
+        )
+
+    def test_zero_baseline_guard(self):
+        counts = np.zeros((4, 8), np.float32)
+        counts[1] = 1.0
+        costs = np.ones((8,), np.float32)
+        _, norm = model.energy(counts, costs)
+        assert np.isfinite(np.asarray(norm)).all()
+
+
+class TestAotLowering:
+    def test_all_artifacts_lower_to_hlo_text(self, tmp_path):
+        from compile import aot
+
+        aot.build(str(tmp_path))
+        names = {p.name for p in tmp_path.iterdir()}
+        assert {
+            "reuse_annotate.hlo.txt",
+            "rf_energy.hlo.txt",
+            "mma_gemm.hlo.txt",
+            "manifest.txt",
+        } <= names
+        for n in names:
+            if n.endswith(".hlo.txt"):
+                text = (tmp_path / n).read_text()
+                assert text.startswith("HloModule"), f"{n} is not HLO text"
+                assert "ENTRY" in text
+
+    def test_manifest_mentions_constants(self, tmp_path):
+        from compile import aot
+
+        aot.build(str(tmp_path), only=["rf_energy"])
+        manifest = (tmp_path / "manifest.txt").read_text()
+        assert f"rthld={RTHLD}" in manifest
+        assert "rf_energy.hlo.txt" in manifest

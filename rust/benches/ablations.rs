@@ -1,0 +1,24 @@
+//! Ablations for the paper's inline design claims (DESIGN.md §5):
+//! A. CT entries sweet spot at 8 (§III-C)
+//! B. RTHLD = 12 empirically best (§III-A)
+//! C. scaling OCUs 2->8 is the expensive alternative (§I: +7.1% IPC)
+//! D. one filtered write port ~ unbounded (§III-B, §IV-A2)
+use malekeh::harness::{
+    ablation_ct_entries, ablation_ocu_scaling, ablation_rthld, ablation_write_port,
+    ExpOpts, Runner,
+};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut opts = ExpOpts::from_args(&args);
+    if !args.iter().any(|a| a == "--full") {
+        opts.quick = true; // sweeps are wide; default to the quick set
+    }
+    let mut runner = Runner::new(opts);
+    let t0 = std::time::Instant::now();
+    ablation_ct_entries(&mut runner).print();
+    ablation_rthld(&mut runner).print();
+    ablation_ocu_scaling(&mut runner).print();
+    ablation_write_port(&mut runner).print();
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,12 @@
+//! Fig 1: reuse-distance distribution of register values (Rodinia vs
+//! Deepbench). Paper shape: Deepbench shifted right, >40% of its reuses at
+//! distance >10; Rodinia dominated by distances <=3.
+use malekeh::harness::{fig01, ExpOpts};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = ExpOpts::from_args(&args);
+    let t0 = std::time::Instant::now();
+    fig01(&opts).print();
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

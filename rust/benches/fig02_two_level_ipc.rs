@@ -1,0 +1,11 @@
+//! Fig 2 paper shape: sub-core drops ~10-13%, monolithic ~2-4%; hotspot worst (~-50% swRFC).
+use malekeh::harness::{fig02, ExpOpts, Runner};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = ExpOpts::from_args(&args);
+    let mut runner = Runner::new(opts);
+    let t0 = std::time::Instant::now();
+    fig02(&mut runner).print();
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,12 @@
+//! Fig 9: the dynamic-STHLD FSM walking the IPC curve on a workload with
+//! phase changes. Paper shape: STHLD climbs in flat regions, backs off
+//! after the knee, re-converges after each phase change.
+use malekeh::harness::{fig09, ExpOpts};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = ExpOpts::from_args(&args);
+    let t0 = std::time::Instant::now();
+    fig09(&opts).print();
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,11 @@
+//! Fig 12 paper: Malekeh +6.1% avg IPC (max +28.4% rnn_i2, worst -0.8% b+tree); Malekeh_PR beats BOW by ~3.3%.
+use malekeh::harness::{fig12, ExpOpts, Runner};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = ExpOpts::from_args(&args);
+    let mut runner = Runner::new(opts);
+    let t0 = std::time::Instant::now();
+    fig12(&mut runner).print();
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

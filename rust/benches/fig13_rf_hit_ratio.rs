@@ -1,0 +1,11 @@
+//! Fig 13 paper: Malekeh 46.4% avg hit, ~2% below BOW with 12x less storage; Malekeh_PR +28.9% over BOW.
+use malekeh::harness::{fig13, ExpOpts, Runner};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = ExpOpts::from_args(&args);
+    let mut runner = Runner::new(opts);
+    let t0 = std::time::Instant::now();
+    fig13(&mut runner).print();
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,11 @@
+//! Fig 14: L1D hit ratios; lud slightly higher under Malekeh than BOW.
+use malekeh::harness::{fig14, ExpOpts, Runner};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = ExpOpts::from_args(&args);
+    let mut runner = Runner::new(opts);
+    let t0 = std::time::Instant::now();
+    fig14(&mut runner).print();
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,11 @@
+//! Fig 16 paper: Malekeh writes far fewer values into the cache than BOW, and most are reused.
+use malekeh::harness::{fig16, ExpOpts, Runner};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = ExpOpts::from_args(&args);
+    let mut runner = Runner::new(opts);
+    let t0 = std::time::Instant::now();
+    fig16(&mut runner).print();
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,90 @@
+//! §Perf: simulator throughput (L3 hot path) and AOT-artifact execution
+//! latency (L1/L2 path). Run after changes; EXPERIMENTS.md §Perf records
+//! the before/after log.
+
+use std::time::Instant;
+
+use malekeh::config::{GpuConfig, Scheme};
+use malekeh::sim::run_benchmark;
+
+fn sim_throughput(bench: &str, scheme: Scheme, reps: usize) -> (f64, u64) {
+    let mut cfg = GpuConfig::table1_baseline().with_scheme(scheme);
+    cfg.num_sms = 1;
+    let mut best = f64::MAX;
+    let mut instr = 0;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let stats = run_benchmark(&cfg, bench, 2);
+        let dt = t0.elapsed().as_secs_f64();
+        best = best.min(dt);
+        instr = stats.instructions;
+    }
+    (instr as f64 / best / 1e6, instr)
+}
+
+fn main() {
+    println!("== §Perf: hot-path microbenchmarks ==");
+    println!("{:<44}{:>14}{:>12}", "workload", "Minstr/s", "instrs");
+    for (bench, scheme) in [
+        ("gemm_t1", Scheme::Baseline),
+        ("gemm_t1", Scheme::Malekeh),
+        ("gemm_t1", Scheme::Bow),
+        ("hotspot", Scheme::Malekeh),
+        ("kmeans", Scheme::Malekeh),
+        ("bfs", Scheme::Rfc),
+    ] {
+        let (mips, instr) = sim_throughput(bench, scheme, 3);
+        println!(
+            "{:<44}{:>14.2}{:>12}",
+            format!("sim {bench}/{scheme}"),
+            mips,
+            instr
+        );
+    }
+
+    // PJRT artifact path (compile once, then measure execution)
+    match malekeh::runtime::Runtime::open_default() {
+        Ok(mut rt) => {
+            let w = rt.manifest.profile_warps;
+            let l = rt.manifest.trace_len;
+            let bench = malekeh::trace::find("gemm_t1").unwrap();
+            let trace = malekeh::trace::KernelTrace::generate(bench, w, 7);
+            let (ids, pos, rw) = trace.access_streams(w, l);
+            rt.annotate(&ids, &pos, &rw).expect("warmup"); // compile+warm
+            let t0 = Instant::now();
+            let reps = 5;
+            for _ in 0..reps {
+                rt.annotate(&ids, &pos, &rw).expect("annotate");
+            }
+            let per = t0.elapsed().as_secs_f64() / reps as f64;
+            println!(
+                "{:<44}{:>11.1} ms{:>12}",
+                "pjrt reuse_annotate (8x2048)",
+                per * 1e3,
+                w * l
+            );
+            // rust engine on identical input, for the speedup column
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                for row in 0..w {
+                    let s = row * l;
+                    malekeh::compiler::windowed_reuse_distances(
+                        &ids[s..s + l],
+                        &pos[s..s + l],
+                        &rw[s..s + l],
+                        malekeh::compiler::WINDOW,
+                        malekeh::compiler::CAP,
+                    );
+                }
+            }
+            let per_rust = t0.elapsed().as_secs_f64() / reps as f64;
+            println!(
+                "{:<44}{:>11.1} ms{:>12}",
+                "rust reuse engine (same input)",
+                per_rust * 1e3,
+                w * l
+            );
+        }
+        Err(e) => println!("pjrt path skipped (artifacts not built): {e}"),
+    }
+}

@@ -1,0 +1,120 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `malekeh <command> [positional] [--flag] [--key value] [-s k=v]...`
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    /// Subcommand name.
+    pub command: String,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+    /// `--key value` options.
+    pub options: HashMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+    /// `-s key=value` config overrides, in order.
+    pub overrides: Vec<(String, String)>,
+}
+
+impl Cli {
+    /// Parse an argv slice (without the program name).
+    pub fn parse(args: &[String]) -> Result<Cli, String> {
+        let mut cli = Cli::default();
+        let mut it = args.iter().peekable();
+        cli.command = it.next().cloned().unwrap_or_default();
+        while let Some(a) = it.next() {
+            if a == "-s" || a == "--set" {
+                let kv = it
+                    .next()
+                    .ok_or_else(|| format!("{a} requires key=value"))?;
+                let eq = kv
+                    .find('=')
+                    .ok_or_else(|| format!("bad override {kv:?}, want key=value"))?;
+                cli.overrides
+                    .push((kv[..eq].to_string(), kv[eq + 1..].to_string()));
+            } else if let Some(name) = a.strip_prefix("--") {
+                // value-taking option if the next token is not an option
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") && !v.starts_with("-s") => {
+                        cli.options
+                            .insert(name.to_string(), it.next().unwrap().clone());
+                    }
+                    _ => cli.flags.push(name.to_string()),
+                }
+            } else {
+                cli.positional.push(a.clone());
+            }
+        }
+        Ok(cli)
+    }
+
+    /// Flag present?
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Option value or default.
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.options.get(name).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    /// Parsed numeric option.
+    pub fn opt_num<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| format!("bad value for --{name}: {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Cli {
+        let args: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Cli::parse(&args).unwrap()
+    }
+
+    #[test]
+    fn parses_command_and_positional() {
+        let c = p("simulate hotspot");
+        assert_eq!(c.command, "simulate");
+        assert_eq!(c.positional, vec!["hotspot"]);
+    }
+
+    #[test]
+    fn parses_options_flags_overrides() {
+        let c = p("simulate hotspot --scheme malekeh --verbose -s rthld=7 -s num_sms=2");
+        assert_eq!(c.opt_or("scheme", "baseline"), "malekeh");
+        assert!(c.has_flag("verbose"));
+        assert_eq!(
+            c.overrides,
+            vec![("rthld".into(), "7".into()), ("num_sms".into(), "2".into())]
+        );
+    }
+
+    #[test]
+    fn option_followed_by_flag_is_flag() {
+        let c = p("fig 12 --quick --sms 3");
+        assert!(c.has_flag("quick"));
+        assert_eq!(c.opt_num::<usize>("sms", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn bad_override_rejected() {
+        let args: Vec<String> = vec!["x".into(), "-s".into(), "noequals".into()];
+        assert!(Cli::parse(&args).is_err());
+    }
+
+    #[test]
+    fn opt_num_errors_on_garbage() {
+        let c = p("x --sms abc");
+        assert!(c.opt_num::<usize>("sms", 1).is_err());
+    }
+}

@@ -1,0 +1,410 @@
+//! The paper's compiler pass (§III-A): reuse-distance profiling and binary
+//! near/far annotation.
+//!
+//! The paper profiles a small fraction of warps offline, votes per static
+//! operand on whether its reuse is most often near or far (vs RTHLD), and
+//! encodes one bit per operand in the binary. Here the "static operand"
+//! signature is `(opcode, operand slot, is_dst, register)` — a key that
+//! transfers across warps even when divergence makes their dynamic streams
+//! differ (DESIGN.md §2 documents this substitution for synthetic traces).
+//!
+//! Two interchangeable distance engines exist:
+//! - [`windowed_reuse_distances`] — pure rust, O(n);
+//! - the AOT `reuse_annotate` artifact (L1 Pallas kernel) executed through
+//!   [`crate::runtime`].
+//! Both implement identical windowed semantics and are cross-checked by a
+//! parity test. The profiler below uses the rust engine; the end-to-end
+//! example routes through the artifact.
+
+use std::collections::HashMap;
+
+use crate::isa::Instruction;
+use crate::trace::KernelTrace;
+
+/// Window (in accesses) of the forward scan; must match
+/// `python/compile/constants.py::WINDOW`.
+pub const WINDOW: usize = 96;
+/// "No reuse found within the window" marker; must match python `CAP`.
+pub const CAP: i32 = 255;
+/// Value redefined before any read — dead, never cached; must match
+/// python `DEAD`.
+pub const DEAD: i32 = -2;
+/// Default binary threshold (§III-A; Table I text: 12).
+pub const RTHLD: u32 = 12;
+/// Fig-1 histogram buckets (d<=1, ==2, ==3, 4..=10, >10).
+pub const HIST_BUCKETS: usize = 5;
+
+/// Forward reuse distance per access over a flattened `(ids, pos, rw)`
+/// stream row — semantics identical to the Pallas kernel: the first
+/// re-occurrence of the same id within `window` accesses decides the
+/// outcome. If it is a read, the distance in instructions (`pos` delta,
+/// clipped to `[0, cap]`); if it is a write, the value is dead (`DEAD`).
+/// `cap` when no occurrence in the window; `-1` on padding.
+pub fn windowed_reuse_distances(
+    ids: &[i32],
+    pos: &[i32],
+    rw: &[i32],
+    window: usize,
+    cap: i32,
+) -> Vec<i32> {
+    assert_eq!(ids.len(), pos.len());
+    assert_eq!(ids.len(), rw.len());
+    let n = ids.len();
+    let mut out = vec![-1i32; n];
+    // last unresolved access index per register id
+    let mut last: HashMap<i32, usize> = HashMap::new();
+    for i in 0..n {
+        let id = ids[i];
+        if id < 0 {
+            continue;
+        }
+        if let Some(&j) = last.get(&id) {
+            // the kernel reports the FIRST occurrence within `window`
+            out[j] = if i - j > window {
+                cap
+            } else if rw[i] == 1 {
+                (pos[i] - pos[j]).clamp(0, cap)
+            } else {
+                DEAD
+            };
+        }
+        last.insert(id, i);
+        out[i] = cap; // provisional: resolved by the next occurrence
+    }
+    out
+}
+
+/// Per-access exact reuse distances for one warp stream, flattened in the
+/// same operand order as [`KernelTrace::access_streams`] (sources = reads,
+/// destinations = writes). Convenience for the profiler and Fig 1.
+pub fn stream_distances(stream: &[Instruction], window: usize, cap: i32) -> Vec<i32> {
+    let mut ids = Vec::with_capacity(stream.len() * 3);
+    let mut pos = Vec::with_capacity(stream.len() * 3);
+    let mut rw = Vec::with_capacity(stream.len() * 3);
+    for (ii, instr) in stream.iter().enumerate() {
+        for &r in instr.sources() {
+            ids.push(r as i32);
+            pos.push(ii as i32);
+            rw.push(1);
+        }
+        for &r in instr.dests() {
+            ids.push(r as i32);
+            pos.push(ii as i32);
+            rw.push(0);
+        }
+    }
+    windowed_reuse_distances(&ids, &pos, &rw, window, cap)
+}
+
+/// Fig-1 histogram buckets over all warps of a trace:
+/// `[d<=1, d==2, d==3, 4<=d<=10, d>10]` (cap counts as >10).
+pub fn reuse_histogram(trace: &KernelTrace) -> [u64; HIST_BUCKETS] {
+    let mut h = [0u64; HIST_BUCKETS];
+    for w in &trace.warps {
+        for d in stream_distances(w, WINDOW, CAP) {
+            if d < 0 {
+                continue;
+            }
+            let b = match d {
+                0 | 1 => 0,
+                2 => 1,
+                3 => 2,
+                4..=10 => 3,
+                _ => 4,
+            };
+            h[b] += 1;
+        }
+    }
+    h
+}
+
+/// Static-operand signature the votes are keyed by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct SigKey {
+    op: u8,
+    slot: u8,
+    is_dst: bool,
+    reg: u8,
+}
+
+fn sig(instr: &Instruction, slot: usize, is_dst: bool) -> SigKey {
+    SigKey {
+        op: instr.op as u8,
+        slot: slot as u8,
+        is_dst,
+        reg: if is_dst {
+            instr.dests()[slot]
+        } else {
+            instr.sources()[slot]
+        },
+    }
+}
+
+/// Profiling result: per static operand, how often its reuse was near/far.
+#[derive(Debug, Default, Clone)]
+pub struct ReuseProfile {
+    votes: HashMap<SigKey, (u32, u32)>, // (near, far)
+    /// Warps profiled.
+    pub warps_profiled: usize,
+    /// Accesses observed.
+    pub accesses: u64,
+}
+
+impl ReuseProfile {
+    /// Majority vote for a signature; `None` if never observed.
+    fn is_near(&self, key: &SigKey) -> Option<bool> {
+        self.votes.get(key).map(|(n, f)| n >= f)
+    }
+
+    /// Number of distinct static operands observed.
+    pub fn static_operands(&self) -> usize {
+        self.votes.len()
+    }
+}
+
+/// Profile the first `profile_warps` warps of `trace` (partial profiling,
+/// §III-A: "profiling only a few warps produces accurate results").
+pub fn profile(trace: &KernelTrace, profile_warps: usize, rthld: u32) -> ReuseProfile {
+    let mut p = ReuseProfile::default();
+    let n = profile_warps.min(trace.warps.len());
+    p.warps_profiled = n;
+    for w in 0..n {
+        let stream = &trace.warps[w];
+        let dists = stream_distances(stream, WINDOW, CAP);
+        let mut k = 0usize;
+        for instr in stream.iter() {
+            for (slot, _r) in instr.sources().iter().enumerate() {
+                vote(&mut p, sig(instr, slot, false), dists[k], rthld);
+                k += 1;
+            }
+            for (slot, _r) in instr.dests().iter().enumerate() {
+                vote(&mut p, sig(instr, slot, true), dists[k], rthld);
+                k += 1;
+            }
+        }
+    }
+    p
+}
+
+fn vote(p: &mut ReuseProfile, key: SigKey, dist: i32, rthld: u32) {
+    if dist == -1 {
+        return; // padding
+    }
+    p.accesses += 1;
+    let e = p.votes.entry(key).or_insert((0, 0));
+    if dist >= 0 && dist as u32 <= rthld {
+        e.0 += 1;
+    } else {
+        e.1 += 1; // far or dead
+    }
+}
+
+/// Annotate every instruction of every warp with the profiled binary
+/// reuse-distance bits. Unobserved operands default to *far* (conservative:
+/// never pollutes the cache with unknown values).
+pub fn annotate(trace: &mut KernelTrace, profile: &ReuseProfile) {
+    for w in &mut trace.warps {
+        for instr in w.iter_mut() {
+            for slot in 0..instr.nsrc as usize {
+                let near = profile.is_near(&sig(instr, slot, false)).unwrap_or(false);
+                instr.set_src_near(slot, near);
+            }
+            for slot in 0..instr.ndst as usize {
+                let near = profile.is_near(&sig(instr, slot, true)).unwrap_or(false);
+                instr.set_dst_near(slot, near);
+            }
+        }
+    }
+}
+
+/// Oracle annotation: every warp gets its own exact (windowed) distances
+/// binarised — the upper bound the binary approximation is measured
+/// against (§III-A's claim that the approximation is near-lossless). Dead
+/// values are far.
+pub fn annotate_precise(trace: &mut KernelTrace, rthld: u32) {
+    for w in &mut trace.warps {
+        let dists = stream_distances(w, WINDOW, CAP);
+        let mut k = 0usize;
+        for instr in w.iter_mut() {
+            for slot in 0..instr.nsrc as usize {
+                instr.set_src_near(slot, dists[k] >= 0 && dists[k] as u32 <= rthld);
+                k += 1;
+            }
+            for slot in 0..instr.ndst as usize {
+                instr.set_dst_near(slot, dists[k] >= 0 && dists[k] as u32 <= rthld);
+                k += 1;
+            }
+        }
+    }
+}
+
+/// Convenience: profile the first `profile_warps` warps and annotate the
+/// whole trace in place.
+pub fn profile_and_annotate(trace: &mut KernelTrace, profile_warps: usize, rthld: u32) {
+    let p = profile(trace, profile_warps, rthld);
+    annotate(trace, &p);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Instruction, OpClass};
+    use crate::trace::{find, KernelTrace};
+
+    #[test]
+    fn windowed_distances_basic() {
+        //          r5    r7    r5    pad
+        let ids = [5, 7, 5, -1];
+        let pos = [0, 1, 2, 3];
+        let rw = [1, 1, 1, 1];
+        let d = windowed_reuse_distances(&ids, &pos, &rw, 96, 255);
+        assert_eq!(d, vec![2, 255, 255, -1]);
+    }
+
+    #[test]
+    fn windowed_distances_window_cap() {
+        // same id at gap of 3 accesses but window=2 -> cap
+        let ids = [9, 1, 2, 9];
+        let pos = [0, 1, 2, 3];
+        let rw = [1, 1, 1, 1];
+        let d = windowed_reuse_distances(&ids, &pos, &rw, 2, 255);
+        assert_eq!(d[0], 255);
+        // window=3 -> resolved
+        let d = windowed_reuse_distances(&ids, &pos, &rw, 3, 255);
+        assert_eq!(d[0], 3);
+    }
+
+    #[test]
+    fn same_instruction_distance_zero() {
+        let ids = [3, 3];
+        let pos = [7, 7];
+        let rw = [1, 1];
+        let d = windowed_reuse_distances(&ids, &pos, &rw, 96, 255);
+        assert_eq!(d[0], 0);
+    }
+
+    #[test]
+    fn redefinition_kills_value() {
+        // read r4, then write r4, then read r4
+        let ids = [4, 4, 4];
+        let pos = [0, 3, 5];
+        let rw = [1, 0, 1];
+        let d = windowed_reuse_distances(&ids, &pos, &rw, 96, 255);
+        assert_eq!(d[0], DEAD, "value killed by the write");
+        assert_eq!(d[1], 2, "the written value is read 2 instrs later");
+    }
+
+    #[test]
+    fn stream_distances_flatten_order_matches_access_streams() {
+        let b = find("kmeans").unwrap();
+        let t = KernelTrace::generate(b, 1, 3);
+        let by_stream = stream_distances(&t.warps[0], WINDOW, CAP);
+        let naccesses: usize = t.warps[0].iter().map(|i| i.noperands()).sum();
+        let (ids, pos, rw) = t.access_streams(1, naccesses);
+        let by_flat = windowed_reuse_distances(&ids, &pos, &rw, WINDOW, CAP);
+        assert_eq!(by_stream, by_flat);
+    }
+
+    #[test]
+    fn histogram_deepbench_longer_than_rodinia() {
+        // the paper's Fig 1: Deepbench has clearly more >10 mass
+        let far_frac = |name: &str| {
+            let t = KernelTrace::generate(find(name).unwrap(), 4, 11);
+            let h = reuse_histogram(&t);
+            let total: u64 = h.iter().sum();
+            h[4] as f64 / total as f64
+        };
+        let deep = (far_frac("gemm_t1") + far_frac("conv_t1")) / 2.0;
+        let rod = (far_frac("hotspot") + far_frac("kmeans")) / 2.0;
+        assert!(
+            deep > rod,
+            "deepbench >10 frac {deep:.3} should exceed rodinia {rod:.3}"
+        );
+    }
+
+    #[test]
+    fn profile_votes_majority() {
+        // two warps: same static op reused near in both -> near bit set
+        let mk = || {
+            vec![
+                Instruction::new(OpClass::Alu, &[1], &[2]),
+                Instruction::new(OpClass::Alu, &[2], &[3]), // r2 reused, d=1
+                Instruction::new(OpClass::Alu, &[3], &[4]),
+            ]
+        };
+        let mut t = KernelTrace { name: "t".into(), warps: vec![mk(), mk()] };
+        let p = profile(&t, 2, 12);
+        assert_eq!(p.warps_profiled, 2);
+        assert!(p.accesses > 0);
+        annotate(&mut t, &p);
+        // dst r2 of instr 0 is reused at distance 1 -> near
+        assert!(t.warps[0][0].dst_is_near(0));
+        assert!(t.warps[1][0].dst_is_near(0));
+        // dst r4 of last instr never reused -> far
+        assert!(!t.warps[0][2].dst_is_near(0));
+    }
+
+    #[test]
+    fn unobserved_operands_default_far() {
+        let mut t = KernelTrace {
+            name: "t".into(),
+            warps: vec![vec![Instruction::new(OpClass::Alu, &[1, 2], &[3])]],
+        };
+        let empty = ReuseProfile::default();
+        annotate(&mut t, &empty);
+        assert!(!t.warps[0][0].src_is_near(0));
+        assert!(!t.warps[0][0].dst_is_near(0));
+    }
+
+    #[test]
+    fn partial_profiling_close_to_full() {
+        // §III-A: profiling a few warps ≈ profiling all warps
+        let b = find("srad_v1").unwrap();
+        let t = KernelTrace::generate(b, 32, 5);
+        let few = profile(&t, 2, RTHLD);
+        let all = profile(&t, 32, RTHLD);
+        // compare the annotation decisions on a fresh copy
+        let mut ta = t.clone();
+        let mut tb = t.clone();
+        annotate(&mut ta, &few);
+        annotate(&mut tb, &all);
+        let mut same = 0u64;
+        let mut total = 0u64;
+        for (wa, wb) in ta.warps.iter().zip(tb.warps.iter()) {
+            for (ia, ib) in wa.iter().zip(wb.iter()) {
+                total += (ia.nsrc + ia.ndst) as u64;
+                let mut s = 0;
+                for k in 0..ia.nsrc as usize {
+                    if ia.src_is_near(k) == ib.src_is_near(k) {
+                        s += 1;
+                    }
+                }
+                for k in 0..ia.ndst as usize {
+                    if ia.dst_is_near(k) == ib.dst_is_near(k) {
+                        s += 1;
+                    }
+                }
+                same += s;
+            }
+        }
+        let agreement = same as f64 / total as f64;
+        assert!(
+            agreement > 0.9,
+            "partial profiling agreement too low: {agreement:.3}"
+        );
+    }
+
+    #[test]
+    fn precise_annotation_marks_accumulators_near() {
+        let b = find("rnn_i2").unwrap();
+        let mut t = KernelTrace::generate(b, 1, 9);
+        annotate_precise(&mut t, RTHLD);
+        // at least some MMA accumulator sources must be near
+        let near_mma_srcs = t.warps[0]
+            .iter()
+            .filter(|i| i.op == OpClass::Mma)
+            .filter(|i| (0..i.nsrc as usize).any(|k| i.src_is_near(k)))
+            .count();
+        assert!(near_mma_srcs > 0);
+    }
+}

@@ -1,0 +1,467 @@
+//! Typed GPU configuration + presets (Table I) + key=value overrides.
+//!
+//! `serde`/`toml` are unavailable in this offline build, so the config file
+//! format is a plain `key = value` / `# comment` subset parsed here; every
+//! field is also overridable from the CLI (`-s key=value`), which is how the
+//! bench harness builds its sweeps.
+
+mod parse;
+pub use parse::{parse_kv_file, parse_kv_str};
+
+use std::fmt;
+
+/// Which collector-unit organisation (and therefore which paper scheme) a
+/// simulation runs. See DESIGN.md §4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Baseline Turing-style OCUs, no caching (§II).
+    Baseline,
+    /// Malekeh: shared CCUs with reuse-guided policies (§III, §IV).
+    Malekeh,
+    /// Malekeh with a private CCU per warp (§VI-B, "Malekeh_PR").
+    MalekehPr,
+    /// BOW: private per-warp bypassing operand collectors, sliding window.
+    Bow,
+    /// RFC: per-active-warp RF cache + two-level scheduler (Gebhart 2011).
+    Rfc,
+    /// Software RFC: compiler-managed cache + two-level scheduler (strands).
+    SoftwareRfc,
+    /// Ablation for Fig 17: Malekeh hardware, traditional GTO + plain LRU,
+    /// no write filter, no waiting mechanism.
+    MalekehTraditional,
+}
+
+impl Scheme {
+    /// All schemes, in the order figures report them.
+    pub const ALL: [Scheme; 7] = [
+        Scheme::Baseline,
+        Scheme::Malekeh,
+        Scheme::MalekehPr,
+        Scheme::Bow,
+        Scheme::Rfc,
+        Scheme::SoftwareRfc,
+        Scheme::MalekehTraditional,
+    ];
+
+    /// Stable name used by the CLI and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::Baseline => "baseline",
+            Scheme::Malekeh => "malekeh",
+            Scheme::MalekehPr => "malekeh_pr",
+            Scheme::Bow => "bow",
+            Scheme::Rfc => "rfc",
+            Scheme::SoftwareRfc => "software_rfc",
+            Scheme::MalekehTraditional => "malekeh_traditional",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn from_name(s: &str) -> Option<Scheme> {
+        Scheme::ALL.iter().copied().find(|x| x.name() == s)
+    }
+
+    /// Does this scheme use a private collector per warp?
+    pub fn private_per_warp(self) -> bool {
+        matches!(self, Scheme::MalekehPr | Scheme::Bow)
+    }
+
+    /// Does this scheme use the two-level (active/pending) scheduler?
+    pub fn two_level(self) -> bool {
+        matches!(self, Scheme::Rfc | Scheme::SoftwareRfc)
+    }
+}
+
+impl fmt::Display for Scheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// How STHLD (the waiting-mechanism threshold, §IV-B3) is chosen.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SthldMode {
+    /// Fixed value for the whole run (Fig 7 sweeps this).
+    Static(u32),
+    /// The paper's 6-state dynamic FSM, re-evaluated every interval.
+    Dynamic,
+}
+
+/// Execution-unit timing (initiation interval, result latency in cycles).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EuTiming {
+    /// Cycles between accepted instructions.
+    pub initiation: u32,
+    /// Cycles from dispatch to writeback.
+    pub latency: u32,
+}
+
+/// Full simulator configuration. Defaults = Table I baseline (RTX 2060
+/// scaled to 10 SMs) + Turing sub-core parameters from §II.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuConfig {
+    // ---- topology (Table I) ----
+    /// Streaming multiprocessors.
+    pub num_sms: usize,
+    /// Sub-cores per SM (each with private banks, collectors, scheduler).
+    pub sub_cores_per_sm: usize,
+    /// Warps per SM (divided evenly across sub-cores).
+    pub warps_per_sm: usize,
+    // ---- register file (§II) ----
+    /// RF banks per sub-core (Turing: 2).
+    pub banks_per_sub_core: usize,
+    /// Collector units per sub-core (ignored by private-per-warp schemes).
+    pub collectors_per_sub_core: usize,
+    /// Crossbar output width: operands deliverable per collector per cycle
+    /// (Turing's 128b dual-bank crossbar: 2).
+    pub collector_ports: usize,
+    /// Cache-table entries per CCU (paper sweet spot: 8; baseline OCU: 6).
+    pub ct_entries: usize,
+    /// BOW sliding-window length in instructions.
+    pub bow_window: usize,
+    /// RFC per-warp cache entries.
+    pub rfc_entries: usize,
+    /// Active warps per sub-core for two-level schedulers (§VI-A: 2).
+    pub active_warps_per_sub_core: usize,
+    /// Software-RFC strand length (instructions between swap points).
+    pub swrfc_strand_len: usize,
+    // ---- Malekeh policies (§IV) ----
+    /// Scheme under test.
+    pub scheme: Scheme,
+    /// STHLD selection.
+    pub sthld: SthldMode,
+    /// Dynamic-algorithm interval in cycles (§IV-B3: 10_000).
+    pub sthld_interval: u64,
+    /// Relative IPC delta separating Small from Large (§IV-B3: 0.02).
+    pub sthld_epsilon: f64,
+    /// Max STHLD the dynamic algorithm may reach.
+    pub sthld_max: u32,
+    /// Compiler near/far threshold in dynamic instructions (§III-A: 12).
+    pub rthld: u32,
+    /// Disable the reuse-guided replacement (plain LRU) — Fig 17 ablation.
+    pub traditional_replacement: bool,
+    /// Disable the write filter (cache all writebacks) — Fig 17 ablation.
+    pub no_write_filter: bool,
+    // ---- execution units ----
+    /// ALU pipe timing.
+    pub alu: EuTiming,
+    /// SFU pipe timing.
+    pub sfu: EuTiming,
+    /// Tensor-core pipe timing.
+    pub mma: EuTiming,
+    /// Shared-memory load latency.
+    pub lds_latency: u32,
+    // ---- memory hierarchy ----
+    /// L1D size in bytes per SM.
+    pub l1_bytes: usize,
+    /// L1D associativity.
+    pub l1_ways: usize,
+    /// L1D line size in bytes.
+    pub line_bytes: usize,
+    /// L1D hit latency.
+    pub l1_latency: u32,
+    /// L1D MSHR entries per SM.
+    pub l1_mshrs: usize,
+    /// L2 size in bytes (whole GPU).
+    pub l2_bytes: usize,
+    /// L2 associativity.
+    pub l2_ways: usize,
+    /// L2 hit latency.
+    pub l2_latency: u32,
+    /// DRAM latency.
+    pub dram_latency: u32,
+    /// DRAM: max requests accepted per cycle *per SM* (bandwidth proxy;
+    /// total = this x num_sms, mirroring the paper's proportional scaling
+    /// of memory channels with SM count).
+    pub dram_reqs_per_cycle: f64,
+    // ---- run control ----
+    /// Stop after this many cycles (0 = run to completion).
+    pub max_cycles: u64,
+    /// PRNG seed for policy tie-breaking.
+    pub seed: u64,
+}
+
+impl Default for GpuConfig {
+    fn default() -> Self {
+        GpuConfig::table1_baseline()
+    }
+}
+
+impl GpuConfig {
+    /// Table I baseline: RTX-2060-like scaled to 10 SMs, Turing sub-cores.
+    pub fn table1_baseline() -> Self {
+        GpuConfig {
+            num_sms: 10,
+            sub_cores_per_sm: 4,
+            warps_per_sm: 32,
+            banks_per_sub_core: 2,
+            collectors_per_sub_core: 2,
+            collector_ports: 2,
+            ct_entries: 8,
+            bow_window: 3,
+            rfc_entries: 6,
+            active_warps_per_sub_core: 2,
+            swrfc_strand_len: 10,
+            scheme: Scheme::Baseline,
+            sthld: SthldMode::Dynamic,
+            sthld_interval: 10_000,
+            sthld_epsilon: 0.02,
+            sthld_max: 64,
+            rthld: 12,
+            traditional_replacement: false,
+            no_write_filter: false,
+            alu: EuTiming { initiation: 1, latency: 4 },
+            sfu: EuTiming { initiation: 4, latency: 16 },
+            mma: EuTiming { initiation: 2, latency: 16 },
+            lds_latency: 24,
+            l1_bytes: 64 * 1024,
+            l1_ways: 4,
+            line_bytes: 128,
+            l1_latency: 28,
+            l1_mshrs: 32,
+            l2_bytes: 1024 * 1024,
+            l2_ways: 8,
+            l2_latency: 90,
+            dram_latency: 220,
+            dram_reqs_per_cycle: 0.5,
+            max_cycles: 0,
+            seed: 0xC0FFEE,
+        }
+    }
+
+    /// Early-Tesla-like monolithic SM for the Fig 2 comparison: one
+    /// scheduler and one pool of banks/collectors for all warps.
+    pub fn monolithic() -> Self {
+        let mut c = Self::table1_baseline();
+        c.sub_cores_per_sm = 1;
+        // keep per-SM totals equal: 4 sub-cores x 2 = 8 banks/collectors
+        c.banks_per_sub_core = 8;
+        c.collectors_per_sub_core = 8;
+        c.active_warps_per_sub_core = 8;
+        c
+    }
+
+    /// Set the scheme, adjusting collector counts for private-per-warp
+    /// organisations (one collector per resident warp).
+    pub fn with_scheme(mut self, scheme: Scheme) -> Self {
+        self.scheme = scheme;
+        if scheme == Scheme::MalekehTraditional {
+            self.traditional_replacement = true;
+            self.no_write_filter = true;
+            self.sthld = SthldMode::Static(0);
+        }
+        self
+    }
+
+    /// Warps per sub-core scheduler.
+    pub fn warps_per_sub_core(&self) -> usize {
+        self.warps_per_sm / self.sub_cores_per_sm
+    }
+
+    /// Effective number of collector units in one sub-core for `scheme`.
+    pub fn effective_collectors(&self) -> usize {
+        if self.scheme.private_per_warp() {
+            self.warps_per_sub_core()
+        } else {
+            self.collectors_per_sub_core
+        }
+    }
+
+    /// Apply one `key=value` override; error string on unknown key/bad value.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        fn p<T: std::str::FromStr>(k: &str, v: &str) -> Result<T, String> {
+            v.trim()
+                .parse::<T>()
+                .map_err(|_| format!("bad value for {k}: {v:?}"))
+        }
+        match key.trim() {
+            "num_sms" => self.num_sms = p(key, value)?,
+            "sub_cores_per_sm" => self.sub_cores_per_sm = p(key, value)?,
+            "warps_per_sm" => self.warps_per_sm = p(key, value)?,
+            "banks_per_sub_core" => self.banks_per_sub_core = p(key, value)?,
+            "collectors_per_sub_core" => {
+                self.collectors_per_sub_core = p(key, value)?
+            }
+            "collector_ports" => self.collector_ports = p(key, value)?,
+            "ct_entries" => self.ct_entries = p(key, value)?,
+            "bow_window" => self.bow_window = p(key, value)?,
+            "rfc_entries" => self.rfc_entries = p(key, value)?,
+            "active_warps_per_sub_core" => {
+                self.active_warps_per_sub_core = p(key, value)?
+            }
+            "swrfc_strand_len" => self.swrfc_strand_len = p(key, value)?,
+            "scheme" => {
+                self.scheme = Scheme::from_name(value.trim())
+                    .ok_or_else(|| format!("unknown scheme {value:?}"))?
+            }
+            "sthld" => {
+                self.sthld = if value.trim() == "dynamic" {
+                    SthldMode::Dynamic
+                } else {
+                    SthldMode::Static(p(key, value)?)
+                }
+            }
+            "sthld_interval" => self.sthld_interval = p(key, value)?,
+            "sthld_epsilon" => self.sthld_epsilon = p(key, value)?,
+            "sthld_max" => self.sthld_max = p(key, value)?,
+            "rthld" => self.rthld = p(key, value)?,
+            "traditional_replacement" => {
+                self.traditional_replacement = p(key, value)?
+            }
+            "no_write_filter" => self.no_write_filter = p(key, value)?,
+            "alu_latency" => self.alu.latency = p(key, value)?,
+            "sfu_latency" => self.sfu.latency = p(key, value)?,
+            "mma_latency" => self.mma.latency = p(key, value)?,
+            "mma_initiation" => self.mma.initiation = p(key, value)?,
+            "lds_latency" => self.lds_latency = p(key, value)?,
+            "l1_bytes" => self.l1_bytes = p(key, value)?,
+            "l1_ways" => self.l1_ways = p(key, value)?,
+            "line_bytes" => self.line_bytes = p(key, value)?,
+            "l1_latency" => self.l1_latency = p(key, value)?,
+            "l1_mshrs" => self.l1_mshrs = p(key, value)?,
+            "l2_bytes" => self.l2_bytes = p(key, value)?,
+            "l2_ways" => self.l2_ways = p(key, value)?,
+            "l2_latency" => self.l2_latency = p(key, value)?,
+            "dram_latency" => self.dram_latency = p(key, value)?,
+            "dram_reqs_per_cycle" => self.dram_reqs_per_cycle = p(key, value)?,
+            "max_cycles" => self.max_cycles = p(key, value)?,
+            "seed" => self.seed = p(key, value)?,
+            other => return Err(format!("unknown config key {other:?}")),
+        }
+        Ok(())
+    }
+
+    /// Apply many overrides from parsed key=value pairs.
+    pub fn apply(&mut self, pairs: &[(String, String)]) -> Result<(), String> {
+        for (k, v) in pairs {
+            self.set(k, v)?;
+        }
+        Ok(())
+    }
+
+    /// Sanity-check invariants; returns a description of the first violation.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.num_sms == 0 {
+            return Err("num_sms must be > 0".into());
+        }
+        if self.sub_cores_per_sm == 0 {
+            return Err("sub_cores_per_sm must be > 0".into());
+        }
+        if self.warps_per_sm % self.sub_cores_per_sm != 0 {
+            return Err(format!(
+                "warps_per_sm ({}) must divide evenly across sub-cores ({})",
+                self.warps_per_sm, self.sub_cores_per_sm
+            ));
+        }
+        if self.banks_per_sub_core == 0 {
+            return Err("banks_per_sub_core must be > 0".into());
+        }
+        if self.ct_entries < crate::isa::MAX_SRC {
+            return Err(format!(
+                "ct_entries ({}) must fit {} sources of one instruction",
+                self.ct_entries,
+                crate::isa::MAX_SRC
+            ));
+        }
+        if self.scheme.two_level()
+            && self.active_warps_per_sub_core > self.warps_per_sub_core()
+        {
+            return Err("active set larger than the warp pool".into());
+        }
+        if !self.line_bytes.is_power_of_two() {
+            return Err("line_bytes must be a power of two".into());
+        }
+        if self.l1_bytes % (self.line_bytes * self.l1_ways) != 0 {
+            return Err("l1_bytes must be divisible by ways*line".into());
+        }
+        if self.l2_bytes % (self.line_bytes * self.l2_ways) != 0 {
+            return Err("l2_bytes must be divisible by ways*line".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let c = GpuConfig::table1_baseline();
+        assert_eq!(c.num_sms, 10);
+        assert_eq!(c.warps_per_sm, 32);
+        assert_eq!(c.sub_cores_per_sm, 4);
+        assert_eq!(c.warps_per_sub_core(), 8);
+        assert_eq!(c.banks_per_sub_core, 2);
+        assert_eq!(c.ct_entries, 8);
+        assert_eq!(c.rthld, 12);
+        assert_eq!(c.sthld_interval, 10_000);
+        assert_eq!(c.l2_bytes, 1024 * 1024);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn monolithic_keeps_per_sm_totals() {
+        let m = GpuConfig::monolithic();
+        let b = GpuConfig::table1_baseline();
+        assert_eq!(
+            m.banks_per_sub_core * m.sub_cores_per_sm,
+            b.banks_per_sub_core * b.sub_cores_per_sm
+        );
+        assert!(m.validate().is_ok());
+    }
+
+    #[test]
+    fn with_scheme_traditional_sets_ablation_flags() {
+        let c = GpuConfig::table1_baseline().with_scheme(Scheme::MalekehTraditional);
+        assert!(c.traditional_replacement);
+        assert!(c.no_write_filter);
+        assert_eq!(c.sthld, SthldMode::Static(0));
+    }
+
+    #[test]
+    fn effective_collectors_private_schemes() {
+        let c = GpuConfig::table1_baseline().with_scheme(Scheme::Bow);
+        assert_eq!(c.effective_collectors(), 8); // one per warp
+        let c = GpuConfig::table1_baseline().with_scheme(Scheme::Malekeh);
+        assert_eq!(c.effective_collectors(), 2);
+    }
+
+    #[test]
+    fn set_roundtrips_keys() {
+        let mut c = GpuConfig::table1_baseline();
+        c.set("scheme", "malekeh").unwrap();
+        assert_eq!(c.scheme, Scheme::Malekeh);
+        c.set("sthld", "dynamic").unwrap();
+        assert_eq!(c.sthld, SthldMode::Dynamic);
+        c.set("sthld", "4").unwrap();
+        assert_eq!(c.sthld, SthldMode::Static(4));
+        c.set("rthld", "7").unwrap();
+        assert_eq!(c.rthld, 7);
+        assert!(c.set("nonsense_key", "1").is_err());
+        assert!(c.set("rthld", "xyz").is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_configs() {
+        let mut c = GpuConfig::table1_baseline();
+        c.warps_per_sm = 30; // not divisible by 4 sub-cores
+        assert!(c.validate().is_err());
+
+        let mut c = GpuConfig::table1_baseline();
+        c.ct_entries = 4; // cannot hold 6 sources
+        assert!(c.validate().is_err());
+
+        let mut c = GpuConfig::table1_baseline().with_scheme(Scheme::Rfc);
+        c.active_warps_per_sub_core = 100;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn scheme_names_roundtrip() {
+        for s in Scheme::ALL {
+            assert_eq!(Scheme::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Scheme::from_name("bogus"), None);
+    }
+}

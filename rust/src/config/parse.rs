@@ -1,0 +1,109 @@
+//! Minimal `key = value` config-file parser (serde/toml are unavailable in
+//! this offline build). Supports `#`/`;` comments, blank lines, optional
+//! `[section]` headers (flattened as `section.key`), and quoted values.
+
+/// Parse a config string into ordered `(key, value)` pairs.
+pub fn parse_kv_str(text: &str) -> Result<Vec<(String, String)>, String> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section", ln + 1))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", ln + 1));
+        }
+        let mut value = line[eq + 1..].trim();
+        if value.len() >= 2
+            && ((value.starts_with('"') && value.ends_with('"'))
+                || (value.starts_with('\'') && value.ends_with('\'')))
+        {
+            value = &value[1..value.len() - 1];
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.push((full_key, value.to_string()));
+    }
+    Ok(out)
+}
+
+/// Parse a config file from disk.
+pub fn parse_kv_file(path: &str) -> Result<Vec<(String, String)>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {path}: {e}"))?;
+    parse_kv_str(&text)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect quotes so "#" inside a quoted value survives
+    let mut in_quote: Option<char> = None;
+    for (i, c) in line.char_indices() {
+        match (c, in_quote) {
+            ('"' | '\'', None) => in_quote = Some(c),
+            (q, Some(open)) if q == open => in_quote = None,
+            ('#' | ';', None) => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_simple_pairs() {
+        let kv = parse_kv_str("a = 1\nb=two\n").unwrap();
+        assert_eq!(
+            kv,
+            vec![("a".into(), "1".into()), ("b".into(), "two".into())]
+        );
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let kv = parse_kv_str("# header\n\na = 1  # trailing\n; note\n").unwrap();
+        assert_eq!(kv, vec![("a".into(), "1".into())]);
+    }
+
+    #[test]
+    fn sections_flatten() {
+        let kv = parse_kv_str("[sim]\nscheme = malekeh\n[mem]\nl1 = 64\n").unwrap();
+        assert_eq!(
+            kv,
+            vec![
+                ("sim.scheme".into(), "malekeh".into()),
+                ("mem.l1".into(), "64".into())
+            ]
+        );
+    }
+
+    #[test]
+    fn quoted_values_keep_hash() {
+        let kv = parse_kv_str("name = \"a # b\"\n").unwrap();
+        assert_eq!(kv, vec![("name".into(), "a # b".into())]);
+    }
+
+    #[test]
+    fn errors_are_located() {
+        assert!(parse_kv_str("just words\n").unwrap_err().contains("line 1"));
+        assert!(parse_kv_str("[open\n").unwrap_err().contains("line 1"));
+        assert!(parse_kv_str("= v\n").unwrap_err().contains("empty key"));
+    }
+}

@@ -1,0 +1,632 @@
+//! Experiment harness: one runner per paper figure/table (DESIGN.md §5).
+//!
+//! Bench binaries (`rust/benches/fig*.rs`) and the CLI (`malekeh fig <id>`)
+//! both call into these; EXPERIMENTS.md records their output next to the
+//! paper's numbers. Experiments default to 2 SMs (the mechanism is per-SM;
+//! the paper's 10-SM Table I config is available with `--full`).
+
+pub mod table;
+pub use table::{geomean, mean, Table};
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::config::{GpuConfig, Scheme, SthldMode};
+use crate::energy::EnergyModel;
+use crate::sim::run_benchmark;
+use crate::stats::Stats;
+use crate::trace::{table2, Suite};
+
+/// Experiment options shared by all figure runners.
+#[derive(Debug, Clone)]
+pub struct ExpOpts {
+    /// SMs to simulate (paper: 10; default 2 for bench turnaround).
+    pub num_sms: usize,
+    /// Launch seed.
+    pub seed: u64,
+    /// Warps profiled by the compiler pass (0 = oracle annotation).
+    pub profile_warps: usize,
+    /// Restrict to a representative benchmark subset for quick runs.
+    pub quick: bool,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts { num_sms: 2, seed: 0xC0FFEE, profile_warps: 2, quick: false }
+    }
+}
+
+impl ExpOpts {
+    /// Parse bench-binary argv: `--full` (10 SMs, all benchmarks),
+    /// `--quick`, `--sms N`, `--seed N`.
+    pub fn from_args(args: &[String]) -> ExpOpts {
+        let mut o = ExpOpts::default();
+        let mut i = 0;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--full" => {
+                    o.num_sms = 10;
+                    o.quick = false;
+                }
+                "--quick" => o.quick = true,
+                "--sms" => {
+                    i += 1;
+                    o.num_sms = args[i].parse().expect("--sms N");
+                }
+                "--seed" => {
+                    i += 1;
+                    o.seed = args[i].parse().expect("--seed N");
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        o
+    }
+
+    fn config(&self, scheme: Scheme) -> GpuConfig {
+        let mut c = GpuConfig::table1_baseline().with_scheme(scheme);
+        c.num_sms = self.num_sms;
+        c.seed = self.seed;
+        c
+    }
+
+    /// Benchmarks to run (Table II, or a representative 8 in quick mode).
+    pub fn benchmarks(&self) -> Vec<&'static str> {
+        if self.quick {
+            vec![
+                "hotspot", "kmeans", "b+tree", "srad_v1", "nn", "gemm_t1",
+                "conv_i1", "rnn_i2",
+            ]
+        } else {
+            table2().map(|b| b.name).collect()
+        }
+    }
+}
+
+/// Run one benchmark under one scheme (memoised per harness instance).
+pub struct Runner {
+    opts: ExpOpts,
+    cache: HashMap<(String, Scheme, u64), Stats>,
+}
+
+impl Runner {
+    /// New runner.
+    pub fn new(opts: ExpOpts) -> Self {
+        Runner { opts, cache: HashMap::new() }
+    }
+
+    /// Options in use.
+    pub fn opts(&self) -> &ExpOpts {
+        &self.opts
+    }
+
+    /// Simulate (cached) with the default config for `scheme`.
+    pub fn run(&mut self, bench: &str, scheme: Scheme) -> Stats {
+        self.run_cfg_key(bench, scheme, 0, |o| o.config(scheme))
+    }
+
+    /// Simulate with a customised config; `key` distinguishes variants.
+    pub fn run_cfg_key(
+        &mut self,
+        bench: &str,
+        scheme: Scheme,
+        key: u64,
+        make: impl FnOnce(&ExpOpts) -> GpuConfig,
+    ) -> Stats {
+        let k = (bench.to_string(), scheme, key);
+        if let Some(s) = self.cache.get(&k) {
+            return s.clone();
+        }
+        let cfg = make(&self.opts);
+        let t0 = Instant::now();
+        let stats = run_benchmark(&cfg, bench, self.opts.profile_warps);
+        eprintln!(
+            "  [{bench} / {scheme} / v{key}] {} instr, {} cycles, {:.1}s",
+            stats.instructions,
+            stats.cycles,
+            t0.elapsed().as_secs_f64()
+        );
+        self.cache.insert(k, stats.clone());
+        stats
+    }
+}
+
+// ============================== figures =====================================
+
+/// Fig 1: reuse-distance distribution per suite (buckets d<=1,2,3,4-10,>10).
+pub fn fig01(opts: &ExpOpts) -> Table {
+    let mut t = Table::new(
+        "Fig 1: reuse distance distribution of register values (fraction)",
+        &["suite", "<=1", "2", "3", "4-10", ">10"],
+    );
+    for suite in [Suite::Rodinia, Suite::Deepbench] {
+        let mut h = [0u64; 5];
+        for b in table2().filter(|b| b.suite == suite) {
+            let trace =
+                crate::trace::KernelTrace::generate(b, 8, opts.seed ^ 0x51);
+            let hb = crate::compiler::reuse_histogram(&trace);
+            for i in 0..5 {
+                h[i] += hb[i];
+            }
+        }
+        let total: u64 = h.iter().sum();
+        let fr: Vec<f64> = h.iter().map(|&x| x as f64 / total.max(1) as f64).collect();
+        t.row_f(
+            if suite == Suite::Rodinia { "Rodinia" } else { "Deepbench" },
+            &fr,
+            3,
+        );
+    }
+    t
+}
+
+/// Fig 2: IPC of two-level schedulers (RFC, software RFC) normalised to the
+/// one-level baseline, for sub-core and monolithic architectures.
+pub fn fig02(runner: &mut Runner) -> Table {
+    let mut t = Table::new(
+        "Fig 2: two-level scheduler IPC normalised to baseline",
+        &["bench", "rfc_subcore", "swrfc_subcore", "rfc_mono", "swrfc_mono"],
+    );
+    let benches = runner.opts().benchmarks();
+    let mut cols: [Vec<f64>; 4] = Default::default();
+    for bench in &benches {
+        let base_sub = runner.run(bench, Scheme::Baseline).ipc();
+        let base_mono = runner
+            .run_cfg_key(bench, Scheme::Baseline, 1, |o| {
+                let mut c = GpuConfig::monolithic();
+                c.num_sms = o.num_sms;
+                c.seed = o.seed;
+                c
+            })
+            .ipc();
+        let mut vals = [0f64; 4];
+        for (i, scheme) in [Scheme::Rfc, Scheme::SoftwareRfc].iter().enumerate() {
+            let sub = runner.run(bench, *scheme).ipc();
+            let mono = runner
+                .run_cfg_key(bench, *scheme, 1, |o| {
+                    let mut c = GpuConfig::monolithic().with_scheme(*scheme);
+                    c.num_sms = o.num_sms;
+                    c.seed = o.seed;
+                    c
+                })
+                .ipc();
+            vals[i] = sub / base_sub.max(1e-9);
+            vals[2 + i] = mono / base_mono.max(1e-9);
+        }
+        for i in 0..4 {
+            cols[i].push(vals[i]);
+        }
+        t.row_f(bench, &vals, 3);
+    }
+    t.row_f(
+        "GEOMEAN",
+        &[
+            geomean(&cols[0]),
+            geomean(&cols[1]),
+            geomean(&cols[2]),
+            geomean(&cols[3]),
+        ],
+        3,
+    );
+    t
+}
+
+/// Fig 7: IPC + RF-cache hit ratio vs static STHLD for sensitive apps.
+pub fn fig07(runner: &mut Runner) -> Table {
+    let sthlds = [0u32, 1, 2, 4, 8, 16, 32];
+    let mut header: Vec<String> = vec!["bench/metric".into()];
+    header.extend(sthlds.iter().map(|s| format!("S={s}")));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "Fig 7: normalised IPC and hit ratio vs static STHLD",
+        &hdr,
+    );
+    for bench in ["srad_v1", "gaussian", "rnn_i2"] {
+        let base = runner.run(bench, Scheme::Baseline).ipc();
+        let mut ipc_row = Vec::new();
+        let mut hit_row = Vec::new();
+        for (k, s) in sthlds.iter().enumerate() {
+            let stats = runner.run_cfg_key(bench, Scheme::Malekeh, 100 + k as u64, |o| {
+                let mut c = o.config(Scheme::Malekeh);
+                c.sthld = SthldMode::Static(*s);
+                c
+            });
+            ipc_row.push(stats.ipc() / base.max(1e-9));
+            hit_row.push(stats.rf_hit_ratio());
+        }
+        t.row_f(&format!("{bench} IPC"), &ipc_row, 3);
+        t.row_f(&format!("{bench} hit"), &hit_row, 3);
+    }
+    t
+}
+
+/// Fig 9: dynamic-STHLD trajectory on the phase-changing workload.
+pub fn fig09(opts: &ExpOpts) -> Table {
+    let mut cfg = GpuConfig::table1_baseline().with_scheme(Scheme::Malekeh);
+    cfg.num_sms = opts.num_sms;
+    cfg.seed = opts.seed;
+    cfg.sthld = SthldMode::Dynamic;
+    cfg.sthld_interval = 2_000; // finer intervals to expose the walk
+    let stats = run_benchmark(&cfg, "synthetic_phases", opts.profile_warps);
+    let mut t = Table::new(
+        "Fig 9: dynamic algorithm walk (interval -> STHLD, IPC)",
+        &["interval", "sthld", "ipc"],
+    );
+    for (i, (s, ipc)) in stats
+        .sthld_trace
+        .iter()
+        .zip(stats.interval_ipc.iter())
+        .enumerate()
+    {
+        t.row(vec![format!("{i}"), format!("{s}"), format!("{ipc:.3}")]);
+    }
+    t
+}
+
+/// Fig 10: state distribution of two-level schedulers.
+pub fn fig10(runner: &mut Runner) -> Table {
+    let mut t = Table::new(
+        "Fig 10: two-level scheduler state distribution (fractions)",
+        &["scheme", "issued", "state2_ready_stall", "state3_empty"],
+    );
+    for scheme in [Scheme::Rfc, Scheme::SoftwareRfc] {
+        let mut acc = [0f64; 3];
+        let benches = runner.opts().benchmarks();
+        for bench in &benches {
+            let s = runner.run(bench, scheme);
+            let (a, b, c) = s.sched_state_distribution();
+            acc[0] += a;
+            acc[1] += b;
+            acc[2] += c;
+        }
+        let n = benches.len() as f64;
+        t.row_f(scheme.name(), &[acc[0] / n, acc[1] / n, acc[2] / n], 3);
+    }
+    t
+}
+
+/// The Fig 12/13/14/15/16 scheme set.
+const MAIN_SCHEMES: [Scheme; 3] = [Scheme::Malekeh, Scheme::Bow, Scheme::MalekehPr];
+
+/// Fig 12: IPC normalised to baseline.
+pub fn fig12(runner: &mut Runner) -> Table {
+    let mut t = Table::new(
+        "Fig 12: IPC normalised to the baseline",
+        &["bench", "malekeh", "bow", "malekeh_pr"],
+    );
+    let mut cols: [Vec<f64>; 3] = Default::default();
+    let benches = runner.opts().benchmarks();
+    for bench in &benches {
+        let base = runner.run(bench, Scheme::Baseline).ipc();
+        let mut vals = [0f64; 3];
+        for (i, s) in MAIN_SCHEMES.iter().enumerate() {
+            vals[i] = runner.run(bench, *s).ipc() / base.max(1e-9);
+            cols[i].push(vals[i]);
+        }
+        t.row_f(bench, &vals, 3);
+    }
+    t.row_f(
+        "GEOMEAN",
+        &[geomean(&cols[0]), geomean(&cols[1]), geomean(&cols[2])],
+        3,
+    );
+    t
+}
+
+/// Fig 13: RF cache hit ratio.
+pub fn fig13(runner: &mut Runner) -> Table {
+    let mut t = Table::new(
+        "Fig 13: RF cache hit ratio",
+        &["bench", "malekeh", "bow", "malekeh_pr"],
+    );
+    let mut cols: [Vec<f64>; 3] = Default::default();
+    let benches = runner.opts().benchmarks();
+    for bench in &benches {
+        let mut vals = [0f64; 3];
+        for (i, s) in MAIN_SCHEMES.iter().enumerate() {
+            vals[i] = runner.run(bench, *s).rf_hit_ratio();
+            cols[i].push(vals[i]);
+        }
+        t.row_f(bench, &vals, 3);
+    }
+    t.row_f(
+        "MEAN",
+        &[mean(&cols[0]), mean(&cols[1]), mean(&cols[2])],
+        3,
+    );
+    t
+}
+
+/// Fig 14: L1 data cache hit ratio.
+pub fn fig14(runner: &mut Runner) -> Table {
+    let mut t = Table::new(
+        "Fig 14: L1D hit ratio",
+        &["bench", "baseline", "malekeh", "bow"],
+    );
+    let benches = runner.opts().benchmarks();
+    for bench in &benches {
+        let vals = [
+            runner.run(bench, Scheme::Baseline).l1_hit_ratio(),
+            runner.run(bench, Scheme::Malekeh).l1_hit_ratio(),
+            runner.run(bench, Scheme::Bow).l1_hit_ratio(),
+        ];
+        t.row_f(bench, &vals, 3);
+    }
+    t
+}
+
+/// Fig 15: RF dynamic energy normalised to baseline.
+pub fn fig15(runner: &mut Runner) -> Table {
+    let mut t = Table::new(
+        "Fig 15: RF dynamic energy normalised to the baseline",
+        &["bench", "malekeh", "bow", "malekeh_pr"],
+    );
+    let opts = runner.opts().clone();
+    let mut cols: [Vec<f64>; 3] = Default::default();
+    let benches = opts.benchmarks();
+    for bench in &benches {
+        let base_stats = runner.run(bench, Scheme::Baseline);
+        let base_model = EnergyModel::for_config(&opts.config(Scheme::Baseline));
+        let base_e = base_model.total(&base_stats.energy).max(1e-9);
+        let mut vals = [0f64; 3];
+        for (i, s) in MAIN_SCHEMES.iter().enumerate() {
+            let stats = runner.run(bench, *s);
+            let model = EnergyModel::for_config(&opts.config(*s));
+            vals[i] = model.total(&stats.energy) / base_e;
+            cols[i].push(vals[i]);
+        }
+        t.row_f(bench, &vals, 3);
+    }
+    t.row_f(
+        "MEAN",
+        &[mean(&cols[0]), mean(&cols[1]), mean(&cols[2])],
+        3,
+    );
+    t
+}
+
+/// Fig 16: writes captured by the RF cache / all RF writes.
+pub fn fig16(runner: &mut Runner) -> Table {
+    let mut t = Table::new(
+        "Fig 16: cache writes / total RF writes (and reused fraction)",
+        &["bench", "malekeh", "bow", "malekeh_reused"],
+    );
+    let benches = runner.opts().benchmarks();
+    for bench in &benches {
+        let m = runner.run(bench, Scheme::Malekeh);
+        let b = runner.run(bench, Scheme::Bow);
+        let reused = if m.rf_cache_writes == 0 {
+            0.0
+        } else {
+            m.cache_write_reused as f64 / m.rf_cache_writes as f64
+        };
+        t.row_f(
+            bench,
+            &[m.cache_write_fraction(), b.cache_write_fraction(), reused],
+            3,
+        );
+    }
+    t
+}
+
+/// Fig 17: Malekeh hardware under traditional GTO+LRU policies.
+pub fn fig17(runner: &mut Runner) -> Table {
+    let mut t = Table::new(
+        "Fig 17: hit ratio with traditional scheduling (GTO) + LRU",
+        &["bench", "traditional", "malekeh"],
+    );
+    let mut trad = Vec::new();
+    let mut mal = Vec::new();
+    let benches = runner.opts().benchmarks();
+    for bench in &benches {
+        let tr = runner.run(bench, Scheme::MalekehTraditional).rf_hit_ratio();
+        let ml = runner.run(bench, Scheme::Malekeh).rf_hit_ratio();
+        trad.push(tr);
+        mal.push(ml);
+        t.row_f(bench, &[tr, ml], 3);
+    }
+    t.row_f("MEAN", &[mean(&trad), mean(&mal)], 3);
+    t
+}
+
+/// Headline table: the abstract's claims vs this reproduction.
+pub fn headline(runner: &mut Runner) -> Table {
+    let mut t = Table::new(
+        "Headline: Malekeh vs baseline (paper: hit 46.4%, energy -28.3%, IPC +6.1%, storage +0.78%)",
+        &["metric", "paper", "measured"],
+    );
+    let opts = runner.opts().clone();
+    let benches = opts.benchmarks();
+    let mut hits = Vec::new();
+    let mut ipc_ratio = Vec::new();
+    let mut e_ratio = Vec::new();
+    let mut br_red = Vec::new();
+    for bench in &benches {
+        let base = runner.run(bench, Scheme::Baseline);
+        let m = runner.run(bench, Scheme::Malekeh);
+        hits.push(m.rf_hit_ratio());
+        ipc_ratio.push(m.ipc() / base.ipc().max(1e-9));
+        br_red.push(m.bank_read_reduction_vs(&base));
+        let bm = EnergyModel::for_config(&opts.config(Scheme::Baseline));
+        let mm = EnergyModel::for_config(&opts.config(Scheme::Malekeh));
+        e_ratio.push(mm.total(&m.energy) / bm.total(&base.energy).max(1e-9));
+    }
+    t.row(vec![
+        "RF cache hit ratio".into(),
+        "0.464".into(),
+        format!("{:.3}", mean(&hits)),
+    ]);
+    t.row(vec![
+        "bank read reduction".into(),
+        "0.464".into(),
+        format!("{:.3}", mean(&br_red)),
+    ]);
+    t.row(vec![
+        "IPC vs baseline".into(),
+        "1.061".into(),
+        format!("{:.3}", geomean(&ipc_ratio)),
+    ]);
+    t.row(vec![
+        "RF dynamic energy vs baseline".into(),
+        "0.717".into(),
+        format!("{:.3}", mean(&e_ratio)),
+    ]);
+    // storage overhead is architectural, not simulated: 2 extra 128B
+    // entries x 2 CCUs x 4 sub-cores = 2KB per SM over a 256KB RF
+    let extra_kb = (8.0 - 6.0) * 128.0 * 2.0 * 4.0 / 1024.0;
+    t.row(vec![
+        "extra storage per SM".into(),
+        "2KB (0.78%)".into(),
+        format!("{extra_kb:.0}KB ({:.2}%)", extra_kb / 256.0 * 100.0),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> ExpOpts {
+        ExpOpts { num_sms: 1, seed: 7, profile_warps: 2, quick: true }
+    }
+
+    #[test]
+    fn fig01_fractions_sum_to_one() {
+        let t = fig01(&tiny_opts());
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn opts_from_args() {
+        let o = ExpOpts::from_args(&["--quick".into(), "--sms".into(), "3".into()]);
+        assert!(o.quick);
+        assert_eq!(o.num_sms, 3);
+        let o = ExpOpts::from_args(&["--full".into()]);
+        assert_eq!(o.num_sms, 10);
+    }
+
+    #[test]
+    fn runner_caches() {
+        let mut r = Runner::new(tiny_opts());
+        let a = r.run("nn", Scheme::Baseline);
+        let b = r.run("nn", Scheme::Baseline);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(r.cache.len(), 1);
+    }
+}
+
+// ============================= ablations ====================================
+
+/// Ablation A (§III-C): cache-table entries sweep — the paper picks 8 as
+/// the knee of the hit-ratio-vs-cost curve ("beyond a given size, it
+/// reaches a point of diminishing returns").
+pub fn ablation_ct_entries(runner: &mut Runner) -> Table {
+    let sizes = [6usize, 8, 10, 12, 16];
+    let mut header: Vec<String> = vec!["bench".into()];
+    header.extend(sizes.iter().map(|s| format!("CT={s}")));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Ablation: RF hit ratio vs CCU cache-table entries", &hdr);
+    let mut cols: Vec<Vec<f64>> = vec![Vec::new(); sizes.len()];
+    for bench in ["kmeans", "gemm_t1", "rnn_i2", "srad_v1", "hotspot"] {
+        let mut vals = Vec::new();
+        for (k, &n) in sizes.iter().enumerate() {
+            let s = runner.run_cfg_key(bench, Scheme::Malekeh, 200 + k as u64, |o| {
+                let mut c = o.config(Scheme::Malekeh);
+                c.ct_entries = n;
+                c
+            });
+            vals.push(s.rf_hit_ratio());
+            cols[k].push(s.rf_hit_ratio());
+        }
+        t.row_f(bench, &vals, 3);
+    }
+    let means: Vec<f64> = cols.iter().map(|c| mean(c)).collect();
+    t.row_f("MEAN", &means, 3);
+    t
+}
+
+/// Ablation B (§III-A): RTHLD sweep — the paper found 12 empirically best.
+pub fn ablation_rthld(runner: &mut Runner) -> Table {
+    let ths = [2u32, 6, 12, 24, 48];
+    let mut header: Vec<String> = vec!["bench/metric".into()];
+    header.extend(ths.iter().map(|s| format!("R={s}")));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Ablation: hit ratio and IPC vs RTHLD", &hdr);
+    for bench in ["kmeans", "gemm_t1", "srad_v1"] {
+        let base = runner.run(bench, Scheme::Baseline).ipc();
+        let mut hit = Vec::new();
+        let mut ipc = Vec::new();
+        for (k, &r) in ths.iter().enumerate() {
+            let s = runner.run_cfg_key(bench, Scheme::Malekeh, 300 + k as u64, |o| {
+                let mut c = o.config(Scheme::Malekeh);
+                c.rthld = r;
+                c
+            });
+            hit.push(s.rf_hit_ratio());
+            ipc.push(s.ipc() / base.max(1e-9));
+        }
+        t.row_f(&format!("{bench} hit"), &hit, 3);
+        t.row_f(&format!("{bench} IPC"), &ipc, 3);
+    }
+    t
+}
+
+/// Ablation C (§I): scaling baseline OCUs 2 -> 8 — the expensive
+/// alternative Malekeh avoids (paper: +7.1% IPC for 1.74x area / 2.83x
+/// power). Compares baseline-8-OCU IPC against Malekeh-2-CCU.
+pub fn ablation_ocu_scaling(runner: &mut Runner) -> Table {
+    let mut t = Table::new(
+        "Ablation: baseline with 8 OCUs vs Malekeh with 2 CCUs (IPC norm)",
+        &["bench", "base_8ocu", "malekeh_2ccu"],
+    );
+    let mut c8 = Vec::new();
+    let mut cm = Vec::new();
+    let benches = runner.opts().benchmarks();
+    for bench in &benches {
+        let base2 = runner.run(bench, Scheme::Baseline).ipc();
+        let base8 = runner
+            .run_cfg_key(bench, Scheme::Baseline, 400, |o| {
+                let mut c = o.config(Scheme::Baseline);
+                c.collectors_per_sub_core = 8;
+                c
+            })
+            .ipc();
+        let mal = runner.run(bench, Scheme::Malekeh).ipc();
+        let v = [base8 / base2.max(1e-9), mal / base2.max(1e-9)];
+        c8.push(v[0]);
+        cm.push(v[1]);
+        t.row_f(bench, &v, 3);
+    }
+    t.row_f("GEOMEAN", &[geomean(&c8), geomean(&cm)], 3);
+    t
+}
+
+/// Ablation D (§III-B / §IV-A2): CCU write-back port — filtered single
+/// port vs no write path at all vs unfiltered ("we empirically verified
+/// that one port provides almost the same benefit as unbounded").
+pub fn ablation_write_port(runner: &mut Runner) -> Table {
+    let mut t = Table::new(
+        "Ablation: write filter / write path (hit ratio; cache-write fraction)",
+        &["bench", "filtered_hit", "unfiltered_hit", "filtered_wr", "unfiltered_wr"],
+    );
+    for bench in ["kmeans", "gemm_t1", "rnn_i2", "conv_t1"] {
+        let f = runner.run(bench, Scheme::Malekeh);
+        let u = runner.run_cfg_key(bench, Scheme::Malekeh, 500, |o| {
+            let mut c = o.config(Scheme::Malekeh);
+            c.no_write_filter = true;
+            c
+        });
+        t.row_f(
+            bench,
+            &[
+                f.rf_hit_ratio(),
+                u.rf_hit_ratio(),
+                f.cache_write_fraction(),
+                u.cache_write_fraction(),
+            ],
+            3,
+        );
+    }
+    t
+}

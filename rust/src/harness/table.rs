@@ -1,0 +1,138 @@
+//! Plain-text table formatting for figure/bench output (criterion is not
+//! available offline; every bench binary prints the paper-figure rows via
+//! this module).
+
+use std::fmt::Write as _;
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    /// Table title (figure id + caption).
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a title and column headers.
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row of preformatted cells.
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Append a label + f64 values row with `prec` decimals.
+    pub fn row_f(&mut self, label: &str, values: &[f64], prec: usize) {
+        let mut cells = vec![label.to_string()];
+        for v in values {
+            cells.push(format!("{v:.prec$}"));
+        }
+        self.row(cells);
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// No data rows yet?
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                if i == 0 {
+                    let _ = write!(out, "{:<w$}", c, w = widths[0] + 2);
+                } else {
+                    let _ = write!(out, "{:>w$}", c, w = widths[i] + 2);
+                }
+            }
+            let _ = writeln!(out);
+        };
+        line(&mut out, &self.header);
+        let total: usize = widths.iter().map(|w| w + 2).sum();
+        let _ = writeln!(out, "{}", "-".repeat(total.min(120)));
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        debug_assert_eq!(ncols, self.header.len());
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+        println!();
+    }
+}
+
+/// Geometric mean of strictly-positive values (0 if empty).
+pub fn geomean(vals: &[f64]) -> f64 {
+    if vals.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = vals.iter().map(|v| v.max(1e-12).ln()).sum();
+    (s / vals.len() as f64).exp()
+}
+
+/// Arithmetic mean (0 if empty).
+pub fn mean(vals: &[f64]) -> f64 {
+    if vals.is_empty() {
+        0.0
+    } else {
+        vals.iter().sum::<f64>() / vals.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Fig X", &["bench", "a", "b"]);
+        t.row_f("hotspot", &[1.0, 2.345], 2);
+        t.row_f("k", &[10.0, 0.5], 2);
+        let s = t.render();
+        assert!(s.contains("== Fig X =="));
+        assert!(s.contains("hotspot"));
+        assert!(s.contains("2.35"));
+        // all lines same structure
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn geomean_and_mean() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((mean(&[1.0, 3.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+}

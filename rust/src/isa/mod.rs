@@ -1,0 +1,227 @@
+//! Decoded instruction model — the simulator's "SASS".
+//!
+//! Mirrors what the paper's mechanism can observe in a Turing trace: opcode
+//! class, up to 6 source and 2 destination registers (tensor-core HMMA
+//! shapes, §III-C), the compiler's binary reuse-distance bit per operand
+//! (§III-A), and a line-granular memory address for LD/ST.
+//!
+//! Kept at 32 bytes so whole warp streams stay cache-resident in the
+//! simulator hot loop.
+
+/// Maximum source operands per instruction (tensor-core HMMA bound, §II).
+pub const MAX_SRC: usize = 6;
+/// Maximum destination operands per instruction.
+pub const MAX_DST: usize = 2;
+/// Architectural registers addressable per thread (CUDA bound, §III-C: tag
+/// is one byte).
+pub const NUM_REGS: usize = 256;
+
+/// Functional class of an instruction; selects the execution pipe and
+/// latency (see [`crate::config::EuTiming`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum OpClass {
+    /// Integer / FP32 ALU op (FFMA, IADD, ...): short pipe.
+    Alu = 0,
+    /// Special-function op (MUFU: rsqrt, sin, ...): long pipe, low rate.
+    Sfu,
+    /// Global load through L1/L2/DRAM.
+    LdGlobal,
+    /// Global store (fire-and-forget past L1).
+    StGlobal,
+    /// Shared-memory load (fixed latency, no cache).
+    LdShared,
+    /// Tensor-core HMMA: up to 6 sources, 2 destinations.
+    Mma,
+    /// Control (BRA, BAR, ...): no operands collected from the RF banks.
+    Ctrl,
+    /// Kernel exit marker for a warp.
+    Exit,
+}
+
+impl OpClass {
+    /// Does this class read memory (needs LSU + memory subsystem)?
+    #[inline]
+    pub fn is_load(self) -> bool {
+        matches!(self, OpClass::LdGlobal | OpClass::LdShared)
+    }
+
+    /// Any memory-pipe instruction (loads and stores).
+    #[inline]
+    pub fn is_mem(self) -> bool {
+        matches!(
+            self,
+            OpClass::LdGlobal | OpClass::StGlobal | OpClass::LdShared
+        )
+    }
+
+    /// Short human tag used by reports.
+    pub fn tag(self) -> &'static str {
+        match self {
+            OpClass::Alu => "ALU",
+            OpClass::Sfu => "SFU",
+            OpClass::LdGlobal => "LDG",
+            OpClass::StGlobal => "STG",
+            OpClass::LdShared => "LDS",
+            OpClass::Mma => "MMA",
+            OpClass::Ctrl => "CTRL",
+            OpClass::Exit => "EXIT",
+        }
+    }
+}
+
+/// One decoded warp instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Instruction {
+    /// Functional class.
+    pub op: OpClass,
+    /// Source register ids (first `nsrc` valid).
+    pub srcs: [u8; MAX_SRC],
+    /// Destination register ids (first `ndst` valid).
+    pub dsts: [u8; MAX_DST],
+    /// Number of valid sources.
+    pub nsrc: u8,
+    /// Number of valid destinations.
+    pub ndst: u8,
+    /// Compiler near/far bit per source (bit i set = near reuse). §III-A.
+    pub src_near: u8,
+    /// Compiler near/far bit per destination.
+    pub dst_near: u8,
+    /// 128B-line-granular address for memory ops (0 otherwise).
+    pub line_addr: u32,
+}
+
+impl Instruction {
+    /// Build an instruction; panics if operand counts exceed the ISA bounds.
+    pub fn new(op: OpClass, srcs: &[u8], dsts: &[u8]) -> Self {
+        assert!(srcs.len() <= MAX_SRC, "too many sources: {}", srcs.len());
+        assert!(dsts.len() <= MAX_DST, "too many destinations: {}", dsts.len());
+        let mut s = [0u8; MAX_SRC];
+        let mut d = [0u8; MAX_DST];
+        s[..srcs.len()].copy_from_slice(srcs);
+        d[..dsts.len()].copy_from_slice(dsts);
+        Instruction {
+            op,
+            srcs: s,
+            dsts: d,
+            nsrc: srcs.len() as u8,
+            ndst: dsts.len() as u8,
+            src_near: 0,
+            dst_near: 0,
+            line_addr: 0,
+        }
+    }
+
+    /// Memory variant with a line address.
+    pub fn mem(op: OpClass, srcs: &[u8], dsts: &[u8], line_addr: u32) -> Self {
+        debug_assert!(op.is_mem());
+        let mut i = Self::new(op, srcs, dsts);
+        i.line_addr = line_addr;
+        i
+    }
+
+    /// Valid source slice.
+    #[inline]
+    pub fn sources(&self) -> &[u8] {
+        &self.srcs[..self.nsrc as usize]
+    }
+
+    /// Valid destination slice.
+    #[inline]
+    pub fn dests(&self) -> &[u8] {
+        &self.dsts[..self.ndst as usize]
+    }
+
+    /// Is source operand `i` marked near-reuse by the compiler?
+    #[inline]
+    pub fn src_is_near(&self, i: usize) -> bool {
+        self.src_near & (1 << i) != 0
+    }
+
+    /// Is destination operand `i` marked near-reuse by the compiler?
+    #[inline]
+    pub fn dst_is_near(&self, i: usize) -> bool {
+        self.dst_near & (1 << i) != 0
+    }
+
+    /// Set the near bit of source operand `i`.
+    #[inline]
+    pub fn set_src_near(&mut self, i: usize, near: bool) {
+        if near {
+            self.src_near |= 1 << i;
+        } else {
+            self.src_near &= !(1 << i);
+        }
+    }
+
+    /// Set the near bit of destination operand `i`.
+    #[inline]
+    pub fn set_dst_near(&mut self, i: usize, near: bool) {
+        if near {
+            self.dst_near |= 1 << i;
+        } else {
+            self.dst_near &= !(1 << i);
+        }
+    }
+
+    /// Total register operands (sources + destinations).
+    #[inline]
+    pub fn noperands(&self) -> usize {
+        (self.nsrc + self.ndst) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instruction_is_compact() {
+        // hot-loop footprint guard: whole warp streams should stay in cache
+        assert!(std::mem::size_of::<Instruction>() <= 32);
+    }
+
+    #[test]
+    fn new_records_operands() {
+        let i = Instruction::new(OpClass::Mma, &[2, 3, 4, 5, 10, 11], &[2, 3]);
+        assert_eq!(i.sources(), &[2, 3, 4, 5, 10, 11]);
+        assert_eq!(i.dests(), &[2, 3]);
+        assert_eq!(i.noperands(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "too many sources")]
+    fn too_many_sources_panics() {
+        Instruction::new(OpClass::Alu, &[1, 2, 3, 4, 5, 6, 7], &[]);
+    }
+
+    #[test]
+    fn near_bits_roundtrip() {
+        let mut i = Instruction::new(OpClass::Alu, &[1, 2], &[3]);
+        assert!(!i.src_is_near(0));
+        i.set_src_near(0, true);
+        i.set_src_near(1, false);
+        i.set_dst_near(0, true);
+        assert!(i.src_is_near(0));
+        assert!(!i.src_is_near(1));
+        assert!(i.dst_is_near(0));
+        i.set_src_near(0, false);
+        assert!(!i.src_is_near(0));
+    }
+
+    #[test]
+    fn op_class_predicates() {
+        assert!(OpClass::LdGlobal.is_load());
+        assert!(OpClass::LdShared.is_load());
+        assert!(!OpClass::StGlobal.is_load());
+        assert!(OpClass::StGlobal.is_mem());
+        assert!(!OpClass::Mma.is_mem());
+        assert_eq!(OpClass::Mma.tag(), "MMA");
+    }
+
+    #[test]
+    fn mem_sets_address() {
+        let i = Instruction::mem(OpClass::LdGlobal, &[1], &[2], 0xBEEF);
+        assert_eq!(i.line_addr, 0xBEEF);
+    }
+}

@@ -1,0 +1,19 @@
+//! Malekeh: a lightweight, compiler-assisted register file cache for GPGPU.
+//!
+//! Full-system reproduction of the paper (Abaie Shoushtary et al., 2023):
+//! a cycle-level sub-core GPU simulator with the paper's CCU caching
+//! scheme, all comparator schemes (baseline OCU, BOW, RFC, software RFC),
+//! the compiler reuse-distance pass (rust + AOT-compiled JAX/Pallas), an
+//! AccelWattch-style RF energy model, Table II workload generators, and a
+//! bench harness that regenerates every figure of the evaluation.
+pub mod cli;
+pub mod compiler;
+pub mod config;
+pub mod energy;
+pub mod harness;
+pub mod isa;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod trace;
+pub mod util;

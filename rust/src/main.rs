@@ -1,0 +1,223 @@
+//! `malekeh` — launcher for the Malekeh reproduction.
+//!
+//! Subcommands:
+//!   simulate <bench>   run one benchmark under one scheme, print stats
+//!   annotate <bench>   run the compiler pass; `--engine pjrt` uses the AOT
+//!                      Pallas artifact through the PJRT runtime
+//!   fig <id>           regenerate a paper figure (1,2,7,9,10,12..17)
+//!   headline           the abstract's headline comparison
+//!   list               list benchmarks and schemes
+//!
+//! Common options: `--scheme S`, `--sms N`, `--quick`, `--full`,
+//! `-s key=value` (any `config::GpuConfig` key).
+
+use std::process::ExitCode;
+
+use malekeh::cli::Cli;
+use malekeh::config::{GpuConfig, Scheme};
+use malekeh::energy::EnergyModel;
+use malekeh::harness::{self, ExpOpts, Runner};
+use malekeh::sim::run_benchmark;
+use malekeh::trace::{KernelTrace, BENCHMARKS};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<(), String> {
+    let cli = Cli::parse(args)?;
+    match cli.command.as_str() {
+        "simulate" => cmd_simulate(&cli),
+        "annotate" => cmd_annotate(&cli),
+        "fig" => cmd_fig(&cli),
+        "headline" => cmd_headline(&cli),
+        "list" => cmd_list(),
+        "" | "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}; try `malekeh help`")),
+    }
+}
+
+fn print_help() {
+    println!(
+        "malekeh — compiler-assisted RF cache for GPGPU (paper reproduction)\n\
+         \n\
+         USAGE: malekeh <command> [args]\n\
+         \n\
+         COMMANDS:\n\
+           simulate <bench> [--scheme S] [-s k=v]...   simulate one benchmark\n\
+           annotate <bench> [--engine rust|pjrt]       compiler reuse pass\n\
+           fig <1|2|7|9|10|12|13|14|15|16|17> [--quick|--full]\n\
+           headline [--quick|--full]                   abstract's comparison\n\
+           list                                        benchmarks + schemes"
+    );
+}
+
+fn build_config(cli: &Cli) -> Result<GpuConfig, String> {
+    let scheme = Scheme::from_name(cli.opt_or("scheme", "baseline"))
+        .ok_or_else(|| "unknown scheme (see `malekeh list`)".to_string())?;
+    let mut cfg = GpuConfig::table1_baseline().with_scheme(scheme);
+    cfg.num_sms = cli.opt_num("sms", 2usize)?;
+    if let Some(path) = cli.options.get("config") {
+        let pairs = malekeh::config::parse_kv_file(path)?;
+        cfg.apply(&pairs)?;
+    }
+    cfg.apply(&cli.overrides)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_simulate(cli: &Cli) -> Result<(), String> {
+    let bench = cli
+        .positional
+        .first()
+        .ok_or("usage: simulate <bench>")?
+        .as_str();
+    let cfg = build_config(cli)?;
+    let profile_warps = cli.opt_num("profile-warps", 2usize)?;
+    let t0 = std::time::Instant::now();
+    let stats = run_benchmark(&cfg, bench, profile_warps);
+    let dt = t0.elapsed().as_secs_f64();
+    let model = EnergyModel::for_config(&cfg);
+    println!("benchmark            {bench}");
+    println!("scheme               {}", cfg.scheme);
+    println!("cycles               {}", stats.cycles);
+    println!("instructions         {}", stats.instructions);
+    println!("IPC (per SM)         {:.4}", stats.ipc() / cfg.num_sms as f64);
+    println!("warps retired        {}", stats.warps_retired);
+    println!("RF reads             {}", stats.rf_reads);
+    println!("  served by cache    {} ({:.1}%)", stats.rf_cache_reads, stats.rf_hit_ratio() * 100.0);
+    println!("  served by banks    {}", stats.rf_bank_reads);
+    println!("RF writes            {} (cached {})", stats.rf_writes, stats.rf_cache_writes);
+    println!("bank conflict wait   {}", stats.bank_conflict_wait);
+    println!("L1D hit ratio        {:.3}", stats.l1_hit_ratio());
+    println!("sched issued/s2/s3   {:?}", stats.sched_state_distribution());
+    println!("waiting stalls       {}", stats.waiting_stalls);
+    println!("CCU flushes          {}", stats.ccu_flushes);
+    println!("RF dynamic energy    {:.0} (relative units)", model.total(&stats.energy));
+    println!("sim wall time        {dt:.2}s ({:.2} Minstr/s)", stats.instructions as f64 / dt / 1e6);
+    Ok(())
+}
+
+fn cmd_annotate(cli: &Cli) -> Result<(), String> {
+    let bench_name = cli
+        .positional
+        .first()
+        .ok_or("usage: annotate <bench>")?
+        .as_str();
+    let bench =
+        malekeh::trace::find(bench_name).ok_or_else(|| format!("unknown bench {bench_name}"))?;
+    let engine = cli.opt_or("engine", "rust");
+    let rthld = cli.opt_num("rthld", malekeh::compiler::RTHLD)?;
+    let trace = KernelTrace::generate(bench, 8, 0xC0FFEE);
+    match engine {
+        "rust" => {
+            let profile = malekeh::compiler::profile(&trace, 8, rthld);
+            let hist = malekeh::compiler::reuse_histogram(&trace);
+            let total: u64 = hist.iter().sum();
+            println!("benchmark         {bench_name}");
+            println!("engine            rust");
+            println!("accesses profiled {}", profile.accesses);
+            println!("static operands   {}", profile.static_operands());
+            println!(
+                "reuse histogram   <=1:{:.3} 2:{:.3} 3:{:.3} 4-10:{:.3} >10:{:.3}",
+                hist[0] as f64 / total as f64,
+                hist[1] as f64 / total as f64,
+                hist[2] as f64 / total as f64,
+                hist[3] as f64 / total as f64,
+                hist[4] as f64 / total as f64
+            );
+        }
+        "pjrt" => {
+            let mut rt = malekeh::runtime::Runtime::open_default()
+                .map_err(|e| format!("{e:#}"))?;
+            let w = rt.manifest.profile_warps;
+            let l = rt.manifest.trace_len;
+            let (ids, pos, rw) = trace.access_streams(w, l);
+            let t0 = std::time::Instant::now();
+            let (_dist, near, hist) =
+                rt.annotate(&ids, &pos, &rw).map_err(|e| format!("{e:#}"))?;
+            let dt = t0.elapsed();
+            let near_count = near.iter().filter(|&&n| n == 1).count();
+            let valid = near.iter().filter(|&&n| n >= 0).count();
+            let total: i32 = hist.iter().sum();
+            println!("benchmark         {bench_name}");
+            println!("engine            pjrt (AOT Pallas artifact)");
+            println!("near fraction     {:.3}", near_count as f64 / valid.max(1) as f64);
+            println!(
+                "reuse histogram   <=1:{:.3} 2:{:.3} 3:{:.3} 4-10:{:.3} >10:{:.3}",
+                hist[0] as f64 / total.max(1) as f64,
+                hist[1] as f64 / total.max(1) as f64,
+                hist[2] as f64 / total.max(1) as f64,
+                hist[3] as f64 / total.max(1) as f64,
+                hist[4] as f64 / total.max(1) as f64
+            );
+            println!("artifact exec     {:.1} ms", dt.as_secs_f64() * 1e3);
+        }
+        other => return Err(format!("unknown engine {other:?} (rust|pjrt)")),
+    }
+    Ok(())
+}
+
+fn exp_opts(cli: &Cli) -> ExpOpts {
+    let mut o = ExpOpts::default();
+    if cli.has_flag("quick") {
+        o.quick = true;
+    }
+    if cli.has_flag("full") {
+        o.num_sms = 10;
+    }
+    if let Ok(n) = cli.opt_num("sms", o.num_sms) {
+        o.num_sms = n;
+    }
+    o
+}
+
+fn cmd_fig(cli: &Cli) -> Result<(), String> {
+    let id = cli.positional.first().ok_or("usage: fig <id>")?.as_str();
+    let opts = exp_opts(cli);
+    let mut runner = Runner::new(opts.clone());
+    let table = match id {
+        "1" => harness::fig01(&opts),
+        "2" => harness::fig02(&mut runner),
+        "7" => harness::fig07(&mut runner),
+        "9" => harness::fig09(&opts),
+        "10" => harness::fig10(&mut runner),
+        "12" => harness::fig12(&mut runner),
+        "13" => harness::fig13(&mut runner),
+        "14" => harness::fig14(&mut runner),
+        "15" => harness::fig15(&mut runner),
+        "16" => harness::fig16(&mut runner),
+        "17" => harness::fig17(&mut runner),
+        other => return Err(format!("no figure {other}; see DESIGN.md §5")),
+    };
+    table.print();
+    Ok(())
+}
+
+fn cmd_headline(cli: &Cli) -> Result<(), String> {
+    let mut runner = Runner::new(exp_opts(cli));
+    harness::headline(&mut runner).print();
+    Ok(())
+}
+
+fn cmd_list() -> Result<(), String> {
+    println!("benchmarks (Table II):");
+    for b in BENCHMARKS {
+        println!("  {:22} {:?}", b.name, b.suite);
+    }
+    println!("\nschemes:");
+    for s in Scheme::ALL {
+        println!("  {}", s.name());
+    }
+    Ok(())
+}

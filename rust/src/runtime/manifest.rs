@@ -1,0 +1,159 @@
+//! Parser for `artifacts/manifest.txt` (written by `python -m compile.aot`).
+//!
+//! The manifest pins the constants and shapes the artifacts were lowered
+//! with, so the rust side can refuse to feed tensors of the wrong shape or
+//! run with a mismatched RTHLD/WINDOW.
+
+use std::collections::HashMap;
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// Compiler near/far threshold the artifacts were built with.
+    pub rthld: u32,
+    /// Forward-scan window (accesses).
+    pub window: u32,
+    /// No-reuse cap value.
+    pub cap: i32,
+    /// Rows of the reuse-annotation input.
+    pub profile_warps: usize,
+    /// Columns of the reuse-annotation input.
+    pub trace_len: usize,
+    /// Fig-1 histogram buckets.
+    pub hist_buckets: usize,
+    /// Rows of the energy-model batch.
+    pub energy_rows: usize,
+    /// Energy event kinds (columns).
+    pub energy_events: usize,
+    /// Artifact file names present.
+    pub artifacts: Vec<String>,
+}
+
+impl Manifest {
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let mut kv: HashMap<&str, &str> = HashMap::new();
+        let mut artifacts = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some(eq) = line.find('=') else { continue };
+            let key = line[..eq].trim();
+            let val = line[eq + 1..].trim();
+            if key == "artifact" {
+                let name = val.split("::").next().unwrap_or(val).trim();
+                artifacts.push(name.to_string());
+            } else {
+                kv.insert(key, val);
+            }
+        }
+        fn get<T: std::str::FromStr>(
+            kv: &HashMap<&str, &str>,
+            k: &str,
+        ) -> Result<T, String> {
+            kv.get(k)
+                .ok_or_else(|| format!("manifest missing {k}"))?
+                .parse::<T>()
+                .map_err(|_| format!("manifest bad value for {k}"))
+        }
+        Ok(Manifest {
+            rthld: get(&kv, "rthld")?,
+            window: get(&kv, "window")?,
+            cap: get(&kv, "cap")?,
+            profile_warps: get(&kv, "profile_warps")?,
+            trace_len: get(&kv, "trace_len")?,
+            hist_buckets: get(&kv, "hist_buckets")?,
+            energy_rows: get(&kv, "energy_rows")?,
+            energy_events: get(&kv, "energy_events")?,
+            artifacts,
+        })
+    }
+
+    /// Load and parse `<dir>/manifest.txt`.
+    pub fn load(dir: &std::path::Path) -> Result<Manifest, String> {
+        let p = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&p)
+            .map_err(|e| format!("cannot read {}: {e}", p.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Check compatibility with the rust-side constants; returns the first
+    /// mismatch description.
+    pub fn check_compat(&self) -> Result<(), String> {
+        if self.window as usize != crate::compiler::WINDOW {
+            return Err(format!(
+                "artifact window {} != rust WINDOW {} — rebuild artifacts",
+                self.window,
+                crate::compiler::WINDOW
+            ));
+        }
+        if self.cap != crate::compiler::CAP {
+            return Err(format!("artifact cap {} != rust CAP", self.cap));
+        }
+        if self.energy_events != crate::energy::NEVENTS {
+            return Err(format!(
+                "artifact energy_events {} != rust NEVENTS {}",
+                self.energy_events,
+                crate::energy::NEVENTS
+            ));
+        }
+        if self.hist_buckets != crate::compiler::HIST_BUCKETS {
+            return Err("hist bucket count mismatch".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+rthld=12
+window=96
+cap=255
+profile_warps=8
+trace_len=2048
+hist_buckets=5
+energy_rows=32
+energy_events=8
+artifact=reuse_annotate.hlo.txt :: ids:i32[8,2048] ...
+artifact=rf_energy.hlo.txt :: counts:f32[32,8] ...
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.rthld, 12);
+        assert_eq!(m.window, 96);
+        assert_eq!(m.trace_len, 2048);
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.artifacts[0], "reuse_annotate.hlo.txt");
+        assert!(m.check_compat().is_ok());
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        assert!(Manifest::parse("rthld=12\n").is_err());
+    }
+
+    #[test]
+    fn compat_detects_window_mismatch() {
+        let m = Manifest::parse(&SAMPLE.replace("window=96", "window=48")).unwrap();
+        assert!(m.check_compat().is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // when `make artifacts` has run, the real manifest must be compatible
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            m.check_compat().unwrap();
+            assert!(m.artifacts.iter().any(|a| a.contains("reuse_annotate")));
+        }
+    }
+}

@@ -1,0 +1,643 @@
+//! Collector units: baseline OCU, Malekeh CCU (§III-C), BOW BOC (§VI-B),
+//! and the per-warp RFC cache tables (§VI-A).
+//!
+//! A single `Collector` struct covers OCU/CCU (the CCU is an OCU plus a
+//! cache table and control); BOW's sliding window lives in the same struct
+//! (`window`) and is only populated for the BOW scheme.
+
+use std::collections::VecDeque;
+
+use crate::isa::Instruction;
+use crate::util::Rng;
+
+/// Upper bound on cache-table entries (config.ct_entries must not exceed).
+pub const MAX_CT: usize = 16;
+
+/// One cache-table entry (§III-C: tag, lock, reuse distance, LRU).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CtEntry {
+    /// Register tag (one byte, §III-C).
+    pub reg: u8,
+    /// Entry holds a live value.
+    pub valid: bool,
+    /// Pinned: operand of the instruction occupying the CCU.
+    pub locked: bool,
+    /// Compiler reuse-distance bit of the value (true = near).
+    pub near: bool,
+    /// Value entered via the writeback port (Fig-16 reuse accounting).
+    pub from_wb: bool,
+    /// LRU priority (higher = more recent).
+    pub lru: u32,
+}
+
+/// Fully-associative register cache with the paper's replacement policy.
+#[derive(Debug, Clone)]
+pub struct CacheTable {
+    entries: Vec<CtEntry>,
+    tick: u32,
+}
+
+impl CacheTable {
+    /// `n` entries (8 in the paper).
+    pub fn new(n: usize) -> Self {
+        assert!(n <= MAX_CT && n >= 1);
+        CacheTable { entries: vec![CtEntry::default(); n], tick: 0 }
+    }
+
+    /// Invalidate everything (CCU reallocation to a new warp, §III-C1).
+    pub fn flush(&mut self) {
+        for e in &mut self.entries {
+            *e = CtEntry::default();
+        }
+        self.tick = 0;
+    }
+
+    /// Find a valid entry holding `reg`.
+    pub fn lookup(&self, reg: u8) -> Option<usize> {
+        self.entries.iter().position(|e| e.valid && e.reg == reg)
+    }
+
+    /// Bump LRU recency of entry `i`.
+    pub fn touch(&mut self, i: usize) {
+        self.tick += 1;
+        self.entries[i].lru = self.tick;
+    }
+
+    /// Any valid entry with near reuse? (the bit sent to the scheduler over
+    /// port R, §III-C).
+    pub fn has_near_value(&self) -> bool {
+        self.entries.iter().any(|e| e.valid && e.near)
+    }
+
+    /// Any valid entries at all?
+    pub fn has_values(&self) -> bool {
+        self.entries.iter().any(|e| e.valid)
+    }
+
+    /// Count of valid entries.
+    pub fn valid_count(&self) -> usize {
+        self.entries.iter().filter(|e| e.valid).count()
+    }
+
+    /// Registers of all valid entries (RFC write-back flush).
+    pub fn valid_regs(&self) -> Vec<u8> {
+        self.entries.iter().filter(|e| e.valid).map(|e| e.reg).collect()
+    }
+
+    /// Unlock all entries (instruction dispatched, §III-C1).
+    pub fn unlock_all(&mut self) {
+        for e in &mut self.entries {
+            e.locked = false;
+        }
+    }
+
+    /// Entry accessor for tests / energy accounting.
+    pub fn entry(&self, i: usize) -> &CtEntry {
+        &self.entries[i]
+    }
+
+    /// Mutable entry accessor.
+    pub fn entry_mut(&mut self, i: usize) -> &mut CtEntry {
+        &mut self.entries[i]
+    }
+
+    /// Choose a victim and install `(reg, near, locked)`.
+    ///
+    /// Paper policy (§IV-A1): skip locked entries; invalid entries first;
+    /// then a random entry among those with *far* reuse; otherwise LRU.
+    /// `traditional` (Fig 17 ablation) uses plain LRU over unlocked
+    /// entries. Returns the index, or `None` if every entry is locked.
+    pub fn allocate(
+        &mut self,
+        reg: u8,
+        near: bool,
+        locked: bool,
+        rng: &mut Rng,
+        traditional: bool,
+    ) -> Option<usize> {
+        // tag already present: update in place (tags must stay unique)
+        if let Some(i) = self.lookup(reg) {
+            if self.entries[i].locked && !locked {
+                // a locked entry keeps its pin; just refresh recency/bits
+                self.entries[i].near = near;
+                self.touch(i);
+                return Some(i);
+            }
+            self.tick += 1;
+            self.entries[i] =
+                CtEntry { reg, valid: true, locked, near, from_wb: false, lru: self.tick };
+            return Some(i);
+        }
+        // invalid first
+        let victim = if let Some(i) = self.entries.iter().position(|e| !e.valid) {
+            Some(i)
+        } else if traditional {
+            self.lru_victim()
+        } else {
+            let far: Vec<usize> = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| !e.locked && !e.near)
+                .map(|(i, _)| i)
+                .collect();
+            if !far.is_empty() {
+                Some(far[rng.below(far.len())])
+            } else {
+                self.lru_victim()
+            }
+        };
+        let i = victim?;
+        self.tick += 1;
+        self.entries[i] =
+            CtEntry { reg, valid: true, locked, near, from_wb: false, lru: self.tick };
+        Some(i)
+    }
+
+    fn lru_victim(&self) -> Option<usize> {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| !e.locked)
+            .min_by_key(|(_, e)| e.lru)
+            .map(|(i, _)| i)
+    }
+}
+
+/// One instruction's register set inside a BOW sliding window.
+#[derive(Debug, Clone)]
+pub struct BocInstr {
+    /// Issue sequence number (matches writebacks to window slots).
+    pub seq: u64,
+    /// (reg, value present, is destination).
+    pub regs: Vec<(u8, bool, bool)>,
+}
+
+/// Result of allocating an instruction to a collector.
+#[derive(Debug, Clone, Default)]
+pub struct AllocResult {
+    /// Source slots that must be fetched from the banks: (slot, reg).
+    pub misses: Vec<(u8, u8)>,
+    /// Source operands served from the cache.
+    pub hits: u32,
+    /// Hits on values captured via the writeback port (Fig 16: proves
+    /// cache writes are reused).
+    pub wb_reuse: u32,
+    /// The cache table was flushed (ownership change).
+    pub flushed: bool,
+}
+
+/// A collector unit (OCU / CCU / BOC depending on scheme flags).
+#[derive(Debug, Clone)]
+pub struct Collector {
+    /// An un-dispatched instruction occupies this unit.
+    pub occupied: bool,
+    /// Warp whose values live in the cache table (survives dispatch).
+    pub owner: Option<u8>,
+    /// The occupying instruction.
+    pub instr: Instruction,
+    /// Cycle the occupying instruction was issued.
+    pub issue_cycle: u64,
+    /// Ready bitmask over source slots.
+    pub src_ready: u8,
+    /// Sequence number of the occupying instruction (BOW writeback match).
+    pub cur_seq: u64,
+    /// Cache table (CCU variants; OCU uses it as a plain operand buffer).
+    pub ct: CacheTable,
+    /// BOW sliding window (empty unless scheme is BOW).
+    pub window: VecDeque<BocInstr>,
+    seq_counter: u64,
+}
+
+impl Collector {
+    /// New collector with `ct_entries` cache-table entries.
+    pub fn new(ct_entries: usize) -> Self {
+        Collector {
+            occupied: false,
+            owner: None,
+            instr: Instruction::new(crate::isa::OpClass::Ctrl, &[], &[]),
+            issue_cycle: 0,
+            src_ready: 0,
+            cur_seq: 0,
+            ct: CacheTable::new(ct_entries),
+            window: VecDeque::new(),
+            seq_counter: 0,
+        }
+    }
+
+    /// All valid source operands ready (dispatch condition, §III-C1)?
+    #[inline]
+    pub fn ready(&self) -> bool {
+        self.occupied && self.src_ready.count_ones() as u8 == self.instr.nsrc
+    }
+
+    /// Mark source slot ready (operand arrived over port S).
+    #[inline]
+    pub fn deliver(&mut self, slot: u8) {
+        self.src_ready |= 1 << slot;
+    }
+
+    /// Allocate as a *baseline OCU*: no caching, every source fetched.
+    pub fn alloc_ocu(&mut self, warp: u8, instr: &Instruction, now: u64) -> AllocResult {
+        debug_assert!(!self.occupied);
+        self.occupied = true;
+        self.owner = Some(warp);
+        self.instr = *instr;
+        self.issue_cycle = now;
+        self.src_ready = 0;
+        self.ct.flush();
+        let misses = instr
+            .sources()
+            .iter()
+            .enumerate()
+            .map(|(slot, &reg)| (slot as u8, reg))
+            .collect();
+        AllocResult { misses, ..Default::default() }
+    }
+
+    /// Allocate as a *Malekeh CCU* (§III-C1): flush on ownership change,
+    /// tag-check every source, lock hits, allocate entries for misses.
+    pub fn alloc_ccu(
+        &mut self,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+        rng: &mut Rng,
+        traditional: bool,
+    ) -> AllocResult {
+        debug_assert!(!self.occupied);
+        let mut res = AllocResult::default();
+        if self.owner != Some(warp) {
+            self.ct.flush();
+            res.flushed = self.owner.is_some();
+            self.owner = Some(warp);
+        }
+        self.occupied = true;
+        self.instr = *instr;
+        self.issue_cycle = now;
+        self.src_ready = 0;
+        for (slot, &reg) in instr.sources().iter().enumerate() {
+            let near = instr.src_is_near(slot);
+            if let Some(i) = self.ct.lookup(reg) {
+                // hit: value already in the CCU — no bank read
+                let e = self.ct.entry_mut(i);
+                e.locked = true;
+                e.near = near;
+                if e.from_wb {
+                    e.from_wb = false;
+                    res.wb_reuse += 1;
+                }
+                self.ct.touch(i);
+                self.src_ready |= 1 << slot;
+                res.hits += 1;
+            } else {
+                let idx = self
+                    .ct
+                    .allocate(reg, near, true, rng, traditional)
+                    .expect("CT must fit all sources (ct_entries >= MAX_SRC)");
+                debug_assert!(idx < MAX_CT);
+                res.misses.push((slot as u8, reg));
+            }
+        }
+        res
+    }
+
+    /// Allocate as a *BOW BOC*: check the sliding window, then append this
+    /// instruction's registers to it.
+    pub fn alloc_boc(
+        &mut self,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+        window_len: usize,
+    ) -> AllocResult {
+        debug_assert!(!self.occupied);
+        let mut res = AllocResult::default();
+        self.occupied = true;
+        self.owner = Some(warp);
+        self.instr = *instr;
+        self.issue_cycle = now;
+        self.src_ready = 0;
+        self.seq_counter += 1;
+        self.cur_seq = self.seq_counter;
+
+        let mut new_regs: Vec<(u8, bool, bool)> = Vec::with_capacity(8);
+        for (slot, &reg) in instr.sources().iter().enumerate() {
+            // newest-first search over the window + regs already added for
+            // this instruction (duplicate sources)
+            let hit = new_regs.iter().any(|&(r, p, _)| r == reg && p)
+                || self
+                    .window
+                    .iter()
+                    .rev()
+                    .any(|bi| bi.regs.iter().any(|&(r, p, _)| r == reg && p));
+            if hit {
+                self.src_ready |= 1 << slot;
+                res.hits += 1;
+                new_regs.push((reg, true, false));
+            } else {
+                res.misses.push((slot as u8, reg));
+                new_regs.push((reg, false, false)); // present once fetched
+            }
+        }
+        for &reg in instr.dests() {
+            new_regs.push((reg, false, true)); // present at writeback
+        }
+        self.window.push_back(BocInstr { seq: self.cur_seq, regs: new_regs });
+        while self.window.len() > window_len {
+            self.window.pop_front(); // slid out: pending dsts go RF-only
+        }
+        res
+    }
+
+    /// Operand fetched from the banks: mark the slot ready and (BOW) mark
+    /// the value present in the window.
+    pub fn bank_operand_arrived(&mut self, slot: u8, reg: u8, bow: bool) {
+        self.deliver(slot);
+        if bow {
+            if let Some(bi) = self.window.iter_mut().find(|bi| bi.seq == self.cur_seq) {
+                for e in bi.regs.iter_mut() {
+                    if e.0 == reg && !e.2 {
+                        e.1 = true;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Dispatch bookkeeping: the unit becomes free; a CCU keeps (and
+    /// unlocks) its contents, an OCU drops them.
+    pub fn dispatched(&mut self, caching: bool) {
+        self.occupied = false;
+        self.src_ready = 0;
+        if caching {
+            self.ct.unlock_all();
+        } else {
+            self.ct.flush();
+        }
+    }
+
+    /// CCU destination writeback (§IV-A2): update on hit; allocate only if
+    /// `near` (write filter) unless `no_write_filter`. Returns true if the
+    /// cache captured the value.
+    pub fn ccu_writeback(
+        &mut self,
+        warp: u8,
+        reg: u8,
+        near: bool,
+        rng: &mut Rng,
+        traditional: bool,
+        no_write_filter: bool,
+    ) -> bool {
+        if self.owner != Some(warp) {
+            return false;
+        }
+        if let Some(i) = self.ct.lookup(reg) {
+            let e = self.ct.entry_mut(i);
+            e.near = near;
+            e.from_wb = true;
+            self.ct.touch(i);
+            return true;
+        }
+        if near || no_write_filter {
+            if let Some(i) = self.ct.allocate(reg, near, false, rng, traditional) {
+                self.ct.entry_mut(i).from_wb = true;
+                return true;
+            }
+            return false;
+        }
+        false
+    }
+
+    /// BOW destination writeback: if the producing instruction is still in
+    /// the window, the value is captured there. Returns true if captured.
+    pub fn boc_writeback(&mut self, seq: u64, reg: u8) -> bool {
+        if let Some(bi) = self.window.iter_mut().find(|bi| bi.seq == seq) {
+            let mut hit = false;
+            for e in bi.regs.iter_mut() {
+                if e.0 == reg && e.2 {
+                    e.1 = true;
+                    hit = true;
+                }
+            }
+            hit
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Instruction, OpClass};
+
+    fn rng() -> Rng {
+        Rng::new(1)
+    }
+
+    // ---- CacheTable ----
+
+    #[test]
+    fn ct_lookup_and_flush() {
+        let mut ct = CacheTable::new(4);
+        assert!(ct.lookup(5).is_none());
+        ct.allocate(5, true, false, &mut rng(), false);
+        assert!(ct.lookup(5).is_some());
+        assert!(ct.has_near_value());
+        ct.flush();
+        assert!(ct.lookup(5).is_none());
+        assert!(!ct.has_values());
+    }
+
+    #[test]
+    fn ct_replacement_prefers_invalid_then_far() {
+        let mut ct = CacheTable::new(3);
+        let mut r = rng();
+        ct.allocate(1, true, false, &mut r, false); // near
+        ct.allocate(2, false, false, &mut r, false); // far
+        ct.allocate(3, true, false, &mut r, false); // near
+        // table full; new alloc must evict the far entry (reg 2)
+        ct.allocate(4, true, false, &mut r, false);
+        assert!(ct.lookup(2).is_none(), "far entry must be the victim");
+        assert!(ct.lookup(1).is_some() && ct.lookup(3).is_some());
+    }
+
+    #[test]
+    fn ct_replacement_falls_back_to_lru_when_all_near() {
+        let mut ct = CacheTable::new(2);
+        let mut r = rng();
+        ct.allocate(1, true, false, &mut r, false);
+        ct.allocate(2, true, false, &mut r, false);
+        ct.touch(ct.lookup(1).unwrap()); // reg1 most recent
+        ct.allocate(3, true, false, &mut r, false);
+        assert!(ct.lookup(2).is_none(), "LRU (reg 2) must be evicted");
+        assert!(ct.lookup(1).is_some());
+    }
+
+    #[test]
+    fn ct_locked_entries_never_evicted() {
+        let mut ct = CacheTable::new(2);
+        let mut r = rng();
+        ct.allocate(1, false, true, &mut r, false); // locked far
+        ct.allocate(2, false, true, &mut r, false); // locked far
+        assert_eq!(ct.allocate(3, true, false, &mut r, false), None);
+        assert!(ct.lookup(1).is_some() && ct.lookup(2).is_some());
+    }
+
+    #[test]
+    fn ct_traditional_uses_plain_lru() {
+        let mut ct = CacheTable::new(2);
+        let mut r = rng();
+        ct.allocate(1, false, false, &mut r, true); // far, older
+        ct.allocate(2, true, false, &mut r, true); // near, newer
+        // traditional LRU evicts reg 1 (oldest) even though reuse-aware
+        // policy would also pick it; now make near entry the oldest:
+        ct.touch(ct.lookup(1).unwrap());
+        ct.allocate(3, false, false, &mut r, true);
+        assert!(
+            ct.lookup(2).is_none(),
+            "plain LRU must evict the near entry when it is oldest"
+        );
+    }
+
+    // ---- CCU allocation ----
+
+    fn mma(srcs: &[u8], dsts: &[u8]) -> Instruction {
+        Instruction::new(OpClass::Mma, srcs, dsts)
+    }
+
+    #[test]
+    fn ccu_first_alloc_all_miss_then_reuse_hits() {
+        let mut c = Collector::new(8);
+        let mut r = rng();
+        let i1 = mma(&[1, 2, 3], &[10]);
+        let res = c.alloc_ccu(0, &i1, 0, &mut r, false);
+        assert_eq!(res.hits, 0);
+        assert_eq!(res.misses.len(), 3);
+        assert!(!c.ready());
+        c.bank_operand_arrived(0, 1, false);
+        c.bank_operand_arrived(1, 2, false);
+        c.bank_operand_arrived(2, 3, false);
+        assert!(c.ready());
+        c.dispatched(true);
+        assert!(!c.occupied);
+        // same warp reuses r2, r3
+        let i2 = mma(&[2, 3, 4], &[11]);
+        let res = c.alloc_ccu(0, &i2, 5, &mut r, false);
+        assert_eq!(res.hits, 2);
+        assert_eq!(res.misses, vec![(2, 4)]);
+        assert!(!res.flushed);
+    }
+
+    #[test]
+    fn ccu_flushes_on_owner_change() {
+        let mut c = Collector::new(8);
+        let mut r = rng();
+        c.alloc_ccu(0, &mma(&[1], &[2]), 0, &mut r, false);
+        c.bank_operand_arrived(0, 1, false);
+        c.dispatched(true);
+        let res = c.alloc_ccu(3, &mma(&[1], &[2]), 1, &mut r, false);
+        assert!(res.flushed, "different warp must flush");
+        assert_eq!(res.hits, 0);
+        assert_eq!(c.owner, Some(3));
+    }
+
+    #[test]
+    fn ccu_duplicate_source_served_from_ct() {
+        let mut c = Collector::new(8);
+        let mut r = rng();
+        // r7 appears twice: second occurrence hits the entry allocated for
+        // the first
+        let res = c.alloc_ccu(0, &mma(&[7, 7], &[1]), 0, &mut r, false);
+        assert_eq!(res.hits, 1);
+        assert_eq!(res.misses.len(), 1);
+    }
+
+    #[test]
+    fn ccu_writeback_policy() {
+        let mut c = Collector::new(8);
+        let mut r = rng();
+        c.alloc_ccu(0, &mma(&[1], &[9]), 0, &mut r, false);
+        c.bank_operand_arrived(0, 1, false);
+        c.dispatched(true);
+        // near write allocates
+        assert!(c.ccu_writeback(0, 9, true, &mut r, false, false));
+        assert!(c.ct.lookup(9).is_some());
+        // far write misses and is filtered
+        assert!(!c.ccu_writeback(0, 20, false, &mut r, false, false));
+        assert!(c.ct.lookup(20).is_none());
+        // far write with filter disabled allocates
+        assert!(c.ccu_writeback(0, 21, false, &mut r, false, true));
+        // wrong warp ignored
+        assert!(!c.ccu_writeback(2, 22, true, &mut r, false, false));
+        // hit updates even when far
+        assert!(c.ccu_writeback(0, 9, false, &mut r, false, false));
+        let e = c.ct.entry(c.ct.lookup(9).unwrap());
+        assert!(!e.near);
+    }
+
+    #[test]
+    fn ocu_never_hits() {
+        let mut c = Collector::new(8);
+        let i = mma(&[1, 2], &[3]);
+        let res = c.alloc_ocu(0, &i, 0);
+        assert_eq!(res.hits, 0);
+        assert_eq!(res.misses.len(), 2);
+        c.bank_operand_arrived(0, 1, false);
+        c.bank_operand_arrived(1, 2, false);
+        c.dispatched(false);
+        let res = c.alloc_ocu(0, &i, 1);
+        assert_eq!(res.hits, 0, "OCU has no cache");
+        assert_eq!(res.misses.len(), 2);
+    }
+
+    // ---- BOW BOC ----
+
+    #[test]
+    fn boc_window_hits_and_slides() {
+        let mut c = Collector::new(8);
+        // i1 fetches r1, r2
+        let r1 = c.alloc_boc(0, &mma(&[1, 2], &[3]), 0, 3);
+        assert_eq!(r1.hits, 0);
+        c.bank_operand_arrived(0, 1, true);
+        c.bank_operand_arrived(1, 2, true);
+        c.dispatched(true);
+        // i2 reuses r1 (present), needs r4
+        let r2 = c.alloc_boc(0, &mma(&[1, 4], &[5]), 1, 3);
+        assert_eq!(r2.hits, 1);
+        assert_eq!(r2.misses, vec![(1, 4)]);
+        c.bank_operand_arrived(1, 4, true);
+        c.dispatched(true);
+        // fill the window beyond 3: r1's entry slides out
+        c.alloc_boc(0, &mma(&[6], &[7]), 2, 3);
+        c.bank_operand_arrived(0, 6, true);
+        c.dispatched(true);
+        c.alloc_boc(0, &mma(&[8], &[9]), 3, 3);
+        c.bank_operand_arrived(0, 8, true);
+        c.dispatched(true);
+        assert_eq!(c.window.len(), 3);
+        // r2 only appeared in i1, which has slid out (window = i3,i4,i5)
+        let r5 = c.alloc_boc(0, &mma(&[2], &[10]), 4, 3);
+        assert_eq!(r5.hits, 0, "r2 slid out of the window");
+    }
+
+    #[test]
+    fn boc_writeback_only_within_window() {
+        let mut c = Collector::new(8);
+        c.alloc_boc(0, &mma(&[1], &[3]), 0, 2);
+        let seq1 = c.cur_seq;
+        c.bank_operand_arrived(0, 1, true);
+        c.dispatched(true);
+        // dst r3 still in window: captured
+        assert!(c.boc_writeback(seq1, 3));
+        // subsequent instr can hit r3
+        let r = c.alloc_boc(0, &mma(&[3], &[4]), 1, 2);
+        assert_eq!(r.hits, 1);
+        c.dispatched(true);
+        // slide seq1 out
+        c.alloc_boc(0, &mma(&[5], &[6]), 2, 2);
+        c.dispatched(true);
+        assert!(!c.boc_writeback(seq1, 3), "slid out -> RF only");
+    }
+}

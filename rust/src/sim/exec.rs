@@ -1,0 +1,244 @@
+//! Execution pipes + writeback event queue.
+//!
+//! Each sub-core has one pipe per EU class (ALU/SFU/MMA/LSU) with an
+//! initiation interval and a result latency; completed instructions are
+//! delivered as writeback events in cycle order.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::config::GpuConfig;
+use crate::isa::{Instruction, OpClass, MAX_DST};
+
+/// Execution pipe classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pipe {
+    /// Integer/FP ALU.
+    Alu = 0,
+    /// Special function unit.
+    Sfu,
+    /// Tensor core.
+    Mma,
+    /// Load/store unit.
+    Lsu,
+}
+
+/// Number of pipes.
+pub const NPIPES: usize = 4;
+
+/// Map an opcode to its pipe.
+pub fn pipe_of(op: OpClass) -> Option<Pipe> {
+    match op {
+        OpClass::Alu => Some(Pipe::Alu),
+        OpClass::Sfu => Some(Pipe::Sfu),
+        OpClass::Mma => Some(Pipe::Mma),
+        OpClass::LdGlobal | OpClass::StGlobal | OpClass::LdShared => Some(Pipe::Lsu),
+        OpClass::Ctrl | OpClass::Exit => None,
+    }
+}
+
+/// A completed instruction ready to write back.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WbEvent {
+    /// Completion cycle.
+    pub cycle: u64,
+    /// Local warp index within the sub-core.
+    pub warp: u8,
+    /// Destination registers.
+    pub dsts: [u8; MAX_DST],
+    /// Valid destinations.
+    pub ndst: u8,
+    /// Near bit per destination (compiler annotation).
+    pub dst_near: u8,
+    /// Collector the instruction was collected in (CCU writeback target).
+    pub collector: u8,
+    /// BOW window sequence number of the producing instruction.
+    pub boc_seq: u64,
+}
+
+impl PartialOrd for WbEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for WbEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.cycle
+            .cmp(&other.cycle)
+            .then(self.warp.cmp(&other.warp))
+            .then(self.collector.cmp(&other.collector))
+            .then(self.boc_seq.cmp(&other.boc_seq))
+            .then(self.ndst.cmp(&other.ndst))
+            .then(self.dst_near.cmp(&other.dst_near))
+            .then(self.dsts.cmp(&other.dsts))
+    }
+}
+
+/// The sub-core's execution back-end.
+#[derive(Debug)]
+pub struct ExecUnits {
+    /// Next cycle each pipe can accept an instruction.
+    next_accept: [u64; NPIPES],
+    /// Pending writebacks, ordered by completion cycle.
+    events: BinaryHeap<Reverse<WbEvent>>,
+    /// Fixed latencies per pipe (LSU latency comes from the memory system).
+    timing: [(u32, u32); NPIPES], // (initiation, latency)
+    lds_latency: u32,
+}
+
+impl ExecUnits {
+    /// Build from config.
+    pub fn new(cfg: &GpuConfig) -> Self {
+        ExecUnits {
+            next_accept: [0; NPIPES],
+            events: BinaryHeap::new(),
+            timing: [
+                (cfg.alu.initiation, cfg.alu.latency),
+                (cfg.sfu.initiation, cfg.sfu.latency),
+                (cfg.mma.initiation, cfg.mma.latency),
+                (1, 0), // LSU: latency supplied per-access
+            ],
+            lds_latency: cfg.lds_latency,
+        }
+    }
+
+    /// Can `pipe` accept an instruction at `now`?
+    #[inline]
+    pub fn can_accept(&self, pipe: Pipe, now: u64) -> bool {
+        self.next_accept[pipe as usize] <= now
+    }
+
+    /// Dispatch `instr` at `now`. `mem_done` is the memory-system
+    /// completion cycle for LSU ops (ignored otherwise). `collector` and
+    /// `boc_seq` identify the producing collector for cache writeback.
+    /// Returns the writeback cycle (== now for stores with no dests).
+    #[allow(clippy::too_many_arguments)]
+    pub fn dispatch(
+        &mut self,
+        instr: &Instruction,
+        warp: u8,
+        collector: u8,
+        boc_seq: u64,
+        now: u64,
+        mem_done: u64,
+    ) -> u64 {
+        let pipe = pipe_of(instr.op).expect("ctrl/exit never dispatch");
+        let (init, lat) = self.timing[pipe as usize];
+        debug_assert!(self.can_accept(pipe, now));
+        self.next_accept[pipe as usize] = now + init as u64;
+        let done = match instr.op {
+            OpClass::LdGlobal => mem_done,
+            OpClass::LdShared => now + self.lds_latency as u64,
+            OpClass::StGlobal => now + 1, // no register result
+            _ => now + lat as u64,
+        };
+        if instr.ndst > 0 {
+            self.events.push(Reverse(WbEvent {
+                cycle: done,
+                warp,
+                dsts: instr.dsts,
+                ndst: instr.ndst,
+                dst_near: instr.dst_near,
+                collector,
+                boc_seq,
+            }));
+        }
+        done
+    }
+
+    /// Pop all writebacks due at or before `now`.
+    pub fn drain_due(&mut self, now: u64, out: &mut Vec<WbEvent>) {
+        while let Some(Reverse(ev)) = self.events.peek() {
+            if ev.cycle <= now {
+                out.push(self.events.pop().unwrap().0);
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Any instructions still in flight?
+    pub fn busy(&self) -> bool {
+        !self.events.is_empty()
+    }
+
+    /// Cycle of the next completion (for idle fast-forward).
+    pub fn next_event_cycle(&self) -> Option<u64> {
+        self.events.peek().map(|Reverse(e)| e.cycle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> GpuConfig {
+        GpuConfig::table1_baseline()
+    }
+
+    #[test]
+    fn pipes_map_correctly() {
+        assert_eq!(pipe_of(OpClass::Alu), Some(Pipe::Alu));
+        assert_eq!(pipe_of(OpClass::Mma), Some(Pipe::Mma));
+        assert_eq!(pipe_of(OpClass::LdGlobal), Some(Pipe::Lsu));
+        assert_eq!(pipe_of(OpClass::StGlobal), Some(Pipe::Lsu));
+        assert_eq!(pipe_of(OpClass::Ctrl), None);
+    }
+
+    #[test]
+    fn initiation_interval_enforced() {
+        let mut eu = ExecUnits::new(&cfg());
+        let i = Instruction::new(OpClass::Mma, &[1], &[2]);
+        assert!(eu.can_accept(Pipe::Mma, 0));
+        eu.dispatch(&i, 0, 0, 0, 0, 0);
+        assert!(!eu.can_accept(Pipe::Mma, 1), "mma initiation is 2");
+        assert!(eu.can_accept(Pipe::Mma, 2));
+        assert!(eu.can_accept(Pipe::Alu, 1), "other pipes unaffected");
+    }
+
+    #[test]
+    fn writeback_at_latency() {
+        let mut eu = ExecUnits::new(&cfg());
+        let i = Instruction::new(OpClass::Alu, &[1], &[2]);
+        let done = eu.dispatch(&i, 3, 1, 0, 10, 0);
+        assert_eq!(done, 14); // alu latency 4
+        let mut out = Vec::new();
+        eu.drain_due(13, &mut out);
+        assert!(out.is_empty());
+        eu.drain_due(14, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].warp, 3);
+        assert_eq!(out[0].dsts[0], 2);
+        assert!(!eu.busy());
+    }
+
+    #[test]
+    fn events_drain_in_cycle_order() {
+        let mut eu = ExecUnits::new(&cfg());
+        let slow = Instruction::new(OpClass::Sfu, &[1], &[2]); // lat 16
+        let fast = Instruction::new(OpClass::Alu, &[1], &[3]); // lat 4
+        eu.dispatch(&slow, 0, 0, 0, 0, 0);
+        eu.dispatch(&fast, 0, 1, 0, 0, 0);
+        let mut out = Vec::new();
+        eu.drain_due(100, &mut out);
+        assert_eq!(out.len(), 2);
+        assert!(out[0].cycle <= out[1].cycle);
+        assert_eq!(out[0].dsts[0], 3, "alu completes first");
+    }
+
+    #[test]
+    fn stores_produce_no_writeback() {
+        let mut eu = ExecUnits::new(&cfg());
+        let st = Instruction::mem(OpClass::StGlobal, &[1, 2], &[], 7);
+        eu.dispatch(&st, 0, 0, 0, 5, 0);
+        assert!(!eu.busy());
+    }
+
+    #[test]
+    fn loads_use_memory_completion() {
+        let mut eu = ExecUnits::new(&cfg());
+        let ld = Instruction::mem(OpClass::LdGlobal, &[1], &[2], 7);
+        let done = eu.dispatch(&ld, 0, 0, 0, 5, 345);
+        assert_eq!(done, 345);
+    }
+}

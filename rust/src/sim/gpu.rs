@@ -1,0 +1,310 @@
+//! Top level: SMs, the shared memory system, the dynamic-STHLD controller,
+//! and the run loop.
+
+use std::sync::Arc;
+
+use crate::config::{GpuConfig, SthldMode};
+use crate::isa::Instruction;
+use crate::sim::memory::{L1Cache, SharedMemorySystem};
+use crate::sim::sthld::SthldController;
+use crate::sim::subcore::SubCore;
+use crate::stats::Stats;
+use crate::trace::KernelTrace;
+
+/// One streaming multiprocessor: sub-cores + private L1D.
+pub struct Sm {
+    /// Sub-cores (4 on Turing).
+    pub sub_cores: Vec<SubCore>,
+    /// Per-SM L1 data cache.
+    pub l1: L1Cache,
+}
+
+/// Default safety cap when `max_cycles == 0` (run to completion).
+pub const DEFAULT_MAX_CYCLES: u64 = 20_000_000;
+
+/// The whole-GPU simulator.
+pub struct Simulator {
+    cfg: GpuConfig,
+    sms: Vec<Sm>,
+    shared: SharedMemorySystem,
+    sthld_ctl: Option<SthldController>,
+    cycle: u64,
+    interval_start_instr: u64,
+    interval_ipc: Vec<f64>,
+    sthld_trace: Vec<u32>,
+}
+
+impl Simulator {
+    /// Build a simulator and distribute `trace` warps over the SMs /
+    /// sub-cores (warp i of an SM goes to sub-core `i % sub_cores`, as in
+    /// Turing). If the trace has fewer warps than the GPU has slots, the
+    /// extra slots stay empty; extra warps are dropped.
+    pub fn new(cfg: &GpuConfig, trace: &KernelTrace) -> Self {
+        cfg.validate().expect("invalid config");
+        let wps = cfg.warps_per_sm;
+        let nsc = cfg.sub_cores_per_sm;
+        let streams: Vec<Arc<Vec<Instruction>>> =
+            trace.warps.iter().cloned().map(Arc::new).collect();
+        let mut sms = Vec::with_capacity(cfg.num_sms);
+        for s in 0..cfg.num_sms {
+            let mut per_sc: Vec<Vec<Arc<Vec<Instruction>>>> = vec![Vec::new(); nsc];
+            for i in 0..wps {
+                let g = s * wps + i;
+                if let Some(st) = streams.get(g) {
+                    per_sc[i % nsc].push(st.clone());
+                }
+            }
+            let sub_cores = per_sc
+                .into_iter()
+                .enumerate()
+                .map(|(i, sts)| {
+                    SubCore::new(cfg, sts, cfg.seed ^ ((s * nsc + i) as u64) << 8)
+                })
+                .collect();
+            sms.push(Sm {
+                sub_cores,
+                l1: L1Cache::new(
+                    cfg.l1_bytes,
+                    cfg.line_bytes,
+                    cfg.l1_ways,
+                    cfg.l1_latency,
+                    cfg.l1_mshrs,
+                ),
+            });
+        }
+        let sthld_ctl = match cfg.sthld {
+            SthldMode::Dynamic => {
+                Some(SthldController::new(cfg.sthld_max, cfg.sthld_epsilon))
+            }
+            SthldMode::Static(_) => None,
+        };
+        Simulator {
+            cfg: cfg.clone(),
+            sms,
+            shared: SharedMemorySystem::new(
+                cfg.l2_bytes,
+                cfg.line_bytes,
+                cfg.l2_ways,
+                cfg.l2_latency,
+                cfg.dram_latency,
+                // memory channels scale with SM count (Table I scaling)
+                cfg.dram_reqs_per_cycle * cfg.num_sms as f64,
+            ),
+            sthld_ctl,
+            cycle: 0,
+            interval_start_instr: 0,
+            interval_ipc: Vec::new(),
+            sthld_trace: Vec::new(),
+        }
+    }
+
+    /// Everything drained?
+    pub fn idle(&self) -> bool {
+        self.sms
+            .iter()
+            .all(|sm| sm.sub_cores.iter().all(|sc| sc.idle()))
+    }
+
+    /// Total instructions committed so far.
+    fn total_instructions(&self) -> u64 {
+        self.sms
+            .iter()
+            .map(|sm| {
+                sm.sub_cores
+                    .iter()
+                    .map(|sc| sc.stats.instructions)
+                    .sum::<u64>()
+            })
+            .sum()
+    }
+
+    /// Current STHLD (from the dynamic controller or the static config).
+    pub fn current_sthld(&self) -> u32 {
+        match (&self.sthld_ctl, self.cfg.sthld) {
+            (Some(c), _) => c.sthld(),
+            (None, SthldMode::Static(v)) => v,
+            (None, SthldMode::Dynamic) => 0,
+        }
+    }
+
+    /// Advance one cycle (plus an event-driven fast-forward over stretches
+    /// where every sub-core is stalled empty and only in-flight EU/memory
+    /// events can change state — see EXPERIMENTS.md §Perf).
+    pub fn step(&mut self) {
+        let now = self.cycle;
+        for sm in &mut self.sms {
+            for sc in &mut sm.sub_cores {
+                sc.step(now, &mut sm.l1, &mut self.shared);
+            }
+        }
+        self.cycle += 1;
+        // fast-forward: all sub-cores quiescent until the next event
+        let mut wake = u64::MAX;
+        let mut quiet = true;
+        'probe: for sm in &self.sms {
+            for sc in &sm.sub_cores {
+                match sc.next_wakeup() {
+                    None => {
+                        quiet = false;
+                        break 'probe;
+                    }
+                    Some(c) => wake = wake.min(c),
+                }
+            }
+        }
+        if quiet && wake != u64::MAX && wake > self.cycle {
+            // stop at the dynamic-STHLD interval boundary
+            let boundary =
+                (self.cycle / self.cfg.sthld_interval + 1) * self.cfg.sthld_interval;
+            let target = wake.min(boundary);
+            let skip = target.saturating_sub(self.cycle);
+            if skip > 0 {
+                for sm in &mut self.sms {
+                    for sc in &mut sm.sub_cores {
+                        sc.bulk_stall(skip);
+                    }
+                }
+                self.cycle += skip;
+            }
+        }
+        // dynamic-STHLD interval boundary
+        if self.cycle % self.cfg.sthld_interval == 0 {
+            let instr = self.total_instructions();
+            let ipc = (instr - self.interval_start_instr) as f64
+                / self.cfg.sthld_interval as f64;
+            self.interval_start_instr = instr;
+            self.interval_ipc.push(ipc);
+            let sthld = if let Some(ctl) = &mut self.sthld_ctl {
+                ctl.interval_end(ipc)
+            } else {
+                self.current_sthld()
+            };
+            self.sthld_trace.push(sthld);
+            for sm in &mut self.sms {
+                for sc in &mut sm.sub_cores {
+                    sc.sthld = sthld;
+                }
+            }
+        }
+    }
+
+    /// Run until every warp retires (or the cycle cap). Returns merged
+    /// statistics.
+    pub fn run(&mut self) -> Stats {
+        let cap = if self.cfg.max_cycles == 0 {
+            DEFAULT_MAX_CYCLES
+        } else {
+            self.cfg.max_cycles
+        };
+        while self.cycle < cap && !self.idle() {
+            self.step();
+        }
+        self.collect_stats()
+    }
+
+    /// Merge all counters into one `Stats`.
+    pub fn collect_stats(&self) -> Stats {
+        let mut total = Stats::new();
+        total.cycles = self.cycle;
+        for sm in &self.sms {
+            for sc in &sm.sub_cores {
+                total.merge(&sc.stats);
+            }
+        }
+        // L1/L2 counters live in the cache models
+        total.l1_accesses = self.sms.iter().map(|sm| sm.l1.accesses).sum();
+        total.l1_hits = self.sms.iter().map(|sm| sm.l1.hits).sum();
+        total.l2_accesses = self.shared.accesses;
+        total.l2_hits = self.shared.hits;
+        total.interval_ipc = self.interval_ipc.clone();
+        total.sthld_trace = self.sthld_trace.clone();
+        // per-SM IPC convention: instructions summed over the GPU but the
+        // figures normalise to baseline, so raw totals are fine
+        total
+    }
+}
+
+/// Convenience: generate + annotate + simulate one benchmark under `cfg`.
+/// `profile_warps` = 0 uses the precise oracle annotation.
+pub fn run_benchmark(cfg: &GpuConfig, bench_name: &str, profile_warps: usize) -> Stats {
+    let bench = crate::trace::find(bench_name)
+        .unwrap_or_else(|| panic!("unknown benchmark {bench_name}"));
+    let nwarps = cfg.num_sms * cfg.warps_per_sm;
+    let mut trace = KernelTrace::generate(bench, nwarps, cfg.seed);
+    if profile_warps == 0 {
+        crate::compiler::annotate_precise(&mut trace, cfg.rthld);
+    } else {
+        crate::compiler::profile_and_annotate(&mut trace, profile_warps, cfg.rthld);
+    }
+    Simulator::new(cfg, &trace).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scheme;
+
+    fn small_cfg(scheme: Scheme) -> GpuConfig {
+        let mut c = GpuConfig::table1_baseline().with_scheme(scheme);
+        c.num_sms = 1;
+        c
+    }
+
+    #[test]
+    fn baseline_full_sm_completes() {
+        let stats = run_benchmark(&small_cfg(Scheme::Baseline), "backprop", 2);
+        assert_eq!(stats.warps_retired, 32);
+        assert!(stats.ipc() > 0.1, "ipc {}", stats.ipc());
+        assert!(stats.l1_accesses > 0);
+    }
+
+    #[test]
+    fn malekeh_reduces_bank_reads_vs_baseline() {
+        let base = run_benchmark(&small_cfg(Scheme::Baseline), "kmeans", 2);
+        let mal = run_benchmark(&small_cfg(Scheme::Malekeh), "kmeans", 2);
+        assert!(mal.rf_hit_ratio() > 0.1, "hit ratio {}", mal.rf_hit_ratio());
+        assert!(
+            mal.rf_bank_reads < base.rf_bank_reads,
+            "malekeh {} vs baseline {}",
+            mal.rf_bank_reads,
+            base.rf_bank_reads
+        );
+        // identical workload => identical read demand
+        assert_eq!(mal.rf_reads, base.rf_reads);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = run_benchmark(&small_cfg(Scheme::Malekeh), "hotspot", 2);
+        let b = run_benchmark(&small_cfg(Scheme::Malekeh), "hotspot", 2);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.instructions, b.instructions);
+        assert_eq!(a.rf_cache_reads, b.rf_cache_reads);
+    }
+
+    #[test]
+    fn dynamic_sthld_records_intervals() {
+        let mut cfg = small_cfg(Scheme::Malekeh);
+        cfg.sthld_interval = 2000; // force several intervals
+        let stats = run_benchmark(&cfg, "srad_v1", 2);
+        assert!(stats.interval_ipc.len() > 2);
+        assert_eq!(stats.interval_ipc.len(), stats.sthld_trace.len());
+    }
+
+    #[test]
+    fn monolithic_config_runs() {
+        let mut cfg = GpuConfig::monolithic().with_scheme(Scheme::Rfc);
+        cfg.num_sms = 1;
+        let stats = run_benchmark(&cfg, "hotspot", 2);
+        assert_eq!(stats.warps_retired, 32);
+    }
+
+    #[test]
+    fn trace_smaller_than_gpu_is_ok() {
+        let cfg = small_cfg(Scheme::Baseline);
+        let bench = crate::trace::find("nn").unwrap();
+        let trace = KernelTrace::generate(bench, 8, 1); // 8 warps, 32 slots
+        let stats = Simulator::new(&cfg, &trace).run();
+        assert_eq!(stats.warps_retired, 8);
+    }
+}

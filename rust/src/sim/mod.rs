@@ -1,0 +1,13 @@
+//! Cycle-level sub-core GPU simulator (the Accel-sim stand-in, DESIGN.md §6).
+
+pub mod collector;
+pub mod exec;
+pub mod gpu;
+pub mod memory;
+pub mod regfile;
+pub mod sthld;
+pub mod subcore;
+pub mod warp;
+
+pub use gpu::{run_benchmark, Simulator};
+pub use sthld::{SthldController, SthldState};

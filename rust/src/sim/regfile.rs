@@ -1,0 +1,207 @@
+//! RF banks + arbiter (paper §II, Fig 3).
+//!
+//! Single-ported banks: one read *or* write per cycle; writes have
+//! priority. Conflicting reads wait in a per-bank FIFO; the arbiter grants
+//! the oldest request whose destination collector port is free (one operand
+//! delivered per collector per cycle — the crossbar/OCU port constraint).
+
+use std::collections::VecDeque;
+
+/// One queued operand-read request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReadReq {
+    /// Target collector unit.
+    pub collector: u8,
+    /// Source-operand slot in the collector's OCT.
+    pub slot: u8,
+    /// Requesting warp (local sub-core index).
+    pub warp: u8,
+    /// Architectural register.
+    pub reg: u8,
+    /// Cycle the request entered the queue (conflict-wait accounting).
+    pub enqueued: u64,
+}
+
+/// One pending bank write.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WriteReq {
+    /// Register being written.
+    pub reg: u8,
+    /// Producing warp.
+    pub warp: u8,
+}
+
+/// A granted read, reported back to the sub-core for delivery.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Grant {
+    /// The request served.
+    pub req: ReadReq,
+    /// Cycles it waited in the queue.
+    pub waited: u64,
+}
+
+/// The sub-core's RF bank array.
+#[derive(Debug)]
+pub struct RegFileBanks {
+    read_q: Vec<VecDeque<ReadReq>>,
+    write_q: Vec<VecDeque<WriteReq>>,
+    nbanks: usize,
+}
+
+impl RegFileBanks {
+    /// `nbanks` single-ported banks.
+    pub fn new(nbanks: usize) -> Self {
+        assert!(nbanks > 0);
+        RegFileBanks {
+            read_q: (0..nbanks).map(|_| VecDeque::new()).collect(),
+            write_q: (0..nbanks).map(|_| VecDeque::new()).collect(),
+            nbanks,
+        }
+    }
+
+    /// Bank index for a register of a warp (Turing-style interleave: the
+    /// warp offset spreads the same register of different warps).
+    #[inline]
+    pub fn bank_of(&self, reg: u8, warp: u8) -> usize {
+        (reg as usize + warp as usize) % self.nbanks
+    }
+
+    /// Queue a read request.
+    pub fn push_read(&mut self, req: ReadReq) {
+        let b = self.bank_of(req.reg, req.warp);
+        self.read_q[b].push_back(req);
+    }
+
+    /// Queue a write request.
+    pub fn push_write(&mut self, w: WriteReq) {
+        let b = self.bank_of(w.reg, w.warp);
+        self.write_q[b].push_back(w);
+    }
+
+    /// Total queued reads (for idle detection).
+    pub fn pending_reads(&self) -> usize {
+        self.read_q.iter().map(|q| q.len()).sum()
+    }
+
+    /// Total queued writes.
+    pub fn pending_writes(&self) -> usize {
+        self.write_q.iter().map(|q| q.len()).sum()
+    }
+
+    /// One arbitration cycle. `port_used[collector]` counts operands
+    /// already delivered to each collector this cycle (updated in place);
+    /// `ports_per_collector` is the crossbar output width per collector.
+    /// Returns granted reads and the number of writes drained.
+    ///
+    /// Per bank: a pending write consumes the port (write priority, §II);
+    /// otherwise the oldest read whose collector port is free is granted.
+    /// A blocked head-of-line read blocks the bank (FIFO, as in the paper).
+    pub fn arbitrate(
+        &mut self,
+        now: u64,
+        port_used: &mut [u8],
+        ports_per_collector: u8,
+    ) -> (Vec<Grant>, u64) {
+        let mut grants = Vec::new();
+        let mut writes = 0u64;
+        for b in 0..self.nbanks {
+            if let Some(_w) = self.write_q[b].pop_front() {
+                writes += 1;
+                continue; // port consumed by the write
+            }
+            if let Some(front) = self.read_q[b].front().copied() {
+                let p = front.collector as usize % port_used.len().max(1);
+                if port_used[p] < ports_per_collector {
+                    port_used[p] += 1;
+                    self.read_q[b].pop_front();
+                    grants.push(Grant {
+                        req: front,
+                        waited: now.saturating_sub(front.enqueued),
+                    });
+                }
+            }
+        }
+        (grants, writes)
+    }
+
+    /// Drop all queued reads for a collector (used when a CCU is flushed /
+    /// reallocated mid-collection — not expected in normal operation).
+    pub fn cancel_reads_for(&mut self, collector: u8) {
+        for q in &mut self.read_q {
+            q.retain(|r| r.collector != collector);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rr(collector: u8, reg: u8, warp: u8, t: u64) -> ReadReq {
+        ReadReq { collector, slot: 0, warp, reg, enqueued: t }
+    }
+
+    #[test]
+    fn bank_mapping_interleaves_by_warp() {
+        let rf = RegFileBanks::new(2);
+        assert_ne!(rf.bank_of(4, 0), rf.bank_of(4, 1));
+        assert_eq!(rf.bank_of(4, 0), rf.bank_of(6, 0));
+    }
+
+    #[test]
+    fn conflicting_reads_serialize() {
+        let mut rf = RegFileBanks::new(2);
+        // same bank (reg 2 & 4, warp 0 -> bank 0)
+        rf.push_read(rr(0, 2, 0, 0));
+        rf.push_read(rr(1, 4, 0, 0));
+        let (g1, _) = rf.arbitrate(1, &mut [0u8; 4], 1);
+        assert_eq!(g1.len(), 1);
+        assert_eq!(g1[0].req.reg, 2, "FIFO order");
+        let (g2, _) = rf.arbitrate(2, &mut [0u8; 4], 1);
+        assert_eq!(g2.len(), 1);
+        assert_eq!(g2[0].req.reg, 4);
+        assert_eq!(g2[0].waited, 2);
+    }
+
+    #[test]
+    fn different_banks_served_in_parallel() {
+        let mut rf = RegFileBanks::new(2);
+        rf.push_read(rr(0, 2, 0, 0)); // bank 0
+        rf.push_read(rr(1, 3, 0, 0)); // bank 1
+        let (g, _) = rf.arbitrate(0, &mut [0u8; 4], 1);
+        assert_eq!(g.len(), 2);
+    }
+
+    #[test]
+    fn writes_preempt_reads() {
+        let mut rf = RegFileBanks::new(1);
+        rf.push_read(rr(0, 1, 0, 0));
+        rf.push_write(WriteReq { reg: 3, warp: 0 });
+        let (g, w) = rf.arbitrate(0, &mut [0u8; 4], 1);
+        assert!(g.is_empty(), "write must take the port");
+        assert_eq!(w, 1);
+        let (g, w) = rf.arbitrate(1, &mut [0u8; 4], 1);
+        assert_eq!(g.len(), 1);
+        assert_eq!(w, 0);
+    }
+
+    #[test]
+    fn collector_port_limit_blocks_bank() {
+        let mut rf = RegFileBanks::new(2);
+        rf.push_read(rr(0, 2, 0, 0)); // bank 0 -> collector 0
+        rf.push_read(rr(0, 3, 0, 0)); // bank 1 -> collector 0 too
+        let mut used = [0u8; 4];
+        let (g, _) = rf.arbitrate(0, &mut used, 1);
+        assert_eq!(g.len(), 1, "one operand per collector per cycle");
+        assert_eq!(rf.pending_reads(), 1);
+    }
+
+    #[test]
+    fn cancel_reads_for_collector() {
+        let mut rf = RegFileBanks::new(2);
+        rf.push_read(rr(0, 2, 0, 0));
+        rf.push_read(rr(1, 3, 0, 0));
+        rf.cancel_reads_for(0);
+        assert_eq!(rf.pending_reads(), 1);
+    }
+}

@@ -1,0 +1,262 @@
+//! Dynamic STHLD controller (§IV-B3, Figs 8-9).
+//!
+//! Every `sthld_interval` cycles the GPU-level controller compares the
+//! interval's IPC with the previous one; a relative delta below epsilon
+//! (0.02) is Small (S), otherwise Large (L). A 6-state FSM walks STHLD
+//! toward the knee of the IPC-vs-STHLD curve and re-converges when the
+//! application phase changes.
+//!
+//! Fig 8's drawing is not fully legible in the paper, so the FSM below is
+//! the reconstruction of the *described* behaviour (§IV-B3): climb the
+//! flat region while IPC is stable; on a Large change take one speculative
+//! increase; if that loses IPC, back off until stable; hold at the knee
+//! until the next phase change. The asterisk transitions (taken
+//! regardless of S/L) are Init->Climb and Approach->Hold.
+
+/// FSM states (numbered as in Fig 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SthldState {
+    /// 1: first interval after reset.
+    Init,
+    /// 2: walking the flat region upward.
+    Climb,
+    /// 3: speculative increase after a Large change.
+    Speculate,
+    /// 4: backing out of the steep region.
+    Backoff,
+    /// 5: one stabilising interval before holding.
+    Approach,
+    /// 6: at the knee; hold until a Large change.
+    Hold,
+}
+
+/// Dynamic STHLD controller.
+#[derive(Debug, Clone)]
+pub struct SthldController {
+    state: SthldState,
+    sthld: u32,
+    max: u32,
+    epsilon: f64,
+    prev_ipc: Option<f64>,
+    /// Best IPC seen recently (slowly decayed): catches *compounding*
+    /// slow decay while climbing, where every per-interval delta is Small
+    /// but the cumulative loss is not.
+    anchor: f64,
+    /// Direction memory for Backoff (did IPC drop when we increased?).
+    transitions: u64,
+}
+
+impl SthldController {
+    /// Start at STHLD = 0 (no waiting) in Init.
+    pub fn new(max: u32, epsilon: f64) -> Self {
+        SthldController {
+            state: SthldState::Init,
+            sthld: 0,
+            max,
+            epsilon,
+            prev_ipc: None,
+            anchor: 0.0,
+            transitions: 0,
+        }
+    }
+
+    /// Current threshold.
+    pub fn sthld(&self) -> u32 {
+        self.sthld
+    }
+
+    /// Current state (observability / tests).
+    pub fn state(&self) -> SthldState {
+        self.state
+    }
+
+    /// Number of state transitions taken.
+    pub fn transitions(&self) -> u64 {
+        self.transitions
+    }
+
+    fn bump(&mut self, delta: i32) {
+        let v = self.sthld as i64 + delta as i64;
+        self.sthld = v.clamp(0, self.max as i64) as u32;
+    }
+
+    /// Feed the IPC of the interval that just ended; returns the STHLD to
+    /// use for the next interval.
+    pub fn interval_end(&mut self, ipc: f64) -> u32 {
+        let prev = match self.prev_ipc.replace(ipc) {
+            Some(p) => p,
+            None => {
+                // first interval: asterisk transition Init -> Climb
+                self.state = SthldState::Climb;
+                self.transitions += 1;
+                self.bump(1);
+                return self.sthld;
+            }
+        };
+        let rel = if prev > 0.0 { (ipc - prev).abs() / prev } else { 0.0 };
+        let large = rel >= self.epsilon;
+        let dropped = ipc < prev;
+        self.anchor = (self.anchor * 0.995).max(ipc);
+        let below_anchor = ipc < self.anchor * (1.0 - self.epsilon);
+        self.transitions += 1;
+        use SthldState::*;
+        match self.state {
+            Init => {
+                self.state = Climb;
+                self.bump(1);
+            }
+            Climb => {
+                if below_anchor {
+                    // cumulative decay vs the best-seen IPC: we climbed
+                    // past the knee without a single Large step
+                    self.state = Backoff;
+                    self.bump(-1);
+                } else if large {
+                    // phase change or knee: speculative move up (§IV-B3)
+                    self.state = Speculate;
+                    self.bump(1);
+                } else {
+                    // flat region: free hit-ratio, keep climbing
+                    self.bump(1);
+                }
+            }
+            Speculate => {
+                if large && dropped {
+                    // speculation was into the steep region: undo + back off
+                    self.state = Backoff;
+                    self.bump(-2);
+                } else {
+                    // wider flat region (Fig 9d): resume climbing
+                    self.state = Climb;
+                    self.bump(1);
+                }
+            }
+            Backoff => {
+                // descending the steep wall produces large deltas in BOTH
+                // directions (IPC recovers as STHLD drops); keep backing
+                // off until the deltas are small again (flat region).
+                if large || below_anchor {
+                    self.bump(-1);
+                } else {
+                    // stabilised: one more settling interval
+                    self.state = Approach;
+                }
+            }
+            Approach => {
+                // asterisk transition: settle at the knee
+                self.state = Hold;
+            }
+            Hold => {
+                if large {
+                    self.state = Speculate;
+                    self.bump(1);
+                }
+            }
+        }
+        self.sthld
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic IPC curve with a knee: flat (small noise) until `knee`,
+    /// dropping steeply after.
+    fn curve(sthld: u32, knee: u32) -> f64 {
+        if sthld <= knee {
+            1.0 - 0.001 * sthld as f64
+        } else {
+            1.0 - 0.15 * (sthld - knee) as f64
+        }
+    }
+
+    #[test]
+    fn starts_at_zero_and_climbs() {
+        let mut c = SthldController::new(64, 0.02);
+        assert_eq!(c.sthld(), 0);
+        c.interval_end(1.0);
+        assert_eq!(c.state(), SthldState::Climb);
+        assert_eq!(c.sthld(), 1);
+        c.interval_end(1.0); // small delta -> keep climbing
+        assert_eq!(c.sthld(), 2);
+    }
+
+    #[test]
+    fn converges_near_knee() {
+        let knee = 6u32;
+        let mut c = SthldController::new(64, 0.02);
+        let mut s = c.sthld();
+        for _ in 0..40 {
+            s = c.interval_end(curve(s, knee));
+        }
+        assert!(
+            c.state() == SthldState::Hold || c.state() == SthldState::Approach,
+            "should settle, got {:?}",
+            c.state()
+        );
+        let settled = c.sthld();
+        assert!(
+            settled >= knee.saturating_sub(2) && settled <= knee + 2,
+            "settled {settled} too far from knee {knee}"
+        );
+    }
+
+    #[test]
+    fn phase_change_reconverges() {
+        let mut c = SthldController::new(64, 0.02);
+        let mut s = c.sthld();
+        for _ in 0..40 {
+            s = c.interval_end(curve(s, 8));
+        }
+        let first = c.sthld();
+        // narrower flat region (Fig 9c): knee moves down to 3
+        for _ in 0..60 {
+            s = c.interval_end(curve(s, 3));
+        }
+        let second = c.sthld();
+        assert!(second < first, "knee shrank: {first} -> {second}");
+        assert!(second <= 5, "should re-approach the new knee, got {second}");
+    }
+
+    #[test]
+    fn wider_flat_region_climbs_higher() {
+        let mut c = SthldController::new(64, 0.02);
+        let mut s = c.sthld();
+        for _ in 0..30 {
+            s = c.interval_end(curve(s, 3));
+        }
+        let low = c.sthld();
+        // phase change: one interval with a big IPC jump (new phase), then
+        // the wider curve (knee at 20) — Fig 9d
+        s = c.interval_end(0.5);
+        for _ in 0..40 {
+            s = c.interval_end(curve(s, 20));
+        }
+        assert!(c.sthld() > low, "wider flat region should raise STHLD");
+    }
+
+    #[test]
+    fn sthld_clamped_to_max() {
+        let mut c = SthldController::new(4, 0.02);
+        for _ in 0..50 {
+            c.interval_end(1.0); // perfectly flat: climb forever
+        }
+        assert!(c.sthld() <= 4);
+    }
+
+    #[test]
+    fn hold_reacts_only_to_large() {
+        let mut c = SthldController::new(64, 0.02);
+        let mut s = c.sthld();
+        for _ in 0..40 {
+            s = c.interval_end(curve(s, 5));
+        }
+        assert_eq!(c.state(), SthldState::Hold);
+        let at_hold = c.sthld();
+        c.interval_end(curve(at_hold, 5) * 1.001); // small
+        assert_eq!(c.state(), SthldState::Hold);
+        c.interval_end(curve(at_hold, 5) * 0.5); // large
+        assert_eq!(c.state(), SthldState::Speculate);
+    }
+}

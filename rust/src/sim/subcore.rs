@@ -1,0 +1,843 @@
+//! One sub-core: issue scheduler, collector array, RF banks, execution
+//! pipes — the cycle-level pipeline of Fig 3/4 and the policies of §IV.
+//!
+//! Per-cycle phase order: writeback -> dispatch -> operand collection
+//! (bank arbitration) -> issue. Writeback first so a value produced at
+//! cycle t can be reused by an allocation in the same cycle (the paper's
+//! waiting mechanism exists exactly to create these reuse windows).
+
+use std::sync::Arc;
+
+use crate::config::{GpuConfig, Scheme, SthldMode};
+use crate::energy::EventKind;
+use crate::isa::{Instruction, OpClass};
+use crate::sim::collector::{AllocResult, CacheTable, Collector};
+use crate::sim::exec::{pipe_of, ExecUnits, Pipe, WbEvent, NPIPES};
+use crate::sim::memory::{L1Cache, SharedMemorySystem};
+use crate::sim::regfile::{ReadReq, RegFileBanks, WriteReq};
+use crate::sim::warp::WarpState;
+use crate::stats::{SchedState, Stats};
+use crate::util::Rng;
+
+/// One sub-core of an SM.
+pub struct SubCore {
+    scheme: Scheme,
+    traditional: bool,
+    no_write_filter: bool,
+    bow_window: usize,
+    two_level: bool,
+    collector_ports: u8,
+    swrfc_strand_len: u32,
+
+    /// Warp state, indexed by local warp id.
+    pub warps: Vec<WarpState>,
+    streams: Vec<Arc<Vec<Instruction>>>,
+    /// Collector units (2 shared, or one per warp for private schemes).
+    pub collectors: Vec<Collector>,
+    /// RFC per-warp caches (empty unless scheme is RFC/SoftwareRfc).
+    rfc: Vec<CacheTable>,
+    banks: RegFileBanks,
+    eu: ExecUnits,
+    rng: Rng,
+
+    last_issued: Option<u8>,
+    /// Round-robin cursor over pending warps (two-level swap-in order).
+    swap_cursor: usize,
+    /// Malekeh waiting-mechanism counter (per-core, §IV-B2).
+    wait_counter: u32,
+    /// Current STHLD (static or set by the GPU-level dynamic controller).
+    pub sthld: u32,
+
+    /// Scheduler state of the most recent cycle (fast-forward guard).
+    pub last_state: SchedState,
+    /// Local counters, merged by the SM at the end of the run.
+    pub stats: Stats,
+    /// Live (not yet exited) warps.
+    pub live_warps: usize,
+
+    // scratch buffers (no allocation in the hot loop)
+    wb_buf: Vec<WbEvent>,
+    order_buf: Vec<u8>,
+    port_used: Vec<u8>,
+}
+
+impl SubCore {
+    /// Build a sub-core for local warps `warp streams`.
+    pub fn new(cfg: &GpuConfig, streams: Vec<Arc<Vec<Instruction>>>, seed: u64) -> Self {
+        let nwarps = streams.len();
+        let ncol = cfg.effective_collectors().min(nwarps.max(1));
+        let two_level = cfg.scheme.two_level();
+        let mut warps: Vec<WarpState> =
+            (0..nwarps).map(|i| WarpState::new(i as u32)).collect();
+        if two_level {
+            for w in warps.iter_mut().take(cfg.active_warps_per_sub_core) {
+                w.active = true;
+            }
+        }
+        let rfc = if two_level {
+            (0..nwarps).map(|_| CacheTable::new(cfg.rfc_entries)).collect()
+        } else {
+            Vec::new()
+        };
+        let sthld = match cfg.sthld {
+            SthldMode::Static(v) => v,
+            SthldMode::Dynamic => 0,
+        };
+        SubCore {
+            scheme: cfg.scheme,
+            traditional: cfg.traditional_replacement,
+            no_write_filter: cfg.no_write_filter,
+            bow_window: cfg.bow_window,
+            two_level,
+            collector_ports: cfg.collector_ports.max(1) as u8,
+            swrfc_strand_len: cfg.swrfc_strand_len as u32,
+            live_warps: nwarps,
+            warps,
+            streams,
+            collectors: (0..ncol).map(|_| Collector::new(cfg.ct_entries)).collect(),
+            rfc,
+            banks: RegFileBanks::new(cfg.banks_per_sub_core),
+            eu: ExecUnits::new(cfg),
+            rng: Rng::new(seed),
+            last_issued: None,
+            last_state: SchedState::StallEmpty,
+            swap_cursor: 0,
+            wait_counter: 0,
+            sthld,
+            stats: Stats::new(),
+            wb_buf: Vec::with_capacity(8),
+            order_buf: Vec::with_capacity(64),
+            port_used: vec![0u8; ncol],
+        }
+    }
+
+    /// All warps retired and the machine fully drained.
+    pub fn idle(&self) -> bool {
+        self.live_warps == 0
+            && !self.eu.busy()
+            && self.banks.pending_reads() == 0
+            && self.banks.pending_writes() == 0
+            && self.collectors.iter().all(|c| !c.occupied)
+    }
+
+    fn caching(&self) -> bool {
+        matches!(
+            self.scheme,
+            Scheme::Malekeh | Scheme::MalekehPr | Scheme::MalekehTraditional | Scheme::Bow
+        )
+    }
+
+    /// One cycle.
+    pub fn step(&mut self, now: u64, l1: &mut L1Cache, l2: &mut SharedMemorySystem) {
+        self.writeback(now);
+        self.dispatch(now, l1, l2);
+        self.collect_operands(now);
+        self.issue(now);
+        // leakage proxy for the collector storage
+        self.stats
+            .energy
+            .add(EventKind::LeakProxy, self.collectors.len() as u64);
+    }
+
+    // ------------------------------------------------------------ writeback
+
+    fn writeback(&mut self, now: u64) {
+        let mut buf = std::mem::take(&mut self.wb_buf);
+        buf.clear();
+        self.eu.drain_due(now, &mut buf);
+        // Single CCU write port (§IV-A2): if several writebacks target the
+        // same collector this cycle, the one with a near destination wins.
+        // Sort so near-destination events come first per collector.
+        buf.sort_by_key(|e| (e.collector, e.dst_near == 0));
+        let mut last_col_served: Option<u8> = None;
+        for ev in &buf {
+            let warp = ev.warp;
+            for k in 0..ev.ndst as usize {
+                let reg = ev.dsts[k];
+                let near = ev.dst_near & (1 << k) != 0;
+                // RF banks are always written (§IV-A2)
+                self.banks.push_write(WriteReq { reg, warp });
+                self.stats.rf_writes += 1;
+                self.stats.energy.add(EventKind::BankWrite, 1);
+
+                // collector-cache capture
+                let port_free = last_col_served != Some(ev.collector);
+                let captured = match self.scheme {
+                    Scheme::Malekeh | Scheme::MalekehPr | Scheme::MalekehTraditional => {
+                        let ci = ev.collector as usize;
+                        if port_free && ci < self.collectors.len() {
+                            self.stats.energy.add(EventKind::OctOp, 1);
+                            self.collectors[ci].ccu_writeback(
+                                warp,
+                                reg,
+                                near,
+                                &mut self.rng,
+                                self.traditional,
+                                self.no_write_filter,
+                            )
+                        } else {
+                            false
+                        }
+                    }
+                    Scheme::Bow => {
+                        let ci = ev.collector as usize;
+                        if ci < self.collectors.len() {
+                            // BOW writes every in-window destination
+                            self.collectors[ci].boc_writeback(ev.boc_seq, reg)
+                        } else {
+                            false
+                        }
+                    }
+                    Scheme::Rfc => {
+                        // hardware RFC: fill if the warp is still active
+                        if self.warps[warp as usize].active {
+                            self.rfc[warp as usize]
+                                .allocate(reg, true, false, &mut self.rng, true)
+                                .is_some()
+                        } else {
+                            false
+                        }
+                    }
+                    Scheme::SoftwareRfc => {
+                        // compiler-managed: only near-marked results are
+                        // placed in the cache
+                        if near && self.warps[warp as usize].active {
+                            self.rfc[warp as usize]
+                                .allocate(reg, true, false, &mut self.rng, true)
+                                .is_some()
+                        } else {
+                            false
+                        }
+                    }
+                    Scheme::Baseline => false,
+                };
+                if captured {
+                    self.stats.rf_cache_writes += 1;
+                    self.stats.energy.add(EventKind::CcuWrite, 1);
+                    last_col_served = Some(ev.collector);
+                }
+            }
+            // scoreboard release
+            self.warps[warp as usize].clear_pending(&ev.dsts[..ev.ndst as usize]);
+        }
+        self.wb_buf = buf;
+    }
+
+    // ------------------------------------------------------------- dispatch
+
+    fn dispatch(&mut self, now: u64, l1: &mut L1Cache, l2: &mut SharedMemorySystem) {
+        // per pipe, oldest ready collector first
+        for pipe_idx in 0..NPIPES {
+            let pipe = match pipe_idx {
+                0 => Pipe::Alu,
+                1 => Pipe::Sfu,
+                2 => Pipe::Mma,
+                _ => Pipe::Lsu,
+            };
+            if !self.eu.can_accept(pipe, now) {
+                continue;
+            }
+            let mut best: Option<(usize, u64)> = None;
+            for (i, c) in self.collectors.iter().enumerate() {
+                if c.ready() && pipe_of(c.instr.op) == Some(pipe) {
+                    if best.map_or(true, |(_, t)| c.issue_cycle < t) {
+                        best = Some((i, c.issue_cycle));
+                    }
+                }
+            }
+            let Some((ci, _)) = best else { continue };
+            let instr = self.collectors[ci].instr;
+            let warp = self.collectors[ci]
+                .owner
+                .expect("occupied collector has an owner");
+            let mem_done = match instr.op {
+                OpClass::LdGlobal => {
+                    self.stats.l1_accesses += 1;
+                    let before_hits = l1.hits;
+                    let done = l1.load(instr.line_addr as u64, now, l2);
+                    self.stats.l1_hits += l1.hits - before_hits;
+                    done
+                }
+                OpClass::StGlobal => l1.store(instr.line_addr as u64, now),
+                _ => 0,
+            };
+            let seq = self.collectors[ci].cur_seq;
+            let caching = self.caching();
+            self.eu.dispatch(&instr, warp, ci as u8, seq, now, mem_done);
+            self.collectors[ci].dispatched(caching);
+        }
+    }
+
+    // --------------------------------------------------- operand collection
+
+    fn collect_operands(&mut self, now: u64) {
+        self.port_used.iter_mut().for_each(|p| *p = 0);
+        let (grants, _writes) =
+            self.banks.arbitrate(now, &mut self.port_used, self.collector_ports);
+        let bow = self.scheme == Scheme::Bow;
+        for g in &grants {
+            let r = g.req;
+            self.collectors[r.collector as usize].bank_operand_arrived(r.slot, r.reg, bow);
+            self.stats.rf_bank_reads += 1;
+            self.stats.bank_conflict_wait += g.waited;
+            self.stats.energy.add(EventKind::BankRead, 1);
+            self.stats.energy.add(EventKind::XbarTransfer, 1);
+            self.stats.energy.add(EventKind::ArbiterOp, 1);
+            // NOTE: RFC is write-allocate only (Gebhart 2011): values enter
+            // the cache at writeback, never on read fills.
+        }
+    }
+
+    // ---------------------------------------------------------------- issue
+
+    /// Build the warp priority order for this cycle into `order_buf`.
+    fn build_order(&mut self) {
+        self.order_buf.clear();
+        let n = self.warps.len() as u8;
+        let greedy = self.last_issued.filter(|&w| !self.warps[w as usize].done);
+        if let Some(g) = greedy {
+            self.order_buf.push(g);
+        }
+        match self.scheme {
+            Scheme::Malekeh => {
+                // §IV-B1: warps with data in a CCU first (by age), then rest
+                for w in 0..n {
+                    if Some(w) == greedy {
+                        continue;
+                    }
+                    let owns = self
+                        .collectors
+                        .iter()
+                        .any(|c| c.owner == Some(w) && c.ct.has_values());
+                    if owns {
+                        self.order_buf.push(w);
+                    }
+                }
+                for w in 0..n {
+                    if Some(w) == greedy || self.order_buf.contains(&w) {
+                        continue;
+                    }
+                    self.order_buf.push(w);
+                }
+            }
+            _ => {
+                // GTO: greedy then oldest (ascending id = age order)
+                for w in 0..n {
+                    if Some(w) != greedy {
+                        self.order_buf.push(w);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Scoreboard-level readiness of warp `w`.
+    fn warp_ready(&self, w: usize) -> bool {
+        let warp = &self.warps[w];
+        match warp.next_instr(&self.streams[w]) {
+            Some(i) => warp.deps_ready(i),
+            None => false,
+        }
+    }
+
+    fn any_ready(&self) -> bool {
+        (0..self.warps.len()).any(|w| self.warp_ready(w))
+    }
+
+    /// Two-level scheduler bookkeeping: swap active warps out on
+    /// long-latency stalls (hardware RFC) or strand boundaries (software
+    /// RFC / LTRF), §VI-A. Short-latency stalls leave the warp active —
+    /// with only 2 active warps this is exactly what produces the state-2
+    /// cycles of Fig 10.
+    fn update_active_set(&mut self, now: u64) {
+        if !self.two_level {
+            return;
+        }
+        let n = self.warps.len();
+        for w in 0..n {
+            if !self.warps[w].active {
+                continue;
+            }
+            let done = self.warps[w].done;
+            // minimum residency: a freshly activated warp cannot be
+            // swapped out before its swap-in completes
+            if !done && now < self.warps[w].active_since + self.activation_delay() {
+                continue;
+            }
+            let should_swap = if done {
+                true
+            } else {
+                let instr = match self.warps[w].next_instr(&self.streams[w]) {
+                    Some(i) => *i,
+                    None => continue,
+                };
+                let stalled = !self.warps[w].deps_ready(&instr);
+                match self.scheme {
+                    // hardware RFC: deactivate only on long-latency stalls
+                    Scheme::Rfc => stalled && self.warps[w].blocked_on_load(&instr),
+                    // software RFC / LTRF: swaps happen only at
+                    // compiler-placed strand ends; a warp stuck mid-strand
+                    // is released only after a long stall (the strand
+                    // timeout) — short ALU-dependence stalls keep it
+                    // resident and idle, the state-2 cost of Fig 10
+                    _ => {
+                        stalled
+                            && (self.warps[w].strand_pos >= self.swrfc_strand_len
+                                || now.saturating_sub(self.warps[w].last_issue) > 64)
+                    }
+                }
+            };
+            if !should_swap {
+                continue;
+            }
+            // replacement: round-robin over pending warps, with NO
+            // readiness oracle — the hardware cannot see pending warps'
+            // scoreboards at swap time, which is precisely why two-level
+            // schedulers fail to bring ready warps in soon enough (§VI-A)
+            let repl = (1..=n)
+                .map(|k| (self.swap_cursor + k) % n)
+                .find(|&p| !self.warps[p].active && !self.warps[p].done);
+            if let Some(p) = repl {
+                self.swap_cursor = p;
+                self.warps[w].active = false;
+                if !self.rfc.is_empty() {
+                    // RFC is write-back (energy is its whole point): on
+                    // deactivation every dirty entry must be written to the
+                    // MRF banks, stealing read bandwidth — the hidden cost
+                    // that makes two-level swaps expensive on 2-bank
+                    // sub-cores (§VI-A)
+                    for reg in self.rfc[w].valid_regs() {
+                        self.banks.push_write(WriteReq { reg, warp: w as u8 });
+                        self.stats.energy.add(EventKind::BankWrite, 1);
+                    }
+                    self.rfc[w].flush();
+                }
+                self.warps[p].active = true;
+                self.warps[p].active_since = now;
+                self.warps[p].strand_pos = 0;
+            } else if done {
+                self.warps[w].active = false;
+            }
+        }
+    }
+
+    /// Activation (swap-in) latency of the two-level scheduler: the newly
+    /// activated warp's RF-cache working set must be moved in — RFC
+    /// allocates cache lines, software RFC/LTRF issue the strand's
+    /// prefetch moves (which is why its swaps are costlier).
+    fn activation_delay(&self) -> u64 {
+        match self.scheme {
+            Scheme::SoftwareRfc => 4,
+            _ => 4,
+        }
+    }
+
+    fn issue(&mut self, now: u64) {
+        self.update_active_set(now);
+        self.build_order();
+        let order = std::mem::take(&mut self.order_buf);
+        let mut issued = false;
+        let mut waiting_stall = false;
+
+        'warps: for &w in &order {
+            let wi = w as usize;
+            if self.two_level
+                && (!self.warps[wi].active
+                    || now < self.warps[wi].active_since + self.activation_delay())
+            {
+                continue;
+            }
+            if self.warps[wi].done || !self.warp_ready(wi) {
+                continue;
+            }
+            let instr = self.streams[wi][self.warps[wi].pc];
+
+            // control / exit: no collector, no RF traffic
+            match instr.op {
+                OpClass::Exit => {
+                    self.warps[wi].done = true;
+                    self.warps[wi].pc += 1;
+                    self.live_warps -= 1;
+                    self.stats.warps_retired += 1;
+                    // the exit marker consumes the slot but is not counted
+                    issued = true;
+                    self.last_issued = Some(w);
+                    break 'warps;
+                }
+                OpClass::Ctrl => {
+                    self.warps[wi].pc += 1;
+                    self.warps[wi].strand_pos += 1;
+                    self.stats.instructions += 1;
+                    issued = true;
+                    self.last_issued = Some(w);
+                    break 'warps;
+                }
+                _ => {}
+            }
+
+            // collector selection per scheme
+            let chosen: Option<usize> = match self.scheme {
+                Scheme::MalekehPr | Scheme::Bow => {
+                    let ci = wi % self.collectors.len();
+                    if self.collectors[ci].occupied {
+                        None // private unit busy: this warp cannot issue
+                    } else {
+                        Some(ci)
+                    }
+                }
+                Scheme::Malekeh => {
+                    match self.choose_ccu(w) {
+                        CcuChoice::Unit(ci) => Some(ci),
+                        CcuChoice::Skip => None,
+                        CcuChoice::WaitStall => {
+                            waiting_stall = true;
+                            break 'warps; // §IV-B2 box 7: stall the slot
+                        }
+                    }
+                }
+                Scheme::MalekehTraditional => {
+                    // Fig 17 ablation: CCU hardware but *traditional*
+                    // allocation — any free unit, randomly, like the
+                    // baseline OCU allocator. This causes the "excessive
+                    // flushes when GTO schedules a new warp" of §VI-C.
+                    let mut seen = 0usize;
+                    let mut pick = None;
+                    for (i, c) in self.collectors.iter().enumerate() {
+                        if !c.occupied {
+                            seen += 1;
+                            if self.rng.below(seen) == 0 {
+                                pick = Some(i);
+                            }
+                        }
+                    }
+                    if pick.is_none() {
+                        self.stats.collector_full_stalls += 1;
+                        break 'warps;
+                    }
+                    pick
+                }
+                _ => {
+                    // baseline / RFC: any free unit, random pick
+                    // (reservoir sample: no allocation on the hot path)
+                    let mut seen = 0usize;
+                    let mut pick = None;
+                    for (i, c) in self.collectors.iter().enumerate() {
+                        if !c.occupied {
+                            seen += 1;
+                            if self.rng.below(seen) == 0 {
+                                pick = Some(i);
+                            }
+                        }
+                    }
+                    if pick.is_none() {
+                        self.stats.collector_full_stalls += 1;
+                        break 'warps; // nothing can issue this cycle
+                    }
+                    pick
+                }
+            };
+            let Some(ci) = chosen else { continue };
+
+            // allocate + generate bank reads
+            let res = self.allocate(ci, w, &instr, now);
+            self.stats.rf_reads += (res.hits + res.misses.len() as u32) as u64;
+            self.stats.rf_cache_reads += res.hits as u64;
+            self.stats.cache_write_reused += res.wb_reuse as u64;
+            if res.hits > 0 {
+                self.stats.energy.add(EventKind::CcuRead, res.hits as u64);
+            }
+            if res.flushed {
+                self.stats.ccu_flushes += 1;
+            }
+            self.stats
+                .energy
+                .add(EventKind::OctOp, instr.nsrc as u64); // tag checks
+            for (slot, reg) in &res.misses {
+                self.banks.push_read(ReadReq {
+                    collector: ci as u8,
+                    slot: *slot,
+                    warp: w,
+                    reg: *reg,
+                    enqueued: now,
+                });
+            }
+            // scoreboard + cursors
+            self.warps[wi].mark_pending(&instr);
+            self.warps[wi].pc += 1;
+            self.warps[wi].last_issue = now;
+            self.warps[wi].strand_pos += 1;
+            self.stats.instructions += 1;
+            self.last_issued = Some(w);
+            self.wait_counter = 0;
+            issued = true;
+            break 'warps;
+        }
+        self.order_buf = order;
+
+        // scheduler state accounting (Fig 10 classification)
+        let state = if issued {
+            SchedState::Issued
+        } else if waiting_stall || self.any_ready() {
+            // a waiting-mechanism stall implies a ready warp existed
+            if waiting_stall {
+                self.stats.waiting_stalls += 1;
+            }
+            SchedState::StallReady
+        } else {
+            SchedState::StallEmpty
+        };
+        self.stats.record_sched(state);
+        self.last_state = state;
+    }
+
+    /// Fast-forward probe: if nothing can happen before the next writeback
+    /// event, return that event's cycle. `None` = must simulate
+    /// cycle-by-cycle (work is queued or a warp is ready).
+    pub fn next_wakeup(&self) -> Option<u64> {
+        if self.last_state != SchedState::StallEmpty {
+            return None; // a warp was ready (or waiting-stalled)
+        }
+        if self.banks.pending_reads() > 0 || self.banks.pending_writes() > 0 {
+            return None; // bank traffic drains next cycle
+        }
+        if self.collectors.iter().any(|c| c.ready()) {
+            return None; // a dispatch is pending
+        }
+        if self.live_warps == 0 && !self.eu.busy() {
+            return Some(u64::MAX); // fully drained
+        }
+        // the EU event heap is the only future driver
+        self.eu.next_event_cycle()
+    }
+
+    /// Account `n` skipped all-stall cycles (fast-forward bookkeeping must
+    /// match what `step` would have recorded).
+    pub fn bulk_stall(&mut self, n: u64) {
+        self.stats.sched_stall_empty += n;
+        self.stats
+            .energy
+            .add(EventKind::LeakProxy, n * self.collectors.len() as u64);
+    }
+
+    /// Allocate instruction to collector `ci` per scheme; RFC schemes check
+    /// the per-warp cache and shrink the miss list.
+    fn allocate(&mut self, ci: usize, w: u8, instr: &Instruction, now: u64) -> AllocResult {
+        match self.scheme {
+            Scheme::Malekeh | Scheme::MalekehPr | Scheme::MalekehTraditional => self
+                .collectors[ci]
+                .alloc_ccu(w, instr, now, &mut self.rng, self.traditional),
+            Scheme::Bow => self.collectors[ci].alloc_boc(w, instr, now, self.bow_window),
+            Scheme::Baseline => self.collectors[ci].alloc_ocu(w, instr, now),
+            Scheme::Rfc | Scheme::SoftwareRfc => {
+                let mut res = self.collectors[ci].alloc_ocu(w, instr, now);
+                if self.warps[w as usize].active {
+                    let sw = self.scheme == Scheme::SoftwareRfc;
+                    let cache = &mut self.rfc[w as usize];
+                    let mut still_miss = Vec::with_capacity(res.misses.len());
+                    for (slot, reg) in res.misses.drain(..) {
+                        let allowed = !sw || instr.src_is_near(slot as usize);
+                        if allowed && cache.lookup(reg).is_some() {
+                            cache.touch(cache.lookup(reg).unwrap());
+                            self.collectors[ci].deliver(slot);
+                            res.hits += 1;
+                        } else {
+                            still_miss.push((slot, reg));
+                        }
+                    }
+                    res.misses = still_miss;
+                }
+                res
+            }
+        }
+    }
+
+    /// Malekeh CCU allocation policy (§IV-B2, Fig 6).
+    fn choose_ccu(&mut self, w: u8) -> CcuChoice {
+        // a warp can own at most one CCU (coherence-free invariant)
+        if let Some(ci) = self
+            .collectors
+            .iter()
+            .position(|c| c.owner == Some(w))
+        {
+            return if self.collectors[ci].occupied {
+                CcuChoice::Skip // box 4: no other CCU may be allocated
+            } else {
+                CcuChoice::Unit(ci) // box 3: reuse the owned unit
+            };
+        }
+        // reservoir-sample the free and the far/empty-free sets in one
+        // pass (no allocation on the hot path)
+        let mut nfree = 0usize;
+        let mut free_pick = None;
+        let mut nfar = 0usize;
+        let mut far_pick = None;
+        for (i, c) in self.collectors.iter().enumerate() {
+            if c.occupied {
+                continue;
+            }
+            nfree += 1;
+            if self.rng.below(nfree) == 0 {
+                free_pick = Some(i);
+            }
+            if !c.ct.has_near_value() {
+                nfar += 1;
+                if self.rng.below(nfar) == 0 {
+                    far_pick = Some(i);
+                }
+            }
+        }
+        if nfree == 0 {
+            self.stats.collector_full_stalls += 1;
+            return CcuChoice::Skip; // box 6
+        }
+        if let Some(i) = far_pick {
+            return CcuChoice::Unit(i); // box 5: random far/empty unit
+        }
+        // all free units hold near values: waiting mechanism (boxes 7-9)
+        if self.wait_counter < self.sthld {
+            self.wait_counter += 1;
+            CcuChoice::WaitStall
+        } else {
+            self.wait_counter = 0;
+            CcuChoice::Unit(free_pick.expect("nfree > 0"))
+        }
+    }
+}
+
+enum CcuChoice {
+    Unit(usize),
+    Skip,
+    WaitStall,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuConfig;
+    use crate::trace::{find, KernelTrace};
+
+    fn mem_sys(cfg: &GpuConfig) -> (L1Cache, SharedMemorySystem) {
+        (
+            L1Cache::new(cfg.l1_bytes, cfg.line_bytes, cfg.l1_ways, cfg.l1_latency, cfg.l1_mshrs),
+            SharedMemorySystem::new(
+                cfg.l2_bytes,
+                cfg.line_bytes,
+                cfg.l2_ways,
+                cfg.l2_latency,
+                cfg.dram_latency,
+                cfg.dram_reqs_per_cycle,
+            ),
+        )
+    }
+
+    fn run_subcore(cfg: &GpuConfig, bench: &str, nwarps: usize, max: u64) -> SubCore {
+        let trace = KernelTrace::generate(find(bench).unwrap(), nwarps, 7);
+        let streams: Vec<_> = trace.warps.into_iter().map(Arc::new).collect();
+        let mut sc = SubCore::new(cfg, streams, 3);
+        let (mut l1, mut l2) = mem_sys(cfg);
+        let mut t = 0;
+        while !sc.idle() && t < max {
+            sc.step(t, &mut l1, &mut l2);
+            t += 1;
+        }
+        sc.stats.cycles = t;
+        sc.stats.l1_accesses = l1.accesses;
+        sc.stats.l1_hits = l1.hits;
+        sc
+    }
+
+    #[test]
+    fn baseline_runs_to_completion() {
+        let cfg = GpuConfig::table1_baseline();
+        let sc = run_subcore(&cfg, "hotspot", 8, 2_000_000);
+        assert!(sc.idle(), "must drain");
+        assert_eq!(sc.stats.warps_retired, 8);
+        assert!(sc.stats.instructions > 8 * 400);
+        assert!(sc.stats.ipc() > 0.05, "ipc {}", sc.stats.ipc());
+        assert_eq!(sc.stats.rf_cache_reads, 0, "baseline has no cache");
+        assert_eq!(sc.stats.rf_bank_reads, sc.stats.rf_reads);
+    }
+
+    #[test]
+    fn malekeh_serves_reads_from_cache() {
+        let cfg = GpuConfig::table1_baseline().with_scheme(Scheme::Malekeh);
+        let mut trace = KernelTrace::generate(find("kmeans").unwrap(), 8, 7);
+        crate::compiler::profile_and_annotate(&mut trace, 2, cfg.rthld);
+        let streams: Vec<_> = trace.warps.into_iter().map(Arc::new).collect();
+        let mut sc = SubCore::new(&cfg, streams, 3);
+        let (mut l1, mut l2) = mem_sys(&cfg);
+        let mut t = 0;
+        while !sc.idle() && t < 2_000_000 {
+            sc.step(t, &mut l1, &mut l2);
+            t += 1;
+        }
+        assert!(sc.idle());
+        assert!(
+            sc.stats.rf_cache_reads > 0,
+            "kmeans has hot operands; CCU must hit"
+        );
+        assert_eq!(
+            sc.stats.rf_reads,
+            sc.stats.rf_cache_reads + sc.stats.rf_bank_reads,
+            "every read is served by cache or banks"
+        );
+    }
+
+    #[test]
+    fn exit_retires_all_warps_all_schemes() {
+        for scheme in Scheme::ALL {
+            let cfg = GpuConfig::table1_baseline().with_scheme(scheme);
+            let sc = run_subcore(&cfg, "backprop", 8, 3_000_000);
+            assert!(sc.idle(), "{scheme}: not drained");
+            assert_eq!(sc.stats.warps_retired, 8, "{scheme}");
+        }
+    }
+
+    #[test]
+    fn two_level_has_state2_stalls() {
+        let cfg = GpuConfig::table1_baseline().with_scheme(Scheme::Rfc);
+        let sc = run_subcore(&cfg, "hotspot", 8, 2_000_000);
+        let (_, s2, _) = sc.stats.sched_state_distribution();
+        assert!(
+            s2 > 0.02,
+            "two-level scheduler must show ready-but-stalled cycles, got {s2}"
+        );
+    }
+
+    #[test]
+    fn waiting_mechanism_counts_stalls() {
+        let mut cfg = GpuConfig::table1_baseline().with_scheme(Scheme::Malekeh);
+        cfg.sthld = SthldMode::Static(8);
+        let mut trace = KernelTrace::generate(find("kmeans").unwrap(), 8, 7);
+        crate::compiler::profile_and_annotate(&mut trace, 2, cfg.rthld);
+        let streams: Vec<_> = trace.warps.into_iter().map(Arc::new).collect();
+        let mut sc = SubCore::new(&cfg, streams, 3);
+        let (mut l1, mut l2) = mem_sys(&cfg);
+        let mut t = 0;
+        while !sc.idle() && t < 2_000_000 {
+            sc.step(t, &mut l1, &mut l2);
+            t += 1;
+        }
+        assert!(sc.stats.waiting_stalls > 0, "sthld=8 should cause waits");
+    }
+
+    #[test]
+    fn instruction_count_matches_stream_content() {
+        let cfg = GpuConfig::table1_baseline();
+        let trace = KernelTrace::generate(find("nn").unwrap(), 4, 7);
+        let expect: u64 = trace
+            .warps
+            .iter()
+            .map(|w| w.iter().filter(|i| i.op != OpClass::Exit).count() as u64)
+            .sum();
+        let streams: Vec<_> = trace.warps.into_iter().map(Arc::new).collect();
+        let mut sc = SubCore::new(&cfg, streams, 3);
+        let (mut l1, mut l2) = mem_sys(&cfg);
+        let mut t = 0;
+        while !sc.idle() && t < 2_000_000 {
+            sc.step(t, &mut l1, &mut l2);
+            t += 1;
+        }
+        assert_eq!(sc.stats.instructions, expect);
+    }
+}

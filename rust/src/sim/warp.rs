@@ -1,0 +1,198 @@
+//! Per-warp architectural state: program cursor + register scoreboard.
+
+use crate::isa::{Instruction, NUM_REGS};
+
+/// 256-bit register bitset (one bit per architectural register).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RegSet {
+    bits: [u64; NUM_REGS / 64],
+}
+
+impl RegSet {
+    /// Empty set.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert register `r`.
+    #[inline]
+    pub fn set(&mut self, r: u8) {
+        self.bits[(r >> 6) as usize] |= 1u64 << (r & 63);
+    }
+
+    /// Remove register `r`.
+    #[inline]
+    pub fn clear(&mut self, r: u8) {
+        self.bits[(r >> 6) as usize] &= !(1u64 << (r & 63));
+    }
+
+    /// Membership test.
+    #[inline]
+    pub fn contains(&self, r: u8) -> bool {
+        self.bits[(r >> 6) as usize] & (1u64 << (r & 63)) != 0
+    }
+
+    /// True if no bits set.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.bits.iter().all(|&b| b == 0)
+    }
+
+    /// Number of registers in the set.
+    pub fn len(&self) -> usize {
+        self.bits.iter().map(|b| b.count_ones() as usize).sum()
+    }
+}
+
+/// One warp's execution state inside a sub-core.
+#[derive(Debug, Clone)]
+pub struct WarpState {
+    /// Index into the kernel trace's warp list (global).
+    pub global_id: u32,
+    /// Program counter into the instruction stream.
+    pub pc: usize,
+    /// Registers with a pending (in-flight) write — the scoreboard.
+    pub pending: RegSet,
+    /// Subset of `pending` produced by loads (long-latency scoreboard; the
+    /// two-level scheduler deactivates only on these, §VI-A).
+    pub pending_long: RegSet,
+    /// Reached the Exit marker.
+    pub done: bool,
+    /// Cycle of the last issued instruction (GTO greediness).
+    pub last_issue: u64,
+    /// Two-level scheduler: warp currently in the active set.
+    pub active: bool,
+    /// Cycle the warp last became active (activation/swap delay).
+    pub active_since: u64,
+    /// Software-RFC strand progress (instructions since activation).
+    pub strand_pos: u32,
+}
+
+impl WarpState {
+    /// Fresh warp at pc 0.
+    pub fn new(global_id: u32) -> Self {
+        WarpState {
+            global_id,
+            pc: 0,
+            pending: RegSet::new(),
+            pending_long: RegSet::new(),
+            done: false,
+            last_issue: 0,
+            active: false,
+            active_since: 0,
+            strand_pos: 0,
+        }
+    }
+
+    /// The warp's next instruction, if any.
+    #[inline]
+    pub fn next_instr<'a>(&self, stream: &'a [Instruction]) -> Option<&'a Instruction> {
+        if self.done {
+            None
+        } else {
+            stream.get(self.pc)
+        }
+    }
+
+    /// Scoreboard check: can `instr` issue now? (RAW on sources, WAW on
+    /// destinations.)
+    #[inline]
+    pub fn deps_ready(&self, instr: &Instruction) -> bool {
+        for &s in instr.sources() {
+            if self.pending.contains(s) {
+                return false;
+            }
+        }
+        for &d in instr.dests() {
+            if self.pending.contains(d) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Mark destinations in flight; long-latency producers (loads, SFU,
+    /// tensor core) also enter the long-latency set the two-level
+    /// scheduler watches.
+    #[inline]
+    pub fn mark_pending(&mut self, instr: &Instruction) {
+        let long = instr.op.is_load()
+            || matches!(instr.op, crate::isa::OpClass::Sfu | crate::isa::OpClass::Mma);
+        for &d in instr.dests() {
+            self.pending.set(d);
+            if long {
+                self.pending_long.set(d);
+            }
+        }
+    }
+
+    /// Clear destinations after writeback.
+    #[inline]
+    pub fn clear_pending(&mut self, dsts: &[u8]) {
+        for &d in dsts {
+            self.pending.clear(d);
+            self.pending_long.clear(d);
+        }
+    }
+
+    /// Is `instr` blocked specifically on an outstanding load (the
+    /// long-latency condition two-level schedulers deactivate on)?
+    #[inline]
+    pub fn blocked_on_load(&self, instr: &Instruction) -> bool {
+        instr
+            .sources()
+            .iter()
+            .chain(instr.dests().iter())
+            .any(|&r| self.pending_long.contains(r))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Instruction, OpClass};
+
+    #[test]
+    fn regset_basics() {
+        let mut s = RegSet::new();
+        assert!(s.is_empty());
+        s.set(0);
+        s.set(63);
+        s.set(64);
+        s.set(255);
+        assert_eq!(s.len(), 4);
+        assert!(s.contains(63) && s.contains(64) && s.contains(255));
+        assert!(!s.contains(1));
+        s.clear(63);
+        assert!(!s.contains(63));
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn scoreboard_raw_waw() {
+        let mut w = WarpState::new(0);
+        let producer = Instruction::new(OpClass::Alu, &[1], &[5]);
+        let raw = Instruction::new(OpClass::Alu, &[5], &[6]);
+        let waw = Instruction::new(OpClass::Alu, &[2], &[5]);
+        let indep = Instruction::new(OpClass::Alu, &[2], &[7]);
+        assert!(w.deps_ready(&producer));
+        w.mark_pending(&producer);
+        assert!(!w.deps_ready(&raw), "RAW must block");
+        assert!(!w.deps_ready(&waw), "WAW must block");
+        assert!(w.deps_ready(&indep));
+        w.clear_pending(&[5]);
+        assert!(w.deps_ready(&raw));
+    }
+
+    #[test]
+    fn next_instr_respects_done() {
+        let stream = vec![Instruction::new(OpClass::Alu, &[1], &[2])];
+        let mut w = WarpState::new(3);
+        assert!(w.next_instr(&stream).is_some());
+        w.done = true;
+        assert!(w.next_instr(&stream).is_none());
+        w.done = false;
+        w.pc = 1;
+        assert!(w.next_instr(&stream).is_none());
+    }
+}

@@ -1,0 +1,268 @@
+//! Simulation counters and derived metrics.
+//!
+//! One `Stats` per simulation run (merged across SMs/sub-cores). Everything
+//! the paper's figures report is derived from these fields; benches read
+//! them directly, so the naming follows the paper: "RF cache hit ratio" =
+//! cache-served reads / total operand reads (§VI-B2), scheduler state
+//! distribution (Fig 10), interval IPC (Fig 7/9), etc.
+
+use crate::energy::EnergyCounts;
+
+/// Per-cycle state of an issue scheduler, as classified in §VI-A.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedState {
+    /// State 1: an instruction was issued.
+    Issued,
+    /// State 2: nothing issued although a ready warp exists somewhere in
+    /// the pool (two-level: in the pending set; Malekeh: blocked by the
+    /// waiting mechanism or collectors).
+    StallReady,
+    /// State 3: nothing issued and no warp was ready.
+    StallEmpty,
+}
+
+/// Counter set for one simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    // ---- progress ----
+    /// Simulated cycles.
+    pub cycles: u64,
+    /// Warp instructions committed.
+    pub instructions: u64,
+    /// Warps that reached their Exit marker.
+    pub warps_retired: u64,
+
+    // ---- register file traffic ----
+    /// Source-operand reads requested by issued instructions (cache +
+    /// banks; Ctrl/Exit read nothing).
+    pub rf_reads: u64,
+    /// Reads served by the RF banks.
+    pub rf_bank_reads: u64,
+    /// Reads served by a collector cache (CCU/BOC/RFC hit).
+    pub rf_cache_reads: u64,
+    /// Destination writes (RF banks are always written, §IV-A2).
+    pub rf_writes: u64,
+    /// Writes also captured by a collector cache.
+    pub rf_cache_writes: u64,
+    /// Cache-resident values that were later actually read (reuse proof,
+    /// Fig 16 discussion).
+    pub cache_write_reused: u64,
+    /// Cycles read requests spent queued behind a busy bank (conflict
+    /// pressure; not a paper figure, used for analysis).
+    pub bank_conflict_wait: u64,
+
+    // ---- issue scheduler ----
+    /// Cycles (per sub-core scheduler, summed) in each state.
+    pub sched_issued: u64,
+    /// State 2 cycles (ready warp existed but nothing issued).
+    pub sched_stall_ready: u64,
+    /// State 3 cycles (no ready warp).
+    pub sched_stall_empty: u64,
+    /// Subset of state-2 cycles caused by Malekeh's waiting mechanism.
+    pub waiting_stalls: u64,
+    /// Issue attempts rejected because every collector was occupied.
+    pub collector_full_stalls: u64,
+    /// CCU flushes triggered by warp-ownership change (§III-C1).
+    pub ccu_flushes: u64,
+
+    // ---- memory ----
+    /// L1D lookups.
+    pub l1_accesses: u64,
+    /// L1D hits.
+    pub l1_hits: u64,
+    /// L2 lookups.
+    pub l2_accesses: u64,
+    /// L2 hits.
+    pub l2_hits: u64,
+
+    // ---- energy events ----
+    /// RF energy event counts (consumed by `energy::EnergyModel`).
+    pub energy: EnergyCounts,
+
+    // ---- interval traces (dynamic algorithm, Figs 7/9) ----
+    /// IPC of each STHLD interval.
+    pub interval_ipc: Vec<f64>,
+    /// STHLD value used during each interval.
+    pub sthld_trace: Vec<u32>,
+}
+
+impl Stats {
+    /// New empty counter set.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Instructions per cycle over the whole run (0 if no cycles).
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.instructions as f64 / self.cycles as f64
+        }
+    }
+
+    /// RF cache hit ratio: cache-served reads / all operand reads (§VI-B2).
+    pub fn rf_hit_ratio(&self) -> f64 {
+        if self.rf_reads == 0 {
+            0.0
+        } else {
+            self.rf_cache_reads as f64 / self.rf_reads as f64
+        }
+    }
+
+    /// Fraction of RF bank reads eliminated relative to `baseline`.
+    pub fn bank_read_reduction_vs(&self, baseline: &Stats) -> f64 {
+        if baseline.rf_bank_reads == 0 {
+            0.0
+        } else {
+            1.0 - self.rf_bank_reads as f64 / baseline.rf_bank_reads as f64
+        }
+    }
+
+    /// L1 data-cache hit ratio (Fig 14).
+    pub fn l1_hit_ratio(&self) -> f64 {
+        if self.l1_accesses == 0 {
+            0.0
+        } else {
+            self.l1_hits as f64 / self.l1_accesses as f64
+        }
+    }
+
+    /// Cache writes / total RF writes (Fig 16).
+    pub fn cache_write_fraction(&self) -> f64 {
+        if self.rf_writes == 0 {
+            0.0
+        } else {
+            self.rf_cache_writes as f64 / self.rf_writes as f64
+        }
+    }
+
+    /// Scheduler state distribution (issued, state2, state3) as fractions
+    /// of scheduler-cycles (Fig 10).
+    pub fn sched_state_distribution(&self) -> (f64, f64, f64) {
+        let total =
+            (self.sched_issued + self.sched_stall_ready + self.sched_stall_empty) as f64;
+        if total == 0.0 {
+            return (0.0, 0.0, 0.0);
+        }
+        (
+            self.sched_issued as f64 / total,
+            self.sched_stall_ready as f64 / total,
+            self.sched_stall_empty as f64 / total,
+        )
+    }
+
+    /// Record one scheduler-cycle state.
+    #[inline]
+    pub fn record_sched(&mut self, s: SchedState) {
+        match s {
+            SchedState::Issued => self.sched_issued += 1,
+            SchedState::StallReady => self.sched_stall_ready += 1,
+            SchedState::StallEmpty => self.sched_stall_empty += 1,
+        }
+    }
+
+    /// Merge another counter set into this one (SM-level aggregation).
+    /// `cycles` takes the max (SMs run in lock-step wall-clock), counters
+    /// add, interval traces concatenate only if empty here.
+    pub fn merge(&mut self, other: &Stats) {
+        self.cycles = self.cycles.max(other.cycles);
+        self.instructions += other.instructions;
+        self.warps_retired += other.warps_retired;
+        self.rf_reads += other.rf_reads;
+        self.rf_bank_reads += other.rf_bank_reads;
+        self.rf_cache_reads += other.rf_cache_reads;
+        self.rf_writes += other.rf_writes;
+        self.rf_cache_writes += other.rf_cache_writes;
+        self.cache_write_reused += other.cache_write_reused;
+        self.bank_conflict_wait += other.bank_conflict_wait;
+        self.sched_issued += other.sched_issued;
+        self.sched_stall_ready += other.sched_stall_ready;
+        self.sched_stall_empty += other.sched_stall_empty;
+        self.waiting_stalls += other.waiting_stalls;
+        self.collector_full_stalls += other.collector_full_stalls;
+        self.ccu_flushes += other.ccu_flushes;
+        self.l1_accesses += other.l1_accesses;
+        self.l1_hits += other.l1_hits;
+        self.l2_accesses += other.l2_accesses;
+        self.l2_hits += other.l2_hits;
+        self.energy.merge(&other.energy);
+        if self.interval_ipc.is_empty() {
+            self.interval_ipc = other.interval_ipc.clone();
+            self.sthld_trace = other.sthld_trace.clone();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ipc_and_ratios() {
+        let mut s = Stats::new();
+        assert_eq!(s.ipc(), 0.0);
+        assert_eq!(s.rf_hit_ratio(), 0.0);
+        s.cycles = 100;
+        s.instructions = 250;
+        s.rf_reads = 10;
+        s.rf_cache_reads = 4;
+        s.rf_bank_reads = 6;
+        assert!((s.ipc() - 2.5).abs() < 1e-12);
+        assert!((s.rf_hit_ratio() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bank_read_reduction() {
+        let mut base = Stats::new();
+        base.rf_bank_reads = 100;
+        let mut m = Stats::new();
+        m.rf_bank_reads = 54;
+        assert!((m.bank_read_reduction_vs(&base) - 0.46).abs() < 1e-12);
+        let empty = Stats::new();
+        assert_eq!(m.bank_read_reduction_vs(&empty), 0.0);
+    }
+
+    #[test]
+    fn sched_distribution_sums_to_one() {
+        let mut s = Stats::new();
+        for _ in 0..50 {
+            s.record_sched(SchedState::Issued);
+        }
+        for _ in 0..30 {
+            s.record_sched(SchedState::StallReady);
+        }
+        for _ in 0..20 {
+            s.record_sched(SchedState::StallEmpty);
+        }
+        let (a, b, c) = s.sched_state_distribution();
+        assert!((a + b + c - 1.0).abs() < 1e-12);
+        assert!((a - 0.5).abs() < 1e-12);
+        assert!((b - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds_counters_and_maxes_cycles() {
+        let mut a = Stats::new();
+        a.cycles = 100;
+        a.instructions = 10;
+        a.rf_reads = 5;
+        let mut b = Stats::new();
+        b.cycles = 80;
+        b.instructions = 20;
+        b.rf_reads = 7;
+        a.merge(&b);
+        assert_eq!(a.cycles, 100);
+        assert_eq!(a.instructions, 30);
+        assert_eq!(a.rf_reads, 12);
+    }
+
+    #[test]
+    fn cache_write_fraction_guard() {
+        let mut s = Stats::new();
+        assert_eq!(s.cache_write_fraction(), 0.0);
+        s.rf_writes = 10;
+        s.rf_cache_writes = 3;
+        assert!((s.cache_write_fraction() - 0.3).abs() < 1e-12);
+    }
+}

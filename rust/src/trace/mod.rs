@@ -1,0 +1,127 @@
+//! Kernel traces: per-warp instruction streams + generation from the
+//! Table II workload registry.
+
+pub mod program;
+pub mod workloads;
+
+pub use program::{AddrGen, ProgramBuilder};
+pub use workloads::{find, table2, Benchmark, Suite, WarpCtx, BENCHMARKS};
+
+use crate::isa::Instruction;
+
+/// A generated kernel launch: one instruction stream per warp.
+#[derive(Debug, Clone)]
+pub struct KernelTrace {
+    /// Benchmark chart name.
+    pub name: String,
+    /// Per-warp streams (each ends with an `Exit` marker).
+    pub warps: Vec<Vec<Instruction>>,
+}
+
+impl KernelTrace {
+    /// Generate `nwarps` warp streams for `bench` with a launch `seed`.
+    pub fn generate(bench: &Benchmark, nwarps: usize, seed: u64) -> Self {
+        let warps = (0..nwarps)
+            .map(|w| {
+                let ctx = WarpCtx {
+                    warp_id: w as u32,
+                    nwarps: nwarps as u32,
+                    kernel_id: 0,
+                };
+                (bench.gen)(&ctx, seed)
+            })
+            .collect();
+        KernelTrace { name: bench.name.to_string(), warps }
+    }
+
+    /// Total dynamic instructions across all warps (including Exit markers).
+    pub fn total_instructions(&self) -> usize {
+        self.warps.iter().map(|w| w.len()).sum()
+    }
+
+    /// Flatten the first `nwarps` warps into padded `(ids, pos, rw)` access
+    /// streams for the reuse-annotation path (rust `compiler::` or the AOT
+    /// artifact). Each register operand of each instruction becomes one
+    /// access (sources first, as reads `rw=1`; then destinations, `rw=0`);
+    /// `pos` is the dynamic instruction index. Rows are truncated / padded
+    /// with `-1` to `len`.
+    pub fn access_streams(
+        &self,
+        nwarps: usize,
+        len: usize,
+    ) -> (Vec<i32>, Vec<i32>, Vec<i32>) {
+        let n = nwarps.min(self.warps.len());
+        let mut ids = vec![-1i32; nwarps * len];
+        let mut pos = vec![0i32; nwarps * len];
+        let mut rw = vec![0i32; nwarps * len];
+        for w in 0..n {
+            let mut k = 0usize;
+            'outer: for (ii, instr) in self.warps[w].iter().enumerate() {
+                for (is_read, &r) in instr
+                    .sources()
+                    .iter()
+                    .map(|r| (1, r))
+                    .chain(instr.dests().iter().map(|r| (0, r)))
+                {
+                    if k >= len {
+                        break 'outer;
+                    }
+                    ids[w * len + k] = r as i32;
+                    pos[w * len + k] = ii as i32;
+                    rw[w * len + k] = is_read;
+                    k += 1;
+                }
+            }
+        }
+        (ids, pos, rw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_produces_per_warp_streams() {
+        let b = find("hotspot").unwrap();
+        let t = KernelTrace::generate(b, 8, 1);
+        assert_eq!(t.warps.len(), 8);
+        assert!(t.total_instructions() > 8 * 400);
+    }
+
+    #[test]
+    fn access_streams_pad_and_position() {
+        let b = find("kmeans").unwrap();
+        let t = KernelTrace::generate(b, 4, 1);
+        let (ids, pos, rw) = t.access_streams(2, 64);
+        assert_eq!(ids.len(), 2 * 64);
+        assert_eq!(rw.len(), 2 * 64);
+        // row 0 first access: first instruction's first operand
+        let first = &t.warps[0][0];
+        let first_reg = first
+            .sources()
+            .first()
+            .or_else(|| first.dests().first())
+            .copied()
+            .unwrap();
+        assert_eq!(ids[0], first_reg as i32);
+        assert_eq!(pos[0], 0);
+        // sources flatten before destinations, so rw[0] is a read iff the
+        // first instruction has any source
+        assert_eq!(rw[0], if first.nsrc > 0 { 1 } else { 0 });
+        // positions never decrease within a row
+        for w in 0..2 {
+            let row = &pos[w * 64..(w + 1) * 64];
+            assert!(row.windows(2).all(|p| p[0] <= p[1]));
+        }
+    }
+
+    #[test]
+    fn access_streams_more_rows_than_warps() {
+        let b = find("nn").unwrap();
+        let t = KernelTrace::generate(b, 1, 1);
+        let (ids, _, _) = t.access_streams(3, 32);
+        // rows beyond available warps are fully padded
+        assert!(ids[32..].iter().all(|&x| x == -1));
+    }
+}

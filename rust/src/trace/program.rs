@@ -1,0 +1,227 @@
+//! Per-warp program builder: the small "virtual SASS assembler" the
+//! workload generators use.
+//!
+//! It tracks a register pool so def-use chains are real (reuse distances
+//! arise from program structure, not sampled distributions) and provides an
+//! address unit for line-granular memory streams.
+
+use crate::isa::{Instruction, OpClass, MAX_SRC, NUM_REGS};
+use crate::util::Rng;
+
+/// Builder for one warp's instruction stream.
+pub struct ProgramBuilder {
+    instrs: Vec<Instruction>,
+    /// Next temporary register to hand out (round-robin above the reserved
+    /// range so long programs recycle names like a real allocator).
+    next_tmp: usize,
+    /// First register id handed out as a temporary; ids below are reserved
+    /// for named values (accumulators, fragments, constants).
+    tmp_base: usize,
+    /// Size of the temporary window (wraps; models register pressure).
+    tmp_window: usize,
+    /// Deterministic per-warp randomness (divergence, address jitter).
+    pub rng: Rng,
+}
+
+impl ProgramBuilder {
+    /// `reserved` low registers are excluded from the temp pool;
+    /// `tmp_window` controls register pressure (smaller = more recycling =
+    /// shorter reuse distances).
+    pub fn new(reserved: usize, tmp_window: usize, seed: u64) -> Self {
+        assert!(reserved + tmp_window <= NUM_REGS, "register pool overflow");
+        assert!(tmp_window >= 4, "need a few temporaries");
+        ProgramBuilder {
+            instrs: Vec::new(),
+            next_tmp: 0,
+            tmp_base: reserved,
+            tmp_window,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Allocate the next temporary register (round-robin window).
+    pub fn tmp(&mut self) -> u8 {
+        let r = self.tmp_base + (self.next_tmp % self.tmp_window);
+        self.next_tmp += 1;
+        r as u8
+    }
+
+    /// Number of instructions emitted so far.
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// True if nothing emitted yet.
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Emit a raw instruction.
+    pub fn push(&mut self, i: Instruction) {
+        self.instrs.push(i);
+    }
+
+    /// ALU op: dst = f(srcs).
+    pub fn alu(&mut self, srcs: &[u8], dst: u8) {
+        self.push(Instruction::new(OpClass::Alu, srcs, &[dst]));
+    }
+
+    /// SFU op (rsqrt/exp/...): dst = f(src).
+    pub fn sfu(&mut self, src: u8, dst: u8) {
+        self.push(Instruction::new(OpClass::Sfu, &[src], &[dst]));
+    }
+
+    /// Global load with a *data-dependent* address register (pointer
+    /// chase): the address operand is a real RF read.
+    pub fn ldg(&mut self, addr_reg: u8, dst: u8, line: u32) {
+        self.push(Instruction::mem(OpClass::LdGlobal, &[addr_reg], &[dst], line));
+    }
+
+    /// Global load with uniform addressing: on Turing, base+offset
+    /// addresses live in the uniform register file, which is read by the
+    /// dedicated uniform datapath — NOT through the RF banks / operand
+    /// collectors. No source operand is modelled.
+    pub fn ldg_u(&mut self, dst: u8, line: u32) {
+        self.push(Instruction::mem(OpClass::LdGlobal, &[], &[dst], line));
+    }
+
+    /// Global store, uniform-addressed: only the data value is an RF read.
+    pub fn stg_u(&mut self, src: u8, line: u32) {
+        self.push(Instruction::mem(OpClass::StGlobal, &[src], &[], line));
+    }
+
+    /// Shared-memory load, uniform-addressed.
+    pub fn lds_u(&mut self, dst: u8) {
+        self.push(Instruction::mem(OpClass::LdShared, &[], &[dst], 0));
+    }
+
+    /// Tensor-core MMA: dsts = srcs-matmul-accumulate. Up to 6 srcs, 2 dsts.
+    pub fn mma(&mut self, srcs: &[u8], dsts: &[u8]) {
+        assert!(srcs.len() <= MAX_SRC);
+        self.push(Instruction::new(OpClass::Mma, srcs, dsts));
+    }
+
+    /// Control instruction (branch/barrier): no RF operands collected.
+    pub fn ctrl(&mut self) {
+        self.push(Instruction::new(OpClass::Ctrl, &[], &[]));
+    }
+
+    /// Dependent ALU chain of `n` ops starting from `seed_reg`; returns the
+    /// final register. Models the short-latency chains that make workloads
+    /// like hotspot scheduler-sensitive.
+    pub fn chain(&mut self, seed_reg: u8, n: usize) -> u8 {
+        let mut cur = seed_reg;
+        for _ in 0..n {
+            let d = self.tmp();
+            self.alu(&[cur, seed_reg], d);
+            cur = d;
+        }
+        cur
+    }
+
+    /// Finish the stream with the Exit marker and return it.
+    pub fn finish(mut self) -> Vec<Instruction> {
+        self.push(Instruction::new(OpClass::Exit, &[], &[]));
+        self.instrs
+    }
+}
+
+/// Line-granular address stream helper. Addresses are 128B-line ids in a
+/// flat space; generators use region bases to control sharing across warps
+/// (shared region -> L1 temporal hits; private streams -> misses).
+#[derive(Debug, Clone)]
+pub struct AddrGen {
+    /// Base line of this warp's private streaming region.
+    pub private_base: u32,
+    /// Base line of the region shared by all warps of the kernel.
+    pub shared_base: u32,
+    cursor: u32,
+}
+
+impl AddrGen {
+    /// Regions are spaced far apart so they never alias.
+    pub fn new(warp_global_id: u32, kernel_id: u32) -> Self {
+        AddrGen {
+            private_base: 0x0100_0000 + warp_global_id * 0x4_0000,
+            shared_base: 0x8000_0000 + kernel_id * 0x10_0000,
+            cursor: 0,
+        }
+    }
+
+    /// Next line of the private streaming sequence (stride in lines).
+    pub fn stream(&mut self, stride: u32) -> u32 {
+        let l = self.private_base + self.cursor;
+        self.cursor = self.cursor.wrapping_add(stride);
+        l
+    }
+
+    /// A line in the shared region (e.g. model weights, LUTs): index is
+    /// wrapped into `extent` lines so the footprint is controllable.
+    pub fn shared(&self, index: u32, extent: u32) -> u32 {
+        self.shared_base + (index % extent.max(1))
+    }
+
+    /// Pseudo-random (data-dependent) line in a `extent`-line region:
+    /// models indirect accesses (BFS, particlefilter).
+    pub fn indirect(&self, rng: &mut Rng, extent: u32) -> u32 {
+        self.shared_base + 0x8_0000 + (rng.next_u32() % extent.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::OpClass;
+
+    #[test]
+    fn tmp_wraps_in_window() {
+        let mut b = ProgramBuilder::new(16, 8, 1);
+        let first = b.tmp();
+        assert_eq!(first, 16);
+        for _ in 0..7 {
+            b.tmp();
+        }
+        assert_eq!(b.tmp(), 16, "should wrap after window temps");
+    }
+
+    #[test]
+    #[should_panic(expected = "register pool overflow")]
+    fn pool_overflow_panics() {
+        ProgramBuilder::new(250, 10, 0);
+    }
+
+    #[test]
+    fn chain_is_dependent() {
+        let mut b = ProgramBuilder::new(8, 16, 2);
+        let out = b.chain(3, 4);
+        let prog = b.finish();
+        assert_eq!(prog.len(), 5); // 4 ALU + Exit
+        // each op consumes the previous op's dest
+        for w in prog.windows(2) {
+            if w[1].op == OpClass::Alu {
+                assert!(w[1].sources().contains(&w[0].dests()[0]));
+            }
+        }
+        assert_eq!(prog[3].dests()[0], out);
+        assert_eq!(prog.last().unwrap().op, OpClass::Exit);
+    }
+
+    #[test]
+    fn addr_regions_do_not_alias() {
+        let mut a = AddrGen::new(0, 0);
+        let mut b = AddrGen::new(1, 0);
+        let sa: Vec<u32> = (0..100).map(|_| a.stream(1)).collect();
+        let sb: Vec<u32> = (0..100).map(|_| b.stream(1)).collect();
+        assert!(sa.iter().all(|x| !sb.contains(x)));
+        // shared region identical across warps
+        assert_eq!(a.shared(5, 64), b.shared(5, 64));
+        assert!(a.shared(5, 64) > sa[99]);
+    }
+
+    #[test]
+    fn shared_wraps_extent() {
+        let a = AddrGen::new(0, 3);
+        assert_eq!(a.shared(64, 64), a.shared(0, 64));
+        assert_ne!(a.shared(1, 64), a.shared(0, 64));
+    }
+}

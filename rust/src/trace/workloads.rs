@@ -1,0 +1,651 @@
+//! Table II workload generators: synthetic stand-ins for the Rodinia and
+//! Deepbench traces the paper replays through Accel-sim (see DESIGN.md §2
+//! for the substitution argument).
+//!
+//! Each generator builds a real program — def-use chains, accumulators,
+//! streamed fragments, shared lookup tables, divergence — so reuse
+//! distances, bank pressure and memory behaviour *emerge* from structure
+//! instead of being sampled from target distributions. Constants are tuned
+//! so the suite reproduces the paper's aggregate characteristics:
+//! Deepbench reuse distances long (>10 for ~40%+ of reuses, Fig 1),
+//! conv ~65% tensor-core instructions, hotspot short-latency-sensitive,
+//! lud/particlefilter memory-bound, b+tree low-reuse pointer chasing.
+
+use super::program::{AddrGen, ProgramBuilder};
+use crate::isa::Instruction;
+
+/// Benchmark suite (Table II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Suite {
+    /// General-purpose computing (Rodinia).
+    Rodinia,
+    /// Deep-learning workloads with tensor cores (Deepbench).
+    Deepbench,
+    /// Synthetic drivers used by specific figures (not in Table II).
+    Synthetic,
+}
+
+/// Context handed to a generator for one warp.
+pub struct WarpCtx {
+    /// Global warp id across the whole GPU.
+    pub warp_id: u32,
+    /// Total warps in the launch.
+    pub nwarps: u32,
+    /// Per-benchmark kernel id (address-space separation).
+    pub kernel_id: u32,
+}
+
+/// One benchmark: name + suite + per-warp generator.
+pub struct Benchmark {
+    /// Chart label (matches the paper's figures).
+    pub name: &'static str,
+    /// Which suite it belongs to.
+    pub suite: Suite,
+    /// Per-warp program generator.
+    pub gen: fn(&WarpCtx, u64) -> Vec<Instruction>,
+}
+
+// =============================== bodies ====================================
+
+/// Register-tiled tensor-core GEMM inner loop (the register allocation of
+/// the L1 Pallas kernel `mma_gemm`, see DESIGN.md §Hardware-Adaptation).
+///
+/// `tm x tn` MMA grid per iteration: A fragments are reused across a row of
+/// MMAs (near), B fragments across a column (near-ish), accumulators are
+/// reused across iterations at distance ~ body length (far for big tiles —
+/// the long Deepbench reuse distances of Fig 1). `shared_b` puts B in a
+/// kernel-shared region (inference weight reuse -> L1 hits).
+fn gemm_body(
+    b: &mut ProgramBuilder,
+    ag: &mut AddrGen,
+    iters: usize,
+    tm: usize,
+    tn: usize,
+    shared_b: bool,
+    store_epilogue: bool,
+) {
+    // register plan: [2 .. 2+2*tm) A frags, then B frags, accs (addresses
+    // are uniform-register based, as in Turing GEMM SASS)
+    let a0 = 2usize;
+    let b0 = a0 + 2 * tm;
+    let acc0 = b0 + 2 * tn;
+    let shared_extent = 2048;
+    for it in 0..iters {
+        // stream A fragments (private, far reuse: next use is this iter only)
+        for i in 0..tm {
+            let line = ag.stream(1);
+            b.ldg_u((a0 + 2 * i) as u8, line);
+            b.ldg_u((a0 + 2 * i + 1) as u8, line + 1);
+        }
+        // B fragments: shared weights (inference) or streamed (training)
+        for j in 0..tn {
+            let line = if shared_b {
+                ag.shared((it * tn + j) as u32, shared_extent)
+            } else {
+                ag.stream(1)
+            };
+            b.ldg_u((b0 + 2 * j) as u8, line);
+            b.ldg_u((b0 + 2 * j + 1) as u8, line + 1);
+        }
+        // tm x tn MMA grid
+        for i in 0..tm {
+            for j in 0..tn {
+                let acc = (acc0 + 2 * (i * tn + j)) as u8;
+                b.mma(
+                    &[
+                        (a0 + 2 * i) as u8,
+                        (a0 + 2 * i + 1) as u8,
+                        (b0 + 2 * j) as u8,
+                        (b0 + 2 * j + 1) as u8,
+                        acc,
+                        acc + 1,
+                    ],
+                    &[acc, acc + 1],
+                );
+            }
+        }
+    }
+    if store_epilogue {
+        for i in 0..(tm * tn) {
+            let acc = (acc0 + 2 * i) as u8;
+            let t = b.tmp();
+            b.alu(&[acc, acc + 1], t);
+            let line = ag.stream(1);
+            b.stg_u(t, line);
+        }
+    }
+}
+
+/// Stencil body (hotspot/srad/pathfinder): load a neighbourhood, run a
+/// short dependent chain, store. Short chains + load dependence make these
+/// kernels need many live warps to hide latency — the two-level-scheduler
+/// pain case of Fig 2.
+fn stencil_body(
+    b: &mut ProgramBuilder,
+    ag: &mut AddrGen,
+    iters: usize,
+    points: usize,
+    chain_len: usize,
+    sfu_every: usize,
+    shared_frac_pct: usize,
+) {
+    for it in 0..iters {
+        let mut loaded = Vec::with_capacity(points);
+        for p in 0..points {
+            let d = b.tmp();
+            // neighbourhoods overlap between warps -> temporal L1 hits
+            let line = if (p * 100 / points.max(1)) < shared_frac_pct {
+                ag.shared((it * points + p) as u32, 4096)
+            } else {
+                ag.stream(1)
+            };
+            b.ldg_u(d, line);
+            loaded.push(d);
+        }
+        // combine neighbours pairwise (near reuse of loaded values)
+        let mut acc = loaded[0];
+        for &v in &loaded[1..] {
+            let d = b.tmp();
+            b.alu(&[acc, v], d);
+            acc = d;
+        }
+        let end = b.chain(acc, chain_len);
+        let out = if sfu_every > 0 && it % sfu_every == 0 {
+            let d = b.tmp();
+            b.sfu(end, d);
+            d
+        } else {
+            end
+        };
+        let line = ag.stream(1);
+        b.stg_u(out, line);
+    }
+}
+
+/// Irregular/graph body (bfs, b+tree): dependent (pointer-chasing) loads,
+/// divergence, fresh registers — the low-reuse end of the spectrum.
+///
+/// Two independent chases are interleaved, as a latency-aware compiler
+/// schedules them: producer->consumer distances are 2+ instructions, which
+/// is what defeats short sliding windows on irregular code (§VI-B2).
+fn irregular_body(
+    b: &mut ProgramBuilder,
+    ag: &mut AddrGen,
+    iters: usize,
+    chase_depth: usize,
+    diverge_pct: usize,
+    extent: u32,
+) {
+    for _ in 0..iters {
+        let mut p0 = b.tmp();
+        let mut p1 = b.tmp();
+        let (a0, a1) = (ag.indirect(&mut b.rng, extent), ag.indirect(&mut b.rng, extent));
+        b.ldg_u(p0, a0);
+        b.ldg_u(p1, a1);
+        for _ in 0..chase_depth {
+            let n0 = b.tmp();
+            let n1 = b.tmp();
+            // addresses depend on the previous loads (true pointer chase),
+            // the two strands interleaved
+            let (a0, a1) =
+                (ag.indirect(&mut b.rng, extent), ag.indirect(&mut b.rng, extent));
+            b.ldg(p0, n0, a0);
+            b.ldg(p1, n1, a1);
+            p0 = n0;
+            p1 = n1;
+        }
+        if b.rng.below(100) < diverge_pct {
+            // divergent path: control + a couple of unrelated ops the
+            // interleaved-execution model slots in (§III-A's source of
+            // nondeterministic reuse distances)
+            b.ctrl();
+            let t0 = b.tmp();
+            let t1 = b.tmp();
+            b.alu(&[p0], t0);
+            b.alu(&[t0], t1);
+        }
+        let t = b.tmp();
+        b.alu(&[p0, p1], t);
+    }
+}
+
+/// Compute-dense body with a hot operand set (lavamd, kmeans): an outer
+/// value is reused by every inner step — near reuse the CCU feasts on.
+fn hot_operand_body(
+    b: &mut ProgramBuilder,
+    ag: &mut AddrGen,
+    outer: usize,
+    inner: usize,
+    sfu_every: usize,
+    shared_inner: bool,
+) {
+    let hot0 = 2u8; // the particle / point registers
+    let hot1 = 3u8;
+    for o in 0..outer {
+        let line = ag.stream(1);
+        b.ldg_u(hot0, line);
+        b.ldg_u(hot1, line + 1);
+        let mut acc = b.tmp();
+        b.alu(&[hot0, hot1], acc);
+        for i in 0..inner {
+            let other = b.tmp();
+            if shared_inner {
+                // centroid / neighbour list shared across warps
+                b.ldg_u(other, ag.shared((o * inner + i) as u32, 512));
+            } else {
+                b.ldg_u(other, ag.stream(1));
+            }
+            let d0 = b.tmp();
+            b.alu(&[hot0, other], d0); // hot regs: near reuse every iter
+            let d1 = b.tmp();
+            b.alu(&[hot1, d0], d1);
+            let d2 = b.tmp();
+            b.alu(&[acc, d1], d2);
+            acc = d2;
+            if sfu_every > 0 && i % sfu_every == sfu_every - 1 {
+                let s = b.tmp();
+                b.sfu(acc, s);
+                acc = s;
+            }
+        }
+        let line = ag.stream(1);
+        b.stg_u(acc, line);
+    }
+}
+
+/// Streaming elementwise body (backprop/dwt2d/nn flavours): load, a few
+/// ops, store; memory-bandwidth-leaning, moderate reuse.
+///
+/// Software-pipelined over 3 elements the way nvcc schedules streaming
+/// loops: all loads hoisted, then the three compute chains interleaved, so
+/// def-use distances spread over ~3x the chain length (the reuse-distance
+/// tail of Fig 1 that sliding windows cannot capture).
+fn elementwise_body(
+    b: &mut ProgramBuilder,
+    ag: &mut AddrGen,
+    iters: usize,
+    ops: usize,
+    sfu_every: usize,
+    use_lds: bool,
+) {
+    const UNROLL: usize = 3;
+    let mut it = 0usize;
+    while it < iters {
+        let lanes = UNROLL.min(iters - it);
+        let mut xs = [0u8; UNROLL];
+        let mut ys = [0u8; UNROLL];
+        // hoisted loads for all lanes
+        for l in 0..lanes {
+            xs[l] = b.tmp();
+            b.ldg_u(xs[l], ag.stream(1));
+            ys[l] = b.tmp();
+            if use_lds {
+                b.lds_u(ys[l]);
+            } else {
+                b.ldg_u(ys[l], ag.stream(1));
+            }
+        }
+        // interleaved compute chains
+        let mut accs = xs;
+        for k in 0..ops {
+            for l in 0..lanes {
+                let d = b.tmp();
+                b.alu(&[accs[l], if k % 2 == 0 { ys[l] } else { xs[l] }], d);
+                accs[l] = d;
+            }
+        }
+        for l in 0..lanes {
+            let mut out = accs[l];
+            if sfu_every > 0 && (it + l) % sfu_every == 0 {
+                let s = b.tmp();
+                b.sfu(out, s);
+                out = s;
+            }
+            b.stg_u(out, ag.stream(1));
+        }
+        it += lanes;
+    }
+}
+
+// ============================ benchmark table ===============================
+
+macro_rules! bench {
+    ($name:expr, $suite:expr, $gen:expr) => {
+        Benchmark { name: $name, suite: $suite, gen: $gen }
+    };
+}
+
+fn seed_for(ctx: &WarpCtx, seed: u64) -> u64 {
+    seed ^ (ctx.warp_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ ((ctx.kernel_id as u64) << 32)
+}
+
+// Per-benchmark generators. Iteration counts give ~1.2k-3k instrs per warp.
+
+fn gen_bplustree(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(8, 48, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    // pointer chasing through a large tree, heavy divergence, low reuse —
+    // the paper's worst case for Malekeh (-0.8% IPC)
+    irregular_body(&mut b, &mut ag, 260, 3, 45, 1 << 15);
+    b.finish()
+}
+
+fn gen_backprop(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(8, 40, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    elementwise_body(&mut b, &mut ag, 300, 5, 6, true);
+    b.finish()
+}
+
+fn gen_bfs(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(8, 48, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    irregular_body(&mut b, &mut ag, 300, 2, 35, 1 << 14);
+    b.finish()
+}
+
+fn gen_dwt2d(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(8, 40, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    // wavelet lifting: stencil-ish with longer arithmetic
+    stencil_body(&mut b, &mut ag, 180, 4, 6, 0, 30);
+    b.finish()
+}
+
+fn gen_gaussian(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(8, 32, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    // row elimination: pivot row shared across warps, multiplier reused
+    hot_operand_body(&mut b, &mut ag, 70, 10, 0, true);
+    b.finish()
+}
+
+fn gen_hotspot(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(8, 40, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    // 5-point stencil, very short chains: thrives on many ready warps,
+    // collapses under a two-level scheduler (Fig 2: up to -50.9%)
+    stencil_body(&mut b, &mut ag, 230, 5, 2, 0, 55);
+    b.finish()
+}
+
+fn gen_kmeans(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(8, 40, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    // point registers hot across the centroid loop; centroids shared
+    hot_operand_body(&mut b, &mut ag, 60, 12, 0, true);
+    b.finish()
+}
+
+fn gen_lavamd(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(8, 48, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    // n-body: particle state hot through the neighbour loop, rsqrt SFU
+    hot_operand_body(&mut b, &mut ag, 40, 18, 4, false);
+    b.finish()
+}
+
+fn gen_lud(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(8, 36, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    // triangular solve: streaming rows, moderate reuse, memory-pipe bound
+    // (paper: higher RF hit ratio does NOT translate to IPC here)
+    elementwise_body(&mut b, &mut ag, 260, 3, 0, false);
+    stencil_body(&mut b, &mut ag, 60, 3, 3, 0, 25);
+    b.finish()
+}
+
+fn gen_nn(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(8, 32, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    // tiny distance kernel, almost pure streaming: memory bound
+    elementwise_body(&mut b, &mut ag, 330, 2, 0, false);
+    b.finish()
+}
+
+fn gen_particlefilter_float(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(8, 40, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    // memory pipeline is the bottleneck (paper: hit ratio doesn't help IPC)
+    irregular_body(&mut b, &mut ag, 180, 1, 20, 1 << 13);
+    elementwise_body(&mut b, &mut ag, 140, 4, 5, false);
+    b.finish()
+}
+
+fn gen_particlefilter_naive(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(8, 48, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    // the naive variant: more indirect traffic, frequent warp switches ->
+    // many CCU flushes (paper: 53.5% lower hit ratio than BOW)
+    irregular_body(&mut b, &mut ag, 320, 2, 50, 1 << 15);
+    b.finish()
+}
+
+fn gen_pathfinder(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(8, 36, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    // DP row sweep with shared-memory row buffer
+    elementwise_body(&mut b, &mut ag, 150, 4, 0, true);
+    stencil_body(&mut b, &mut ag, 90, 3, 2, 0, 60);
+    b.finish()
+}
+
+fn gen_srad_v1(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(8, 40, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    // diffusion stencil + exp(): the STHLD-sensitive app of Fig 7
+    stencil_body(&mut b, &mut ag, 200, 4, 3, 2, 45);
+    b.finish()
+}
+
+// ---- Deepbench: training (t) / inference (i) variants ----
+
+fn gen_conv_t1(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(64, 64, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    // implicit-GEMM conv, big tiles: ~65% MMA instructions, long reuse
+    gemm_body(&mut b, &mut ag, 46, 4, 4, false, true);
+    b.finish()
+}
+
+fn gen_conv_i1(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(48, 48, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    // inference: weights shared -> L1 hits; smaller tiles
+    gemm_body(&mut b, &mut ag, 62, 3, 3, true, true);
+    b.finish()
+}
+
+fn gen_gemm_t1(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(64, 64, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    gemm_body(&mut b, &mut ag, 52, 4, 4, false, true);
+    b.finish()
+}
+
+fn gen_gemm_i1(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(48, 48, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    gemm_body(&mut b, &mut ag, 80, 2, 4, true, true);
+    b.finish()
+}
+
+fn gen_rnn_t1(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(40, 48, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    // GRU step: small GEMM + elementwise gates (sigmoid SFU)
+    for _ in 0..9 {
+        gemm_body(&mut b, &mut ag, 6, 2, 2, false, false);
+        elementwise_body(&mut b, &mut ag, 10, 3, 2, false);
+    }
+    b.finish()
+}
+
+fn gen_rnn_t2(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(56, 56, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    // LSTM step, bigger hidden: more MMA per gate — the paper's best
+    // energy result (-47.3%)
+    for _ in 0..7 {
+        gemm_body(&mut b, &mut ag, 7, 3, 3, false, false);
+        elementwise_body(&mut b, &mut ag, 8, 4, 2, false);
+    }
+    b.finish()
+}
+
+fn gen_rnn_i1(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(40, 48, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    for _ in 0..10 {
+        gemm_body(&mut b, &mut ag, 6, 2, 2, true, false);
+        elementwise_body(&mut b, &mut ag, 9, 3, 3, false);
+    }
+    b.finish()
+}
+
+fn gen_rnn_i2(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(40, 40, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    // small-batch inference: shared weights, tight accumulator reuse —
+    // the paper's best IPC gain (+28.4%)
+    for _ in 0..12 {
+        gemm_body(&mut b, &mut ag, 7, 2, 2, true, false);
+        elementwise_body(&mut b, &mut ag, 6, 2, 3, false);
+    }
+    b.finish()
+}
+
+// ---- synthetic drivers for specific figures ----
+
+fn gen_phased(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    // Fig 9 driver: alternates a reuse-rich phase (wide flat STHLD region)
+    // with a latency-critical phase (narrow flat region)
+    let mut b = ProgramBuilder::new(8, 40, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    for _ in 0..3 {
+        hot_operand_body(&mut b, &mut ag, 24, 12, 0, true);
+        stencil_body(&mut b, &mut ag, 80, 5, 2, 0, 55);
+    }
+    b.finish()
+}
+
+/// Table II benchmark registry (plus the synthetic Fig-9 driver at the end).
+pub const BENCHMARKS: &[Benchmark] = &[
+    bench!("b+tree", Suite::Rodinia, gen_bplustree),
+    bench!("backprop", Suite::Rodinia, gen_backprop),
+    bench!("bfs", Suite::Rodinia, gen_bfs),
+    bench!("dwt2d", Suite::Rodinia, gen_dwt2d),
+    bench!("gaussian", Suite::Rodinia, gen_gaussian),
+    bench!("hotspot", Suite::Rodinia, gen_hotspot),
+    bench!("kmeans", Suite::Rodinia, gen_kmeans),
+    bench!("lavamd", Suite::Rodinia, gen_lavamd),
+    bench!("lud", Suite::Rodinia, gen_lud),
+    bench!("nn", Suite::Rodinia, gen_nn),
+    bench!("particlefilter_float", Suite::Rodinia, gen_particlefilter_float),
+    bench!("particlefilter_naive", Suite::Rodinia, gen_particlefilter_naive),
+    bench!("pathfinder", Suite::Rodinia, gen_pathfinder),
+    bench!("srad_v1", Suite::Rodinia, gen_srad_v1),
+    bench!("conv_t1", Suite::Deepbench, gen_conv_t1),
+    bench!("conv_i1", Suite::Deepbench, gen_conv_i1),
+    bench!("gemm_t1", Suite::Deepbench, gen_gemm_t1),
+    bench!("gemm_i1", Suite::Deepbench, gen_gemm_i1),
+    bench!("rnn_t1", Suite::Deepbench, gen_rnn_t1),
+    bench!("rnn_t2", Suite::Deepbench, gen_rnn_t2),
+    bench!("rnn_i1", Suite::Deepbench, gen_rnn_i1),
+    bench!("rnn_i2", Suite::Deepbench, gen_rnn_i2),
+    bench!("synthetic_phases", Suite::Synthetic, gen_phased),
+];
+
+/// Look a benchmark up by chart name.
+pub fn find(name: &str) -> Option<&'static Benchmark> {
+    BENCHMARKS.iter().find(|b| b.name == name)
+}
+
+/// The Table II set (everything except synthetic drivers).
+pub fn table2() -> impl Iterator<Item = &'static Benchmark> {
+    BENCHMARKS.iter().filter(|b| b.suite != Suite::Synthetic)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::OpClass;
+
+    fn ctx(warp: u32) -> WarpCtx {
+        WarpCtx { warp_id: warp, nwarps: 32, kernel_id: 0 }
+    }
+
+    #[test]
+    fn registry_covers_table2() {
+        assert_eq!(table2().filter(|b| b.suite == Suite::Rodinia).count(), 14);
+        assert_eq!(table2().filter(|b| b.suite == Suite::Deepbench).count(), 8);
+        assert!(find("hotspot").is_some());
+        assert!(find("rnn_i2").is_some());
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn all_benchmarks_generate_and_terminate() {
+        for b in BENCHMARKS {
+            let prog = (b.gen)(&ctx(3), 42);
+            assert!(prog.len() > 400, "{} too short: {}", b.name, prog.len());
+            assert!(prog.len() < 20_000, "{} too long: {}", b.name, prog.len());
+            assert_eq!(prog.last().unwrap().op, OpClass::Exit, "{}", b.name);
+            // Exit only at the end
+            assert!(
+                prog[..prog.len() - 1].iter().all(|i| i.op != OpClass::Exit),
+                "{}",
+                b.name
+            );
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        for b in [find("hotspot").unwrap(), find("gemm_t1").unwrap()] {
+            let a = (b.gen)(&ctx(5), 7);
+            let c = (b.gen)(&ctx(5), 7);
+            assert_eq!(a, c);
+        }
+    }
+
+    #[test]
+    fn warps_differ_in_addresses_not_structure() {
+        let b = find("nn").unwrap();
+        let w0 = (b.gen)(&ctx(0), 7);
+        let w1 = (b.gen)(&ctx(1), 7);
+        assert_eq!(w0.len(), w1.len());
+        // same opcode skeleton
+        assert!(w0
+            .iter()
+            .zip(w1.iter())
+            .all(|(a, b)| a.op == b.op));
+        // but disjoint private address streams
+        let a0: Vec<u32> = w0.iter().filter(|i| i.op == OpClass::LdGlobal).map(|i| i.line_addr).collect();
+        let a1: Vec<u32> = w1.iter().filter(|i| i.op == OpClass::LdGlobal).map(|i| i.line_addr).collect();
+        assert!(a0.iter().any(|x| !a1.contains(x)));
+    }
+
+    #[test]
+    fn deepbench_is_mma_heavy_rodinia_is_not() {
+        let frac = |name: &str| {
+            let p = (find(name).unwrap().gen)(&ctx(0), 1);
+            let mma = p.iter().filter(|i| i.op == OpClass::Mma).count();
+            mma as f64 / p.len() as f64
+        };
+        assert!(frac("conv_t1") > 0.45, "conv_t1 mma frac {}", frac("conv_t1"));
+        assert!(frac("gemm_t1") > 0.4);
+        assert_eq!(frac("hotspot"), 0.0);
+        assert_eq!(frac("bfs"), 0.0);
+    }
+
+    #[test]
+    fn mma_instructions_have_tensor_core_shape() {
+        let p = (find("gemm_t1").unwrap().gen)(&ctx(0), 1);
+        for i in p.iter().filter(|i| i.op == OpClass::Mma) {
+            assert_eq!(i.nsrc, 6);
+            assert_eq!(i.ndst, 2);
+        }
+    }
+}

@@ -1,0 +1,3 @@
+//! Small shared utilities (deterministic PRNG, etc.).
+pub mod rng;
+pub use rng::Rng;

@@ -1,0 +1,188 @@
+//! Property-based tests (hand-rolled generators — proptest is unavailable
+//! offline). Each property runs many seeded random cases; on failure the
+//! seed is printed so the case reproduces exactly.
+
+use malekeh::compiler::{windowed_reuse_distances, CAP, DEAD};
+use malekeh::config::{GpuConfig, Scheme, SthldMode};
+use malekeh::sim::collector::CacheTable;
+use malekeh::sim::SthldController;
+use malekeh::util::Rng;
+
+const CASES: u64 = 60;
+
+/// Random access stream generator.
+fn random_stream(rng: &mut Rng, len: usize, nregs: usize) -> (Vec<i32>, Vec<i32>, Vec<i32>) {
+    let mut ids = Vec::with_capacity(len);
+    let mut pos = Vec::with_capacity(len);
+    let mut rw = Vec::with_capacity(len);
+    let mut p = 0i32;
+    for _ in 0..len {
+        ids.push(if rng.chance(0.05) { -1 } else { rng.below(nregs) as i32 });
+        p += rng.below(2) as i32;
+        pos.push(p);
+        rw.push(if rng.chance(0.65) { 1 } else { 0 });
+    }
+    (ids, pos, rw)
+}
+
+/// O(n²) oracle with the same semantics as the kernel.
+fn oracle(ids: &[i32], pos: &[i32], rw: &[i32], window: usize, cap: i32) -> Vec<i32> {
+    let n = ids.len();
+    let mut out = vec![-1i32; n];
+    for i in 0..n {
+        if ids[i] < 0 {
+            continue;
+        }
+        let mut d = cap;
+        for j in i + 1..(i + window + 1).min(n) {
+            if ids[j] == ids[i] {
+                d = if rw[j] == 1 {
+                    (pos[j] - pos[i]).clamp(0, cap)
+                } else {
+                    DEAD
+                };
+                break;
+            }
+        }
+        out[i] = d;
+    }
+    out
+}
+
+#[test]
+fn prop_windowed_distances_match_quadratic_oracle() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let len = rng.range(1, 300);
+        let nregs = rng.range(1, 40);
+        let window = rng.range(1, 120);
+        let (ids, pos, rw) = random_stream(&mut rng, len, nregs);
+        let fast = windowed_reuse_distances(&ids, &pos, &rw, window, CAP);
+        let slow = oracle(&ids, &pos, &rw, window, CAP);
+        assert_eq!(fast, slow, "seed {seed} len {len} window {window}");
+    }
+}
+
+#[test]
+fn prop_distances_well_formed() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        let (ids, pos, rw) = random_stream(&mut rng, 200, 16);
+        let d = windowed_reuse_distances(&ids, &pos, &rw, 96, CAP);
+        for (i, &x) in d.iter().enumerate() {
+            if ids[i] < 0 {
+                assert_eq!(x, -1, "padding lane must be -1");
+            } else {
+                assert!(
+                    (0..=CAP).contains(&x) || x == DEAD,
+                    "bad distance {x} at {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cache_table_invariants() {
+    // after any operation sequence: at most one valid entry per tag, and
+    // locked entries survive any allocation storm
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x51E);
+        let entries = rng.range(6, 16);
+        let mut ct = CacheTable::new(entries);
+        let mut locked_regs = Vec::new();
+        for step in 0..300 {
+            match rng.below(10) {
+                0..=5 => {
+                    let reg = rng.below(32) as u8;
+                    let lock = rng.chance(0.2) && locked_regs.len() < 5;
+                    let near = rng.chance(0.5);
+                    let trad = rng.chance(0.3);
+                    if ct.allocate(reg, near, lock, &mut rng, trad).is_some() && lock {
+                        locked_regs.push(reg);
+                    }
+                }
+                6..=7 => {
+                    if let Some(i) = ct.lookup(rng.below(32) as u8) {
+                        ct.touch(i);
+                    }
+                }
+                8 => {
+                    ct.unlock_all();
+                    locked_regs.clear();
+                }
+                _ => {
+                    ct.flush();
+                    locked_regs.clear();
+                }
+            }
+            // no duplicate tags among valid entries
+            let mut seen = std::collections::HashSet::new();
+            for i in 0..entries {
+                let e = ct.entry(i);
+                if e.valid {
+                    assert!(seen.insert(e.reg), "dup tag {} seed {seed} step {step}", e.reg);
+                }
+            }
+            // locked entries still present
+            for &r in &locked_regs {
+                assert!(ct.lookup(r).is_some(), "locked reg {r} evicted, seed {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sthld_controller_bounded_and_live() {
+    // random IPC sequences: STHLD stays within [0, max]; controller never
+    // panics; with a perfectly flat curve it eventually moves upward
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x6A5);
+        let max = rng.range(2, 64) as u32;
+        let mut c = SthldController::new(max, 0.02);
+        for _ in 0..200 {
+            let ipc = rng.f64() * 4.0;
+            let s = c.interval_end(ipc);
+            assert!(s <= max, "sthld {s} > max {max} seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_simulation_conservation_random_configs() {
+    // random (small) configs: instructions conserved, reads conserved,
+    // all warps retire
+    let benches = ["nn", "kmeans", "bfs", "rnn_i1"];
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(seed ^ 0xC0DE);
+        let mut cfg = GpuConfig::table1_baseline()
+            .with_scheme(*rng.pick(&Scheme::ALL));
+        cfg.num_sms = 1;
+        cfg.warps_per_sm = [8, 16, 32][rng.below(3)];
+        cfg.banks_per_sub_core = rng.range(1, 4);
+        cfg.collectors_per_sub_core = rng.range(2, 4);
+        cfg.ct_entries = rng.range(6, 12);
+        cfg.sthld = if rng.chance(0.5) {
+            SthldMode::Dynamic
+        } else {
+            SthldMode::Static(rng.below(16) as u32)
+        };
+        cfg.seed = seed;
+        if cfg.validate().is_err() {
+            continue;
+        }
+        let bench = *rng.pick(&benches);
+        let stats = malekeh::sim::run_benchmark(&cfg, bench, 2);
+        assert_eq!(
+            stats.warps_retired as usize, cfg.warps_per_sm,
+            "seed {seed} {bench} {}: warps lost",
+            cfg.scheme
+        );
+        assert_eq!(
+            stats.rf_reads,
+            stats.rf_cache_reads + stats.rf_bank_reads,
+            "seed {seed}: conservation"
+        );
+        assert!(stats.cycles > 0 && stats.instructions > 0);
+    }
+}
