@@ -14,11 +14,11 @@ fn main() {
     if !args.iter().any(|a| a == "--full") {
         opts.quick = true; // sweeps are wide; default to the quick set
     }
-    let mut runner = Runner::new(opts);
+    let runner = Runner::new(opts);
     let t0 = std::time::Instant::now();
-    ablation_ct_entries(&mut runner).print();
-    ablation_rthld(&mut runner).print();
-    ablation_ocu_scaling(&mut runner).print();
-    ablation_write_port(&mut runner).print();
+    ablation_ct_entries(&runner).print();
+    ablation_rthld(&runner).print();
+    ablation_ocu_scaling(&runner).print();
+    ablation_write_port(&runner).print();
     println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
 }

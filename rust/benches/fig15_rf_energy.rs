@@ -4,8 +4,8 @@ use malekeh::harness::{fig15, ExpOpts, Runner};
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let opts = ExpOpts::from_args(&args);
-    let mut runner = Runner::new(opts);
+    let runner = Runner::new(opts);
     let t0 = std::time::Instant::now();
-    fig15(&mut runner).print();
+    fig15(&runner).print();
     println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
 }

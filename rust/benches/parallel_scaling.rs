@@ -1,0 +1,99 @@
+//! Sharded-harness scaling: wall-clock of the Fig 12 workload grid
+//! (benchmarks x {baseline, malekeh, bow, malekeh_pr}) executed at
+//! increasing `--jobs`, with the bit-identity cross-check against the
+//! serial run. Records the speedup table cited in CHANGES.md.
+//!
+//!     cargo bench --bench parallel_scaling [--quick|--full] [--sms N]
+//!                                          [--max-jobs N]
+
+use std::time::Instant;
+
+use malekeh::config::Scheme;
+use malekeh::harness::{ExpOpts, Plan, Runner};
+
+const SCHEMES: [Scheme; 4] =
+    [Scheme::Baseline, Scheme::Malekeh, Scheme::Bow, Scheme::MalekehPr];
+
+fn grid_plan(runner: &Runner) -> Plan {
+    let mut plan = runner.plan();
+    for bench in runner.opts().benchmarks() {
+        for scheme in SCHEMES {
+            plan.add(bench, scheme);
+        }
+    }
+    plan
+}
+
+/// Execute the grid on a fresh runner with `jobs` workers; return
+/// (seconds, fingerprint over all resulting stats).
+fn timed_run(base: &ExpOpts, jobs: usize) -> (f64, u64) {
+    let mut opts = base.clone();
+    opts.jobs = jobs;
+    let runner = Runner::new(opts);
+    let plan = grid_plan(&runner);
+    let t0 = Instant::now();
+    runner.execute(&plan);
+    let secs = t0.elapsed().as_secs_f64();
+    let mut fp = 0u64;
+    for bench in runner.opts().benchmarks() {
+        for scheme in SCHEMES {
+            let s = runner.run(bench, scheme);
+            fp = fp
+                .wrapping_mul(0x100000001B3)
+                .wrapping_add(s.cycles)
+                .wrapping_mul(0x100000001B3)
+                .wrapping_add(s.instructions)
+                .wrapping_mul(0x100000001B3)
+                .wrapping_add(s.rf_cache_reads);
+        }
+    }
+    (secs, fp)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut base = ExpOpts::from_args(&args);
+    if !args.iter().any(|a| a == "--full") {
+        base.quick = true; // the grid is wide; default to the quick set
+    }
+    let mut max_jobs = base.effective_jobs().max(4);
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--max-jobs" {
+            i += 1;
+            max_jobs = args
+                .get(i)
+                .expect("--max-jobs requires a value (--max-jobs N)")
+                .parse()
+                .expect("bad value for --max-jobs (--max-jobs N)");
+        }
+        i += 1;
+    }
+
+    let points = base.benchmarks().len() * SCHEMES.len();
+    println!(
+        "== parallel harness scaling: {} sims (quick={}, sms={}) ==",
+        points, base.quick, base.num_sms
+    );
+    println!("{:<8}{:>12}{:>12}{:>20}", "jobs", "seconds", "speedup", "fingerprint");
+
+    let (serial_secs, serial_fp) = timed_run(&base, 1);
+    println!("{:<8}{:>12.2}{:>12.2}{:>20x}", 1, serial_secs, 1.0, serial_fp);
+    let mut jobs = 2;
+    while jobs <= max_jobs {
+        let (secs, fp) = timed_run(&base, jobs);
+        assert_eq!(
+            fp, serial_fp,
+            "jobs={jobs} produced different stats than serial — determinism broken"
+        );
+        println!(
+            "{:<8}{:>12.2}{:>12.2}{:>20x}",
+            jobs,
+            secs,
+            serial_secs / secs.max(1e-9),
+            fp
+        );
+        jobs *= 2;
+    }
+    println!("(fingerprints equal: sharded results bit-identical to serial)");
+}

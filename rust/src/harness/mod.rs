@@ -4,11 +4,49 @@
 //! both call into these; EXPERIMENTS.md records their output next to the
 //! paper's numbers. Experiments default to 2 SMs (the mechanism is per-SM;
 //! the paper's 10-SM Table I config is available with `--full`).
+//!
+//! # Parallel execution
+//!
+//! Every figure is assembled in two phases. First it declares its
+//! simulation points as a [`Plan`] and calls [`Runner::execute`], which
+//! shards the independent `(benchmark, scheme, config)` simulations across
+//! a worker pool (`--jobs N`, default one worker per core; `--serial`
+//! forces one). Then it builds its [`Table`] serially from the warm memo
+//! cache, so output is **bit-identical at any worker count** — the figure
+//! suite's wall-clock drops from sum-of-simulations to slowest-shard.
+//!
+//! ```no_run
+//! use malekeh::config::Scheme;
+//! use malekeh::harness::{ExpOpts, Runner};
+//!
+//! let mut opts = ExpOpts::default();
+//! opts.quick = true;
+//! opts.jobs = 4; // 0 = one worker per available core
+//! let runner = Runner::new(opts);
+//!
+//! // phase 1: declare the points and shard them across the pool
+//! let mut plan = runner.plan();
+//! for bench in runner.opts().benchmarks() {
+//!     plan.add(bench, Scheme::Baseline);
+//!     plan.add(bench, Scheme::Malekeh);
+//! }
+//! runner.execute(&plan);
+//!
+//! // phase 2: read results (all cache hits) in table order
+//! for bench in runner.opts().benchmarks() {
+//!     let base = runner.run(bench, Scheme::Baseline);
+//!     let mal = runner.run(bench, Scheme::Malekeh);
+//!     println!("{bench}: IPC x{:.3}", mal.ipc() / base.ipc().max(1e-9));
+//! }
+//! ```
 
+pub mod plan;
 pub mod table;
+pub use plan::{Plan, SimPoint};
 pub use table::{geomean, mean, Table};
 
 use std::collections::HashMap;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::config::{GpuConfig, Scheme, SthldMode};
@@ -18,7 +56,7 @@ use crate::stats::Stats;
 use crate::trace::{table2, Suite};
 
 /// Experiment options shared by all figure runners.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ExpOpts {
     /// SMs to simulate (paper: 10; default 2 for bench turnaround).
     pub num_sms: usize,
@@ -28,17 +66,35 @@ pub struct ExpOpts {
     pub profile_warps: usize,
     /// Restrict to a representative benchmark subset for quick runs.
     pub quick: bool,
+    /// Worker threads for plan execution (0 = one per available core;
+    /// 1 = serial).
+    pub jobs: usize,
 }
 
 impl Default for ExpOpts {
     fn default() -> Self {
-        ExpOpts { num_sms: 2, seed: 0xC0FFEE, profile_warps: 2, quick: false }
+        ExpOpts {
+            num_sms: 2,
+            seed: 0xC0FFEE,
+            profile_warps: 2,
+            quick: false,
+            jobs: 0,
+        }
     }
+}
+
+/// Fetch + parse the value of `flag` at argv position `i`, panicking with
+/// the flag's usage hint when the value is missing or unparseable.
+fn parse_val<T: std::str::FromStr>(args: &[String], i: usize, flag: &str) -> T {
+    args.get(i)
+        .unwrap_or_else(|| panic!("{flag} requires a value ({flag} N)"))
+        .parse()
+        .unwrap_or_else(|_| panic!("bad value for {flag} ({flag} N)"))
 }
 
 impl ExpOpts {
     /// Parse bench-binary argv: `--full` (10 SMs, all benchmarks),
-    /// `--quick`, `--sms N`, `--seed N`.
+    /// `--quick`, `--sms N`, `--seed N`, `--jobs N`, `--serial`.
     pub fn from_args(args: &[String]) -> ExpOpts {
         let mut o = ExpOpts::default();
         let mut i = 0;
@@ -49,13 +105,18 @@ impl ExpOpts {
                     o.quick = false;
                 }
                 "--quick" => o.quick = true,
+                "--serial" => o.jobs = 1,
                 "--sms" => {
                     i += 1;
-                    o.num_sms = args[i].parse().expect("--sms N");
+                    o.num_sms = parse_val(args, i, "--sms");
                 }
                 "--seed" => {
                     i += 1;
-                    o.seed = args[i].parse().expect("--seed N");
+                    o.seed = parse_val(args, i, "--seed");
+                }
+                "--jobs" => {
+                    i += 1;
+                    o.jobs = parse_val(args, i, "--jobs");
                 }
                 _ => {}
             }
@@ -64,11 +125,23 @@ impl ExpOpts {
         o
     }
 
-    fn config(&self, scheme: Scheme) -> GpuConfig {
+    /// Default simulator config for `scheme` under these options.
+    pub fn config(&self, scheme: Scheme) -> GpuConfig {
         let mut c = GpuConfig::table1_baseline().with_scheme(scheme);
         c.num_sms = self.num_sms;
         c.seed = self.seed;
         c
+    }
+
+    /// Resolved worker count: `jobs`, or one per available core when 0.
+    pub fn effective_jobs(&self) -> usize {
+        if self.jobs != 0 {
+            self.jobs
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        }
     }
 
     /// Benchmarks to run (Table II, or a representative 8 in quick mode).
@@ -84,16 +157,22 @@ impl ExpOpts {
     }
 }
 
-/// Run one benchmark under one scheme (memoised per harness instance).
+/// Runs one benchmark under one scheme, memoised behind a thread-safe
+/// cache so a single `Runner` can be shared by the shard pool (and across
+/// figures — later figures reuse earlier baselines as cache hits).
+///
+/// Execution model: figures call [`Runner::execute`] with a [`Plan`] to
+/// shard the misses, then read via [`Runner::run`] / [`Runner::run_cfg_key`]
+/// (which also compute on miss, keeping them correct stand-alone).
 pub struct Runner {
     opts: ExpOpts,
-    cache: HashMap<(String, Scheme, u64), Stats>,
+    pub(crate) cache: Mutex<HashMap<(String, Scheme, u64), Stats>>,
 }
 
 impl Runner {
     /// New runner.
     pub fn new(opts: ExpOpts) -> Self {
-        Runner { opts, cache: HashMap::new() }
+        Runner { opts, cache: Mutex::new(HashMap::new()) }
     }
 
     /// Options in use.
@@ -101,38 +180,57 @@ impl Runner {
         &self.opts
     }
 
+    /// Cached simulation count.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// New empty [`Plan`] bound to this runner's options — the only way
+    /// plans should be built for [`Runner::execute`], which rejects plans
+    /// resolved against different options (their cached stats would be
+    /// indistinguishable from this runner's).
+    pub fn plan(&self) -> Plan {
+        Plan::new(&self.opts)
+    }
+
     /// Simulate (cached) with the default config for `scheme`.
-    pub fn run(&mut self, bench: &str, scheme: Scheme) -> Stats {
+    pub fn run(&self, bench: &str, scheme: Scheme) -> Stats {
         self.run_cfg_key(bench, scheme, 0, |o| o.config(scheme))
     }
 
     /// Simulate with a customised config; `key` distinguishes variants.
+    ///
+    /// Computes on miss (serially, in the calling thread); when the point
+    /// was pre-executed by [`Runner::execute`] this is a lock-and-clone.
     pub fn run_cfg_key(
-        &mut self,
+        &self,
         bench: &str,
         scheme: Scheme,
         key: u64,
         make: impl FnOnce(&ExpOpts) -> GpuConfig,
     ) -> Stats {
         let k = (bench.to_string(), scheme, key);
-        if let Some(s) = self.cache.get(&k) {
+        if let Some(s) = self.cache.lock().unwrap().get(&k) {
             return s.clone();
         }
         let cfg = make(&self.opts);
         let t0 = Instant::now();
         let stats = run_benchmark(&cfg, bench, self.opts.profile_warps);
-        eprintln!(
-            "  [{bench} / {scheme} / v{key}] {} instr, {} cycles, {:.1}s",
-            stats.instructions,
-            stats.cycles,
-            t0.elapsed().as_secs_f64()
-        );
-        self.cache.insert(k, stats.clone());
+        plan::log_point(bench, scheme, key, &stats, t0.elapsed().as_secs_f64());
+        self.cache.lock().unwrap().insert(k, stats.clone());
         stats
     }
 }
 
 // ============================== figures =====================================
+
+/// Monolithic-SM variant config for the Fig 2 comparison.
+fn monolithic_cfg(o: &ExpOpts, scheme: Scheme) -> GpuConfig {
+    let mut c = GpuConfig::monolithic().with_scheme(scheme);
+    c.num_sms = o.num_sms;
+    c.seed = o.seed;
+    c
+}
 
 /// Fig 1: reuse-distance distribution per suite (buckets d<=1,2,3,4-10,>10).
 pub fn fig01(opts: &ExpOpts) -> Table {
@@ -163,33 +261,38 @@ pub fn fig01(opts: &ExpOpts) -> Table {
 
 /// Fig 2: IPC of two-level schedulers (RFC, software RFC) normalised to the
 /// one-level baseline, for sub-core and monolithic architectures.
-pub fn fig02(runner: &mut Runner) -> Table {
+pub fn fig02(runner: &Runner) -> Table {
+    let benches = runner.opts().benchmarks();
+    let mut plan = runner.plan();
+    for bench in &benches {
+        plan.add(bench, Scheme::Baseline);
+        plan.add_cfg(bench, Scheme::Baseline, 1, |o| {
+            monolithic_cfg(o, Scheme::Baseline)
+        });
+        for scheme in [Scheme::Rfc, Scheme::SoftwareRfc] {
+            plan.add(bench, scheme);
+            plan.add_cfg(bench, scheme, 1, |o| monolithic_cfg(o, scheme));
+        }
+    }
+    runner.execute(&plan);
+
     let mut t = Table::new(
         "Fig 2: two-level scheduler IPC normalised to baseline",
         &["bench", "rfc_subcore", "swrfc_subcore", "rfc_mono", "swrfc_mono"],
     );
-    let benches = runner.opts().benchmarks();
     let mut cols: [Vec<f64>; 4] = Default::default();
     for bench in &benches {
         let base_sub = runner.run(bench, Scheme::Baseline).ipc();
         let base_mono = runner
             .run_cfg_key(bench, Scheme::Baseline, 1, |o| {
-                let mut c = GpuConfig::monolithic();
-                c.num_sms = o.num_sms;
-                c.seed = o.seed;
-                c
+                monolithic_cfg(o, Scheme::Baseline)
             })
             .ipc();
         let mut vals = [0f64; 4];
         for (i, scheme) in [Scheme::Rfc, Scheme::SoftwareRfc].iter().enumerate() {
             let sub = runner.run(bench, *scheme).ipc();
             let mono = runner
-                .run_cfg_key(bench, *scheme, 1, |o| {
-                    let mut c = GpuConfig::monolithic().with_scheme(*scheme);
-                    c.num_sms = o.num_sms;
-                    c.seed = o.seed;
-                    c
-                })
+                .run_cfg_key(bench, *scheme, 1, |o| monolithic_cfg(o, *scheme))
                 .ipc();
             vals[i] = sub / base_sub.max(1e-9);
             vals[2 + i] = mono / base_mono.max(1e-9);
@@ -212,21 +315,38 @@ pub fn fig02(runner: &mut Runner) -> Table {
     t
 }
 
+/// Static-STHLD sweep values for Fig 7.
+const FIG07_STHLDS: [u32; 7] = [0, 1, 2, 4, 8, 16, 32];
+/// STHLD-sensitive apps reported in Fig 7.
+const FIG07_BENCHES: [&str; 3] = ["srad_v1", "gaussian", "rnn_i2"];
+
 /// Fig 7: IPC + RF-cache hit ratio vs static STHLD for sensitive apps.
-pub fn fig07(runner: &mut Runner) -> Table {
-    let sthlds = [0u32, 1, 2, 4, 8, 16, 32];
+pub fn fig07(runner: &Runner) -> Table {
+    let mut plan = runner.plan();
+    for bench in FIG07_BENCHES {
+        plan.add(bench, Scheme::Baseline);
+        for (k, s) in FIG07_STHLDS.iter().enumerate() {
+            plan.add_cfg(bench, Scheme::Malekeh, 100 + k as u64, |o| {
+                let mut c = o.config(Scheme::Malekeh);
+                c.sthld = SthldMode::Static(*s);
+                c
+            });
+        }
+    }
+    runner.execute(&plan);
+
     let mut header: Vec<String> = vec!["bench/metric".into()];
-    header.extend(sthlds.iter().map(|s| format!("S={s}")));
+    header.extend(FIG07_STHLDS.iter().map(|s| format!("S={s}")));
     let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut t = Table::new(
         "Fig 7: normalised IPC and hit ratio vs static STHLD",
         &hdr,
     );
-    for bench in ["srad_v1", "gaussian", "rnn_i2"] {
+    for bench in FIG07_BENCHES {
         let base = runner.run(bench, Scheme::Baseline).ipc();
         let mut ipc_row = Vec::new();
         let mut hit_row = Vec::new();
-        for (k, s) in sthlds.iter().enumerate() {
+        for (k, s) in FIG07_STHLDS.iter().enumerate() {
             let stats = runner.run_cfg_key(bench, Scheme::Malekeh, 100 + k as u64, |o| {
                 let mut c = o.config(Scheme::Malekeh);
                 c.sthld = SthldMode::Static(*s);
@@ -265,14 +385,22 @@ pub fn fig09(opts: &ExpOpts) -> Table {
 }
 
 /// Fig 10: state distribution of two-level schedulers.
-pub fn fig10(runner: &mut Runner) -> Table {
+pub fn fig10(runner: &Runner) -> Table {
+    let benches = runner.opts().benchmarks();
+    let mut plan = runner.plan();
+    for scheme in [Scheme::Rfc, Scheme::SoftwareRfc] {
+        for bench in &benches {
+            plan.add(bench, scheme);
+        }
+    }
+    runner.execute(&plan);
+
     let mut t = Table::new(
         "Fig 10: two-level scheduler state distribution (fractions)",
         &["scheme", "issued", "state2_ready_stall", "state3_empty"],
     );
     for scheme in [Scheme::Rfc, Scheme::SoftwareRfc] {
         let mut acc = [0f64; 3];
-        let benches = runner.opts().benchmarks();
         for bench in &benches {
             let s = runner.run(bench, scheme);
             let (a, b, c) = s.sched_state_distribution();
@@ -289,14 +417,31 @@ pub fn fig10(runner: &mut Runner) -> Table {
 /// The Fig 12/13/14/15/16 scheme set.
 const MAIN_SCHEMES: [Scheme; 3] = [Scheme::Malekeh, Scheme::Bow, Scheme::MalekehPr];
 
+/// Declare + execute `benchmarks x schemes` default-config points.
+fn execute_grid(runner: &Runner, benches: &[&str], schemes: &[Scheme]) {
+    let mut plan = runner.plan();
+    for bench in benches {
+        for scheme in schemes {
+            plan.add(bench, *scheme);
+        }
+    }
+    runner.execute(&plan);
+}
+
 /// Fig 12: IPC normalised to baseline.
-pub fn fig12(runner: &mut Runner) -> Table {
+pub fn fig12(runner: &Runner) -> Table {
+    let benches = runner.opts().benchmarks();
+    execute_grid(
+        runner,
+        &benches,
+        &[Scheme::Baseline, Scheme::Malekeh, Scheme::Bow, Scheme::MalekehPr],
+    );
+
     let mut t = Table::new(
         "Fig 12: IPC normalised to the baseline",
         &["bench", "malekeh", "bow", "malekeh_pr"],
     );
     let mut cols: [Vec<f64>; 3] = Default::default();
-    let benches = runner.opts().benchmarks();
     for bench in &benches {
         let base = runner.run(bench, Scheme::Baseline).ipc();
         let mut vals = [0f64; 3];
@@ -315,13 +460,15 @@ pub fn fig12(runner: &mut Runner) -> Table {
 }
 
 /// Fig 13: RF cache hit ratio.
-pub fn fig13(runner: &mut Runner) -> Table {
+pub fn fig13(runner: &Runner) -> Table {
+    let benches = runner.opts().benchmarks();
+    execute_grid(runner, &benches, &MAIN_SCHEMES);
+
     let mut t = Table::new(
         "Fig 13: RF cache hit ratio",
         &["bench", "malekeh", "bow", "malekeh_pr"],
     );
     let mut cols: [Vec<f64>; 3] = Default::default();
-    let benches = runner.opts().benchmarks();
     for bench in &benches {
         let mut vals = [0f64; 3];
         for (i, s) in MAIN_SCHEMES.iter().enumerate() {
@@ -339,12 +486,18 @@ pub fn fig13(runner: &mut Runner) -> Table {
 }
 
 /// Fig 14: L1 data cache hit ratio.
-pub fn fig14(runner: &mut Runner) -> Table {
+pub fn fig14(runner: &Runner) -> Table {
+    let benches = runner.opts().benchmarks();
+    execute_grid(
+        runner,
+        &benches,
+        &[Scheme::Baseline, Scheme::Malekeh, Scheme::Bow],
+    );
+
     let mut t = Table::new(
         "Fig 14: L1D hit ratio",
         &["bench", "baseline", "malekeh", "bow"],
     );
-    let benches = runner.opts().benchmarks();
     for bench in &benches {
         let vals = [
             runner.run(bench, Scheme::Baseline).l1_hit_ratio(),
@@ -357,14 +510,20 @@ pub fn fig14(runner: &mut Runner) -> Table {
 }
 
 /// Fig 15: RF dynamic energy normalised to baseline.
-pub fn fig15(runner: &mut Runner) -> Table {
+pub fn fig15(runner: &Runner) -> Table {
+    let opts = runner.opts().clone();
+    let benches = opts.benchmarks();
+    execute_grid(
+        runner,
+        &benches,
+        &[Scheme::Baseline, Scheme::Malekeh, Scheme::Bow, Scheme::MalekehPr],
+    );
+
     let mut t = Table::new(
         "Fig 15: RF dynamic energy normalised to the baseline",
         &["bench", "malekeh", "bow", "malekeh_pr"],
     );
-    let opts = runner.opts().clone();
     let mut cols: [Vec<f64>; 3] = Default::default();
-    let benches = opts.benchmarks();
     for bench in &benches {
         let base_stats = runner.run(bench, Scheme::Baseline);
         let base_model = EnergyModel::for_config(&opts.config(Scheme::Baseline));
@@ -387,12 +546,14 @@ pub fn fig15(runner: &mut Runner) -> Table {
 }
 
 /// Fig 16: writes captured by the RF cache / all RF writes.
-pub fn fig16(runner: &mut Runner) -> Table {
+pub fn fig16(runner: &Runner) -> Table {
+    let benches = runner.opts().benchmarks();
+    execute_grid(runner, &benches, &[Scheme::Malekeh, Scheme::Bow]);
+
     let mut t = Table::new(
         "Fig 16: cache writes / total RF writes (and reused fraction)",
         &["bench", "malekeh", "bow", "malekeh_reused"],
     );
-    let benches = runner.opts().benchmarks();
     for bench in &benches {
         let m = runner.run(bench, Scheme::Malekeh);
         let b = runner.run(bench, Scheme::Bow);
@@ -411,14 +572,20 @@ pub fn fig16(runner: &mut Runner) -> Table {
 }
 
 /// Fig 17: Malekeh hardware under traditional GTO+LRU policies.
-pub fn fig17(runner: &mut Runner) -> Table {
+pub fn fig17(runner: &Runner) -> Table {
+    let benches = runner.opts().benchmarks();
+    execute_grid(
+        runner,
+        &benches,
+        &[Scheme::MalekehTraditional, Scheme::Malekeh],
+    );
+
     let mut t = Table::new(
         "Fig 17: hit ratio with traditional scheduling (GTO) + LRU",
         &["bench", "traditional", "malekeh"],
     );
     let mut trad = Vec::new();
     let mut mal = Vec::new();
-    let benches = runner.opts().benchmarks();
     for bench in &benches {
         let tr = runner.run(bench, Scheme::MalekehTraditional).rf_hit_ratio();
         let ml = runner.run(bench, Scheme::Malekeh).rf_hit_ratio();
@@ -431,13 +598,15 @@ pub fn fig17(runner: &mut Runner) -> Table {
 }
 
 /// Headline table: the abstract's claims vs this reproduction.
-pub fn headline(runner: &mut Runner) -> Table {
+pub fn headline(runner: &Runner) -> Table {
+    let opts = runner.opts().clone();
+    let benches = opts.benchmarks();
+    execute_grid(runner, &benches, &[Scheme::Baseline, Scheme::Malekeh]);
+
     let mut t = Table::new(
         "Headline: Malekeh vs baseline (paper: hit 46.4%, energy -28.3%, IPC +6.1%, storage +0.78%)",
         &["metric", "paper", "measured"],
     );
-    let opts = runner.opts().clone();
-    let benches = opts.benchmarks();
     let mut hits = Vec::new();
     let mut ipc_ratio = Vec::new();
     let mut e_ratio = Vec::new();
@@ -488,7 +657,13 @@ mod tests {
     use super::*;
 
     fn tiny_opts() -> ExpOpts {
-        ExpOpts { num_sms: 1, seed: 7, profile_warps: 2, quick: true }
+        ExpOpts {
+            num_sms: 1,
+            seed: 7,
+            profile_warps: 2,
+            quick: true,
+            jobs: 1,
+        }
     }
 
     #[test]
@@ -504,33 +679,61 @@ mod tests {
         assert_eq!(o.num_sms, 3);
         let o = ExpOpts::from_args(&["--full".into()]);
         assert_eq!(o.num_sms, 10);
+        let o = ExpOpts::from_args(&["--jobs".into(), "6".into()]);
+        assert_eq!(o.jobs, 6);
+        assert_eq!(o.effective_jobs(), 6);
+        let o = ExpOpts::from_args(&["--serial".into()]);
+        assert_eq!(o.jobs, 1);
+    }
+
+    #[test]
+    fn effective_jobs_auto_detects() {
+        let o = ExpOpts::default();
+        assert_eq!(o.jobs, 0);
+        assert!(o.effective_jobs() >= 1);
     }
 
     #[test]
     fn runner_caches() {
-        let mut r = Runner::new(tiny_opts());
+        let r = Runner::new(tiny_opts());
         let a = r.run("nn", Scheme::Baseline);
         let b = r.run("nn", Scheme::Baseline);
         assert_eq!(a.cycles, b.cycles);
-        assert_eq!(r.cache.len(), 1);
+        assert_eq!(r.cached(), 1);
     }
 }
 
 // ============================= ablations ====================================
 
+/// CCU cache-table sizes swept by Ablation A.
+const ABLATION_CT_SIZES: [usize; 5] = [6, 8, 10, 12, 16];
+const ABLATION_CT_BENCHES: [&str; 5] =
+    ["kmeans", "gemm_t1", "rnn_i2", "srad_v1", "hotspot"];
+
 /// Ablation A (§III-C): cache-table entries sweep — the paper picks 8 as
 /// the knee of the hit-ratio-vs-cost curve ("beyond a given size, it
 /// reaches a point of diminishing returns").
-pub fn ablation_ct_entries(runner: &mut Runner) -> Table {
-    let sizes = [6usize, 8, 10, 12, 16];
+pub fn ablation_ct_entries(runner: &Runner) -> Table {
+    let mut plan = runner.plan();
+    for bench in ABLATION_CT_BENCHES {
+        for (k, &n) in ABLATION_CT_SIZES.iter().enumerate() {
+            plan.add_cfg(bench, Scheme::Malekeh, 200 + k as u64, |o| {
+                let mut c = o.config(Scheme::Malekeh);
+                c.ct_entries = n;
+                c
+            });
+        }
+    }
+    runner.execute(&plan);
+
     let mut header: Vec<String> = vec!["bench".into()];
-    header.extend(sizes.iter().map(|s| format!("CT={s}")));
+    header.extend(ABLATION_CT_SIZES.iter().map(|s| format!("CT={s}")));
     let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut t = Table::new("Ablation: RF hit ratio vs CCU cache-table entries", &hdr);
-    let mut cols: Vec<Vec<f64>> = vec![Vec::new(); sizes.len()];
-    for bench in ["kmeans", "gemm_t1", "rnn_i2", "srad_v1", "hotspot"] {
+    let mut cols: Vec<Vec<f64>> = vec![Vec::new(); ABLATION_CT_SIZES.len()];
+    for bench in ABLATION_CT_BENCHES {
         let mut vals = Vec::new();
-        for (k, &n) in sizes.iter().enumerate() {
+        for (k, &n) in ABLATION_CT_SIZES.iter().enumerate() {
             let s = runner.run_cfg_key(bench, Scheme::Malekeh, 200 + k as u64, |o| {
                 let mut c = o.config(Scheme::Malekeh);
                 c.ct_entries = n;
@@ -546,18 +749,34 @@ pub fn ablation_ct_entries(runner: &mut Runner) -> Table {
     t
 }
 
+/// RTHLD values swept by Ablation B.
+const ABLATION_RTHLDS: [u32; 5] = [2, 6, 12, 24, 48];
+const ABLATION_RTHLD_BENCHES: [&str; 3] = ["kmeans", "gemm_t1", "srad_v1"];
+
 /// Ablation B (§III-A): RTHLD sweep — the paper found 12 empirically best.
-pub fn ablation_rthld(runner: &mut Runner) -> Table {
-    let ths = [2u32, 6, 12, 24, 48];
+pub fn ablation_rthld(runner: &Runner) -> Table {
+    let mut plan = runner.plan();
+    for bench in ABLATION_RTHLD_BENCHES {
+        plan.add(bench, Scheme::Baseline);
+        for (k, &r) in ABLATION_RTHLDS.iter().enumerate() {
+            plan.add_cfg(bench, Scheme::Malekeh, 300 + k as u64, |o| {
+                let mut c = o.config(Scheme::Malekeh);
+                c.rthld = r;
+                c
+            });
+        }
+    }
+    runner.execute(&plan);
+
     let mut header: Vec<String> = vec!["bench/metric".into()];
-    header.extend(ths.iter().map(|s| format!("R={s}")));
+    header.extend(ABLATION_RTHLDS.iter().map(|s| format!("R={s}")));
     let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut t = Table::new("Ablation: hit ratio and IPC vs RTHLD", &hdr);
-    for bench in ["kmeans", "gemm_t1", "srad_v1"] {
+    for bench in ABLATION_RTHLD_BENCHES {
         let base = runner.run(bench, Scheme::Baseline).ipc();
         let mut hit = Vec::new();
         let mut ipc = Vec::new();
-        for (k, &r) in ths.iter().enumerate() {
+        for (k, &r) in ABLATION_RTHLDS.iter().enumerate() {
             let s = runner.run_cfg_key(bench, Scheme::Malekeh, 300 + k as u64, |o| {
                 let mut c = o.config(Scheme::Malekeh);
                 c.rthld = r;
@@ -572,25 +791,36 @@ pub fn ablation_rthld(runner: &mut Runner) -> Table {
     t
 }
 
+/// Baseline config with 8 operand collectors (Ablation C's alternative).
+fn eight_ocu_cfg(o: &ExpOpts) -> GpuConfig {
+    let mut c = o.config(Scheme::Baseline);
+    c.collectors_per_sub_core = 8;
+    c
+}
+
 /// Ablation C (§I): scaling baseline OCUs 2 -> 8 — the expensive
 /// alternative Malekeh avoids (paper: +7.1% IPC for 1.74x area / 2.83x
 /// power). Compares baseline-8-OCU IPC against Malekeh-2-CCU.
-pub fn ablation_ocu_scaling(runner: &mut Runner) -> Table {
+pub fn ablation_ocu_scaling(runner: &Runner) -> Table {
+    let benches = runner.opts().benchmarks();
+    let mut plan = runner.plan();
+    for bench in &benches {
+        plan.add(bench, Scheme::Baseline);
+        plan.add_cfg(bench, Scheme::Baseline, 400, eight_ocu_cfg);
+        plan.add(bench, Scheme::Malekeh);
+    }
+    runner.execute(&plan);
+
     let mut t = Table::new(
         "Ablation: baseline with 8 OCUs vs Malekeh with 2 CCUs (IPC norm)",
         &["bench", "base_8ocu", "malekeh_2ccu"],
     );
     let mut c8 = Vec::new();
     let mut cm = Vec::new();
-    let benches = runner.opts().benchmarks();
     for bench in &benches {
         let base2 = runner.run(bench, Scheme::Baseline).ipc();
         let base8 = runner
-            .run_cfg_key(bench, Scheme::Baseline, 400, |o| {
-                let mut c = o.config(Scheme::Baseline);
-                c.collectors_per_sub_core = 8;
-                c
-            })
+            .run_cfg_key(bench, Scheme::Baseline, 400, eight_ocu_cfg)
             .ipc();
         let mal = runner.run(bench, Scheme::Malekeh).ipc();
         let v = [base8 / base2.max(1e-9), mal / base2.max(1e-9)];
@@ -602,21 +832,33 @@ pub fn ablation_ocu_scaling(runner: &mut Runner) -> Table {
     t
 }
 
+/// Malekeh with the write filter disabled (Ablation D's comparison point).
+fn unfiltered_cfg(o: &ExpOpts) -> GpuConfig {
+    let mut c = o.config(Scheme::Malekeh);
+    c.no_write_filter = true;
+    c
+}
+
+const ABLATION_WRITE_BENCHES: [&str; 4] = ["kmeans", "gemm_t1", "rnn_i2", "conv_t1"];
+
 /// Ablation D (§III-B / §IV-A2): CCU write-back port — filtered single
 /// port vs no write path at all vs unfiltered ("we empirically verified
 /// that one port provides almost the same benefit as unbounded").
-pub fn ablation_write_port(runner: &mut Runner) -> Table {
+pub fn ablation_write_port(runner: &Runner) -> Table {
+    let mut plan = runner.plan();
+    for bench in ABLATION_WRITE_BENCHES {
+        plan.add(bench, Scheme::Malekeh);
+        plan.add_cfg(bench, Scheme::Malekeh, 500, unfiltered_cfg);
+    }
+    runner.execute(&plan);
+
     let mut t = Table::new(
         "Ablation: write filter / write path (hit ratio; cache-write fraction)",
         &["bench", "filtered_hit", "unfiltered_hit", "filtered_wr", "unfiltered_wr"],
     );
-    for bench in ["kmeans", "gemm_t1", "rnn_i2", "conv_t1"] {
+    for bench in ABLATION_WRITE_BENCHES {
         let f = runner.run(bench, Scheme::Malekeh);
-        let u = runner.run_cfg_key(bench, Scheme::Malekeh, 500, |o| {
-            let mut c = o.config(Scheme::Malekeh);
-            c.no_write_filter = true;
-            c
-        });
+        let u = runner.run_cfg_key(bench, Scheme::Malekeh, 500, unfiltered_cfg);
         t.row_f(
             bench,
             &[

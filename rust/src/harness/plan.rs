@@ -1,0 +1,255 @@
+//! Sharded execution of experiment work plans.
+//!
+//! A figure declares the set of `(benchmark, scheme, config)` simulation
+//! points it needs as a [`Plan`]; [`Runner::execute`] shards the
+//! not-yet-cached points across a pool of `std::thread` workers and merges
+//! the resulting [`Stats`] into the runner's cache **in plan order**, so
+//! the serial table-assembly pass that follows reads exactly the values a
+//! fully serial run would have produced.
+//!
+//! Determinism: every point carries its own fully-resolved [`GpuConfig`]
+//! (including the per-point `seed` — the simulator derives all policy RNG
+//! streams from it), so a point's `Stats` are a pure function of the point
+//! and independent of which shard runs it or how many workers exist. The
+//! `--jobs N` / `--serial` CLI switches therefore change wall-clock only:
+//! output tables are bit-identical at any worker count (enforced by
+//! `rust/tests/parallel_determinism.rs`).
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::{ExpOpts, Runner};
+use crate::config::{GpuConfig, Scheme};
+use crate::sim::run_benchmark;
+use crate::stats::Stats;
+
+/// One independent simulation of a figure's work plan.
+#[derive(Debug, Clone)]
+pub struct SimPoint {
+    /// Table II benchmark name.
+    pub bench: String,
+    /// Scheme under test.
+    pub scheme: Scheme,
+    /// Variant key distinguishing customised configs (0 = scheme default).
+    pub key: u64,
+    /// Fully-resolved simulator configuration for this point.
+    pub cfg: GpuConfig,
+}
+
+impl SimPoint {
+    fn cache_key(&self) -> (String, Scheme, u64) {
+        (self.bench.clone(), self.scheme, self.key)
+    }
+}
+
+/// An ordered list of simulation points to run before assembling a table.
+///
+/// Points are resolved to concrete configs at `add` time (against the
+/// options the plan was created with), deduplicated at execution time, and
+/// merged back in declaration order.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    opts: ExpOpts,
+    points: Vec<SimPoint>,
+}
+
+impl Plan {
+    /// New empty plan resolving configs against `opts`.
+    pub fn new(opts: &ExpOpts) -> Self {
+        Plan { opts: opts.clone(), points: Vec::new() }
+    }
+
+    /// Add a point with the default config for `scheme` (key 0) — the
+    /// counterpart of [`Runner::run`].
+    pub fn add(&mut self, bench: &str, scheme: Scheme) {
+        self.add_cfg(bench, scheme, 0, |o| o.config(scheme));
+    }
+
+    /// Add a point with a customised config — the counterpart of
+    /// [`Runner::run_cfg_key`]; `key` distinguishes variants.
+    pub fn add_cfg(
+        &mut self,
+        bench: &str,
+        scheme: Scheme,
+        key: u64,
+        make: impl FnOnce(&ExpOpts) -> GpuConfig,
+    ) {
+        let cfg = make(&self.opts);
+        self.points.push(SimPoint {
+            bench: bench.to_string(),
+            scheme,
+            key,
+            cfg,
+        });
+    }
+
+    /// Declared points, in order.
+    pub fn points(&self) -> &[SimPoint] {
+        &self.points
+    }
+
+    /// Number of declared points (before dedup).
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// No points declared?
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+impl Runner {
+    /// Worker threads that [`Runner::execute`] will use for a plan of
+    /// `points` runnable simulations.
+    fn shard_count(&self, points: usize) -> usize {
+        self.opts().effective_jobs().min(points).max(1)
+    }
+
+    /// Run every not-yet-cached point of `plan`, sharding independent
+    /// simulations across the worker pool, then publish the results into
+    /// the memo cache in plan order.
+    ///
+    /// After this returns, [`Runner::run`] / [`Runner::run_cfg_key`] calls
+    /// for the planned points are cache hits, so table assembly stays a
+    /// cheap serial pass with deterministic output.
+    pub fn execute(&self, plan: &Plan) {
+        // A plan resolved against different options would publish stats
+        // under keys this runner attributes to ITS options — refuse.
+        assert!(
+            plan.opts == *self.opts(),
+            "plan built against different ExpOpts than this runner \
+             (build it with Runner::plan): {:?} vs {:?}",
+            plan.opts,
+            self.opts()
+        );
+        // Dedup against the cache and within the plan, preserving order.
+        let todo: Vec<&SimPoint> = {
+            let cache = self.cache.lock().unwrap();
+            let mut seen = HashSet::new();
+            plan.points()
+                .iter()
+                .filter(|p| {
+                    let k = p.cache_key();
+                    !cache.contains_key(&k) && seen.insert(k)
+                })
+                .collect()
+        };
+        if todo.is_empty() {
+            return;
+        }
+        let jobs = self.shard_count(todo.len());
+        let profile_warps = self.opts().profile_warps;
+        if jobs <= 1 {
+            // serial escape hatch: exactly the repeated-miss path
+            for p in todo {
+                self.run_cfg_key(&p.bench, p.scheme, p.key, |_| p.cfg.clone());
+            }
+            return;
+        }
+        // Work-stealing over a shared index: shards grab the next point as
+        // they free up, so one slow simulation cannot serialise the rest.
+        let next = AtomicUsize::new(0);
+        let results: Mutex<Vec<Option<(Stats, f64)>>> =
+            Mutex::new((0..todo.len()).map(|_| None).collect());
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= todo.len() {
+                        break;
+                    }
+                    let p = todo[i];
+                    let t0 = Instant::now();
+                    let stats = run_benchmark(&p.cfg, &p.bench, profile_warps);
+                    results.lock().unwrap()[i] =
+                        Some((stats, t0.elapsed().as_secs_f64()));
+                });
+            }
+        });
+        // Merge in fixed plan order: cache contents and progress log are
+        // identical to a serial run regardless of shard completion order.
+        let results = results.into_inner().unwrap();
+        let mut cache = self.cache.lock().unwrap();
+        for (p, slot) in todo.iter().zip(results) {
+            let (stats, dt) = slot.expect("every claimed point completes");
+            log_point(&p.bench, p.scheme, p.key, &stats, dt);
+            cache.insert(p.cache_key(), stats);
+        }
+    }
+}
+
+/// One per-point progress line; shared by every execution path so serial
+/// and sharded runs emit identical logs.
+pub(crate) fn log_point(bench: &str, scheme: Scheme, key: u64, stats: &Stats, secs: f64) {
+    eprintln!(
+        "  [{bench} / {scheme} / v{key}] {} instr, {} cycles, {:.1}s",
+        stats.instructions, stats.cycles, secs
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts(jobs: usize) -> ExpOpts {
+        ExpOpts {
+            num_sms: 1,
+            seed: 7,
+            profile_warps: 2,
+            quick: true,
+            jobs,
+        }
+    }
+
+    #[test]
+    fn plan_resolves_configs_at_add_time() {
+        let opts = tiny_opts(1);
+        let mut plan = Plan::new(&opts);
+        plan.add("nn", Scheme::Baseline);
+        plan.add_cfg("nn", Scheme::Malekeh, 9, |o| {
+            let mut c = o.config(Scheme::Malekeh);
+            c.ct_entries = 16;
+            c
+        });
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan.points()[0].cfg.num_sms, 1);
+        assert_eq!(plan.points()[0].cfg.seed, 7);
+        assert_eq!(plan.points()[1].key, 9);
+        assert_eq!(plan.points()[1].cfg.ct_entries, 16);
+    }
+
+    #[test]
+    fn execute_dedups_and_fills_cache() {
+        let runner = Runner::new(tiny_opts(1));
+        let mut plan = runner.plan();
+        plan.add("nn", Scheme::Baseline);
+        plan.add("nn", Scheme::Baseline); // duplicate point
+        runner.execute(&plan);
+        assert_eq!(runner.cached(), 1);
+        // re-execution is a no-op (everything cached)
+        runner.execute(&plan);
+        assert_eq!(runner.cached(), 1);
+    }
+
+    #[test]
+    fn parallel_execute_matches_serial() {
+        let serial = Runner::new(tiny_opts(1));
+        let sharded = Runner::new(tiny_opts(2));
+        for r in [&serial, &sharded] {
+            let mut plan = r.plan();
+            plan.add("nn", Scheme::Baseline);
+            plan.add("nn", Scheme::Malekeh);
+            r.execute(&plan);
+        }
+        for scheme in [Scheme::Baseline, Scheme::Malekeh] {
+            let a = serial.run("nn", scheme);
+            let b = sharded.run("nn", scheme);
+            assert_eq!(a.cycles, b.cycles, "{scheme}");
+            assert_eq!(a.instructions, b.instructions, "{scheme}");
+            assert_eq!(a.rf_cache_reads, b.rf_cache_reads, "{scheme}");
+        }
+    }
+}

@@ -9,6 +9,7 @@
 //!   list               list benchmarks and schemes
 //!
 //! Common options: `--scheme S`, `--sms N`, `--quick`, `--full`,
+//! `--jobs N` / `--serial` (experiment shard count),
 //! `-s key=value` (any `config::GpuConfig` key).
 
 use std::process::ExitCode;
@@ -56,9 +57,13 @@ fn print_help() {
          COMMANDS:\n\
            simulate <bench> [--scheme S] [-s k=v]...   simulate one benchmark\n\
            annotate <bench> [--engine rust|pjrt]       compiler reuse pass\n\
-           fig <1|2|7|9|10|12|13|14|15|16|17> [--quick|--full]\n\
-           headline [--quick|--full]                   abstract's comparison\n\
-           list                                        benchmarks + schemes"
+           fig <1|2|7|9|10|12|13|14|15|16|17> [--quick|--full] [--jobs N|--serial]\n\
+           headline [--quick|--full] [--jobs N|--serial]   abstract's comparison\n\
+           list                                        benchmarks + schemes\n\
+         \n\
+         Figure simulations shard across worker threads (--jobs N, default\n\
+         one per core); --serial forces the single-thread path. Output\n\
+         tables are bit-identical at any worker count."
     );
 }
 
@@ -168,7 +173,7 @@ fn cmd_annotate(cli: &Cli) -> Result<(), String> {
     Ok(())
 }
 
-fn exp_opts(cli: &Cli) -> ExpOpts {
+fn exp_opts(cli: &Cli) -> Result<ExpOpts, String> {
     let mut o = ExpOpts::default();
     if cli.has_flag("quick") {
         o.quick = true;
@@ -176,28 +181,31 @@ fn exp_opts(cli: &Cli) -> ExpOpts {
     if cli.has_flag("full") {
         o.num_sms = 10;
     }
-    if let Ok(n) = cli.opt_num("sms", o.num_sms) {
-        o.num_sms = n;
+    o.num_sms = cli.opt_num("sms", o.num_sms)?;
+    o.seed = cli.opt_num("seed", o.seed)?;
+    if cli.has_flag("serial") {
+        o.jobs = 1;
     }
-    o
+    o.jobs = cli.opt_num("jobs", o.jobs)?;
+    Ok(o)
 }
 
 fn cmd_fig(cli: &Cli) -> Result<(), String> {
     let id = cli.positional.first().ok_or("usage: fig <id>")?.as_str();
-    let opts = exp_opts(cli);
-    let mut runner = Runner::new(opts.clone());
+    let opts = exp_opts(cli)?;
+    let runner = Runner::new(opts.clone());
     let table = match id {
         "1" => harness::fig01(&opts),
-        "2" => harness::fig02(&mut runner),
-        "7" => harness::fig07(&mut runner),
+        "2" => harness::fig02(&runner),
+        "7" => harness::fig07(&runner),
         "9" => harness::fig09(&opts),
-        "10" => harness::fig10(&mut runner),
-        "12" => harness::fig12(&mut runner),
-        "13" => harness::fig13(&mut runner),
-        "14" => harness::fig14(&mut runner),
-        "15" => harness::fig15(&mut runner),
-        "16" => harness::fig16(&mut runner),
-        "17" => harness::fig17(&mut runner),
+        "10" => harness::fig10(&runner),
+        "12" => harness::fig12(&runner),
+        "13" => harness::fig13(&runner),
+        "14" => harness::fig14(&runner),
+        "15" => harness::fig15(&runner),
+        "16" => harness::fig16(&runner),
+        "17" => harness::fig17(&runner),
         other => return Err(format!("no figure {other}; see DESIGN.md §5")),
     };
     table.print();
@@ -205,8 +213,8 @@ fn cmd_fig(cli: &Cli) -> Result<(), String> {
 }
 
 fn cmd_headline(cli: &Cli) -> Result<(), String> {
-    let mut runner = Runner::new(exp_opts(cli));
-    harness::headline(&mut runner).print();
+    let runner = Runner::new(exp_opts(cli)?);
+    harness::headline(&runner).print();
     Ok(())
 }
 

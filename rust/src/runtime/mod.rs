@@ -7,16 +7,27 @@
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
 //! 0.5.1 rejects; the text parser reassigns ids.
 //!
-//! Executables are compiled once per process and cached in [`Runtime`].
+//! The real bridge lives behind the `pjrt` cargo feature because it needs
+//! the `xla` bindings and `anyhow`, which the offline build does not ship.
+//! Without the feature an API-compatible stub `Runtime` is compiled whose
+//! constructors return an error, so every caller (CLI `annotate --engine
+//! pjrt`, `perf_hotpath`, the examples) degrades to its artifacts-missing
+//! path instead of failing to build.
 
 pub mod manifest;
 pub use manifest::Manifest;
 
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Runtime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Runtime, RuntimeError};
+
 use std::path::{Path, PathBuf};
-
-use anyhow::{anyhow, bail, Context, Result};
-
-use crate::energy::NEVENTS;
 
 /// Locate the artifacts directory: `$MALEKEH_ARTIFACTS`, else
 /// `<crate>/artifacts`, else `./artifacts`.
@@ -29,227 +40,4 @@ pub fn default_artifacts_dir() -> PathBuf {
         return crate_dir;
     }
     PathBuf::from("artifacts")
-}
-
-/// A compiled artifact + its client.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    /// Parsed manifest (shapes/constants the artifacts were built with).
-    pub manifest: Manifest,
-    dir: PathBuf,
-    reuse: Option<xla::PjRtLoadedExecutable>,
-    energy: Option<xla::PjRtLoadedExecutable>,
-    gemm: Option<xla::PjRtLoadedExecutable>,
-}
-
-impl Runtime {
-    /// Create a CPU-PJRT runtime over `dir` (compiles lazily per artifact).
-    pub fn new(dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
-        manifest.check_compat().map_err(|e| anyhow!(e))?;
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            manifest,
-            dir: dir.to_path_buf(),
-            reuse: None,
-            energy: None,
-            gemm: None,
-        })
-    }
-
-    /// Open the default artifacts directory.
-    pub fn open_default() -> Result<Runtime> {
-        Self::new(&default_artifacts_dir())
-    }
-
-    fn compile(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
-        let path = self.dir.join(name);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parse {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .with_context(|| format!("compile {}", path.display()))
-    }
-
-    /// Reuse-distance annotation through the `reuse_annotate` artifact
-    /// (the L1 Pallas kernel + L2 binarisation/histogram).
-    ///
-    /// `ids`, `pos`, `rw`: row-major `[profile_warps, trace_len]` (see the
-    /// manifest for the exact shape). Returns `(dist, near, hist)`.
-    pub fn annotate(
-        &mut self,
-        ids: &[i32],
-        pos: &[i32],
-        rw: &[i32],
-    ) -> Result<(Vec<i32>, Vec<i32>, Vec<i32>)> {
-        let w = self.manifest.profile_warps as i64;
-        let l = self.manifest.trace_len as i64;
-        let n = (w * l) as usize;
-        if ids.len() != n || pos.len() != n || rw.len() != n {
-            bail!(
-                "annotate expects {}x{} = {} elements, got {}/{}/{}",
-                w,
-                l,
-                n,
-                ids.len(),
-                pos.len(),
-                rw.len()
-            );
-        }
-        if self.reuse.is_none() {
-            self.reuse = Some(self.compile("reuse_annotate.hlo.txt")?);
-        }
-        let exe = self.reuse.as_ref().unwrap();
-        let lit_ids = xla::Literal::vec1(ids).reshape(&[w, l])?;
-        let lit_pos = xla::Literal::vec1(pos).reshape(&[w, l])?;
-        let lit_rw = xla::Literal::vec1(rw).reshape(&[w, l])?;
-        let result = exe.execute::<xla::Literal>(&[lit_ids, lit_pos, lit_rw])?[0][0]
-            .to_literal_sync()?;
-        let (dist, near, hist) = result.to_tuple3()?;
-        Ok((
-            dist.to_vec::<i32>()?,
-            near.to_vec::<i32>()?,
-            hist.to_vec::<i32>()?,
-        ))
-    }
-
-    /// RF dynamic-energy evaluation through the `rf_energy` artifact.
-    /// `counts`: row-major `[energy_rows, NEVENTS]`; `costs`: `[NEVENTS]`.
-    /// Returns `(energy, normalized_to_row0)`.
-    pub fn rf_energy(&mut self, counts: &[f32], costs: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
-        let b = self.manifest.energy_rows as i64;
-        let e = self.manifest.energy_events as i64;
-        if counts.len() != (b * e) as usize {
-            bail!("rf_energy expects {}x{} counts, got {}", b, e, counts.len());
-        }
-        if costs.len() != NEVENTS {
-            bail!("rf_energy expects {NEVENTS} costs, got {}", costs.len());
-        }
-        if self.energy.is_none() {
-            self.energy = Some(self.compile("rf_energy.hlo.txt")?);
-        }
-        let exe = self.energy.as_ref().unwrap();
-        let lit_counts = xla::Literal::vec1(counts).reshape(&[b, e])?;
-        let lit_costs = xla::Literal::vec1(costs);
-        let result = exe.execute::<xla::Literal>(&[lit_counts, lit_costs])?[0][0]
-            .to_literal_sync()?;
-        let (energy, norm) = result.to_tuple2()?;
-        Ok((energy.to_vec::<f32>()?, norm.to_vec::<f32>()?))
-    }
-
-    /// Tensor-core workload GEMM through the `mma_gemm` artifact
-    /// (fixed [M,K]x[K,N] from the manifest constants, f32).
-    pub fn gemm(&mut self, x: &[f32], y: &[f32], m: usize, k: usize, n: usize) -> Result<Vec<f32>> {
-        if x.len() != m * k || y.len() != k * n {
-            bail!("gemm shape mismatch");
-        }
-        if self.gemm.is_none() {
-            self.gemm = Some(self.compile("mma_gemm.hlo.txt")?);
-        }
-        let exe = self.gemm.as_ref().unwrap();
-        let lx = xla::Literal::vec1(x).reshape(&[m as i64, k as i64])?;
-        let ly = xla::Literal::vec1(y).reshape(&[k as i64, n as i64])?;
-        let result = exe.execute::<xla::Literal>(&[lx, ly])?[0][0].to_literal_sync()?;
-        let c = result.to_tuple1()?;
-        Ok(c.to_vec::<f32>()?)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn runtime() -> Option<Runtime> {
-        let dir = default_artifacts_dir();
-        if !dir.join("manifest.txt").exists() {
-            eprintln!("artifacts not built; skipping runtime test");
-            return None;
-        }
-        Some(Runtime::new(&dir).expect("runtime"))
-    }
-
-    #[test]
-    fn annotate_artifact_matches_rust_engine() {
-        let Some(mut rt) = runtime() else { return };
-        let w = rt.manifest.profile_warps;
-        let l = rt.manifest.trace_len;
-        // real workload access streams
-        let bench = crate::trace::find("rnn_i2").unwrap();
-        let trace = crate::trace::KernelTrace::generate(bench, w, 123);
-        let (ids, pos, rw) = trace.access_streams(w, l);
-        let (dist, near, hist) = rt.annotate(&ids, &pos, &rw).expect("annotate");
-        // parity with the rust engine, row by row
-        for row in 0..w {
-            let s = row * l;
-            let want = crate::compiler::windowed_reuse_distances(
-                &ids[s..s + l],
-                &pos[s..s + l],
-                &rw[s..s + l],
-                crate::compiler::WINDOW,
-                crate::compiler::CAP,
-            );
-            assert_eq!(&dist[s..s + l], &want[..], "row {row} dist parity");
-        }
-        // near bits consistent with distances
-        for (d, nb) in dist.iter().zip(near.iter()) {
-            match *d {
-                -1 => assert_eq!(*nb, -1),
-                x if x >= 0 && x <= rt.manifest.rthld as i32 => assert_eq!(*nb, 1),
-                _ => assert_eq!(*nb, 0),
-            }
-        }
-        // histogram counts live accesses only
-        let live = dist.iter().filter(|&&d| d >= 0).count() as i32;
-        assert_eq!(hist.iter().sum::<i32>(), live);
-    }
-
-    #[test]
-    fn energy_artifact_matches_rust_model() {
-        let Some(mut rt) = runtime() else { return };
-        let b = rt.manifest.energy_rows;
-        let e = rt.manifest.energy_events;
-        let mut counts = vec![0f32; b * e];
-        for (i, c) in counts.iter_mut().enumerate() {
-            *c = ((i * 37) % 1000) as f32;
-        }
-        let costs: Vec<f32> = (0..e).map(|i| 0.1 + i as f32 * 0.05).collect();
-        let (energy, norm) = rt.rf_energy(&counts, &costs).expect("rf_energy");
-        assert_eq!(energy.len(), b);
-        for row in 0..b {
-            let want: f32 = (0..e).map(|j| counts[row * e + j] * costs[j]).sum();
-            assert!(
-                (energy[row] - want).abs() <= want.abs() * 1e-5 + 1e-3,
-                "row {row}: {} vs {want}",
-                energy[row]
-            );
-        }
-        assert!((norm[0] - 1.0).abs() < 1e-5);
-    }
-
-    #[test]
-    fn gemm_artifact_correct() {
-        let Some(mut rt) = runtime() else { return };
-        let (m, k, n) = (256, 256, 256);
-        // x = identity-ish pattern for an exact check
-        let mut x = vec![0f32; m * k];
-        for i in 0..m {
-            x[i * k + i] = 2.0;
-        }
-        let y: Vec<f32> = (0..k * n).map(|i| (i % 17) as f32).collect();
-        let c = rt.gemm(&x, &y, m, k, n).expect("gemm");
-        for i in (0..m * n).step_by(9973) {
-            assert!((c[i] - 2.0 * y[i]).abs() < 1e-4, "at {i}");
-        }
-    }
-
-    #[test]
-    fn shape_mismatch_rejected() {
-        let Some(mut rt) = runtime() else { return };
-        assert!(rt.annotate(&[1, 2], &[0, 0], &[1, 1]).is_err());
-        assert!(rt.rf_energy(&[1.0], &[1.0; NEVENTS]).is_err());
-    }
 }

@@ -1,0 +1,107 @@
+//! Parallel determinism: the sharded experiment engine must be a pure
+//! wall-clock optimisation. The same seed + the same plan has to produce
+//! **bit-identical** `Table` output (and identical raw `Stats`) whether it
+//! runs on one worker (`--jobs 1`) or many (`--jobs 8`), because each
+//! `SimPoint` carries its own fully-resolved config/seed and results are
+//! merged in fixed plan order.
+
+use malekeh::config::Scheme;
+use malekeh::harness::{geomean, ExpOpts, Runner, Table};
+
+fn opts(jobs: usize) -> ExpOpts {
+    ExpOpts {
+        num_sms: 1,
+        seed: 0xC0FFEE,
+        profile_warps: 2,
+        quick: true,
+        jobs,
+    }
+}
+
+const BENCHES: [&str; 3] = ["kmeans", "hotspot", "nn"];
+const SCHEMES: [Scheme; 2] = [Scheme::Baseline, Scheme::Malekeh];
+
+/// Shard the probe plan, then assemble a figure-style table serially.
+fn build_table(runner: &Runner) -> Table {
+    let mut plan = runner.plan();
+    for b in BENCHES {
+        for s in SCHEMES {
+            plan.add(b, s);
+        }
+    }
+    runner.execute(&plan);
+
+    let mut t = Table::new(
+        "determinism probe: IPC (norm) + RF cache hit ratio",
+        &["bench", "ipc_rel", "hit"],
+    );
+    let mut rel = Vec::new();
+    for b in BENCHES {
+        let base = runner.run(b, Scheme::Baseline);
+        let m = runner.run(b, Scheme::Malekeh);
+        let r = m.ipc() / base.ipc().max(1e-9);
+        rel.push(r);
+        // 9 decimals: any cross-shard nondeterminism would show here
+        t.row_f(b, &[r, m.rf_hit_ratio()], 9);
+    }
+    t.row_f("GEOMEAN", &[geomean(&rel), 0.0], 9);
+    t
+}
+
+#[test]
+fn jobs1_and_jobs8_render_bit_identical_tables() {
+    let serial = build_table(&Runner::new(opts(1)));
+    let sharded = build_table(&Runner::new(opts(8)));
+    assert_eq!(
+        serial.render(),
+        sharded.render(),
+        "sharded table output diverged from serial"
+    );
+}
+
+#[test]
+fn sharded_stats_identical_to_serial() {
+    let r1 = Runner::new(opts(1));
+    let r4 = Runner::new(opts(4));
+    for r in [&r1, &r4] {
+        let mut plan = r.plan();
+        for b in ["srad_v1", "b+tree"] {
+            for s in SCHEMES {
+                plan.add(b, s);
+            }
+        }
+        r.execute(&plan);
+    }
+    assert_eq!(r1.cached(), 4);
+    assert_eq!(r4.cached(), 4);
+    for b in ["srad_v1", "b+tree"] {
+        for s in SCHEMES {
+            let a = r1.run(b, s);
+            let c = r4.run(b, s);
+            assert_eq!(a.cycles, c.cycles, "{b}/{s} cycles");
+            assert_eq!(a.instructions, c.instructions, "{b}/{s} instructions");
+            assert_eq!(a.rf_reads, c.rf_reads, "{b}/{s} rf_reads");
+            assert_eq!(a.rf_cache_reads, c.rf_cache_reads, "{b}/{s} cache reads");
+            assert_eq!(a.rf_cache_writes, c.rf_cache_writes, "{b}/{s} cache writes");
+            assert_eq!(a.energy, c.energy, "{b}/{s} energy events");
+        }
+    }
+}
+
+#[test]
+fn runner_is_shareable_across_threads() {
+    // the memoising Runner is Sync: shards (and callers) may share one
+    let runner = Runner::new(opts(2));
+    std::thread::scope(|scope| {
+        let r = &runner;
+        scope.spawn(move || r.run("kmeans", Scheme::Baseline));
+        scope.spawn(move || r.run("kmeans", Scheme::Malekeh));
+    });
+    assert_eq!(runner.cached(), 2);
+    // a post-join read is a cache hit and matches a fresh serial run
+    let serial = Runner::new(opts(1));
+    assert_eq!(
+        runner.run("kmeans", Scheme::Malekeh).cycles,
+        serial.run("kmeans", Scheme::Malekeh).cycles
+    );
+}
