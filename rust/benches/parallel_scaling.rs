@@ -34,17 +34,13 @@ fn timed_run(base: &ExpOpts, jobs: usize) -> (f64, u64) {
     let t0 = Instant::now();
     runner.execute(&plan);
     let secs = t0.elapsed().as_secs_f64();
+    // order-sensitive combine of the per-point digests (Stats::fingerprint
+    // covers every deterministic counter)
     let mut fp = 0u64;
     for bench in runner.opts().benchmarks() {
         for scheme in SCHEMES {
             let s = runner.run(bench, scheme);
-            fp = fp
-                .wrapping_mul(0x100000001B3)
-                .wrapping_add(s.cycles)
-                .wrapping_mul(0x100000001B3)
-                .wrapping_add(s.instructions)
-                .wrapping_mul(0x100000001B3)
-                .wrapping_add(s.rf_cache_reads);
+            fp = fp.rotate_left(1) ^ s.fingerprint();
         }
     }
     (secs, fp)

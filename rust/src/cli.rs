@@ -36,9 +36,12 @@ impl Cli {
                 cli.overrides
                     .push((kv[..eq].to_string(), kv[eq + 1..].to_string()));
             } else if let Some(name) = a.strip_prefix("--") {
-                // value-taking option if the next token is not an option
+                // value-taking option if the next token is not itself an
+                // option: only `--...` and the exact override flag `-s`
+                // start options, so values like `-shard.mtrace` or `-5`
+                // pass through
                 match it.peek() {
-                    Some(v) if !v.starts_with("--") && !v.starts_with("-s") => {
+                    Some(v) if !v.starts_with("--") && v.as_str() != "-s" => {
                         cli.options
                             .insert(name.to_string(), it.next().unwrap().clone());
                     }
@@ -104,6 +107,21 @@ mod tests {
         let c = p("fig 12 --quick --sms 3");
         assert!(c.has_flag("quick"));
         assert_eq!(c.opt_num::<usize>("sms", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn option_value_starting_with_dash_s_is_a_value() {
+        // regression: `--out -shard.mtrace` used to be mis-parsed as the
+        // bare flag `out` plus a stray positional
+        let c = p("trace record hotspot --out -shard.mtrace --seed 3");
+        assert_eq!(c.opt_or("out", ""), "-shard.mtrace");
+        assert_eq!(c.opt_num::<u64>("seed", 0).unwrap(), 3);
+        assert!(c.flags.is_empty());
+        assert_eq!(c.positional, vec!["record", "hotspot"]);
+        // the exact override flag still terminates an option
+        let c = p("x --verbose -s rthld=7");
+        assert!(c.has_flag("verbose"));
+        assert_eq!(c.overrides, vec![("rthld".into(), "7".into())]);
     }
 
     #[test]

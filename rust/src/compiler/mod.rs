@@ -245,6 +245,17 @@ pub fn profile_and_annotate(trace: &mut KernelTrace, profile_warps: usize, rthld
     annotate(trace, &p);
 }
 
+/// The standard annotation dispatch shared by simulation and trace
+/// recording: `profile_warps == 0` selects the precise oracle pass,
+/// anything else the partial-profiling vote.
+pub fn annotate_trace(trace: &mut KernelTrace, profile_warps: usize, rthld: u32) {
+    if profile_warps == 0 {
+        annotate_precise(trace, rthld);
+    } else {
+        profile_and_annotate(trace, profile_warps, rthld);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -272,6 +283,46 @@ mod tests {
         // window=3 -> resolved
         let d = windowed_reuse_distances(&ids, &pos, &rw, 3, 255);
         assert_eq!(d[0], 3);
+    }
+
+    #[test]
+    fn write_after_write_is_dead() {
+        // two writes to the same register with no read in between: the
+        // first value is dead; the last stays unresolved (cap)
+        let ids = [4, 4];
+        let pos = [0, 1];
+        let rw = [0, 0];
+        let d = windowed_reuse_distances(&ids, &pos, &rw, 96, 255);
+        assert_eq!(d, vec![DEAD, 255]);
+    }
+
+    #[test]
+    fn cap_exactly_at_window_boundary() {
+        // a re-occurrence exactly `window` accesses later still resolves
+        // (the scan is inclusive) ...
+        let window = 4;
+        let ids = [7, 1, 2, 3, 7];
+        let pos = [0, 1, 2, 3, 9];
+        let rw = [1; 5];
+        let d = windowed_reuse_distances(&ids, &pos, &rw, window, 255);
+        assert_eq!(d[0], 9, "gap == window must resolve to the pos delta");
+        // ... one access further does not
+        let ids = [7, 1, 2, 3, 4, 7];
+        let pos = [0, 1, 2, 3, 4, 9];
+        let rw = [1; 6];
+        let d = windowed_reuse_distances(&ids, &pos, &rw, window, 255);
+        assert_eq!(d[0], 255, "gap == window + 1 must cap");
+    }
+
+    #[test]
+    fn all_padding_row_stays_padding() {
+        let ids = [-1; 8];
+        let pos = [0; 8];
+        let rw = [1; 8];
+        let d = windowed_reuse_distances(&ids, &pos, &rw, 96, 255);
+        assert!(d.iter().all(|&x| x == -1));
+        // and an empty stream is fine too
+        assert!(windowed_reuse_distances(&[], &[], &[], 96, 255).is_empty());
     }
 
     #[test]
@@ -332,7 +383,8 @@ mod tests {
                 Instruction::new(OpClass::Alu, &[3], &[4]),
             ]
         };
-        let mut t = KernelTrace { name: "t".into(), warps: vec![mk(), mk()] };
+        let mut t =
+            KernelTrace { name: "t".into(), kernel_id: 0, warps: vec![mk(), mk()] };
         let p = profile(&t, 2, 12);
         assert_eq!(p.warps_profiled, 2);
         assert!(p.accesses > 0);
@@ -348,6 +400,7 @@ mod tests {
     fn unobserved_operands_default_far() {
         let mut t = KernelTrace {
             name: "t".into(),
+            kernel_id: 0,
             warps: vec![vec![Instruction::new(OpClass::Alu, &[1, 2], &[3])]],
         };
         let empty = ReuseProfile::default();

@@ -77,6 +77,11 @@ impl EnergyCounts {
         self.counts[kind as usize]
     }
 
+    /// Raw counters in artifact column order (lossless, for fingerprints).
+    pub fn raw(&self) -> [u64; NEVENTS] {
+        self.counts
+    }
+
     /// Raw row in artifact column order (f32 for the AOT path).
     pub fn as_f32_row(&self) -> [f32; NEVENTS] {
         let mut r = [0f32; NEVENTS];

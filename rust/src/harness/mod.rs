@@ -46,14 +46,15 @@ pub use plan::{Plan, SimPoint};
 pub use table::{geomean, mean, Table};
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::config::{GpuConfig, Scheme, SthldMode};
 use crate::energy::EnergyModel;
-use crate::sim::run_benchmark;
+use crate::sim::{run_benchmark, run_workload};
 use crate::stats::Stats;
-use crate::trace::{table2, Suite};
+use crate::trace::{table2, Suite, Workload};
 
 /// Experiment options shared by all figure runners.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -209,14 +210,37 @@ impl Runner {
         key: u64,
         make: impl FnOnce(&ExpOpts) -> GpuConfig,
     ) -> Stats {
-        let k = (bench.to_string(), scheme, key);
+        self.run_workload_cfg_key(&Workload::builtin(bench), scheme, key, make)
+    }
+
+    /// Simulate (cached) a `.mtrace` file with the default config for
+    /// `scheme` — the file-backed counterpart of [`Runner::run`].
+    pub fn run_trace(&self, path: &Path, scheme: Scheme) -> Stats {
+        self.run_workload_cfg_key(&Workload::trace_file(path), scheme, 0, |o| {
+            o.config(scheme)
+        })
+    }
+
+    /// Simulate (cached) an arbitrary workload source. Trace-file points
+    /// are keyed by `trace:<path>`, so they can never collide with
+    /// registry benchmark names in the memo cache.
+    pub fn run_workload_cfg_key(
+        &self,
+        workload: &Workload,
+        scheme: Scheme,
+        key: u64,
+        make: impl FnOnce(&ExpOpts) -> GpuConfig,
+    ) -> Stats {
+        let name = workload.cache_name();
+        let k = (name.clone(), scheme, key);
         if let Some(s) = self.cache.lock().unwrap().get(&k) {
             return s.clone();
         }
         let cfg = make(&self.opts);
         let t0 = Instant::now();
-        let stats = run_benchmark(&cfg, bench, self.opts.profile_warps);
-        plan::log_point(bench, scheme, key, &stats, t0.elapsed().as_secs_f64());
+        let stats = run_workload(&cfg, workload, self.opts.profile_warps)
+            .unwrap_or_else(|e| panic!("[{name}] {e}"));
+        plan::log_point(&name, scheme, key, &stats, t0.elapsed().as_secs_f64());
         self.cache.lock().unwrap().insert(k, stats.clone());
         stats
     }

@@ -16,31 +16,39 @@
 //! `rust/tests/parallel_determinism.rs`).
 
 use std::collections::HashSet;
+use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
 use super::{ExpOpts, Runner};
 use crate::config::{GpuConfig, Scheme};
-use crate::sim::run_benchmark;
+use crate::sim::run_workload;
 use crate::stats::Stats;
+use crate::trace::Workload;
 
 /// One independent simulation of a figure's work plan.
 #[derive(Debug, Clone)]
 pub struct SimPoint {
-    /// Table II benchmark name.
-    pub bench: String,
     /// Scheme under test.
     pub scheme: Scheme,
     /// Variant key distinguishing customised configs (0 = scheme default).
     pub key: u64,
     /// Fully-resolved simulator configuration for this point.
     pub cfg: GpuConfig,
+    /// Where the instruction streams come from (builtin vs. trace file).
+    pub workload: Workload,
 }
 
 impl SimPoint {
+    /// Display label: the registry name, or `trace:<path>` for file-backed
+    /// points.
+    pub fn label(&self) -> String {
+        self.workload.cache_name()
+    }
+
     fn cache_key(&self) -> (String, Scheme, u64) {
-        (self.bench.clone(), self.scheme, self.key)
+        (self.workload.cache_name(), self.scheme, self.key)
     }
 }
 
@@ -76,13 +84,27 @@ impl Plan {
         key: u64,
         make: impl FnOnce(&ExpOpts) -> GpuConfig,
     ) {
+        self.add_workload(Workload::builtin(bench), scheme, key, make);
+    }
+
+    /// Add a `.mtrace`-file point with the default config for `scheme` —
+    /// the counterpart of [`Runner::run_trace`]. Trace points cache and
+    /// shard like any other point.
+    pub fn add_trace(&mut self, path: &Path, scheme: Scheme) {
+        self.add_workload(Workload::trace_file(path), scheme, 0, |o| o.config(scheme));
+    }
+
+    /// Add a point backed by an arbitrary workload source — the
+    /// counterpart of [`Runner::run_workload_cfg_key`].
+    pub fn add_workload(
+        &mut self,
+        workload: Workload,
+        scheme: Scheme,
+        key: u64,
+        make: impl FnOnce(&ExpOpts) -> GpuConfig,
+    ) {
         let cfg = make(&self.opts);
-        self.points.push(SimPoint {
-            bench: bench.to_string(),
-            scheme,
-            key,
-            cfg,
-        });
+        self.points.push(SimPoint { scheme, key, cfg, workload });
     }
 
     /// Declared points, in order.
@@ -145,7 +167,9 @@ impl Runner {
         if jobs <= 1 {
             // serial escape hatch: exactly the repeated-miss path
             for p in todo {
-                self.run_cfg_key(&p.bench, p.scheme, p.key, |_| p.cfg.clone());
+                self.run_workload_cfg_key(&p.workload, p.scheme, p.key, |_| {
+                    p.cfg.clone()
+                });
             }
             return;
         }
@@ -163,7 +187,8 @@ impl Runner {
                     }
                     let p = todo[i];
                     let t0 = Instant::now();
-                    let stats = run_benchmark(&p.cfg, &p.bench, profile_warps);
+                    let stats = run_workload(&p.cfg, &p.workload, profile_warps)
+                        .unwrap_or_else(|e| panic!("[{}] {e}", p.label()));
                     results.lock().unwrap()[i] =
                         Some((stats, t0.elapsed().as_secs_f64()));
                 });
@@ -175,7 +200,7 @@ impl Runner {
         let mut cache = self.cache.lock().unwrap();
         for (p, slot) in todo.iter().zip(results) {
             let (stats, dt) = slot.expect("every claimed point completes");
-            log_point(&p.bench, p.scheme, p.key, &stats, dt);
+            log_point(&p.label(), p.scheme, p.key, &stats, dt);
             cache.insert(p.cache_key(), stats);
         }
     }

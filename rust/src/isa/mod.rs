@@ -55,7 +55,7 @@ impl OpClass {
         )
     }
 
-    /// Short human tag used by reports.
+    /// Short human tag used by reports and the `.mtrace` format.
     pub fn tag(self) -> &'static str {
         match self {
             OpClass::Alu => "ALU",
@@ -67,6 +67,23 @@ impl OpClass {
             OpClass::Ctrl => "CTRL",
             OpClass::Exit => "EXIT",
         }
+    }
+
+    /// All classes, in `repr` order.
+    pub const ALL: [OpClass; 8] = [
+        OpClass::Alu,
+        OpClass::Sfu,
+        OpClass::LdGlobal,
+        OpClass::StGlobal,
+        OpClass::LdShared,
+        OpClass::Mma,
+        OpClass::Ctrl,
+        OpClass::Exit,
+    ];
+
+    /// Inverse of [`OpClass::tag`] (the `.mtrace` parse direction).
+    pub fn from_tag(tag: &str) -> Option<OpClass> {
+        OpClass::ALL.into_iter().find(|c| c.tag() == tag)
     }
 }
 
@@ -207,6 +224,15 @@ mod tests {
         assert!(i.dst_is_near(0));
         i.set_src_near(0, false);
         assert!(!i.src_is_near(0));
+    }
+
+    #[test]
+    fn tags_roundtrip_through_from_tag() {
+        for c in OpClass::ALL {
+            assert_eq!(OpClass::from_tag(c.tag()), Some(c));
+        }
+        assert_eq!(OpClass::from_tag("NOPE"), None);
+        assert_eq!(OpClass::from_tag("alu"), None, "tags are case-sensitive");
     }
 
     #[test]

@@ -2,8 +2,11 @@
 //!
 //! Subcommands:
 //!   simulate <bench>   run one benchmark under one scheme, print stats
+//!                      (`--trace F` replays a `.mtrace` file instead)
 //!   annotate <bench>   run the compiler pass; `--engine pjrt` uses the AOT
 //!                      Pallas artifact through the PJRT runtime
+//!   trace record       serialise a builtin workload to a `.mtrace` file
+//!   trace info         inspect a `.mtrace` file
 //!   fig <id>           regenerate a paper figure (1,2,7,9,10,12..17)
 //!   headline           the abstract's headline comparison
 //!   list               list benchmarks and schemes
@@ -12,14 +15,17 @@
 //! `--jobs N` / `--serial` (experiment shard count),
 //! `-s key=value` (any `config::GpuConfig` key).
 
+use std::path::Path;
 use std::process::ExitCode;
 
 use malekeh::cli::Cli;
 use malekeh::config::{GpuConfig, Scheme};
 use malekeh::energy::EnergyModel;
 use malekeh::harness::{self, ExpOpts, Runner};
-use malekeh::sim::run_benchmark;
-use malekeh::trace::{KernelTrace, BENCHMARKS};
+use malekeh::isa::OpClass;
+use malekeh::sim::{run_benchmark, run_trace};
+use malekeh::stats::Stats;
+use malekeh::trace::{self, io as trace_io, KernelTrace, Transform, BENCHMARKS};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -37,6 +43,7 @@ fn run(args: &[String]) -> Result<(), String> {
     match cli.command.as_str() {
         "simulate" => cmd_simulate(&cli),
         "annotate" => cmd_annotate(&cli),
+        "trace" => cmd_trace(&cli),
         "fig" => cmd_fig(&cli),
         "headline" => cmd_headline(&cli),
         "list" => cmd_list(),
@@ -56,14 +63,19 @@ fn print_help() {
          \n\
          COMMANDS:\n\
            simulate <bench> [--scheme S] [-s k=v]...   simulate one benchmark\n\
+           simulate --trace <file> [--scheme S] [--reannotate]   replay a .mtrace\n\
            annotate <bench> [--engine rust|pjrt]       compiler reuse pass\n\
+           trace record <bench> --out <file> [--sms N] [--warps N] [--seed N]\n\
+                 [--kernel-id K] [--annotate] [--subsample K] [--window S:L]\n\
+           trace info <file>                           inspect a .mtrace file\n\
            fig <1|2|7|9|10|12|13|14|15|16|17> [--quick|--full] [--jobs N|--serial]\n\
            headline [--quick|--full] [--jobs N|--serial]   abstract's comparison\n\
            list                                        benchmarks + schemes\n\
          \n\
          Figure simulations shard across worker threads (--jobs N, default\n\
          one per core); --serial forces the single-thread path. Output\n\
-         tables are bit-identical at any worker count."
+         tables are bit-identical at any worker count. Recorded traces\n\
+         replay bit-identically to their builtin run (docs/TRACES.md)."
     );
 }
 
@@ -82,18 +94,42 @@ fn build_config(cli: &Cli) -> Result<GpuConfig, String> {
 }
 
 fn cmd_simulate(cli: &Cli) -> Result<(), String> {
-    let bench = cli
-        .positional
-        .first()
-        .ok_or("usage: simulate <bench>")?
-        .as_str();
     let cfg = build_config(cli)?;
     let profile_warps = cli.opt_num("profile-warps", 2usize)?;
     let t0 = std::time::Instant::now();
-    let stats = run_benchmark(&cfg, bench, profile_warps);
+    let (label, stats): (String, Stats) = if let Some(file) = cli.options.get("trace")
+    {
+        let path = Path::new(file);
+        let loaded = trace_io::read_path(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        // `simulate <bench> --trace <file>` is allowed, but the file must
+        // actually be a recording of <bench> — otherwise the output would
+        // masquerade as a builtin run of the named benchmark
+        if let Some(bench) = cli.positional.first() {
+            if *bench != loaded.name {
+                return Err(format!(
+                    "--trace {file} records kernel {:?}, not {bench:?}; \
+                     omit the benchmark argument to replay it as-is",
+                    loaded.name
+                ));
+            }
+        }
+        let label = loaded.name.clone();
+        // --reannotate discards recorded near/far bits and re-runs the
+        // compiler pass under the current config
+        let force = cli.has_flag("reannotate");
+        (label, run_trace(&cfg, loaded, profile_warps, force))
+    } else {
+        let bench = cli
+            .positional
+            .first()
+            .ok_or("usage: simulate <bench> (or simulate --trace <file>)")?
+            .as_str();
+        (bench.to_string(), run_benchmark(&cfg, bench, profile_warps))
+    };
     let dt = t0.elapsed().as_secs_f64();
     let model = EnergyModel::for_config(&cfg);
-    println!("benchmark            {bench}");
+    println!("benchmark            {label}");
     println!("scheme               {}", cfg.scheme);
     println!("cycles               {}", stats.cycles);
     println!("instructions         {}", stats.instructions);
@@ -109,7 +145,130 @@ fn cmd_simulate(cli: &Cli) -> Result<(), String> {
     println!("waiting stalls       {}", stats.waiting_stalls);
     println!("CCU flushes          {}", stats.ccu_flushes);
     println!("RF dynamic energy    {:.0} (relative units)", model.total(&stats.energy));
+    println!("stats fingerprint    {:016x}", stats.fingerprint());
     println!("sim wall time        {dt:.2}s ({:.2} Minstr/s)", stats.instructions as f64 / dt / 1e6);
+    Ok(())
+}
+
+// ------------------------------ trace I/O -----------------------------------
+
+fn cmd_trace(cli: &Cli) -> Result<(), String> {
+    let sub = cli
+        .positional
+        .first()
+        .ok_or("usage: trace <record|info> ...")?
+        .as_str();
+    match sub {
+        "record" => cmd_trace_record(cli),
+        "info" => cmd_trace_info(cli),
+        other => Err(format!("unknown trace subcommand {other:?} (record|info)")),
+    }
+}
+
+/// Parse a `--window start:len` spec.
+fn parse_window(spec: &str) -> Result<Transform, String> {
+    let (a, b) = spec
+        .split_once(':')
+        .ok_or_else(|| format!("bad --window {spec:?} (want start:len)"))?;
+    let start = a.parse().map_err(|_| format!("bad window start {a:?}"))?;
+    let len = b.parse().map_err(|_| format!("bad window length {b:?}"))?;
+    Ok(Transform::InstructionWindow { start, len })
+}
+
+fn cmd_trace_record(cli: &Cli) -> Result<(), String> {
+    let bench_name = cli
+        .positional
+        .get(1)
+        .ok_or("usage: trace record <bench> --out <file>")?;
+    let out = cli
+        .options
+        .get("out")
+        .ok_or("trace record requires --out <file>")?;
+    let bench = trace::find(bench_name)
+        .ok_or_else(|| format!("unknown bench {bench_name}"))?;
+    // defaults mirror `simulate` (2 SMs x 32 warps, seed 0xC0FFEE), so a
+    // raw recording replays bit-identically to the builtin run
+    let sms = cli.opt_num("sms", 2usize)?;
+    let warps =
+        cli.opt_num("warps", sms * GpuConfig::table1_baseline().warps_per_sm)?;
+    let seed = cli.opt_num("seed", 0xC0FFEEu64)?;
+    let kernel_id = cli.opt_num("kernel-id", 0u32)?;
+    if kernel_id > trace::MAX_KERNEL_ID {
+        return Err(format!(
+            "--kernel-id {kernel_id} exceeds the addressable maximum {}",
+            trace::MAX_KERNEL_ID
+        ));
+    }
+    let mut t = KernelTrace::generate_kernel(bench, warps, seed, kernel_id);
+    if cli.has_flag("annotate") {
+        let rthld = cli.opt_num("rthld", malekeh::compiler::RTHLD)?;
+        let pw = cli.opt_num("profile-warps", 2usize)?;
+        malekeh::compiler::annotate_trace(&mut t, pw, rthld);
+    }
+    let mut transforms: Vec<Transform> = Vec::new();
+    if let Some(k) = cli.options.get("subsample") {
+        let keep_one_in =
+            k.parse().map_err(|_| format!("bad --subsample {k:?}"))?;
+        transforms.push(Transform::WarpSubsample { keep_one_in });
+    }
+    if let Some(spec) = cli.options.get("window") {
+        transforms.push(parse_window(spec)?);
+    }
+    let t = trace_io::apply_all(&t, &transforms);
+    trace_io::write_path(Path::new(out.as_str()), &t)
+        .map_err(|e| format!("{out}: {e}"))?;
+    println!(
+        "recorded `{}` (kernel {}): {} warps, {} instructions -> {}",
+        t.name,
+        t.kernel_id,
+        t.warps.len(),
+        t.total_instructions(),
+        out
+    );
+    Ok(())
+}
+
+fn cmd_trace_info(cli: &Cli) -> Result<(), String> {
+    let file = cli.positional.get(1).ok_or("usage: trace info <file>")?;
+    let t = trace_io::read_path(Path::new(file.as_str()))
+        .map_err(|e| format!("{file}: {e}"))?;
+    let total = t.total_instructions();
+    let (mut operands, mut near) = (0u64, 0u64);
+    let mut by_class = [0u64; OpClass::ALL.len()];
+    for i in t.warps.iter().flatten() {
+        by_class[i.op as usize] += 1;
+        operands += i.noperands() as u64;
+        near += u64::from(i.src_near.count_ones()) + u64::from(i.dst_near.count_ones());
+    }
+    let (min_w, max_w) = t
+        .warps
+        .iter()
+        .fold((usize::MAX, 0usize), |(lo, hi), w| (lo.min(w.len()), hi.max(w.len())));
+    println!("kernel               {}", t.name);
+    println!("kernel id            {}", t.kernel_id);
+    println!("warps                {}", t.warps.len());
+    println!("instructions         {total}");
+    if !t.warps.is_empty() {
+        println!("per-warp range       {min_w}..={max_w}");
+    }
+    println!("register operands    {operands}");
+    println!(
+        "annotated            {} ({})",
+        if t.has_annotations() { "yes" } else { "no" },
+        if operands == 0 {
+            "no operands".to_string()
+        } else {
+            format!("{:.1}% near", near as f64 / operands as f64 * 100.0)
+        }
+    );
+    print!("opclass mix         ");
+    for c in OpClass::ALL {
+        let n = by_class[c as usize];
+        if n > 0 {
+            print!(" {}:{:.1}%", c.tag(), n as f64 / total.max(1) as f64 * 100.0);
+        }
+    }
+    println!();
     Ok(())
 }
 

@@ -9,7 +9,7 @@ use crate::sim::memory::{L1Cache, SharedMemorySystem};
 use crate::sim::sthld::SthldController;
 use crate::sim::subcore::SubCore;
 use crate::stats::Stats;
-use crate::trace::KernelTrace;
+use crate::trace::{KernelTrace, Workload};
 
 /// One streaming multiprocessor: sub-cores + private L1D.
 pub struct Sm {
@@ -224,19 +224,55 @@ impl Simulator {
     }
 }
 
+/// Annotate (when needed) + simulate an already-materialised trace.
+///
+/// The compiler pass runs when `force_annotate` is set or the trace
+/// carries no near/far bits (a raw recording); a trace recorded
+/// post-annotation keeps its bits verbatim. `profile_warps == 0` selects
+/// the precise oracle pass.
+pub fn run_trace(
+    cfg: &GpuConfig,
+    mut trace: KernelTrace,
+    profile_warps: usize,
+    force_annotate: bool,
+) -> Stats {
+    if force_annotate || !trace.has_annotations() {
+        crate::compiler::annotate_trace(&mut trace, profile_warps, cfg.rthld);
+    }
+    Simulator::new(cfg, &trace).run()
+}
+
+/// Load + annotate + simulate one [`Workload`] under `cfg`. Builtin
+/// workloads are always annotated fresh; `.mtrace`-file workloads keep
+/// any recorded annotation bits (and get the same compiler pass as the
+/// builtin path when the file carries none — which is what makes a raw
+/// recording replay bit-identically to its generator run).
+pub fn run_workload(
+    cfg: &GpuConfig,
+    workload: &Workload,
+    profile_warps: usize,
+) -> Result<Stats, String> {
+    let nwarps = cfg.num_sms * cfg.warps_per_sm;
+    let trace = workload.load(nwarps, cfg.seed)?;
+    if trace.warps.len() > nwarps {
+        // the simulator drops warps beyond the GPU's slots — loud, because
+        // a truncated replay can never match the recording's source run
+        eprintln!(
+            "warning: {} carries {} warps but the config has {nwarps} slots; \
+             extra warps are dropped (raise --sms or subsample the trace)",
+            workload.cache_name(),
+            trace.warps.len()
+        );
+    }
+    let force = matches!(workload, Workload::Builtin(_));
+    Ok(run_trace(cfg, trace, profile_warps, force))
+}
+
 /// Convenience: generate + annotate + simulate one benchmark under `cfg`.
 /// `profile_warps` = 0 uses the precise oracle annotation.
 pub fn run_benchmark(cfg: &GpuConfig, bench_name: &str, profile_warps: usize) -> Stats {
-    let bench = crate::trace::find(bench_name)
-        .unwrap_or_else(|| panic!("unknown benchmark {bench_name}"));
-    let nwarps = cfg.num_sms * cfg.warps_per_sm;
-    let mut trace = KernelTrace::generate(bench, nwarps, cfg.seed);
-    if profile_warps == 0 {
-        crate::compiler::annotate_precise(&mut trace, cfg.rthld);
-    } else {
-        crate::compiler::profile_and_annotate(&mut trace, profile_warps, cfg.rthld);
-    }
-    Simulator::new(cfg, &trace).run()
+    run_workload(cfg, &Workload::builtin(bench_name), profile_warps)
+        .unwrap_or_else(|e| panic!("{e}"))
 }
 
 #[cfg(test)]

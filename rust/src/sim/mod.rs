@@ -9,5 +9,5 @@ pub mod sthld;
 pub mod subcore;
 pub mod warp;
 
-pub use gpu::{run_benchmark, Simulator};
+pub use gpu::{run_benchmark, run_trace, run_workload, Simulator};
 pub use sthld::{SthldController, SthldState};

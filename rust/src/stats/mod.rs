@@ -162,6 +162,52 @@ impl Stats {
         }
     }
 
+    /// Order-stable FNV-1a digest over every deterministic counter,
+    /// including the energy event matrix and the interval traces: two runs
+    /// are bit-identical iff their fingerprints match. Used by the trace
+    /// round-trip tests, the CI record/replay check, and the
+    /// parallel-scaling bench.
+    pub fn fingerprint(&self) -> u64 {
+        fn mix(h: u64, v: u64) -> u64 {
+            (h ^ v).wrapping_mul(0x0100_0000_01B3)
+        }
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for v in [
+            self.cycles,
+            self.instructions,
+            self.warps_retired,
+            self.rf_reads,
+            self.rf_bank_reads,
+            self.rf_cache_reads,
+            self.rf_writes,
+            self.rf_cache_writes,
+            self.cache_write_reused,
+            self.bank_conflict_wait,
+            self.sched_issued,
+            self.sched_stall_ready,
+            self.sched_stall_empty,
+            self.waiting_stalls,
+            self.collector_full_stalls,
+            self.ccu_flushes,
+            self.l1_accesses,
+            self.l1_hits,
+            self.l2_accesses,
+            self.l2_hits,
+        ] {
+            h = mix(h, v);
+        }
+        for v in self.energy.raw() {
+            h = mix(h, v);
+        }
+        for &v in &self.interval_ipc {
+            h = mix(h, v.to_bits());
+        }
+        for &v in &self.sthld_trace {
+            h = mix(h, u64::from(v));
+        }
+        h
+    }
+
     /// Merge another counter set into this one (SM-level aggregation).
     /// `cycles` takes the max (SMs run in lock-step wall-clock), counters
     /// add, interval traces concatenate only if empty here.
@@ -255,6 +301,20 @@ mod tests {
         assert_eq!(a.cycles, 100);
         assert_eq!(a.instructions, 30);
         assert_eq!(a.rf_reads, 12);
+    }
+
+    #[test]
+    fn fingerprint_tracks_every_counter() {
+        let mut s = Stats::new();
+        s.cycles = 100;
+        s.instructions = 250;
+        let base = s.fingerprint();
+        assert_eq!(base, s.clone().fingerprint(), "pure function of counters");
+        s.rf_cache_reads += 1;
+        assert_ne!(base, s.fingerprint(), "counter change must show");
+        s.rf_cache_reads -= 1;
+        s.interval_ipc.push(1.25);
+        assert_ne!(base, s.fingerprint(), "interval trace change must show");
     }
 
     #[test]

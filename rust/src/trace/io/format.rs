@@ -1,0 +1,306 @@
+//! `.mtrace` line grammar: magic line, kernel header, and one-instruction-
+//! per-line serialisation.
+//!
+//! The format is textual and line-oriented (like Accel-sim's SASS traces):
+//!
+//! ```text
+//! mtrace v1
+//! # comments and blank lines are ignored
+//! kernel <name> id=<kernel_id> warps=<nwarps>
+//! warp 0
+//! <TAG> [d<r>,<r>] [s<r>,...] [n<srcmask>/<dstmask>] [@0x<line_addr>]
+//! ...
+//! EXIT
+//! warp 1
+//! ...
+//! ```
+//!
+//! Instruction fields after the opclass tag may appear in any order; the
+//! writer always emits `d`, `s`, `n`, `@`. `d`/`s` carry comma-separated
+//! decimal register ids, `n` carries the compiler's near/far bitmasks
+//! (decimal, bit *i* = operand *i* is near-reuse), `@` the 128B-line
+//! memory address in hex. Fields whose value is empty/zero are omitted,
+//! so `EXIT` and `CTRL` lines are just the tag. The full grammar with a
+//! worked example lives in `docs/TRACES.md`.
+
+use crate::isa::{Instruction, OpClass, MAX_DST, MAX_SRC};
+
+/// First token of the first non-comment line of every `.mtrace` file.
+pub const MAGIC: &str = "mtrace";
+/// Format version this build writes and accepts.
+pub const VERSION: u32 = 1;
+
+/// Kernel metadata carried by the `kernel` header line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceHeader {
+    /// Kernel / benchmark chart name (non-empty, no whitespace).
+    pub name: String,
+    /// Kernel id (multi-kernel files keep separate address spaces).
+    pub kernel_id: u32,
+    /// Number of `warp` sections that follow.
+    pub nwarps: usize,
+}
+
+/// Render the magic line (`mtrace v1`).
+pub fn format_magic() -> String {
+    format!("{MAGIC} v{VERSION}")
+}
+
+/// Parse and version-check the magic line.
+pub fn parse_magic(line: &str) -> Result<u32, String> {
+    let mut toks = line.split_whitespace();
+    if toks.next() != Some(MAGIC) {
+        return Err(format!("not an mtrace file (first line {line:?})"));
+    }
+    let v: u32 = toks
+        .next()
+        .and_then(|t| t.strip_prefix('v'))
+        .and_then(|t| t.parse().ok())
+        .ok_or_else(|| format!("bad version token in {line:?} (want v{VERSION})"))?;
+    if v != VERSION {
+        return Err(format!("unsupported mtrace version v{v} (this build reads v{VERSION})"));
+    }
+    Ok(v)
+}
+
+/// Kernel names must survive whitespace-tokenised parsing.
+pub fn validate_name(name: &str) -> Result<(), String> {
+    if name.is_empty() || name.chars().any(|c| c.is_whitespace()) {
+        return Err(format!(
+            "kernel name {name:?} must be non-empty and contain no whitespace"
+        ));
+    }
+    Ok(())
+}
+
+/// Render the kernel header line.
+pub fn format_header(h: &TraceHeader) -> String {
+    format!("kernel {} id={} warps={}", h.name, h.kernel_id, h.nwarps)
+}
+
+/// Parse a `kernel <name> key=value...` header line.
+pub fn parse_header(line: &str) -> Result<TraceHeader, String> {
+    let mut toks = line.split_whitespace();
+    if toks.next() != Some("kernel") {
+        return Err(format!("expected kernel header, got {line:?}"));
+    }
+    let name = toks
+        .next()
+        .ok_or_else(|| "kernel header missing a name".to_string())?
+        .to_string();
+    validate_name(&name)?;
+    let mut kernel_id: Option<u32> = None;
+    let mut nwarps: Option<usize> = None;
+    for t in toks {
+        let (k, v) = t
+            .split_once('=')
+            .ok_or_else(|| format!("bad header field {t:?} (want key=value)"))?;
+        match k {
+            "id" => {
+                kernel_id =
+                    Some(v.parse().map_err(|_| format!("bad kernel id {v:?}"))?)
+            }
+            "warps" => {
+                nwarps =
+                    Some(v.parse().map_err(|_| format!("bad warp count {v:?}"))?)
+            }
+            other => return Err(format!("unknown header field {other:?}")),
+        }
+    }
+    Ok(TraceHeader {
+        name,
+        kernel_id: kernel_id.ok_or("kernel header missing id=")?,
+        nwarps: nwarps.ok_or("kernel header missing warps=")?,
+    })
+}
+
+/// Serialise one instruction to its `.mtrace` line.
+pub fn format_instruction(i: &Instruction) -> String {
+    let mut s = String::from(i.op.tag());
+    if i.ndst > 0 {
+        s.push_str(" d");
+        push_reg_list(&mut s, i.dests());
+    }
+    if i.nsrc > 0 {
+        s.push_str(" s");
+        push_reg_list(&mut s, i.sources());
+    }
+    if i.src_near != 0 || i.dst_near != 0 {
+        s.push_str(&format!(" n{}/{}", i.src_near, i.dst_near));
+    }
+    if i.line_addr != 0 {
+        s.push_str(&format!(" @0x{:x}", i.line_addr));
+    }
+    s
+}
+
+fn push_reg_list(s: &mut String, regs: &[u8]) {
+    for (k, r) in regs.iter().enumerate() {
+        if k > 0 {
+            s.push(',');
+        }
+        s.push_str(&r.to_string());
+    }
+}
+
+fn parse_reg_list(s: &str, what: &str) -> Result<Vec<u8>, String> {
+    if s.is_empty() {
+        return Err(format!("empty {what} register list"));
+    }
+    s.split(',')
+        .map(|r| {
+            r.parse::<u8>()
+                .map_err(|_| format!("bad {what} register id {r:?} (want 0..=255)"))
+        })
+        .collect()
+}
+
+/// Parse one instruction line (already stripped of comments/whitespace).
+pub fn parse_instruction(line: &str) -> Result<Instruction, String> {
+    let mut toks = line.split_whitespace();
+    let tag = toks.next().ok_or("empty instruction line")?;
+    let op = OpClass::from_tag(tag)
+        .ok_or_else(|| format!("unknown opclass tag {tag:?}"))?;
+    let mut srcs: Option<Vec<u8>> = None;
+    let mut dsts: Option<Vec<u8>> = None;
+    let mut near: Option<(u8, u8)> = None;
+    let mut addr: Option<u32> = None;
+    for t in toks {
+        if let Some(rest) = t.strip_prefix('d') {
+            if dsts.replace(parse_reg_list(rest, "destination")?).is_some() {
+                return Err("duplicate destination field".into());
+            }
+        } else if let Some(rest) = t.strip_prefix('s') {
+            if srcs.replace(parse_reg_list(rest, "source")?).is_some() {
+                return Err("duplicate source field".into());
+            }
+        } else if let Some(rest) = t.strip_prefix('n') {
+            let (a, b) = rest
+                .split_once('/')
+                .ok_or_else(|| format!("bad near field {t:?} (want n<src>/<dst>)"))?;
+            let sn = a
+                .parse()
+                .map_err(|_| format!("bad source near mask {a:?}"))?;
+            let dn = b
+                .parse()
+                .map_err(|_| format!("bad destination near mask {b:?}"))?;
+            if near.replace((sn, dn)).is_some() {
+                return Err("duplicate near field".into());
+            }
+        } else if let Some(rest) = t.strip_prefix('@') {
+            let hex = rest.strip_prefix("0x").or_else(|| rest.strip_prefix("0X"));
+            let a = u32::from_str_radix(hex.unwrap_or(rest), 16)
+                .map_err(|_| format!("bad line address {rest:?}"))?;
+            if addr.replace(a).is_some() {
+                return Err("duplicate address field".into());
+            }
+        } else {
+            return Err(format!("unknown instruction field {t:?}"));
+        }
+    }
+    let srcs = srcs.unwrap_or_default();
+    let dsts = dsts.unwrap_or_default();
+    let (src_near, dst_near) = near.unwrap_or((0, 0));
+    let line_addr = addr.unwrap_or(0);
+    if srcs.len() > MAX_SRC {
+        return Err(format!("{} sources exceed the ISA bound {MAX_SRC}", srcs.len()));
+    }
+    if dsts.len() > MAX_DST {
+        return Err(format!(
+            "{} destinations exceed the ISA bound {MAX_DST}",
+            dsts.len()
+        ));
+    }
+    if u32::from(src_near) >= (1u32 << srcs.len()) {
+        return Err(format!(
+            "near mask {src_near} names sources beyond the {} declared",
+            srcs.len()
+        ));
+    }
+    if u32::from(dst_near) >= (1u32 << dsts.len()) {
+        return Err(format!(
+            "near mask {dst_near} names destinations beyond the {} declared",
+            dsts.len()
+        ));
+    }
+    if line_addr != 0 && !op.is_mem() {
+        return Err(format!("{tag} cannot carry a memory address"));
+    }
+    let mut i = Instruction::new(op, &srcs, &dsts);
+    i.src_near = src_near;
+    i.dst_near = dst_near;
+    i.line_addr = line_addr;
+    Ok(i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn magic_roundtrip() {
+        assert_eq!(parse_magic(&format_magic()).unwrap(), VERSION);
+        assert!(parse_magic("mtrace v999").is_err());
+        assert!(parse_magic("nottrace v1").is_err());
+        assert!(parse_magic("mtrace").is_err());
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let h = TraceHeader { name: "b+tree".into(), kernel_id: 3, nwarps: 64 };
+        assert_eq!(parse_header(&format_header(&h)).unwrap(), h);
+        assert!(parse_header("kernel").is_err());
+        assert!(parse_header("kernel x id=1").is_err(), "missing warps=");
+        assert!(parse_header("kernel x warps=4").is_err(), "missing id=");
+        assert!(parse_header("kernel x id=1 warps=4 bogus=2").is_err());
+    }
+
+    #[test]
+    fn instruction_roundtrip_all_fields() {
+        let mut i = Instruction::mem(OpClass::LdGlobal, &[7], &[9], 0xBEEF);
+        i.set_src_near(0, true);
+        i.set_dst_near(0, true);
+        let line = format_instruction(&i);
+        assert_eq!(line, "LDG d9 s7 n1/1 @0xbeef");
+        assert_eq!(parse_instruction(&line).unwrap(), i);
+    }
+
+    #[test]
+    fn instruction_roundtrip_minimal() {
+        let exit = Instruction::new(OpClass::Exit, &[], &[]);
+        assert_eq!(format_instruction(&exit), "EXIT");
+        assert_eq!(parse_instruction("EXIT").unwrap(), exit);
+        let mma = Instruction::new(OpClass::Mma, &[2, 3, 4, 5, 10, 11], &[10, 11]);
+        assert_eq!(
+            parse_instruction(&format_instruction(&mma)).unwrap(),
+            mma
+        );
+    }
+
+    #[test]
+    fn instruction_fields_any_order() {
+        let a = parse_instruction("LDG d9 s7 @0x10").unwrap();
+        let b = parse_instruction("LDG @0x10 s7 d9").unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn instruction_rejects_malformed() {
+        assert!(parse_instruction("BOGUS d1").is_err(), "unknown tag");
+        assert!(parse_instruction("ALU d1,2,3").is_err(), "too many dsts");
+        assert!(
+            parse_instruction("ALU s1,2,3,4,5,6,7").is_err(),
+            "too many srcs"
+        );
+        assert!(parse_instruction("ALU d1 s2 n4/0").is_err(), "near mask oob");
+        assert!(parse_instruction("ALU d1 @0x4").is_err(), "addr on non-mem");
+        assert!(parse_instruction("ALU d999").is_err(), "register oob");
+        assert!(parse_instruction("ALU x7").is_err(), "unknown field");
+        assert!(parse_instruction("LDG d1 @zz").is_err(), "bad hex");
+        assert!(
+            parse_instruction("LDG d1 d2 @0x4").is_err(),
+            "duplicate field must not silently last-win"
+        );
+        assert!(parse_instruction("LDG d1 @0x4 @0x8").is_err(), "dup addr");
+    }
+}

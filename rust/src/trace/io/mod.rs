@@ -1,0 +1,77 @@
+//! Trace I/O subsystem: record, ingest, and replay external kernel traces.
+//!
+//! The paper evaluates Malekeh by replaying real Rodinia/Deepbench SASS
+//! traces through Accel-sim; this module is the equivalent ingestion path
+//! for this reproduction. It defines a textual, Accel-sim-inspired
+//! `.mtrace` format (see `docs/TRACES.md` for the grammar) that carries
+//! everything the simulator consumes — opclass, source/destination
+//! registers, the compiler's near/far annotation bits, and line-granular
+//! memory addresses — so a written trace replays **bit-identically** to
+//! the in-memory [`KernelTrace`](crate::trace::KernelTrace) it came from
+//! (enforced by `rust/tests/trace_roundtrip.rs`).
+//!
+//! Layout:
+//! - [`format`] — line grammar: magic/header/instruction serialisation;
+//! - [`reader`] — streaming parser producing the existing IR;
+//! - [`writer`] — serialiser for any generated (or transformed) trace;
+//! - [`transform`] — composable scenario-scaling transforms (warp
+//!   subsample, instruction window, register remap).
+
+pub mod format;
+pub mod reader;
+pub mod transform;
+pub mod writer;
+
+pub use format::{TraceHeader, MAGIC, VERSION};
+pub use reader::{read, read_path, read_str};
+pub use transform::{apply_all, Transform};
+pub use writer::{write, write_path, write_string};
+
+/// Error from reading or writing `.mtrace` data: an I/O failure, or a
+/// parse/validation error anchored to a 1-based input line (`line == 0`
+/// when the error is not line-specific, e.g. file-open failures or
+/// whole-trace validation).
+#[derive(Debug)]
+pub struct TraceIoError {
+    /// 1-based line number of the offending input (0 = not line-specific).
+    pub line: usize,
+    /// Human-readable description.
+    pub msg: String,
+}
+
+impl TraceIoError {
+    /// Error anchored to input line `line`.
+    pub(crate) fn at(line: usize, msg: impl Into<String>) -> Self {
+        TraceIoError { line, msg: msg.into() }
+    }
+
+    /// Error carrying an underlying I/O failure.
+    pub(crate) fn from_io(e: std::io::Error) -> Self {
+        TraceIoError { line: 0, msg: e.to_string() }
+    }
+}
+
+impl std::fmt::Display for TraceIoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.line == 0 {
+            write!(f, "{}", self.msg)
+        } else {
+            write!(f, "line {}: {}", self.line, self.msg)
+        }
+    }
+}
+
+impl std::error::Error for TraceIoError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_includes_line_when_present() {
+        let e = TraceIoError::at(7, "bad tag");
+        assert_eq!(e.to_string(), "line 7: bad tag");
+        let e = TraceIoError::at(0, "open failed");
+        assert_eq!(e.to_string(), "open failed");
+    }
+}

@@ -1,0 +1,203 @@
+//! Streaming `.mtrace` parser producing the existing [`KernelTrace`] IR.
+//!
+//! The reader consumes any [`BufRead`] line by line (it never buffers the
+//! whole file), validates as it goes, and finishes with whole-trace checks:
+//! the warp count must match the header and every warp stream must end
+//! with exactly one `EXIT` marker — the invariants the simulator's warp
+//! slots rely on.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use super::format::{self, TraceHeader};
+use super::TraceIoError;
+use crate::isa::{Instruction, OpClass};
+use crate::trace::KernelTrace;
+
+/// Read a trace from a file path.
+pub fn read_path(path: &Path) -> Result<KernelTrace, TraceIoError> {
+    let f = File::open(path).map_err(TraceIoError::from_io)?;
+    read(BufReader::new(f))
+}
+
+/// Read a trace from an in-memory string (tests, round-trip checks).
+pub fn read_str(s: &str) -> Result<KernelTrace, TraceIoError> {
+    read(s.as_bytes())
+}
+
+/// Read a trace from any buffered reader.
+pub fn read<R: BufRead>(r: R) -> Result<KernelTrace, TraceIoError> {
+    let mut magic_seen = false;
+    let mut header: Option<TraceHeader> = None;
+    let mut warps: Vec<Vec<Instruction>> = Vec::new();
+    for (n, line) in r.lines().enumerate() {
+        let lineno = n + 1;
+        let line = line.map_err(TraceIoError::from_io)?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        if !magic_seen {
+            format::parse_magic(t).map_err(|m| TraceIoError::at(lineno, m))?;
+            magic_seen = true;
+            continue;
+        }
+        match t.split_whitespace().next() {
+            Some("kernel") => {
+                if header.is_some() {
+                    return Err(TraceIoError::at(lineno, "duplicate kernel header"));
+                }
+                if !warps.is_empty() {
+                    return Err(TraceIoError::at(
+                        lineno,
+                        "kernel header must precede warp sections",
+                    ));
+                }
+                header = Some(
+                    format::parse_header(t)
+                        .map_err(|m| TraceIoError::at(lineno, m))?,
+                );
+            }
+            Some("warp") => {
+                if header.is_none() {
+                    return Err(TraceIoError::at(
+                        lineno,
+                        "warp section before the kernel header",
+                    ));
+                }
+                let id: usize = t
+                    .split_whitespace()
+                    .nth(1)
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| {
+                        TraceIoError::at(lineno, format!("bad warp marker {t:?}"))
+                    })?;
+                if id != warps.len() {
+                    return Err(TraceIoError::at(
+                        lineno,
+                        format!("warp sections must be sequential (got {id}, expected {})", warps.len()),
+                    ));
+                }
+                warps.push(Vec::new());
+            }
+            _ => {
+                let instr = format::parse_instruction(t)
+                    .map_err(|m| TraceIoError::at(lineno, m))?;
+                match warps.last_mut() {
+                    Some(w) => w.push(instr),
+                    None => {
+                        return Err(TraceIoError::at(
+                            lineno,
+                            "instruction outside a warp section",
+                        ))
+                    }
+                }
+            }
+        }
+    }
+    if !magic_seen {
+        return Err(TraceIoError::at(0, "empty trace (missing mtrace magic line)"));
+    }
+    let header = header
+        .ok_or_else(|| TraceIoError::at(0, "trace has no kernel header"))?;
+    if warps.len() != header.nwarps {
+        return Err(TraceIoError::at(
+            0,
+            format!(
+                "header declares {} warps but {} sections follow",
+                header.nwarps,
+                warps.len()
+            ),
+        ));
+    }
+    for (w, stream) in warps.iter().enumerate() {
+        let exits = stream.iter().filter(|i| i.op == OpClass::Exit).count();
+        let ends_with_exit = stream.last().map(|i| i.op) == Some(OpClass::Exit);
+        if exits != 1 || !ends_with_exit {
+            return Err(TraceIoError::at(
+                0,
+                format!("warp {w} must end with exactly one EXIT marker"),
+            ));
+        }
+    }
+    Ok(KernelTrace { name: header.name, kernel_id: header.kernel_id, warps })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_a_minimal_trace() {
+        let text = "\
+mtrace v1
+# a comment
+kernel tiny id=2 warps=2
+warp 0
+LDG d2 @0x100
+
+ALU d3 s2 n1/0
+EXIT
+warp 1
+EXIT
+";
+        let t = read_str(text).unwrap();
+        assert_eq!(t.name, "tiny");
+        assert_eq!(t.kernel_id, 2);
+        assert_eq!(t.warps.len(), 2);
+        assert_eq!(t.warps[0].len(), 3);
+        assert_eq!(t.warps[0][0].line_addr, 0x100);
+        assert!(t.warps[0][1].src_is_near(0));
+        assert_eq!(t.warps[1].len(), 1);
+    }
+
+    #[test]
+    fn rejects_structural_errors() {
+        let cases: [(&str, &str); 7] = [
+            ("", "empty input"),
+            ("mtrace v1\n", "no header"),
+            ("mtrace v1\nkernel k id=0 warps=1\n", "missing warp section"),
+            (
+                "mtrace v1\nkernel k id=0 warps=1\nwarp 0\nALU d1\n",
+                "warp without EXIT",
+            ),
+            (
+                "mtrace v1\nkernel k id=0 warps=1\nwarp 1\nEXIT\n",
+                "non-sequential warp id",
+            ),
+            (
+                "mtrace v1\nkernel k id=0 warps=2\nwarp 0\nEXIT\n",
+                "warp count mismatch",
+            ),
+            (
+                "mtrace v1\nkernel k id=0 warps=1\nALU d1\nwarp 0\nEXIT\n",
+                "instruction outside warp",
+            ),
+        ];
+        for (text, why) in cases {
+            assert!(read_str(text).is_err(), "{why}");
+        }
+    }
+
+    #[test]
+    fn interior_exit_rejected() {
+        let text = "\
+mtrace v1
+kernel k id=0 warps=1
+warp 0
+EXIT
+ALU d1
+EXIT
+";
+        assert!(read_str(text).is_err());
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        let text = "mtrace v1\nkernel k id=0 warps=1\nwarp 0\nBOGUS d1\nEXIT\n";
+        let e = read_str(text).unwrap_err();
+        assert_eq!(e.line, 4);
+        assert!(e.to_string().contains("BOGUS"));
+    }
+}

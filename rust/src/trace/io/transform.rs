@@ -1,0 +1,172 @@
+//! Composable trace transforms for scenario scaling: shrink, slice, or
+//! rename a recorded trace before replaying it.
+//!
+//! Transforms are pure (`&KernelTrace -> KernelTrace`) and compose left to
+//! right with [`apply_all`], so a recorded production trace can be scaled
+//! down for quick sweeps (subsample warps), focused on a phase (slice an
+//! instruction window), or rebased onto a different register allocation
+//! (remap ids) without regenerating anything.
+
+use crate::isa::{Instruction, OpClass, NUM_REGS};
+use crate::trace::KernelTrace;
+
+/// One scenario-scaling transform.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Transform {
+    /// Keep warps `0, k, 2k, ...` — one in `keep_one_in` (values < 1 are
+    /// treated as 1, i.e. keep everything).
+    WarpSubsample {
+        /// Subsampling factor.
+        keep_one_in: usize,
+    },
+    /// Keep the dynamic instruction window `[start, start+len)` of every
+    /// warp (counted over the stream *without* its `EXIT` marker, which is
+    /// re-appended afterwards so the result stays simulable).
+    InstructionWindow {
+        /// First dynamic instruction kept.
+        start: usize,
+        /// Window length in instructions.
+        len: usize,
+    },
+    /// Remap architectural register ids; ids not named by a pair keep
+    /// their value. Near/far bits travel with the operand slot, so the
+    /// annotation survives the rename.
+    RegisterRemap {
+        /// `(from, to)` id pairs.
+        pairs: Vec<(u8, u8)>,
+    },
+}
+
+impl Transform {
+    /// Apply this transform, producing a new trace.
+    pub fn apply(&self, trace: &KernelTrace) -> KernelTrace {
+        let warps = match self {
+            Transform::WarpSubsample { keep_one_in } => {
+                let k = (*keep_one_in).max(1);
+                trace.warps.iter().step_by(k).cloned().collect()
+            }
+            Transform::InstructionWindow { start, len } => trace
+                .warps
+                .iter()
+                .map(|w| {
+                    let body = match w.last() {
+                        Some(i) if i.op == OpClass::Exit => &w[..w.len() - 1],
+                        _ => &w[..],
+                    };
+                    let lo = (*start).min(body.len());
+                    let hi = start.saturating_add(*len).min(body.len());
+                    let mut out = body[lo..hi].to_vec();
+                    out.push(Instruction::new(OpClass::Exit, &[], &[]));
+                    out
+                })
+                .collect(),
+            Transform::RegisterRemap { pairs } => {
+                let mut map: [u8; NUM_REGS] = std::array::from_fn(|i| i as u8);
+                for &(from, to) in pairs {
+                    map[from as usize] = to;
+                }
+                trace
+                    .warps
+                    .iter()
+                    .map(|w| {
+                        w.iter()
+                            .map(|instr| {
+                                let mut i = *instr;
+                                let (ns, nd) = (i.nsrc as usize, i.ndst as usize);
+                                for r in i.srcs.iter_mut().take(ns) {
+                                    *r = map[*r as usize];
+                                }
+                                for r in i.dsts.iter_mut().take(nd) {
+                                    *r = map[*r as usize];
+                                }
+                                i
+                            })
+                            .collect()
+                    })
+                    .collect()
+            }
+        };
+        KernelTrace { name: trace.name.clone(), kernel_id: trace.kernel_id, warps }
+    }
+}
+
+/// Apply a sequence of transforms left to right.
+pub fn apply_all(trace: &KernelTrace, transforms: &[Transform]) -> KernelTrace {
+    let mut t = trace.clone();
+    for tr in transforms {
+        t = tr.apply(&t);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::find;
+
+    fn sample() -> KernelTrace {
+        KernelTrace::generate(find("hotspot").unwrap(), 8, 7)
+    }
+
+    #[test]
+    fn subsample_keeps_every_kth_warp() {
+        let t = sample();
+        let s = Transform::WarpSubsample { keep_one_in: 4 }.apply(&t);
+        assert_eq!(s.warps.len(), 2);
+        assert_eq!(s.warps[0], t.warps[0]);
+        assert_eq!(s.warps[1], t.warps[4]);
+        // factor 0/1 keep everything
+        assert_eq!(
+            Transform::WarpSubsample { keep_one_in: 0 }.apply(&t).warps.len(),
+            8
+        );
+    }
+
+    #[test]
+    fn window_slices_and_reterminates() {
+        let t = sample();
+        let s = Transform::InstructionWindow { start: 5, len: 10 }.apply(&t);
+        for (w, orig) in s.warps.iter().zip(t.warps.iter()) {
+            assert_eq!(w.len(), 11); // 10 instructions + EXIT
+            assert_eq!(w.last().unwrap().op, OpClass::Exit);
+            assert_eq!(&w[..10], &orig[5..15]);
+        }
+        // windows past the end degrade to a bare EXIT
+        let s = Transform::InstructionWindow { start: usize::MAX, len: 10 }.apply(&t);
+        assert!(s.warps.iter().all(|w| w.len() == 1));
+    }
+
+    #[test]
+    fn remap_renames_only_named_ids() {
+        let t = sample();
+        let s = Transform::RegisterRemap { pairs: vec![(2, 200)] }.apply(&t);
+        for (w, orig) in s.warps.iter().zip(t.warps.iter()) {
+            for (a, b) in w.iter().zip(orig.iter()) {
+                assert_eq!(a.op, b.op);
+                assert_eq!(a.src_near, b.src_near, "near bits travel");
+                for (x, y) in a.sources().iter().zip(b.sources().iter()) {
+                    assert_eq!(*x, if *y == 2 { 200 } else { *y });
+                }
+            }
+        }
+        assert!(s
+            .warps
+            .iter()
+            .flatten()
+            .all(|i| !i.sources().contains(&2) && !i.dests().contains(&2)));
+    }
+
+    #[test]
+    fn apply_all_composes_left_to_right() {
+        let t = sample();
+        let out = apply_all(
+            &t,
+            &[
+                Transform::WarpSubsample { keep_one_in: 2 },
+                Transform::InstructionWindow { start: 0, len: 20 },
+            ],
+        );
+        assert_eq!(out.warps.len(), 4);
+        assert!(out.warps.iter().all(|w| w.len() == 21));
+    }
+}

@@ -1,0 +1,111 @@
+//! `.mtrace` serialiser: write any [`KernelTrace`] (generated, annotated,
+//! or transformed) so it can be re-ingested by [`super::reader`].
+//!
+//! Output is fully deterministic — no timestamps or environment state —
+//! so recorded traces are stable across runs and safe to diff in CI.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use super::format::{self, TraceHeader};
+use super::TraceIoError;
+use crate::isa::OpClass;
+use crate::trace::KernelTrace;
+
+/// Serialise to a file path (parent directory must exist).
+pub fn write_path(path: &Path, trace: &KernelTrace) -> Result<(), TraceIoError> {
+    let f = File::create(path).map_err(TraceIoError::from_io)?;
+    let mut w = BufWriter::new(f);
+    write(&mut w, trace)?;
+    w.flush().map_err(TraceIoError::from_io)
+}
+
+/// Serialise to an in-memory string (tests, round-trip checks).
+pub fn write_string(trace: &KernelTrace) -> Result<String, TraceIoError> {
+    let mut buf: Vec<u8> = Vec::new();
+    write(&mut buf, trace)?;
+    Ok(String::from_utf8(buf).expect("mtrace output is ASCII"))
+}
+
+/// Serialise to any writer.
+pub fn write<W: Write>(mut w: W, trace: &KernelTrace) -> Result<(), TraceIoError> {
+    format::validate_name(&trace.name).map_err(|m| TraceIoError::at(0, m))?;
+    for (i, warp) in trace.warps.iter().enumerate() {
+        // mirror the reader's validation so the writer can never emit a
+        // file its own reader rejects
+        let exits = warp.iter().filter(|x| x.op == OpClass::Exit).count();
+        if exits != 1 || warp.last().map(|x| x.op) != Some(OpClass::Exit) {
+            return Err(TraceIoError::at(
+                0,
+                format!("warp {i} must end with exactly one EXIT marker"),
+            ));
+        }
+    }
+    let header = TraceHeader {
+        name: trace.name.clone(),
+        kernel_id: trace.kernel_id,
+        nwarps: trace.warps.len(),
+    };
+    writeln!(w, "{}", format::format_magic()).map_err(TraceIoError::from_io)?;
+    writeln!(w, "{}", format::format_header(&header)).map_err(TraceIoError::from_io)?;
+    for (wi, warp) in trace.warps.iter().enumerate() {
+        writeln!(w, "warp {wi}").map_err(TraceIoError::from_io)?;
+        for instr in warp {
+            writeln!(w, "{}", format::format_instruction(instr))
+                .map_err(TraceIoError::from_io)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reader::read_str;
+    use super::*;
+    use crate::isa::Instruction;
+
+    fn tiny() -> KernelTrace {
+        let mut ld = Instruction::mem(OpClass::LdGlobal, &[], &[2], 0x40);
+        ld.set_dst_near(0, true);
+        KernelTrace {
+            name: "tiny".into(),
+            kernel_id: 1,
+            warps: vec![vec![
+                ld,
+                Instruction::new(OpClass::Alu, &[2], &[3]),
+                Instruction::new(OpClass::Exit, &[], &[]),
+            ]],
+        }
+    }
+
+    #[test]
+    fn write_then_read_is_identity() {
+        let t = tiny();
+        let text = write_string(&t).unwrap();
+        let back = read_str(&text).unwrap();
+        assert_eq!(back.name, t.name);
+        assert_eq!(back.kernel_id, t.kernel_id);
+        assert_eq!(back.warps, t.warps);
+    }
+
+    #[test]
+    fn rejects_bad_names_and_missing_exit() {
+        let mut t = tiny();
+        t.name = "has space".into();
+        assert!(write_string(&t).is_err());
+        let mut t = tiny();
+        t.warps[0].pop(); // drop the EXIT
+        assert!(write_string(&t).is_err());
+        // interior EXIT: the writer must reject what its reader would
+        let mut t = tiny();
+        t.warps[0].insert(0, Instruction::new(OpClass::Exit, &[], &[]));
+        assert!(write_string(&t).is_err());
+    }
+
+    #[test]
+    fn output_is_deterministic() {
+        let t = tiny();
+        assert_eq!(write_string(&t).unwrap(), write_string(&t).unwrap());
+    }
+}

@@ -1,37 +1,68 @@
-//! Kernel traces: per-warp instruction streams + generation from the
-//! Table II workload registry.
+//! Kernel traces: per-warp instruction streams, generation from the
+//! Table II workload registry, and the [`Workload`] source abstraction
+//! (builtin generator vs. `.mtrace` file — see [`io`]).
 
+pub mod io;
 pub mod program;
 pub mod workloads;
 
-pub use program::{AddrGen, ProgramBuilder};
+pub use io::{Transform, TraceIoError};
+pub use program::{AddrGen, ProgramBuilder, MAX_KERNEL_ID};
 pub use workloads::{find, table2, Benchmark, Suite, WarpCtx, BENCHMARKS};
+
+use std::path::PathBuf;
 
 use crate::isa::Instruction;
 
-/// A generated kernel launch: one instruction stream per warp.
+/// A kernel launch: one instruction stream per warp.
 #[derive(Debug, Clone)]
 pub struct KernelTrace {
     /// Benchmark chart name.
     pub name: String,
+    /// Kernel id (multi-kernel traces keep separate address spaces).
+    pub kernel_id: u32,
     /// Per-warp streams (each ends with an `Exit` marker).
     pub warps: Vec<Vec<Instruction>>,
 }
 
 impl KernelTrace {
-    /// Generate `nwarps` warp streams for `bench` with a launch `seed`.
+    /// Generate `nwarps` warp streams for `bench` with a launch `seed`
+    /// (kernel id 0).
     pub fn generate(bench: &Benchmark, nwarps: usize, seed: u64) -> Self {
+        Self::generate_kernel(bench, nwarps, seed, 0)
+    }
+
+    /// Generate with an explicit `kernel_id`, so the kernels of a
+    /// multi-kernel trace file keep separate, non-aliasing address spaces
+    /// ([`AddrGen`] bases its shared/indirect regions on it) and distinct
+    /// per-warp RNG streams.
+    pub fn generate_kernel(
+        bench: &Benchmark,
+        nwarps: usize,
+        seed: u64,
+        kernel_id: u32,
+    ) -> Self {
         let warps = (0..nwarps)
             .map(|w| {
                 let ctx = WarpCtx {
                     warp_id: w as u32,
                     nwarps: nwarps as u32,
-                    kernel_id: 0,
+                    kernel_id,
                 };
                 (bench.gen)(&ctx, seed)
             })
             .collect();
-        KernelTrace { name: bench.name.to_string(), warps }
+        KernelTrace { name: bench.name.to_string(), kernel_id, warps }
+    }
+
+    /// Does any instruction carry a compiler near/far annotation bit?
+    /// Replay uses this to decide whether a loaded trace was recorded
+    /// post-annotation (keep its bits) or raw (run the compiler pass).
+    pub fn has_annotations(&self) -> bool {
+        self.warps
+            .iter()
+            .flatten()
+            .any(|i| i.src_near != 0 || i.dst_near != 0)
     }
 
     /// Total dynamic instructions across all warps (including Exit markers).
@@ -74,6 +105,57 @@ impl KernelTrace {
             }
         }
         (ids, pos, rw)
+    }
+}
+
+/// Where a simulation's instruction streams come from: a built-in Table II
+/// generator, or an external `.mtrace` file ingested through [`io`].
+///
+/// This is the unit the harness plans, caches, and shards over — a
+/// trace-file point behaves exactly like a builtin point (deterministic,
+/// memoised, `--jobs`-independent), it just skips generation.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Workload {
+    /// Registry benchmark generated on demand ([`find`]).
+    Builtin(String),
+    /// File-backed trace recorded earlier (or captured externally).
+    TraceFile(PathBuf),
+}
+
+impl Workload {
+    /// Builtin workload by registry name.
+    pub fn builtin(name: &str) -> Self {
+        Workload::Builtin(name.to_string())
+    }
+
+    /// File-backed workload.
+    pub fn trace_file(path: impl Into<PathBuf>) -> Self {
+        Workload::TraceFile(path.into())
+    }
+
+    /// Stable identity used as the harness memo-cache key and in logs:
+    /// the registry name, or `trace:<path>` for file-backed workloads
+    /// (the prefix keeps the two namespaces from colliding).
+    pub fn cache_name(&self) -> String {
+        match self {
+            Workload::Builtin(name) => name.clone(),
+            Workload::TraceFile(path) => format!("trace:{}", path.display()),
+        }
+    }
+
+    /// Materialise the instruction streams. Builtin generators honour
+    /// `nwarps` and `seed`; trace files carry their own streams and
+    /// ignore both.
+    pub fn load(&self, nwarps: usize, seed: u64) -> Result<KernelTrace, String> {
+        match self {
+            Workload::Builtin(name) => {
+                let bench = find(name)
+                    .ok_or_else(|| format!("unknown benchmark {name}"))?;
+                Ok(KernelTrace::generate(bench, nwarps, seed))
+            }
+            Workload::TraceFile(path) => io::read_path(path)
+                .map_err(|e| format!("{}: {e}", path.display())),
+        }
     }
 }
 
@@ -123,5 +205,61 @@ mod tests {
         let (ids, _, _) = t.access_streams(3, 32);
         // rows beyond available warps are fully padded
         assert!(ids[32..].iter().all(|&x| x == -1));
+    }
+
+    #[test]
+    fn kernel_ids_separate_address_spaces() {
+        use crate::isa::OpClass;
+        let b = find("kmeans").unwrap();
+        let k0 = KernelTrace::generate_kernel(b, 2, 1, 0);
+        let k1 = KernelTrace::generate_kernel(b, 2, 1, 1);
+        assert_eq!(k0.kernel_id, 0);
+        assert_eq!(k1.kernel_id, 1);
+        // kernel-shared regions (>= 0x8000_0000) must not alias between ids
+        let shared = |t: &KernelTrace| -> Vec<u32> {
+            t.warps[0]
+                .iter()
+                .filter(|i| i.op == OpClass::LdGlobal && i.line_addr >= 0x8000_0000)
+                .map(|i| i.line_addr)
+                .collect()
+        };
+        let s0 = shared(&k0);
+        let s1 = shared(&k1);
+        assert!(!s0.is_empty(), "kmeans must touch its shared region");
+        assert!(
+            s0.iter().all(|a| !s1.contains(a)),
+            "kernel 0 and kernel 1 shared regions alias"
+        );
+    }
+
+    #[test]
+    fn has_annotations_detects_near_bits() {
+        let b = find("kmeans").unwrap();
+        let mut t = KernelTrace::generate(b, 2, 1);
+        assert!(!t.has_annotations(), "generators emit raw traces");
+        crate::compiler::annotate_precise(&mut t, 12);
+        assert!(t.has_annotations());
+    }
+
+    #[test]
+    fn workload_builtin_matches_generate() {
+        let w = Workload::builtin("nn");
+        assert_eq!(w.cache_name(), "nn");
+        let t = w.load(4, 9).unwrap();
+        let direct = KernelTrace::generate(find("nn").unwrap(), 4, 9);
+        assert_eq!(t.warps, direct.warps);
+        assert!(Workload::builtin("nope").load(1, 0).is_err());
+    }
+
+    #[test]
+    fn workload_cache_names_never_collide() {
+        // a trace file named like a benchmark stays in its own namespace
+        let w = Workload::trace_file("kmeans");
+        assert_eq!(w.cache_name(), "trace:kmeans");
+        assert_ne!(w.cache_name(), Workload::builtin("kmeans").cache_name());
+        assert!(
+            w.load(1, 0).is_err(),
+            "nonexistent trace file must be a load error"
+        );
     }
 }

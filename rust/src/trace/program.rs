@@ -138,9 +138,20 @@ pub struct AddrGen {
     cursor: u32,
 }
 
+/// Kernel ids addressable without the shared regions wrapping out of the
+/// upper half of the 32-bit line space (`0x8000_0000 + id * 0x10_0000`).
+pub const MAX_KERNEL_ID: u32 = 0x7FF;
+
 impl AddrGen {
-    /// Regions are spaced far apart so they never alias.
+    /// Regions are spaced far apart so they never alias. Panics when
+    /// `kernel_id` exceeds [`MAX_KERNEL_ID`] — beyond that the shared base
+    /// would wrap into the warp-private range (callers with external input,
+    /// like the CLI, must validate first).
     pub fn new(warp_global_id: u32, kernel_id: u32) -> Self {
+        assert!(
+            kernel_id <= MAX_KERNEL_ID,
+            "kernel_id {kernel_id} exceeds the addressable maximum {MAX_KERNEL_ID}"
+        );
         AddrGen {
             private_base: 0x0100_0000 + warp_global_id * 0x4_0000,
             shared_base: 0x8000_0000 + kernel_id * 0x10_0000,
@@ -223,5 +234,17 @@ mod tests {
         let a = AddrGen::new(0, 3);
         assert_eq!(a.shared(64, 64), a.shared(0, 64));
         assert_ne!(a.shared(1, 64), a.shared(0, 64));
+    }
+
+    #[test]
+    fn max_kernel_id_stays_in_shared_half() {
+        let a = AddrGen::new(0, MAX_KERNEL_ID);
+        assert!(a.shared_base >= 0x8000_0000);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the addressable maximum")]
+    fn kernel_id_overflow_panics() {
+        AddrGen::new(0, MAX_KERNEL_ID + 1);
     }
 }

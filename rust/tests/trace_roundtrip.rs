@@ -1,0 +1,178 @@
+//! Trace I/O round-trip invariants: writing any trace to `.mtrace` and
+//! re-ingesting it is lossless at the IR level (near/far annotation bits
+//! included) and produces **bit-identical** simulation statistics; and
+//! trace-backed harness points shard deterministically under `--jobs N`.
+
+use std::path::PathBuf;
+
+use malekeh::compiler;
+use malekeh::config::{GpuConfig, Scheme};
+use malekeh::harness::{ExpOpts, Runner};
+use malekeh::isa::OpClass;
+use malekeh::sim::{run_workload, Simulator};
+use malekeh::trace::io::{self, Transform};
+use malekeh::trace::{find, table2, KernelTrace, Workload};
+
+fn cfg(scheme: Scheme) -> GpuConfig {
+    let mut c = GpuConfig::table1_baseline().with_scheme(scheme);
+    c.num_sms = 1;
+    c
+}
+
+/// Unique temp path per test so parallel test binaries never collide.
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("malekeh_test_{}_{name}", std::process::id()))
+}
+
+#[test]
+fn ir_roundtrips_for_every_table2_benchmark() {
+    for b in table2() {
+        let mut t = KernelTrace::generate(b, 4, 0xC0FFEE);
+        compiler::profile_and_annotate(&mut t, 2, 12);
+        let text = io::write_string(&t).unwrap();
+        let back = io::read_str(&text)
+            .unwrap_or_else(|e| panic!("{}: {e}", b.name));
+        assert_eq!(back.name, t.name, "{}", b.name);
+        assert_eq!(back.kernel_id, t.kernel_id, "{}", b.name);
+        assert_eq!(back.warps, t.warps, "{}: IR not preserved", b.name);
+    }
+}
+
+#[test]
+fn replay_is_bit_identical_including_annotation_bits() {
+    for (bench, scheme) in [
+        ("kmeans", Scheme::Malekeh),
+        ("gemm_t1", Scheme::Bow),
+        ("b+tree", Scheme::Baseline),
+    ] {
+        let c = cfg(scheme);
+        let b = find(bench).unwrap();
+        let mut t =
+            KernelTrace::generate(b, c.num_sms * c.warps_per_sm, c.seed);
+        compiler::profile_and_annotate(&mut t, 2, c.rthld);
+        let direct = Simulator::new(&c, &t).run();
+        let back = io::read_str(&io::write_string(&t).unwrap()).unwrap();
+        assert!(back.has_annotations(), "{bench}: bits lost in the file");
+        let replayed = Simulator::new(&c, &back).run();
+        assert_eq!(
+            direct.fingerprint(),
+            replayed.fingerprint(),
+            "{bench}/{scheme}: replay diverged"
+        );
+    }
+}
+
+#[test]
+fn raw_recording_matches_builtin_workload_run() {
+    // a raw (unannotated) recording goes through the same compiler pass as
+    // the builtin path, so the file-backed point must reproduce
+    // run_benchmark exactly
+    let c = cfg(Scheme::Malekeh);
+    let path = tmp("kmeans_raw.mtrace");
+    let t = KernelTrace::generate(
+        find("kmeans").unwrap(),
+        c.num_sms * c.warps_per_sm,
+        c.seed,
+    );
+    io::write_path(&path, &t).unwrap();
+    let builtin = run_workload(&c, &Workload::builtin("kmeans"), 2).unwrap();
+    let replay = run_workload(&c, &Workload::trace_file(&path), 2).unwrap();
+    assert_eq!(builtin.fingerprint(), replay.fingerprint());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn annotated_recording_matches_builtin_workload_run() {
+    // recording *after* annotation bakes the bits into the file; replay
+    // must trust them and still match the builtin run bit for bit
+    let c = cfg(Scheme::Malekeh);
+    let path = tmp("kmeans_annotated.mtrace");
+    let mut t = KernelTrace::generate(
+        find("kmeans").unwrap(),
+        c.num_sms * c.warps_per_sm,
+        c.seed,
+    );
+    compiler::profile_and_annotate(&mut t, 2, c.rthld);
+    io::write_path(&path, &t).unwrap();
+    let builtin = run_workload(&c, &Workload::builtin("kmeans"), 2).unwrap();
+    let replay = run_workload(&c, &Workload::trace_file(&path), 2).unwrap();
+    assert_eq!(builtin.fingerprint(), replay.fingerprint());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn trace_points_shard_deterministically() {
+    let path = tmp("shard.mtrace");
+    let t = KernelTrace::generate(find("nn").unwrap(), 32, 0xC0FFEE);
+    io::write_path(&path, &t).unwrap();
+    let fingerprint_at = |jobs: usize| {
+        let runner = Runner::new(ExpOpts {
+            num_sms: 1,
+            seed: 0xC0FFEE,
+            profile_warps: 2,
+            quick: true,
+            jobs,
+        });
+        let mut plan = runner.plan();
+        plan.add("kmeans", Scheme::Baseline);
+        plan.add_trace(&path, Scheme::Baseline);
+        plan.add_trace(&path, Scheme::Malekeh);
+        runner.execute(&plan);
+        let a = runner.run("kmeans", Scheme::Baseline);
+        let b = runner.run_trace(&path, Scheme::Baseline);
+        let c = runner.run_trace(&path, Scheme::Malekeh);
+        assert_eq!(runner.cached(), 3, "trace points must cache distinctly");
+        a.fingerprint()
+            ^ b.fingerprint().rotate_left(1)
+            ^ c.fingerprint().rotate_left(2)
+    };
+    assert_eq!(
+        fingerprint_at(1),
+        fingerprint_at(4),
+        "trace-backed plan points diverged across worker counts"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn transformed_traces_serialise_and_replay() {
+    let t = KernelTrace::generate(find("hotspot").unwrap(), 8, 1);
+    let out = io::apply_all(
+        &t,
+        &[
+            Transform::WarpSubsample { keep_one_in: 2 },
+            Transform::InstructionWindow { start: 10, len: 50 },
+            Transform::RegisterRemap { pairs: vec![(2, 200)] },
+        ],
+    );
+    assert_eq!(out.warps.len(), 4);
+    for w in &out.warps {
+        assert!(w.len() <= 51);
+        assert_eq!(w.last().unwrap().op, OpClass::Exit);
+        assert!(w
+            .iter()
+            .all(|i| !i.sources().contains(&2) && !i.dests().contains(&2)));
+    }
+    let back = io::read_str(&io::write_string(&out).unwrap()).unwrap();
+    assert_eq!(out.warps, back.warps);
+    // and the transformed trace still simulates to completion
+    let stats = malekeh::sim::run_trace(&cfg(Scheme::Malekeh), back, 2, false);
+    assert_eq!(stats.warps_retired, 4);
+}
+
+#[test]
+fn subsampled_replay_keeps_headline_direction() {
+    // scenario scaling: a 1-in-4 warp subsample is a smaller but still
+    // representative workload — Malekeh must keep a nonzero hit ratio on it
+    let c = cfg(Scheme::Malekeh);
+    let full = KernelTrace::generate(
+        find("kmeans").unwrap(),
+        c.num_sms * c.warps_per_sm,
+        c.seed,
+    );
+    let quarter = Transform::WarpSubsample { keep_one_in: 4 }.apply(&full);
+    assert_eq!(quarter.warps.len(), 8);
+    let stats = malekeh::sim::run_trace(&c, quarter, 2, false);
+    assert_eq!(stats.warps_retired, 8);
+    assert!(stats.rf_hit_ratio() > 0.1, "hit {}", stats.rf_hit_ratio());
+}
