@@ -12,7 +12,7 @@
 //!
 //!     cargo run --release --example end_to_end [--full]
 //!
-//! The run is recorded in EXPERIMENTS.md §End-to-end.
+//! The run is recorded in docs/EXPERIMENTS.md §End-to-end.
 
 use malekeh::compiler;
 use malekeh::config::{GpuConfig, Scheme};

@@ -1,5 +1,6 @@
 //! Profiling helper for the §Perf pass: a fixed Malekeh/kmeans workload
-//! repeated 5x, used as the `perf record` target (see EXPERIMENTS.md §Perf).
+//! repeated 5x, used as the `perf record` target (protocol and known hot
+//! symbols: docs/EXPERIMENTS.md §Profiling).
 use malekeh::config::{GpuConfig, Scheme};
 use malekeh::sim::run_benchmark;
 fn main() {

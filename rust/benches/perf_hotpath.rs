@@ -1,6 +1,13 @@
-//! §Perf: simulator throughput (L3 hot path) and AOT-artifact execution
-//! latency (L1/L2 path). Run after changes; EXPERIMENTS.md §Perf records
-//! the before/after log.
+//! §Perf: simulator throughput (L3 hot path), intra-run SM parallelism,
+//! and AOT-artifact execution latency (L1/L2 path). Run after changes;
+//! docs/EXPERIMENTS.md §Perf records the before/after log.
+//!
+//!     cargo bench --bench perf_hotpath            # full protocol (best-of-3)
+//!     cargo bench --bench perf_hotpath -- --smoke # CI liveness: 1 rep, capped
+//!
+//! Protocol (docs/EXPERIMENTS.md §Perf): release build, best-of-3 wall
+//! clock, report Minstr/s per workload plus the serial-vs-parallel
+//! single-point speedup on the paper's `num_sms = 10` machine.
 
 use std::time::Instant;
 
@@ -22,7 +29,56 @@ fn sim_throughput(bench: &str, scheme: Scheme, reps: usize) -> (f64, u64) {
     (instr as f64 / best / 1e6, instr)
 }
 
+/// §Perf intra-run SM parallelism: one `num_sms = 10` simulation stepped
+/// by 1/2/4 epoch workers. Prints the speedup table recorded in
+/// docs/EXPERIMENTS.md §Perf and asserts the fingerprints stay
+/// bit-identical while doing so.
+fn sm_parallel_point(reps: usize, smoke: bool) {
+    let mut cfg = GpuConfig::table1_baseline().with_scheme(Scheme::Malekeh);
+    cfg.num_sms = 10;
+    if smoke {
+        cfg.max_cycles = 50_000; // liveness only: keep CI turnaround short
+    }
+    println!("\n== §Perf: intra-run SM parallelism (gemm_t1/malekeh, num_sms=10) ==");
+    println!(
+        "{:<14}{:>12}{:>12}{:>12}{:>20}",
+        "sim-threads", "seconds", "speedup", "Minstr/s", "fingerprint"
+    );
+    let mut serial: Option<(f64, u64)> = None;
+    for threads in [1usize, 2, 4] {
+        cfg.sim_threads = threads;
+        let mut best = f64::MAX;
+        let mut instr = 0;
+        let mut fp = 0;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let stats = run_benchmark(&cfg, "gemm_t1", 2);
+            best = best.min(t0.elapsed().as_secs_f64());
+            instr = stats.instructions;
+            fp = stats.fingerprint();
+        }
+        let (serial_secs, serial_fp) = *serial.get_or_insert((best, fp));
+        assert_eq!(
+            fp, serial_fp,
+            "sim-threads={threads} changed the results — determinism broken"
+        );
+        println!(
+            "{:<14}{:>12.2}{:>12.2}{:>12.2}{:>20x}",
+            threads,
+            best,
+            serial_secs / best.max(1e-9),
+            instr as f64 / best.max(1e-9) / 1e6,
+            fp
+        );
+    }
+    println!("(fingerprints equal: SM-parallel results bit-identical to serial)");
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let reps = if smoke { 1 } else { 3 };
+
     println!("== §Perf: hot-path microbenchmarks ==");
     println!("{:<44}{:>14}{:>12}", "workload", "Minstr/s", "instrs");
     for (bench, scheme) in [
@@ -33,13 +89,20 @@ fn main() {
         ("kmeans", Scheme::Malekeh),
         ("bfs", Scheme::Rfc),
     ] {
-        let (mips, instr) = sim_throughput(bench, scheme, 3);
+        let (mips, instr) = sim_throughput(bench, scheme, reps);
         println!(
             "{:<44}{:>14.2}{:>12}",
             format!("sim {bench}/{scheme}"),
             mips,
             instr
         );
+    }
+
+    sm_parallel_point(reps, smoke);
+
+    if smoke {
+        println!("\n(smoke mode: 1 rep, capped parallel point, PJRT path skipped)");
+        return;
     }
 
     // PJRT artifact path (compile once, then measure execution)

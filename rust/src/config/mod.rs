@@ -179,6 +179,11 @@ pub struct GpuConfig {
     pub max_cycles: u64,
     /// PRNG seed for policy tie-breaking.
     pub seed: u64,
+    /// Worker threads stepping SMs *inside one simulation* (epoch engine):
+    /// 1 = serial, 0 = one per available core, clamped to `num_sms`.
+    /// Results are bit-identical at any value — this knob is wall-clock
+    /// only (enforced by `rust/tests/parallel_determinism.rs`).
+    pub sim_threads: usize,
 }
 
 impl Default for GpuConfig {
@@ -226,6 +231,7 @@ impl GpuConfig {
             dram_reqs_per_cycle: 0.5,
             max_cycles: 0,
             seed: 0xC0FFEE,
+            sim_threads: 1,
         }
     }
 
@@ -326,6 +332,7 @@ impl GpuConfig {
             "dram_reqs_per_cycle" => self.dram_reqs_per_cycle = p(key, value)?,
             "max_cycles" => self.max_cycles = p(key, value)?,
             "seed" => self.seed = p(key, value)?,
+            "sim_threads" => self.sim_threads = p(key, value)?,
             other => return Err(format!("unknown config key {other:?}")),
         }
         Ok(())
@@ -438,6 +445,8 @@ mod tests {
         assert_eq!(c.sthld, SthldMode::Static(4));
         c.set("rthld", "7").unwrap();
         assert_eq!(c.rthld, 7);
+        c.set("sim_threads", "4").unwrap();
+        assert_eq!(c.sim_threads, 4);
         assert!(c.set("nonsense_key", "1").is_err());
         assert!(c.set("rthld", "xyz").is_err());
     }

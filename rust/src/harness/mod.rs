@@ -1,9 +1,10 @@
 //! Experiment harness: one runner per paper figure/table (DESIGN.md §5).
 //!
 //! Bench binaries (`rust/benches/fig*.rs`) and the CLI (`malekeh fig <id>`)
-//! both call into these; EXPERIMENTS.md records their output next to the
-//! paper's numbers. Experiments default to 2 SMs (the mechanism is per-SM;
-//! the paper's 10-SM Table I config is available with `--full`).
+//! both call into these; `docs/EXPERIMENTS.md` records their output next
+//! to the paper's numbers (see its §Figure-reproduction status table).
+//! Experiments default to 2 SMs (the mechanism is per-SM; the paper's
+//! 10-SM Table I config is available with `--full`).
 //!
 //! # Parallel execution
 //!
@@ -70,6 +71,12 @@ pub struct ExpOpts {
     /// Worker threads for plan execution (0 = one per available core;
     /// 1 = serial).
     pub jobs: usize,
+    /// Worker threads *inside each simulation* (epoch-engine SM
+    /// parallelism, `GpuConfig::sim_threads`). The core budget is shared
+    /// with `jobs`: total threads ≈ `jobs x sim_threads`, so auto `jobs`
+    /// (0) divides the available cores by this value. Results are
+    /// bit-identical at any setting.
+    pub sim_threads: usize,
 }
 
 impl Default for ExpOpts {
@@ -80,6 +87,7 @@ impl Default for ExpOpts {
             profile_warps: 2,
             quick: false,
             jobs: 0,
+            sim_threads: 1,
         }
     }
 }
@@ -95,7 +103,8 @@ fn parse_val<T: std::str::FromStr>(args: &[String], i: usize, flag: &str) -> T {
 
 impl ExpOpts {
     /// Parse bench-binary argv: `--full` (10 SMs, all benchmarks),
-    /// `--quick`, `--sms N`, `--seed N`, `--jobs N`, `--serial`.
+    /// `--quick`, `--sms N`, `--seed N`, `--jobs N`, `--serial`,
+    /// `--sim-threads N` (intra-simulation SM parallelism).
     pub fn from_args(args: &[String]) -> ExpOpts {
         let mut o = ExpOpts::default();
         let mut i = 0;
@@ -119,6 +128,10 @@ impl ExpOpts {
                     i += 1;
                     o.jobs = parse_val(args, i, "--jobs");
                 }
+                "--sim-threads" => {
+                    i += 1;
+                    o.sim_threads = parse_val(args, i, "--sim-threads");
+                }
                 _ => {}
             }
             i += 1;
@@ -131,18 +144,25 @@ impl ExpOpts {
         let mut c = GpuConfig::table1_baseline().with_scheme(scheme);
         c.num_sms = self.num_sms;
         c.seed = self.seed;
+        c.sim_threads = self.sim_threads;
         c
     }
 
-    /// Resolved worker count: `jobs`, or one per available core when 0.
+    /// Resolved worker count: `jobs`, or — when 0 — one per available
+    /// core **divided by `sim_threads`**, so a sharded figure run and the
+    /// intra-simulation SM workers share one core budget instead of
+    /// oversubscribing the machine.
     pub fn effective_jobs(&self) -> usize {
         if self.jobs != 0 {
-            self.jobs
-        } else {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
+            return self.jobs;
         }
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        // sim_threads = 0 means "one per core" inside the simulator, so
+        // budget it as a full machine's worth, not as 1
+        let per_sim = if self.sim_threads == 0 { cores } else { self.sim_threads };
+        (cores / per_sim).max(1)
     }
 
     /// Benchmarks to run (Table II, or a representative 8 in quick mode).
@@ -687,6 +707,7 @@ mod tests {
             profile_warps: 2,
             quick: true,
             jobs: 1,
+            sim_threads: 1,
         }
     }
 
@@ -708,6 +729,23 @@ mod tests {
         assert_eq!(o.effective_jobs(), 6);
         let o = ExpOpts::from_args(&["--serial".into()]);
         assert_eq!(o.jobs, 1);
+        let o = ExpOpts::from_args(&["--sim-threads".into(), "4".into()]);
+        assert_eq!(o.sim_threads, 4);
+        assert_eq!(o.config(Scheme::Baseline).sim_threads, 4);
+    }
+
+    #[test]
+    fn auto_jobs_share_the_core_budget_with_sim_threads() {
+        // jobs = 0 resolves to cores / sim_threads (at least 1): the two
+        // parallelism layers must not multiply past the machine
+        let wide = ExpOpts { sim_threads: usize::MAX, ..ExpOpts::default() };
+        assert_eq!(wide.effective_jobs(), 1);
+        let narrow = ExpOpts { sim_threads: 1, ..ExpOpts::default() };
+        assert_eq!(narrow.effective_jobs(), ExpOpts::default().effective_jobs());
+        // sim_threads = 0 = "one SM worker per core": a whole machine per
+        // simulation, so auto jobs must not also fan out
+        let auto = ExpOpts { sim_threads: 0, ..ExpOpts::default() };
+        assert_eq!(auto.effective_jobs(), 1);
     }
 
     #[test]

@@ -226,6 +226,7 @@ mod tests {
             profile_warps: 2,
             quick: true,
             jobs,
+            sim_threads: 1,
         }
     }
 

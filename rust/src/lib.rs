@@ -6,6 +6,38 @@
 //! the compiler reuse-distance pass (rust + AOT-compiled JAX/Pallas), an
 //! AccelWattch-style RF energy model, Table II workload generators, and a
 //! bench harness that regenerates every figure of the evaluation.
+//!
+//! # Layer stack
+//!
+//! Bottom to top — each layer only calls downward:
+//!
+//! | Layer | Modules | Role |
+//! |---|---|---|
+//! | workloads | [`isa`], [`trace`] | instruction streams: Table II generators and `.mtrace` record/replay |
+//! | compiler | [`compiler`], [`runtime`] | reuse-distance profiling + near/far annotation (rust engine, or the AOT Pallas artifact via PJRT) |
+//! | machine | [`sim`], [`config`] | the cycle-level GPU: sub-cores, collectors/CCUs, RF banks, L1/L2/DRAM, STHLD control |
+//! | measurement | [`stats`], [`energy`] | counters, derived figure metrics, relative RF dynamic energy |
+//! | experiments | [`harness`], [`cli`] | memoising sharded Runner, figure/table builders, the `malekeh` CLI |
+//!
+//! The module map with file-level detail lives in `docs/ARCHITECTURE.md`;
+//! every tunable is catalogued in `docs/CONFIG.md`.
+//!
+//! # Determinism contract
+//!
+//! Every simulation is a pure function of `(GpuConfig, workload, seed)` —
+//! and of **nothing else**. Neither parallelism layer may change results:
+//!
+//! - `--jobs N` shards independent experiment points across workers
+//!   ([`harness::Runner::execute`]); tables are bit-identical at any
+//!   worker count.
+//! - `--sim-threads N` steps the SMs *inside one simulation* in parallel
+//!   (the epoch engine in [`sim::gpu`]); [`stats::Stats::fingerprint`] is
+//!   bit-identical at any worker count.
+//!
+//! Both properties are enforced by `rust/tests/parallel_determinism.rs`
+//! and CI fingerprint diffs. Code in the parallel sections must therefore
+//! avoid wall-clock reads, thread identity, unordered float reduction,
+//! and iteration over unordered containers.
 pub mod cli;
 pub mod compiler;
 pub mod config;

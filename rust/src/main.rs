@@ -62,7 +62,8 @@ fn print_help() {
          USAGE: malekeh <command> [args]\n\
          \n\
          COMMANDS:\n\
-           simulate <bench> [--scheme S] [-s k=v]...   simulate one benchmark\n\
+           simulate <bench> [--scheme S] [--sim-threads N] [-s k=v]...\n\
+                                                       simulate one benchmark\n\
            simulate --trace <file> [--scheme S] [--reannotate]   replay a .mtrace\n\
            annotate <bench> [--engine rust|pjrt]       compiler reuse pass\n\
            trace record <bench> --out <file> [--sms N] [--warps N] [--seed N]\n\
@@ -73,9 +74,12 @@ fn print_help() {
            list                                        benchmarks + schemes\n\
          \n\
          Figure simulations shard across worker threads (--jobs N, default\n\
-         one per core); --serial forces the single-thread path. Output\n\
-         tables are bit-identical at any worker count. Recorded traces\n\
-         replay bit-identically to their builtin run (docs/TRACES.md)."
+         one per core); --serial forces the single-thread path. A single\n\
+         simulation can itself step its SMs in parallel (--sim-threads N,\n\
+         default 1; the core budget is shared with --jobs). Output tables\n\
+         and stats fingerprints are bit-identical at any thread count.\n\
+         Recorded traces replay bit-identically to their builtin run\n\
+         (docs/TRACES.md; engine details in docs/ARCHITECTURE.md)."
     );
 }
 
@@ -84,6 +88,7 @@ fn build_config(cli: &Cli) -> Result<GpuConfig, String> {
         .ok_or_else(|| "unknown scheme (see `malekeh list`)".to_string())?;
     let mut cfg = GpuConfig::table1_baseline().with_scheme(scheme);
     cfg.num_sms = cli.opt_num("sms", 2usize)?;
+    cfg.sim_threads = cli.opt_num("sim-threads", cfg.sim_threads)?;
     if let Some(path) = cli.options.get("config") {
         let pairs = malekeh::config::parse_kv_file(path)?;
         cfg.apply(&pairs)?;
@@ -346,6 +351,7 @@ fn exp_opts(cli: &Cli) -> Result<ExpOpts, String> {
         o.jobs = 1;
     }
     o.jobs = cli.opt_num("jobs", o.jobs)?;
+    o.sim_threads = cli.opt_num("sim-threads", o.sim_threads)?;
     Ok(o)
 }
 

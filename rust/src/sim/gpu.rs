@@ -1,26 +1,161 @@
 //! Top level: SMs, the shared memory system, the dynamic-STHLD controller,
-//! and the run loop.
+//! and the epoch-based run loop.
+//!
+//! # Epoch scheduler (deterministic intra-run SM parallelism)
+//!
+//! SMs are independent except for two things: the shared L2/DRAM system
+//! and the GPU-wide dynamic-STHLD controller. The run loop exploits
+//! exactly that decoupling. Instead of stepping every SM in lock-step each
+//! cycle, each SM **advances independently** up to its next
+//! *synchronization boundary* — the earlier of
+//!
+//! 1. the dynamic-STHLD interval boundary (`sthld_interval`, where the
+//!    controller samples GPU-wide IPC and broadcasts a new threshold), and
+//! 2. its first **L2-bound event**: an L1 miss that needs the shared L2,
+//!    which is queued on the SM's [`MemPort`] instead of being served
+//!    immediately.
+//!
+//! When every SM has reached a boundary, a **serial L2 phase** services
+//! the merged request queues in the fixed `(cycle, sm_id, seq)` order and
+//! posts the fill latencies back; blocked SMs then resume. Because each
+//! SM's trajectory between boundaries is a pure function of its own state,
+//! and the serial phase's order is a pure function of the request set, the
+//! whole simulation is **bit-identical at any `sim_threads` worker
+//! count** — `--sim-threads 1` and `--sim-threads N` produce the same
+//! [`Stats::fingerprint`] (enforced by `rust/tests/parallel_determinism.rs`
+//! and a CI diff). The parallel driver fans the per-SM phases out over a
+//! persistent `std::thread::scope` worker pool.
+//!
+//! Drained SMs stop stepping; their stall-empty tail up to the global end
+//! cycle is accounted in bulk at the end of the run, matching what
+//! lock-step stepping would have recorded. See `docs/ARCHITECTURE.md` for
+//! the full walk-through and `docs/EXPERIMENTS.md` §Perf for measured
+//! scaling.
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
 
 use crate::config::{GpuConfig, SthldMode};
 use crate::isa::Instruction;
-use crate::sim::memory::{L1Cache, SharedMemorySystem};
+use crate::sim::memory::{L1Cache, L2Request, MemPort, SharedMemorySystem};
 use crate::sim::sthld::SthldController;
 use crate::sim::subcore::SubCore;
 use crate::stats::Stats;
 use crate::trace::{KernelTrace, Workload};
 
-/// One streaming multiprocessor: sub-cores + private L1D.
+/// One streaming multiprocessor: sub-cores + private L1D + its epoch
+/// frontier (SMs advance independently between synchronization
+/// boundaries).
 pub struct Sm {
     /// Sub-cores (4 on Turing).
     pub sub_cores: Vec<SubCore>,
     /// Per-SM L1 data cache.
     pub l1: L1Cache,
+    /// Local cycle frontier.
+    cycle: u64,
+    /// Epoch-local queue of L2-bound requests.
+    port: MemPort,
+    /// Cycle at which this SM fully drained (`None` while live).
+    drained_at: Option<u64>,
+}
+
+impl Sm {
+    /// Everything in this SM drained?
+    pub fn idle(&self) -> bool {
+        self.sub_cores.iter().all(|sc| sc.idle())
+    }
+
+    /// Instructions committed by this SM so far.
+    fn committed_instructions(&self) -> u64 {
+        self.sub_cores.iter().map(|sc| sc.stats.instructions).sum()
+    }
+
+    /// Advance to `target`, stopping early at this SM's next
+    /// synchronization boundary: the first cycle that queues an L2-bound
+    /// request, or the drain point. Pure in this SM's state — the property
+    /// the parallel driver's determinism rests on.
+    fn advance(&mut self, target: u64) {
+        while self.cycle < target {
+            if self.idle() {
+                if self.drained_at.is_none() {
+                    self.drained_at = Some(self.cycle);
+                }
+                return;
+            }
+            let now = self.cycle;
+            for sc in &mut self.sub_cores {
+                sc.step(now, &mut self.l1, &mut self.port);
+            }
+            self.cycle += 1;
+            if !self.port.is_empty() {
+                return; // L2-bound: wait for the serial service phase
+            }
+            // event-driven fast-forward over stretches where every
+            // sub-core is stalled empty and only in-flight EU/memory
+            // events can change state (see docs/EXPERIMENTS.md §Perf)
+            let mut wake = u64::MAX;
+            let mut quiet = true;
+            for sc in &self.sub_cores {
+                match sc.next_wakeup() {
+                    None => {
+                        quiet = false;
+                        break;
+                    }
+                    Some(c) => wake = wake.min(c),
+                }
+            }
+            if quiet && wake != u64::MAX && wake > self.cycle {
+                let skip = wake.min(target).saturating_sub(self.cycle);
+                if skip > 0 {
+                    for sc in &mut self.sub_cores {
+                        sc.bulk_stall(skip);
+                    }
+                    self.cycle += skip;
+                }
+            }
+        }
+    }
+
+    /// Cycle at which this SM drained (meaningful once idle; falls back to
+    /// the frontier for an SM that drained exactly at an epoch target).
+    fn drained_cycle(&self) -> u64 {
+        self.drained_at.unwrap_or(self.cycle)
+    }
+
+    /// Account the stall-empty tail between this SM's drain cycle and the
+    /// global end of the run — a lock-step engine keeps stepping drained
+    /// SMs until the slowest one finishes, and the counters must match.
+    fn finish_at(&mut self, end: u64) {
+        let from = self.drained_cycle();
+        if self.idle() && end > from {
+            for sc in &mut self.sub_cores {
+                sc.bulk_stall(end - from);
+            }
+        }
+        self.cycle = self.cycle.max(end);
+    }
+
+    /// Broadcast a new STHLD from the GPU-level controller.
+    fn set_sthld(&mut self, v: u32) {
+        for sc in &mut self.sub_cores {
+            sc.sthld = v;
+        }
+    }
 }
 
 /// Default safety cap when `max_cycles == 0` (run to completion).
 pub const DEFAULT_MAX_CYCLES: u64 = 20_000_000;
+
+/// Shared coordination state for the persistent epoch worker pool.
+struct WorkerCtl {
+    /// Two waits per epoch: phase start (after `target` is published) and
+    /// phase end (before the main thread's serial L2 phase).
+    barrier: Barrier,
+    /// Epoch target cycle, published before the start barrier.
+    target: AtomicU64,
+    /// Run finished: workers exit at the next start barrier.
+    done: AtomicBool,
+}
 
 /// The whole-GPU simulator.
 pub struct Simulator {
@@ -70,6 +205,9 @@ impl Simulator {
                     cfg.l1_latency,
                     cfg.l1_mshrs,
                 ),
+                cycle: 0,
+                port: MemPort::new(s as u32),
+                drained_at: None,
             });
         }
         let sthld_ctl = match cfg.sthld {
@@ -100,22 +238,7 @@ impl Simulator {
 
     /// Everything drained?
     pub fn idle(&self) -> bool {
-        self.sms
-            .iter()
-            .all(|sm| sm.sub_cores.iter().all(|sc| sc.idle()))
-    }
-
-    /// Total instructions committed so far.
-    fn total_instructions(&self) -> u64 {
-        self.sms
-            .iter()
-            .map(|sm| {
-                sm.sub_cores
-                    .iter()
-                    .map(|sc| sc.stats.instructions)
-                    .sum::<u64>()
-            })
-            .sum()
+        self.sms.iter().all(|sm| sm.idle())
     }
 
     /// Current STHLD (from the dynamic controller or the static config).
@@ -127,79 +250,148 @@ impl Simulator {
         }
     }
 
-    /// Advance one cycle (plus an event-driven fast-forward over stretches
-    /// where every sub-core is stalled empty and only in-flight EU/memory
-    /// events can change state — see EXPERIMENTS.md §Perf).
-    pub fn step(&mut self) {
-        let now = self.cycle;
-        for sm in &mut self.sms {
-            for sc in &mut sm.sub_cores {
-                sc.step(now, &mut sm.l1, &mut self.shared);
-            }
-        }
-        self.cycle += 1;
-        // fast-forward: all sub-cores quiescent until the next event
-        let mut wake = u64::MAX;
-        let mut quiet = true;
-        'probe: for sm in &self.sms {
-            for sc in &sm.sub_cores {
-                match sc.next_wakeup() {
-                    None => {
-                        quiet = false;
-                        break 'probe;
-                    }
-                    Some(c) => wake = wake.min(c),
-                }
-            }
-        }
-        if quiet && wake != u64::MAX && wake > self.cycle {
-            // stop at the dynamic-STHLD interval boundary
-            let boundary =
-                (self.cycle / self.cfg.sthld_interval + 1) * self.cfg.sthld_interval;
-            let target = wake.min(boundary);
-            let skip = target.saturating_sub(self.cycle);
-            if skip > 0 {
-                for sm in &mut self.sms {
-                    for sc in &mut sm.sub_cores {
-                        sc.bulk_stall(skip);
-                    }
-                }
-                self.cycle += skip;
-            }
-        }
-        // dynamic-STHLD interval boundary
-        if self.cycle % self.cfg.sthld_interval == 0 {
-            let instr = self.total_instructions();
-            let ipc = (instr - self.interval_start_instr) as f64
-                / self.cfg.sthld_interval as f64;
-            self.interval_start_instr = instr;
-            self.interval_ipc.push(ipc);
-            let sthld = if let Some(ctl) = &mut self.sthld_ctl {
-                ctl.interval_end(ipc)
-            } else {
-                self.current_sthld()
-            };
-            self.sthld_trace.push(sthld);
-            for sm in &mut self.sms {
-                for sc in &mut sm.sub_cores {
-                    sc.sthld = sthld;
-                }
-            }
-        }
+    /// Worker threads stepping SMs inside this run: `sim_threads` (0 =
+    /// one per available core), clamped to `[1, num_sms]`.
+    fn effective_sim_threads(&self) -> usize {
+        let t = if self.cfg.sim_threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            self.cfg.sim_threads
+        };
+        t.clamp(1, self.cfg.num_sms)
     }
 
     /// Run until every warp retires (or the cycle cap). Returns merged
-    /// statistics.
+    /// statistics — bit-identical at any `sim_threads` value.
     pub fn run(&mut self) -> Stats {
         let cap = if self.cfg.max_cycles == 0 {
             DEFAULT_MAX_CYCLES
         } else {
             self.cfg.max_cycles
         };
-        while self.cycle < cap && !self.idle() {
-            self.step();
+        let threads = self.effective_sim_threads();
+        let sms: Vec<Mutex<Sm>> = std::mem::take(&mut self.sms)
+            .into_iter()
+            .map(Mutex::new)
+            .collect();
+        let end = if threads <= 1 {
+            self.epoch_loop(&sms, cap, |target| {
+                for sm in &sms {
+                    sm.lock().unwrap().advance(target);
+                }
+            })
+        } else {
+            let ctl = WorkerCtl {
+                barrier: Barrier::new(threads + 1),
+                target: AtomicU64::new(0),
+                done: AtomicBool::new(false),
+            };
+            let mut end = 0;
+            std::thread::scope(|scope| {
+                for w in 0..threads {
+                    let ctl = &ctl;
+                    let sms = &sms;
+                    scope.spawn(move || loop {
+                        ctl.barrier.wait();
+                        if ctl.done.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let target = ctl.target.load(Ordering::SeqCst);
+                        // static round-robin SM assignment; which worker
+                        // runs an SM cannot affect its (pure) trajectory
+                        for i in (w..sms.len()).step_by(threads) {
+                            sms[i].lock().unwrap().advance(target);
+                        }
+                        ctl.barrier.wait();
+                    });
+                }
+                end = self.epoch_loop(&sms, cap, |target| {
+                    ctl.target.store(target, Ordering::SeqCst);
+                    ctl.barrier.wait(); // release workers into the epoch
+                    ctl.barrier.wait(); // all SMs at a boundary
+                });
+                ctl.done.store(true, Ordering::SeqCst);
+                ctl.barrier.wait(); // release workers to exit
+            });
+            end
+        };
+        self.sms = sms.into_iter().map(|m| m.into_inner().unwrap()).collect();
+        self.cycle = end;
+        for sm in &mut self.sms {
+            sm.finish_at(end);
         }
         self.collect_stats()
+    }
+
+    /// Drive the epoch scheduler to completion. `advance_all` must bring
+    /// every SM to `target`, its next L2-bound event, or its drain point
+    /// (serially or via the worker pool — the results are identical).
+    /// Returns the global end cycle.
+    fn epoch_loop(&mut self, sms: &[Mutex<Sm>], cap: u64, advance_all: impl FnMut(u64)) -> u64 {
+        let mut advance_all = advance_all;
+        let interval = self.cfg.sthld_interval.max(1);
+        let mut target = interval.min(cap);
+        let mut reqs: Vec<L2Request> = Vec::new();
+        loop {
+            advance_all(target);
+            // ---- serial L2 phase ----
+            reqs.clear();
+            for sm in sms {
+                sm.lock().unwrap().port.drain_into(&mut reqs);
+            }
+            if !reqs.is_empty() {
+                for r in self.shared.service(&mut reqs) {
+                    sms[r.sm_id as usize]
+                        .lock()
+                        .unwrap()
+                        .l1
+                        .resolve_fill(r.line, r.cycle, r.extra);
+                }
+                continue; // blocked SMs resume toward `target`
+            }
+            // no L2 traffic pending: every SM is at `target` or drained
+            if sms.iter().all(|sm| sm.lock().unwrap().idle()) {
+                let end = sms
+                    .iter()
+                    .map(|sm| sm.lock().unwrap().drained_cycle())
+                    .max()
+                    .unwrap_or(0);
+                if end == target && target % interval == 0 {
+                    // the slowest SM drained exactly on the boundary: a
+                    // lock-step run would still have sampled this interval
+                    self.interval_end(sms);
+                }
+                return end;
+            }
+            if target % interval == 0 {
+                self.interval_end(sms);
+            }
+            if target >= cap {
+                return cap;
+            }
+            target = ((target / interval + 1) * interval).min(cap);
+        }
+    }
+
+    /// Dynamic-STHLD interval boundary: sample GPU-wide IPC, step the
+    /// controller, broadcast the new threshold.
+    fn interval_end(&mut self, sms: &[Mutex<Sm>]) {
+        let instr: u64 = sms.iter().map(|sm| sm.lock().unwrap().committed_instructions()).sum();
+        let ipc = (instr - self.interval_start_instr) as f64
+            / self.cfg.sthld_interval.max(1) as f64;
+        self.interval_start_instr = instr;
+        self.interval_ipc.push(ipc);
+        let sthld = if let Some(ctl) = &mut self.sthld_ctl {
+            ctl.interval_end(ipc)
+        } else {
+            self.current_sthld()
+        };
+        self.sthld_trace.push(sthld);
+        for sm in sms {
+            sm.lock().unwrap().set_sthld(sthld);
+        }
     }
 
     /// Merge all counters into one `Stats`.
@@ -342,5 +534,37 @@ mod tests {
         let trace = KernelTrace::generate(bench, 8, 1); // 8 warps, 32 slots
         let stats = Simulator::new(&cfg, &trace).run();
         assert_eq!(stats.warps_retired, 8);
+    }
+
+    #[test]
+    fn sim_threads_do_not_change_results() {
+        // the full Table II sweep lives in rust/tests/parallel_determinism;
+        // this is the fast in-tree smoke check
+        let mut serial = GpuConfig::table1_baseline().with_scheme(Scheme::Malekeh);
+        serial.num_sms = 2;
+        serial.max_cycles = 30_000;
+        let mut par = serial.clone();
+        par.sim_threads = 2;
+        let a = run_benchmark(&serial, "kmeans", 2);
+        let b = run_benchmark(&par, "kmeans", 2);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn drained_sm_accounts_stall_tail() {
+        // 8 warps on a 2-SM GPU: SM1 is empty and must accumulate the
+        // stall-empty tail a lock-step engine would have recorded
+        let mut cfg = small_cfg(Scheme::Baseline);
+        cfg.num_sms = 2;
+        let bench = crate::trace::find("nn").unwrap();
+        let trace = KernelTrace::generate(bench, 8, 1);
+        let stats = Simulator::new(&cfg, &trace).run();
+        assert_eq!(stats.warps_retired, 8);
+        assert!(
+            stats.sched_stall_empty >= stats.cycles,
+            "empty SM must log stall-empty cycles ({} < {})",
+            stats.sched_stall_empty,
+            stats.cycles
+        );
     }
 }

@@ -1,4 +1,27 @@
 //! Cycle-level sub-core GPU simulator (the Accel-sim stand-in, DESIGN.md §6).
+//!
+//! # Structure
+//!
+//! One [`Simulator`] owns `num_sms` SMs; each SM owns `sub_cores_per_sm`
+//! [`subcore::SubCore`]s (issue scheduler, collector/CCU array, RF banks,
+//! EU pipes) plus a private [`memory::L1Cache`]; the
+//! [`memory::SharedMemorySystem`] (L2 + DRAM) and the dynamic
+//! [`SthldController`] are the only GPU-global state. Per-cycle sub-core
+//! phase order is writeback → dispatch → operand collection → issue.
+//!
+//! # Run loop and determinism
+//!
+//! [`Simulator::run`] is an **epoch scheduler**, not a lock-step loop:
+//! each SM advances independently up to the earlier of the STHLD interval
+//! boundary and its first L2-bound event (L2 requests queue on a per-SM
+//! [`memory::MemPort`]), then a serial phase services the merged queues
+//! in fixed `(cycle, sm_id, seq)` order. With
+//! `GpuConfig::sim_threads > 1` the per-SM phases run on a worker pool —
+//! results are **bit-identical at any thread count** (the determinism
+//! contract of the crate root; see `docs/ARCHITECTURE.md` for the
+//! epoch/sync-boundary walk-through). Simulations are pure functions of
+//! `(GpuConfig, trace)`: no wall clock, no thread identity, and every
+//! policy tie-break draws from the seeded per-sub-core RNG.
 
 pub mod collector;
 pub mod exec;

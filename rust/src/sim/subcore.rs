@@ -5,6 +5,14 @@
 //! (bank arbitration) -> issue. Writeback first so a value produced at
 //! cycle t can be reused by an allocation in the same cycle (the paper's
 //! waiting mechanism exists exactly to create these reuse windows).
+//!
+//! Memory: global loads go through the per-SM L1 directly; an L1 miss that
+//! needs the shared L2 is *deferred* — the request is queued on the SM's
+//! [`MemPort`], the collector stays occupied, and the dispatch retries
+//! after the GPU-level serial L2 phase posts the fill latency (one cycle
+//! of miss-replay latency). This is what lets whole SMs advance in
+//! parallel between L2 events while staying bit-identical at any
+//! `sim_threads` count (see `docs/ARCHITECTURE.md`).
 
 use std::sync::Arc;
 
@@ -13,7 +21,7 @@ use crate::energy::EventKind;
 use crate::isa::{Instruction, OpClass};
 use crate::sim::collector::{AllocResult, CacheTable, Collector};
 use crate::sim::exec::{pipe_of, ExecUnits, Pipe, WbEvent, NPIPES};
-use crate::sim::memory::{L1Cache, SharedMemorySystem};
+use crate::sim::memory::{L1Cache, L1Fetch, MemPort};
 use crate::sim::regfile::{ReadReq, RegFileBanks, WriteReq};
 use crate::sim::warp::WarpState;
 use crate::stats::{SchedState, Stats};
@@ -127,10 +135,11 @@ impl SubCore {
         )
     }
 
-    /// One cycle.
-    pub fn step(&mut self, now: u64, l1: &mut L1Cache, l2: &mut SharedMemorySystem) {
+    /// One cycle. L2-bound loads queue on `port` and defer their dispatch
+    /// (the SM treats a non-empty port as its synchronization boundary).
+    pub fn step(&mut self, now: u64, l1: &mut L1Cache, port: &mut MemPort) {
         self.writeback(now);
-        self.dispatch(now, l1, l2);
+        self.dispatch(now, l1, port);
         self.collect_operands(now);
         self.issue(now);
         // leakage proxy for the collector storage
@@ -225,7 +234,7 @@ impl SubCore {
 
     // ------------------------------------------------------------- dispatch
 
-    fn dispatch(&mut self, now: u64, l1: &mut L1Cache, l2: &mut SharedMemorySystem) {
+    fn dispatch(&mut self, now: u64, l1: &mut L1Cache, port: &mut MemPort) {
         // per pipe, oldest ready collector first
         for pipe_idx in 0..NPIPES {
             let pipe = match pipe_idx {
@@ -252,11 +261,20 @@ impl SubCore {
                 .expect("occupied collector has an owner");
             let mem_done = match instr.op {
                 OpClass::LdGlobal => {
-                    self.stats.l1_accesses += 1;
-                    let before_hits = l1.hits;
-                    let done = l1.load(instr.line_addr as u64, now, l2);
-                    self.stats.l1_hits += l1.hits - before_hits;
-                    done
+                    match l1.load_or_defer(instr.line_addr as u64, now, port) {
+                        L1Fetch::Hit(done) => {
+                            self.stats.l1_accesses += 1;
+                            self.stats.l1_hits += 1;
+                            done
+                        }
+                        L1Fetch::Miss(done) => {
+                            self.stats.l1_accesses += 1;
+                            done
+                        }
+                        // L2-bound: leave the collector occupied and retry
+                        // after the serial L2 phase posts the latency
+                        L1Fetch::Deferred => continue,
+                    }
                 }
                 OpClass::StGlobal => l1.store(instr.line_addr as u64, now),
                 _ => 0,
@@ -714,6 +732,7 @@ enum CcuChoice {
 mod tests {
     use super::*;
     use crate::config::GpuConfig;
+    use crate::sim::memory::SharedMemorySystem;
     use crate::trace::{find, KernelTrace};
 
     fn mem_sys(cfg: &GpuConfig) -> (L1Cache, SharedMemorySystem) {
@@ -730,6 +749,21 @@ mod tests {
         )
     }
 
+    /// One-SM epoch driver: step, then (as the GPU-level scheduler would
+    /// after the SM blocks) service any queued L2 requests and post the
+    /// fills so deferred dispatches retry next cycle.
+    fn step_epoch(sc: &mut SubCore, l1: &mut L1Cache, l2: &mut SharedMemorySystem, t: u64) {
+        let mut port = MemPort::new(0);
+        sc.step(t, l1, &mut port);
+        let mut reqs = Vec::new();
+        port.drain_into(&mut reqs);
+        if !reqs.is_empty() {
+            for r in l2.service(&mut reqs) {
+                l1.resolve_fill(r.line, r.cycle, r.extra);
+            }
+        }
+    }
+
     fn run_subcore(cfg: &GpuConfig, bench: &str, nwarps: usize, max: u64) -> SubCore {
         let trace = KernelTrace::generate(find(bench).unwrap(), nwarps, 7);
         let streams: Vec<_> = trace.warps.into_iter().map(Arc::new).collect();
@@ -737,7 +771,7 @@ mod tests {
         let (mut l1, mut l2) = mem_sys(cfg);
         let mut t = 0;
         while !sc.idle() && t < max {
-            sc.step(t, &mut l1, &mut l2);
+            step_epoch(&mut sc, &mut l1, &mut l2, t);
             t += 1;
         }
         sc.stats.cycles = t;
@@ -768,7 +802,7 @@ mod tests {
         let (mut l1, mut l2) = mem_sys(&cfg);
         let mut t = 0;
         while !sc.idle() && t < 2_000_000 {
-            sc.step(t, &mut l1, &mut l2);
+            step_epoch(&mut sc, &mut l1, &mut l2, t);
             t += 1;
         }
         assert!(sc.idle());
@@ -815,7 +849,7 @@ mod tests {
         let (mut l1, mut l2) = mem_sys(&cfg);
         let mut t = 0;
         while !sc.idle() && t < 2_000_000 {
-            sc.step(t, &mut l1, &mut l2);
+            step_epoch(&mut sc, &mut l1, &mut l2, t);
             t += 1;
         }
         assert!(sc.stats.waiting_stalls > 0, "sthld=8 should cause waits");
@@ -835,7 +869,7 @@ mod tests {
         let (mut l1, mut l2) = mem_sys(&cfg);
         let mut t = 0;
         while !sc.idle() && t < 2_000_000 {
-            sc.step(t, &mut l1, &mut l2);
+            step_epoch(&mut sc, &mut l1, &mut l2, t);
             t += 1;
         }
         assert_eq!(sc.stats.instructions, expect);

@@ -114,7 +114,7 @@ fn traditional_policies_collapse_hit_ratio() {
 fn two_level_slower_than_one_level_on_subcores() {
     // Fig 2's core claim for the software-managed variant (the hardware
     // RFC's cache gains can offset its scheduler loss in this model — a
-    // documented deviation, EXPERIMENTS.md Fig 2)
+    // documented deviation, docs/EXPERIMENTS.md §Fig 2)
     let mut rel = Vec::new();
     for bench in ["hotspot", "srad_v1", "kmeans"] {
         let b = run_benchmark(&cfg(Scheme::Baseline), bench, 2);

@@ -1,12 +1,21 @@
-//! Parallel determinism: the sharded experiment engine must be a pure
-//! wall-clock optimisation. The same seed + the same plan has to produce
-//! **bit-identical** `Table` output (and identical raw `Stats`) whether it
-//! runs on one worker (`--jobs 1`) or many (`--jobs 8`), because each
-//! `SimPoint` carries its own fully-resolved config/seed and results are
-//! merged in fixed plan order.
+//! Parallel determinism: both parallelism layers must be pure wall-clock
+//! optimisations.
+//!
+//! 1. **Across experiment points** (`--jobs N`, the sharded harness): the
+//!    same seed + the same plan has to produce **bit-identical** `Table`
+//!    output (and identical raw `Stats`) whether it runs on one worker or
+//!    many, because each `SimPoint` carries its own fully-resolved
+//!    config/seed and results are merged in fixed plan order.
+//! 2. **Within one simulation** (`--sim-threads N`, the epoch engine):
+//!    `Stats::fingerprint()` must be identical at 1/2/4 SM workers for
+//!    every Table II benchmark, because SMs advance independently between
+//!    synchronization boundaries and the serial L2 phase services the
+//!    merged request queues in fixed `(cycle, sm_id, seq)` order.
 
-use malekeh::config::Scheme;
+use malekeh::config::{GpuConfig, Scheme};
 use malekeh::harness::{geomean, ExpOpts, Runner, Table};
+use malekeh::sim::run_benchmark;
+use malekeh::trace::table2;
 
 fn opts(jobs: usize) -> ExpOpts {
     ExpOpts {
@@ -15,6 +24,7 @@ fn opts(jobs: usize) -> ExpOpts {
         profile_warps: 2,
         quick: true,
         jobs,
+        sim_threads: 1,
     }
 }
 
@@ -85,6 +95,65 @@ fn sharded_stats_identical_to_serial() {
             assert_eq!(a.rf_cache_writes, c.rf_cache_writes, "{b}/{s} cache writes");
             assert_eq!(a.energy, c.energy, "{b}/{s} energy events");
         }
+    }
+}
+
+// ---------------- intra-run SM parallelism (--sim-threads) -----------------
+
+/// Config for the epoch-engine sweeps: `threads` SM workers. The cycle cap
+/// keeps the debug-build sweep fast while still crossing several dynamic
+/// STHLD interval boundaries (10k cycles each).
+fn threaded_cfg(scheme: Scheme, num_sms: usize, threads: usize) -> GpuConfig {
+    let mut c = GpuConfig::table1_baseline().with_scheme(scheme);
+    c.num_sms = num_sms;
+    c.max_cycles = 60_000;
+    c.sim_threads = threads;
+    c
+}
+
+#[test]
+fn sim_threads_fingerprints_identical_across_table2() {
+    // every Table II benchmark, --sim-threads {1, 2, 4}: the stats
+    // fingerprint (every deterministic counter, energy matrix, interval
+    // traces) must be bit-identical
+    for bench in table2() {
+        let serial = run_benchmark(&threaded_cfg(Scheme::Malekeh, 2, 1), bench.name, 2);
+        for threads in [2usize, 4] {
+            let par =
+                run_benchmark(&threaded_cfg(Scheme::Malekeh, 2, threads), bench.name, 2);
+            assert_eq!(
+                serial.fingerprint(),
+                par.fingerprint(),
+                "{}: --sim-threads {threads} diverged from serial",
+                bench.name
+            );
+        }
+    }
+}
+
+#[test]
+fn sim_threads_match_uncapped_on_wider_gpu() {
+    // uncapped runs on a 4-SM machine: exercises the drain path, the
+    // stall-empty tail accounting, and genuinely concurrent 4-worker
+    // epochs (plus the auto/over-provisioned clamp)
+    for (bench, scheme) in [
+        ("kmeans", Scheme::Malekeh),
+        ("gemm_t1", Scheme::Baseline),
+        ("srad_v1", Scheme::Rfc),
+    ] {
+        let fps: Vec<u64> = [1usize, 2, 4, 0]
+            .into_iter()
+            .map(|threads| {
+                let mut c = GpuConfig::table1_baseline().with_scheme(scheme);
+                c.num_sms = 4;
+                c.sim_threads = threads; // 0 = auto (one per core, clamped)
+                run_benchmark(&c, bench, 2).fingerprint()
+            })
+            .collect();
+        assert!(
+            fps.iter().all(|&f| f == fps[0]),
+            "{bench}/{scheme:?}: fingerprints diverged across sim-thread counts: {fps:x?}"
+        );
     }
 }
 

@@ -112,6 +112,7 @@ fn trace_points_shard_deterministically() {
             profile_warps: 2,
             quick: true,
             jobs,
+            sim_threads: 1,
         });
         let mut plan = runner.plan();
         plan.add("kmeans", Scheme::Baseline);
