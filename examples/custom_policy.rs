@@ -1,0 +1,131 @@
+//! Register an ad-hoc RF-cache policy at runtime and run it end to end —
+//! the scheme registry's extension point (`docs/ARCHITECTURE.md` §Policy
+//! layer), exercised without touching a single simulator file.
+//!
+//! The policy here rides the CCU hardware under GTO issue but evicts a
+//! *uniformly random* unlocked entry, drawing from the sub-core's seeded
+//! `util::Rng` — so even "random" replacement is fully deterministic and
+//! fingerprint-stable, as the run below demonstrates.
+//!
+//! Run: `cargo run --release --example custom_policy [bench]`
+
+use malekeh::config::{GpuConfig, Scheme};
+use malekeh::isa::Instruction;
+use malekeh::sim::collector::{AllocResult, CacheTable};
+use malekeh::sim::exec::WbEvent;
+use malekeh::sim::policy::{
+    ccu_allocate, ccu_capture, free_unit_reservoir, register, CachePolicy, CollectorChoice,
+    PolicyCtx, PolicyMeta,
+};
+use malekeh::sim::run_benchmark;
+use malekeh::util::Rng;
+
+/// Evict a uniformly random unlocked entry (one RNG draw per eviction).
+fn random_victim(ct: &CacheTable, rng: &mut Rng) -> Option<usize> {
+    let unlocked: Vec<usize> = ct
+        .entries()
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| !e.locked)
+        .map(|(i, _)| i)
+        .collect();
+    if unlocked.is_empty() {
+        None
+    } else {
+        Some(unlocked[rng.below(unlocked.len())])
+    }
+}
+
+/// CCU hardware + GTO + random replacement, defined entirely out of tree.
+struct RandomReplPolicy {
+    ct_entries: usize,
+}
+
+impl CachePolicy for RandomReplPolicy {
+    fn caching(&self) -> bool {
+        true
+    }
+
+    fn cache_entries_per_collector(&self) -> f64 {
+        self.ct_entries as f64
+    }
+
+    fn select_collector(&mut self, ctx: &mut PolicyCtx, _warp: u8) -> CollectorChoice {
+        match free_unit_reservoir(ctx.collectors, ctx.rng) {
+            Some(ci) => CollectorChoice::Unit(ci),
+            None => {
+                ctx.stats.collector_full_stalls += 1;
+                CollectorChoice::StallCycle { waiting: false }
+            }
+        }
+    }
+
+    fn allocate(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ci: usize,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+    ) -> AllocResult {
+        ccu_allocate(ctx, ci, warp, instr, now, &mut random_victim)
+    }
+
+    fn capture_writeback(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ev: &WbEvent,
+        reg: u8,
+        near: bool,
+        port_free: bool,
+    ) -> bool {
+        ccu_capture(ctx, ev, reg, near, port_free, &mut random_victim, true)
+    }
+}
+
+fn main() {
+    let bench = std::env::args().nth(1).unwrap_or_else(|| "kmeans".into());
+
+    // 1. register: the name is now a first-class scheme everywhere
+    let scheme = register(
+        PolicyMeta {
+            name: "random_repl",
+            summary: "CCU hardware under GTO + seeded random replacement (example)",
+            private_per_warp: false,
+            two_level: false,
+            fig17_sweep: false,
+        },
+        |cfg| Box::new(RandomReplPolicy { ct_entries: cfg.ct_entries }),
+    )
+    .expect("name is free");
+    assert_eq!(Scheme::from_name("random_repl"), Some(scheme));
+    assert!(Scheme::all().contains(&scheme), "registry lists the new policy");
+
+    // 2. run it exactly like a built-in scheme
+    let mut cfg = GpuConfig::table1_baseline().with_scheme(scheme);
+    cfg.num_sms = 1;
+    let stats = run_benchmark(&cfg, &bench, 2);
+    let again = run_benchmark(&cfg, &bench, 2);
+
+    println!("benchmark            {bench}");
+    println!("scheme               {} ({})", scheme, scheme.meta().summary);
+    println!("cycles               {}", stats.cycles);
+    println!("instructions         {}", stats.instructions);
+    println!("RF cache hit ratio   {:.3}", stats.rf_hit_ratio());
+    println!("cache writes         {}", stats.rf_cache_writes);
+    println!("stats fingerprint    {:016x}", stats.fingerprint());
+    assert_eq!(
+        stats.fingerprint(),
+        again.fingerprint(),
+        "seeded random replacement must be run-to-run deterministic"
+    );
+    println!("rerun fingerprint    identical (deterministic by construction)");
+
+    // 3. compare against the built-ins on the same benchmark
+    for s in [Scheme::MALEKEH, Scheme::MALEKEH_TRADITIONAL, Scheme::FIFO, Scheme::BELADY] {
+        let mut c = GpuConfig::table1_baseline().with_scheme(s);
+        c.num_sms = 1;
+        let r = run_benchmark(&c, &bench, 2);
+        println!("  vs {:20} hit ratio {:.3}", s.name(), r.rf_hit_ratio());
+    }
+}

@@ -52,7 +52,7 @@ fn main() {
     }
 
     // --- 2. the Deepbench suite through the simulator ---
-    let schemes = [Scheme::Baseline, Scheme::Malekeh, Scheme::Bow, Scheme::MalekehPr];
+    let schemes = [Scheme::BASELINE, Scheme::MALEKEH, Scheme::BOW, Scheme::MALEKEH_PR];
     let mut t = Table::new(
         "Deepbench: IPC (norm) and RF-cache hit ratio per scheme",
         &["bench", "mal_ipc", "bow_ipc", "pr_ipc", "mal_hit", "bow_hit", "pr_hit"],

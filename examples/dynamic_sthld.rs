@@ -11,7 +11,7 @@ use malekeh::harness::Table;
 use malekeh::sim::run_benchmark;
 
 fn cfg_with(sthld: SthldMode) -> GpuConfig {
-    let mut c = GpuConfig::table1_baseline().with_scheme(Scheme::Malekeh);
+    let mut c = GpuConfig::table1_baseline().with_scheme(Scheme::MALEKEH);
     c.num_sms = 1;
     c.sthld = sthld;
     c.sthld_interval = 2_000;

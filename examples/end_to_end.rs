@@ -132,7 +132,7 @@ fn main() {
         // 3: simulate baseline + malekeh on the SAME annotated trace
         let t0 = std::time::Instant::now();
         let base = Simulator::new(&cfg, &trace).run();
-        let mal_cfg = cfg.clone().with_scheme(Scheme::Malekeh);
+        let mal_cfg = cfg.clone().with_scheme(Scheme::MALEKEH);
         let mal = Simulator::new(&mal_cfg, &trace).run();
         println!(
             "[{bench_name}] simulated {} + {} instrs in {:.1}s",

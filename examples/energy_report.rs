@@ -11,7 +11,7 @@ use malekeh::sim::run_benchmark;
 
 fn main() {
     let bench = std::env::args().nth(1).unwrap_or_else(|| "rnn_t2".to_string());
-    let schemes = [Scheme::Baseline, Scheme::Malekeh, Scheme::Bow];
+    let schemes = [Scheme::BASELINE, Scheme::MALEKEH, Scheme::BOW];
 
     let mut per_scheme = Vec::new();
     for s in schemes {

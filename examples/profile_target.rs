@@ -4,7 +4,7 @@
 use malekeh::config::{GpuConfig, Scheme};
 use malekeh::sim::run_benchmark;
 fn main() {
-    let mut cfg = GpuConfig::table1_baseline().with_scheme(Scheme::Malekeh);
+    let mut cfg = GpuConfig::table1_baseline().with_scheme(Scheme::MALEKEH);
     cfg.num_sms = 1;
     for _ in 0..5 { run_benchmark(&cfg, "kmeans", 2); }
 }

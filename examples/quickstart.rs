@@ -13,7 +13,7 @@ fn main() {
     // Table I baseline config, scaled to 2 SMs for a fast first run.
     let mut base_cfg = GpuConfig::table1_baseline();
     base_cfg.num_sms = 2;
-    let mal_cfg = base_cfg.clone().with_scheme(Scheme::Malekeh);
+    let mal_cfg = base_cfg.clone().with_scheme(Scheme::MALEKEH);
 
     println!("simulating `{bench}` on {} SMs...\n", base_cfg.num_sms);
     let base = run_benchmark(&base_cfg, &bench, 2);

@@ -19,7 +19,7 @@ fn main() {
     let bench =
         find(&bench_name).unwrap_or_else(|| panic!("unknown bench {bench_name}"));
 
-    let mut cfg = GpuConfig::table1_baseline().with_scheme(Scheme::Malekeh);
+    let mut cfg = GpuConfig::table1_baseline().with_scheme(Scheme::MALEKEH);
     cfg.num_sms = 2;
     let nwarps = cfg.num_sms * cfg.warps_per_sm;
 

@@ -3,9 +3,11 @@
 //! B. RTHLD = 12 empirically best (§III-A)
 //! C. scaling OCUs 2->8 is the expensive alternative (§I: +7.1% IPC)
 //! D. one filtered write port ~ unbounded (§III-B, §IV-A2)
+//! E. replacement policy sweep over the registry (LRU/FIFO/Belady vs
+//!    the paper's reuse-guided chooser)
 use malekeh::harness::{
-    ablation_ct_entries, ablation_ocu_scaling, ablation_rthld, ablation_write_port,
-    ExpOpts, Runner,
+    ablation_ct_entries, ablation_ocu_scaling, ablation_replacement, ablation_rthld,
+    ablation_write_port, ExpOpts, Runner,
 };
 
 fn main() {
@@ -20,5 +22,6 @@ fn main() {
     ablation_rthld(&runner).print();
     ablation_ocu_scaling(&runner).print();
     ablation_write_port(&runner).print();
+    ablation_replacement(&runner).print();
     println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
 }

@@ -1,4 +1,6 @@
 //! Fig 17 paper: traditional GTO+LRU collapses the hit ratio to 7.9% avg.
+//! The scheme columns come from the policy registry's fig17 sweep set
+//! (traditional LRU, FIFO, the Belady oracle) plus `malekeh` as reference.
 use malekeh::harness::{fig17, ExpOpts, Runner};
 
 fn main() {

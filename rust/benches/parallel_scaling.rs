@@ -12,7 +12,7 @@ use malekeh::config::Scheme;
 use malekeh::harness::{ExpOpts, Plan, Runner};
 
 const SCHEMES: [Scheme; 4] =
-    [Scheme::Baseline, Scheme::Malekeh, Scheme::Bow, Scheme::MalekehPr];
+    [Scheme::BASELINE, Scheme::MALEKEH, Scheme::BOW, Scheme::MALEKEH_PR];
 
 fn grid_plan(runner: &Runner) -> Plan {
     let mut plan = runner.plan();

@@ -34,7 +34,7 @@ fn sim_throughput(bench: &str, scheme: Scheme, reps: usize) -> (f64, u64) {
 /// docs/EXPERIMENTS.md §Perf and asserts the fingerprints stay
 /// bit-identical while doing so.
 fn sm_parallel_point(reps: usize, smoke: bool) {
-    let mut cfg = GpuConfig::table1_baseline().with_scheme(Scheme::Malekeh);
+    let mut cfg = GpuConfig::table1_baseline().with_scheme(Scheme::MALEKEH);
     cfg.num_sms = 10;
     if smoke {
         cfg.max_cycles = 50_000; // liveness only: keep CI turnaround short
@@ -82,12 +82,12 @@ fn main() {
     println!("== §Perf: hot-path microbenchmarks ==");
     println!("{:<44}{:>14}{:>12}", "workload", "Minstr/s", "instrs");
     for (bench, scheme) in [
-        ("gemm_t1", Scheme::Baseline),
-        ("gemm_t1", Scheme::Malekeh),
-        ("gemm_t1", Scheme::Bow),
-        ("hotspot", Scheme::Malekeh),
-        ("kmeans", Scheme::Malekeh),
-        ("bfs", Scheme::Rfc),
+        ("gemm_t1", Scheme::BASELINE),
+        ("gemm_t1", Scheme::MALEKEH),
+        ("gemm_t1", Scheme::BOW),
+        ("hotspot", Scheme::MALEKEH),
+        ("kmeans", Scheme::MALEKEH),
+        ("bfs", Scheme::RFC),
     ] {
         let (mips, instr) = sim_throughput(bench, scheme, reps);
         println!(

@@ -4,79 +4,20 @@
 //! format is a plain `key = value` / `# comment` subset parsed here; every
 //! field is also overridable from the CLI (`-s key=value`), which is how the
 //! bench harness builds its sweeps.
+//!
+//! The scheme identifier is re-exported from the policy registry
+//! ([`crate::sim::policy::registry`]) — the single source of scheme names;
+//! `scheme = <name>` overrides resolve through [`Scheme::parse`], so an
+//! unknown name errors with the list of valid ones (including any policy
+//! registered at runtime).
 
 mod parse;
 pub use parse::{parse_kv_file, parse_kv_str};
 
-use std::fmt;
-
-/// Which collector-unit organisation (and therefore which paper scheme) a
-/// simulation runs. See DESIGN.md §4.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Scheme {
-    /// Baseline Turing-style OCUs, no caching (§II).
-    Baseline,
-    /// Malekeh: shared CCUs with reuse-guided policies (§III, §IV).
-    Malekeh,
-    /// Malekeh with a private CCU per warp (§VI-B, "Malekeh_PR").
-    MalekehPr,
-    /// BOW: private per-warp bypassing operand collectors, sliding window.
-    Bow,
-    /// RFC: per-active-warp RF cache + two-level scheduler (Gebhart 2011).
-    Rfc,
-    /// Software RFC: compiler-managed cache + two-level scheduler (strands).
-    SoftwareRfc,
-    /// Ablation for Fig 17: Malekeh hardware, traditional GTO + plain LRU,
-    /// no write filter, no waiting mechanism.
-    MalekehTraditional,
-}
-
-impl Scheme {
-    /// All schemes, in the order figures report them.
-    pub const ALL: [Scheme; 7] = [
-        Scheme::Baseline,
-        Scheme::Malekeh,
-        Scheme::MalekehPr,
-        Scheme::Bow,
-        Scheme::Rfc,
-        Scheme::SoftwareRfc,
-        Scheme::MalekehTraditional,
-    ];
-
-    /// Stable name used by the CLI and reports.
-    pub fn name(self) -> &'static str {
-        match self {
-            Scheme::Baseline => "baseline",
-            Scheme::Malekeh => "malekeh",
-            Scheme::MalekehPr => "malekeh_pr",
-            Scheme::Bow => "bow",
-            Scheme::Rfc => "rfc",
-            Scheme::SoftwareRfc => "software_rfc",
-            Scheme::MalekehTraditional => "malekeh_traditional",
-        }
-    }
-
-    /// Parse a CLI name.
-    pub fn from_name(s: &str) -> Option<Scheme> {
-        Scheme::ALL.iter().copied().find(|x| x.name() == s)
-    }
-
-    /// Does this scheme use a private collector per warp?
-    pub fn private_per_warp(self) -> bool {
-        matches!(self, Scheme::MalekehPr | Scheme::Bow)
-    }
-
-    /// Does this scheme use the two-level (active/pending) scheduler?
-    pub fn two_level(self) -> bool {
-        matches!(self, Scheme::Rfc | Scheme::SoftwareRfc)
-    }
-}
-
-impl fmt::Display for Scheme {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(self.name())
-    }
-}
+/// Which collector-unit organisation (and therefore which policy) a
+/// simulation runs — a handle into the scheme registry. See DESIGN.md §4
+/// and `docs/ARCHITECTURE.md` §Policy layer.
+pub use crate::sim::policy::Scheme;
 
 /// How STHLD (the waiting-mechanism threshold, §IV-B3) is chosen.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -207,7 +148,7 @@ impl GpuConfig {
             rfc_entries: 6,
             active_warps_per_sub_core: 2,
             swrfc_strand_len: 10,
-            scheme: Scheme::Baseline,
+            scheme: Scheme::BASELINE,
             sthld: SthldMode::Dynamic,
             sthld_interval: 10_000,
             sthld_epsilon: 0.02,
@@ -247,11 +188,12 @@ impl GpuConfig {
         c
     }
 
-    /// Set the scheme, adjusting collector counts for private-per-warp
-    /// organisations (one collector per resident warp).
+    /// Set the scheme, applying the Fig 17 ablation knobs for the
+    /// traditional comparison point (plain LRU, no write filter, no
+    /// waiting mechanism).
     pub fn with_scheme(mut self, scheme: Scheme) -> Self {
         self.scheme = scheme;
-        if scheme == Scheme::MalekehTraditional {
+        if scheme == Scheme::MALEKEH_TRADITIONAL {
             self.traditional_replacement = true;
             self.no_write_filter = true;
             self.sthld = SthldMode::Static(0);
@@ -296,10 +238,7 @@ impl GpuConfig {
                 self.active_warps_per_sub_core = p(key, value)?
             }
             "swrfc_strand_len" => self.swrfc_strand_len = p(key, value)?,
-            "scheme" => {
-                self.scheme = Scheme::from_name(value.trim())
-                    .ok_or_else(|| format!("unknown scheme {value:?}"))?
-            }
+            "scheme" => self.scheme = Scheme::parse(value.trim())?,
             "sthld" => {
                 self.sthld = if value.trim() == "dynamic" {
                     SthldMode::Dynamic
@@ -420,7 +359,7 @@ mod tests {
 
     #[test]
     fn with_scheme_traditional_sets_ablation_flags() {
-        let c = GpuConfig::table1_baseline().with_scheme(Scheme::MalekehTraditional);
+        let c = GpuConfig::table1_baseline().with_scheme(Scheme::MALEKEH_TRADITIONAL);
         assert!(c.traditional_replacement);
         assert!(c.no_write_filter);
         assert_eq!(c.sthld, SthldMode::Static(0));
@@ -428,9 +367,9 @@ mod tests {
 
     #[test]
     fn effective_collectors_private_schemes() {
-        let c = GpuConfig::table1_baseline().with_scheme(Scheme::Bow);
+        let c = GpuConfig::table1_baseline().with_scheme(Scheme::BOW);
         assert_eq!(c.effective_collectors(), 8); // one per warp
-        let c = GpuConfig::table1_baseline().with_scheme(Scheme::Malekeh);
+        let c = GpuConfig::table1_baseline().with_scheme(Scheme::MALEKEH);
         assert_eq!(c.effective_collectors(), 2);
     }
 
@@ -438,7 +377,7 @@ mod tests {
     fn set_roundtrips_keys() {
         let mut c = GpuConfig::table1_baseline();
         c.set("scheme", "malekeh").unwrap();
-        assert_eq!(c.scheme, Scheme::Malekeh);
+        assert_eq!(c.scheme, Scheme::MALEKEH);
         c.set("sthld", "dynamic").unwrap();
         assert_eq!(c.sthld, SthldMode::Dynamic);
         c.set("sthld", "4").unwrap();
@@ -461,14 +400,14 @@ mod tests {
         c.ct_entries = 4; // cannot hold 6 sources
         assert!(c.validate().is_err());
 
-        let mut c = GpuConfig::table1_baseline().with_scheme(Scheme::Rfc);
+        let mut c = GpuConfig::table1_baseline().with_scheme(Scheme::RFC);
         c.active_warps_per_sub_core = 100;
         assert!(c.validate().is_err());
     }
 
     #[test]
     fn scheme_names_roundtrip() {
-        for s in Scheme::ALL {
+        for s in Scheme::all() {
             assert_eq!(Scheme::from_name(s.name()), Some(s));
         }
         assert_eq!(Scheme::from_name("bogus"), None);

@@ -13,7 +13,7 @@
 //! artifact (L1 Pallas kernel) via `runtime::EnergyModelExe`, and the two
 //! paths are cross-checked by an integration test.
 
-use crate::config::{GpuConfig, Scheme};
+use crate::config::GpuConfig;
 
 /// RF energy event kinds. Order must match `python/compile/constants.py`
 /// `ENERGY_EVENTS` (the AOT artifact's column order).
@@ -120,12 +120,9 @@ impl EnergyModel {
     /// - leak proxy: per-cycle, proportional to total collector storage.
     pub fn for_config(cfg: &GpuConfig) -> Self {
         let ncol = cfg.effective_collectors() as f64;
-        let entries_per_col = match cfg.scheme {
-            Scheme::Bow => (cfg.bow_window * 8) as f64, // 6 src + 2 dst per instr
-            Scheme::Rfc | Scheme::SoftwareRfc => cfg.rfc_entries as f64,
-            Scheme::Baseline => 6.0,
-            _ => cfg.ct_entries as f64,
-        };
+        // the policy knows its own cache geometry (BOW window slots, RFC
+        // entries, CCU cache-table entries, OCU operand slots)
+        let entries_per_col = cfg.scheme.build_policy(cfg).cache_entries_per_collector();
         // 128B per entry; normalise to the 8-entry CCU = 1KB baseline point.
         let cache_kb = entries_per_col * 128.0 / 1024.0;
         let cache_read = 0.12 * (cache_kb / 1.0).max(0.25);
@@ -174,6 +171,7 @@ impl EnergyModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Scheme;
 
     #[test]
     fn counts_add_and_merge() {
@@ -191,7 +189,7 @@ mod tests {
     #[test]
     fn cache_read_cheaper_than_bank_read() {
         let cfg = crate::config::GpuConfig::table1_baseline()
-            .with_scheme(Scheme::Malekeh);
+            .with_scheme(Scheme::MALEKEH);
         let m = EnergyModel::for_config(&cfg);
         assert!(m.costs()[EventKind::CcuRead as usize] < 0.5);
         assert!(m.costs()[EventKind::BankRead as usize] == 1.0);
@@ -200,8 +198,8 @@ mod tests {
     #[test]
     fn bow_structures_cost_more_than_malekeh() {
         let base = crate::config::GpuConfig::table1_baseline();
-        let mal = EnergyModel::for_config(&base.clone().with_scheme(Scheme::Malekeh));
-        let bow = EnergyModel::for_config(&base.clone().with_scheme(Scheme::Bow));
+        let mal = EnergyModel::for_config(&base.clone().with_scheme(Scheme::MALEKEH));
+        let bow = EnergyModel::for_config(&base.clone().with_scheme(Scheme::BOW));
         // BOW: bigger buffers and an 8-port crossbar
         assert!(
             bow.costs()[EventKind::CcuRead as usize]

@@ -28,15 +28,15 @@
 //! // phase 1: declare the points and shard them across the pool
 //! let mut plan = runner.plan();
 //! for bench in runner.opts().benchmarks() {
-//!     plan.add(bench, Scheme::Baseline);
-//!     plan.add(bench, Scheme::Malekeh);
+//!     plan.add(bench, Scheme::BASELINE);
+//!     plan.add(bench, Scheme::MALEKEH);
 //! }
 //! runner.execute(&plan);
 //!
 //! // phase 2: read results (all cache hits) in table order
 //! for bench in runner.opts().benchmarks() {
-//!     let base = runner.run(bench, Scheme::Baseline);
-//!     let mal = runner.run(bench, Scheme::Malekeh);
+//!     let base = runner.run(bench, Scheme::BASELINE);
+//!     let mal = runner.run(bench, Scheme::MALEKEH);
 //!     println!("{bench}: IPC x{:.3}", mal.ipc() / base.ipc().max(1e-9));
 //! }
 //! ```
@@ -309,11 +309,11 @@ pub fn fig02(runner: &Runner) -> Table {
     let benches = runner.opts().benchmarks();
     let mut plan = runner.plan();
     for bench in &benches {
-        plan.add(bench, Scheme::Baseline);
-        plan.add_cfg(bench, Scheme::Baseline, 1, |o| {
-            monolithic_cfg(o, Scheme::Baseline)
+        plan.add(bench, Scheme::BASELINE);
+        plan.add_cfg(bench, Scheme::BASELINE, 1, |o| {
+            monolithic_cfg(o, Scheme::BASELINE)
         });
-        for scheme in [Scheme::Rfc, Scheme::SoftwareRfc] {
+        for scheme in [Scheme::RFC, Scheme::SOFTWARE_RFC] {
             plan.add(bench, scheme);
             plan.add_cfg(bench, scheme, 1, |o| monolithic_cfg(o, scheme));
         }
@@ -326,14 +326,14 @@ pub fn fig02(runner: &Runner) -> Table {
     );
     let mut cols: [Vec<f64>; 4] = Default::default();
     for bench in &benches {
-        let base_sub = runner.run(bench, Scheme::Baseline).ipc();
+        let base_sub = runner.run(bench, Scheme::BASELINE).ipc();
         let base_mono = runner
-            .run_cfg_key(bench, Scheme::Baseline, 1, |o| {
-                monolithic_cfg(o, Scheme::Baseline)
+            .run_cfg_key(bench, Scheme::BASELINE, 1, |o| {
+                monolithic_cfg(o, Scheme::BASELINE)
             })
             .ipc();
         let mut vals = [0f64; 4];
-        for (i, scheme) in [Scheme::Rfc, Scheme::SoftwareRfc].iter().enumerate() {
+        for (i, scheme) in [Scheme::RFC, Scheme::SOFTWARE_RFC].iter().enumerate() {
             let sub = runner.run(bench, *scheme).ipc();
             let mono = runner
                 .run_cfg_key(bench, *scheme, 1, |o| monolithic_cfg(o, *scheme))
@@ -368,10 +368,10 @@ const FIG07_BENCHES: [&str; 3] = ["srad_v1", "gaussian", "rnn_i2"];
 pub fn fig07(runner: &Runner) -> Table {
     let mut plan = runner.plan();
     for bench in FIG07_BENCHES {
-        plan.add(bench, Scheme::Baseline);
+        plan.add(bench, Scheme::BASELINE);
         for (k, s) in FIG07_STHLDS.iter().enumerate() {
-            plan.add_cfg(bench, Scheme::Malekeh, 100 + k as u64, |o| {
-                let mut c = o.config(Scheme::Malekeh);
+            plan.add_cfg(bench, Scheme::MALEKEH, 100 + k as u64, |o| {
+                let mut c = o.config(Scheme::MALEKEH);
                 c.sthld = SthldMode::Static(*s);
                 c
             });
@@ -387,12 +387,12 @@ pub fn fig07(runner: &Runner) -> Table {
         &hdr,
     );
     for bench in FIG07_BENCHES {
-        let base = runner.run(bench, Scheme::Baseline).ipc();
+        let base = runner.run(bench, Scheme::BASELINE).ipc();
         let mut ipc_row = Vec::new();
         let mut hit_row = Vec::new();
         for (k, s) in FIG07_STHLDS.iter().enumerate() {
-            let stats = runner.run_cfg_key(bench, Scheme::Malekeh, 100 + k as u64, |o| {
-                let mut c = o.config(Scheme::Malekeh);
+            let stats = runner.run_cfg_key(bench, Scheme::MALEKEH, 100 + k as u64, |o| {
+                let mut c = o.config(Scheme::MALEKEH);
                 c.sthld = SthldMode::Static(*s);
                 c
             });
@@ -407,7 +407,7 @@ pub fn fig07(runner: &Runner) -> Table {
 
 /// Fig 9: dynamic-STHLD trajectory on the phase-changing workload.
 pub fn fig09(opts: &ExpOpts) -> Table {
-    let mut cfg = GpuConfig::table1_baseline().with_scheme(Scheme::Malekeh);
+    let mut cfg = GpuConfig::table1_baseline().with_scheme(Scheme::MALEKEH);
     cfg.num_sms = opts.num_sms;
     cfg.seed = opts.seed;
     cfg.sthld = SthldMode::Dynamic;
@@ -432,7 +432,7 @@ pub fn fig09(opts: &ExpOpts) -> Table {
 pub fn fig10(runner: &Runner) -> Table {
     let benches = runner.opts().benchmarks();
     let mut plan = runner.plan();
-    for scheme in [Scheme::Rfc, Scheme::SoftwareRfc] {
+    for scheme in [Scheme::RFC, Scheme::SOFTWARE_RFC] {
         for bench in &benches {
             plan.add(bench, scheme);
         }
@@ -443,7 +443,7 @@ pub fn fig10(runner: &Runner) -> Table {
         "Fig 10: two-level scheduler state distribution (fractions)",
         &["scheme", "issued", "state2_ready_stall", "state3_empty"],
     );
-    for scheme in [Scheme::Rfc, Scheme::SoftwareRfc] {
+    for scheme in [Scheme::RFC, Scheme::SOFTWARE_RFC] {
         let mut acc = [0f64; 3];
         for bench in &benches {
             let s = runner.run(bench, scheme);
@@ -459,7 +459,7 @@ pub fn fig10(runner: &Runner) -> Table {
 }
 
 /// The Fig 12/13/14/15/16 scheme set.
-const MAIN_SCHEMES: [Scheme; 3] = [Scheme::Malekeh, Scheme::Bow, Scheme::MalekehPr];
+const MAIN_SCHEMES: [Scheme; 3] = [Scheme::MALEKEH, Scheme::BOW, Scheme::MALEKEH_PR];
 
 /// Declare + execute `benchmarks x schemes` default-config points.
 fn execute_grid(runner: &Runner, benches: &[&str], schemes: &[Scheme]) {
@@ -478,7 +478,7 @@ pub fn fig12(runner: &Runner) -> Table {
     execute_grid(
         runner,
         &benches,
-        &[Scheme::Baseline, Scheme::Malekeh, Scheme::Bow, Scheme::MalekehPr],
+        &[Scheme::BASELINE, Scheme::MALEKEH, Scheme::BOW, Scheme::MALEKEH_PR],
     );
 
     let mut t = Table::new(
@@ -487,7 +487,7 @@ pub fn fig12(runner: &Runner) -> Table {
     );
     let mut cols: [Vec<f64>; 3] = Default::default();
     for bench in &benches {
-        let base = runner.run(bench, Scheme::Baseline).ipc();
+        let base = runner.run(bench, Scheme::BASELINE).ipc();
         let mut vals = [0f64; 3];
         for (i, s) in MAIN_SCHEMES.iter().enumerate() {
             vals[i] = runner.run(bench, *s).ipc() / base.max(1e-9);
@@ -535,7 +535,7 @@ pub fn fig14(runner: &Runner) -> Table {
     execute_grid(
         runner,
         &benches,
-        &[Scheme::Baseline, Scheme::Malekeh, Scheme::Bow],
+        &[Scheme::BASELINE, Scheme::MALEKEH, Scheme::BOW],
     );
 
     let mut t = Table::new(
@@ -544,9 +544,9 @@ pub fn fig14(runner: &Runner) -> Table {
     );
     for bench in &benches {
         let vals = [
-            runner.run(bench, Scheme::Baseline).l1_hit_ratio(),
-            runner.run(bench, Scheme::Malekeh).l1_hit_ratio(),
-            runner.run(bench, Scheme::Bow).l1_hit_ratio(),
+            runner.run(bench, Scheme::BASELINE).l1_hit_ratio(),
+            runner.run(bench, Scheme::MALEKEH).l1_hit_ratio(),
+            runner.run(bench, Scheme::BOW).l1_hit_ratio(),
         ];
         t.row_f(bench, &vals, 3);
     }
@@ -560,7 +560,7 @@ pub fn fig15(runner: &Runner) -> Table {
     execute_grid(
         runner,
         &benches,
-        &[Scheme::Baseline, Scheme::Malekeh, Scheme::Bow, Scheme::MalekehPr],
+        &[Scheme::BASELINE, Scheme::MALEKEH, Scheme::BOW, Scheme::MALEKEH_PR],
     );
 
     let mut t = Table::new(
@@ -569,8 +569,8 @@ pub fn fig15(runner: &Runner) -> Table {
     );
     let mut cols: [Vec<f64>; 3] = Default::default();
     for bench in &benches {
-        let base_stats = runner.run(bench, Scheme::Baseline);
-        let base_model = EnergyModel::for_config(&opts.config(Scheme::Baseline));
+        let base_stats = runner.run(bench, Scheme::BASELINE);
+        let base_model = EnergyModel::for_config(&opts.config(Scheme::BASELINE));
         let base_e = base_model.total(&base_stats.energy).max(1e-9);
         let mut vals = [0f64; 3];
         for (i, s) in MAIN_SCHEMES.iter().enumerate() {
@@ -592,15 +592,15 @@ pub fn fig15(runner: &Runner) -> Table {
 /// Fig 16: writes captured by the RF cache / all RF writes.
 pub fn fig16(runner: &Runner) -> Table {
     let benches = runner.opts().benchmarks();
-    execute_grid(runner, &benches, &[Scheme::Malekeh, Scheme::Bow]);
+    execute_grid(runner, &benches, &[Scheme::MALEKEH, Scheme::BOW]);
 
     let mut t = Table::new(
         "Fig 16: cache writes / total RF writes (and reused fraction)",
         &["bench", "malekeh", "bow", "malekeh_reused"],
     );
     for bench in &benches {
-        let m = runner.run(bench, Scheme::Malekeh);
-        let b = runner.run(bench, Scheme::Bow);
+        let m = runner.run(bench, Scheme::MALEKEH);
+        let b = runner.run(bench, Scheme::BOW);
         let reused = if m.rf_cache_writes == 0 {
             0.0
         } else {
@@ -615,37 +615,64 @@ pub fn fig16(runner: &Runner) -> Table {
     t
 }
 
-/// Fig 17: Malekeh hardware under traditional GTO+LRU policies.
+/// The Fig 17 / Ablation-E scheme columns: the registry's sweep set
+/// ([`crate::sim::policy::PolicyMeta::fig17_sweep`]) plus `malekeh` as
+/// the reference, so a newly registered comparison policy lands in both
+/// tables automatically.
+fn replacement_sweep_schemes() -> Vec<Scheme> {
+    let mut schemes = Scheme::fig17_sweep();
+    schemes.push(Scheme::MALEKEH);
+    schemes
+}
+
+/// Execute and assemble a `benches x schemes` RF-hit-ratio table with a
+/// MEAN row — shared by the registry-driven sweep builders.
+fn hit_ratio_sweep_table(
+    runner: &Runner,
+    title: &str,
+    benches: &[&str],
+    schemes: &[Scheme],
+) -> Table {
+    execute_grid(runner, benches, schemes);
+    let mut header: Vec<String> = vec!["bench".into()];
+    header.extend(schemes.iter().map(|s| s.name().to_string()));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(title, &hdr);
+    let mut cols: Vec<Vec<f64>> = vec![Vec::new(); schemes.len()];
+    for bench in benches {
+        let vals: Vec<f64> = schemes
+            .iter()
+            .map(|s| runner.run(bench, *s).rf_hit_ratio())
+            .collect();
+        for (col, v) in cols.iter_mut().zip(&vals) {
+            col.push(*v);
+        }
+        t.row_f(bench, &vals, 3);
+    }
+    let means: Vec<f64> = cols.iter().map(|c| mean(c)).collect();
+    t.row_f("MEAN", &means, 3);
+    t
+}
+
+/// Fig 17: Malekeh hardware under traditional scheduling policies —
+/// traditional GTO+LRU as in the paper, plus the registry-only FIFO and
+/// Belady-oracle replacement brackets, with `malekeh` as the reference
+/// column.
 pub fn fig17(runner: &Runner) -> Table {
     let benches = runner.opts().benchmarks();
-    execute_grid(
+    hit_ratio_sweep_table(
         runner,
+        "Fig 17: hit ratio under traditional issue (GTO) + swept replacement policies",
         &benches,
-        &[Scheme::MalekehTraditional, Scheme::Malekeh],
-    );
-
-    let mut t = Table::new(
-        "Fig 17: hit ratio with traditional scheduling (GTO) + LRU",
-        &["bench", "traditional", "malekeh"],
-    );
-    let mut trad = Vec::new();
-    let mut mal = Vec::new();
-    for bench in &benches {
-        let tr = runner.run(bench, Scheme::MalekehTraditional).rf_hit_ratio();
-        let ml = runner.run(bench, Scheme::Malekeh).rf_hit_ratio();
-        trad.push(tr);
-        mal.push(ml);
-        t.row_f(bench, &[tr, ml], 3);
-    }
-    t.row_f("MEAN", &[mean(&trad), mean(&mal)], 3);
-    t
+        &replacement_sweep_schemes(),
+    )
 }
 
 /// Headline table: the abstract's claims vs this reproduction.
 pub fn headline(runner: &Runner) -> Table {
     let opts = runner.opts().clone();
     let benches = opts.benchmarks();
-    execute_grid(runner, &benches, &[Scheme::Baseline, Scheme::Malekeh]);
+    execute_grid(runner, &benches, &[Scheme::BASELINE, Scheme::MALEKEH]);
 
     let mut t = Table::new(
         "Headline: Malekeh vs baseline (paper: hit 46.4%, energy -28.3%, IPC +6.1%, storage +0.78%)",
@@ -656,13 +683,13 @@ pub fn headline(runner: &Runner) -> Table {
     let mut e_ratio = Vec::new();
     let mut br_red = Vec::new();
     for bench in &benches {
-        let base = runner.run(bench, Scheme::Baseline);
-        let m = runner.run(bench, Scheme::Malekeh);
+        let base = runner.run(bench, Scheme::BASELINE);
+        let m = runner.run(bench, Scheme::MALEKEH);
         hits.push(m.rf_hit_ratio());
         ipc_ratio.push(m.ipc() / base.ipc().max(1e-9));
         br_red.push(m.bank_read_reduction_vs(&base));
-        let bm = EnergyModel::for_config(&opts.config(Scheme::Baseline));
-        let mm = EnergyModel::for_config(&opts.config(Scheme::Malekeh));
+        let bm = EnergyModel::for_config(&opts.config(Scheme::BASELINE));
+        let mm = EnergyModel::for_config(&opts.config(Scheme::MALEKEH));
         e_ratio.push(mm.total(&m.energy) / bm.total(&base.energy).max(1e-9));
     }
     t.row(vec![
@@ -731,7 +758,7 @@ mod tests {
         assert_eq!(o.jobs, 1);
         let o = ExpOpts::from_args(&["--sim-threads".into(), "4".into()]);
         assert_eq!(o.sim_threads, 4);
-        assert_eq!(o.config(Scheme::Baseline).sim_threads, 4);
+        assert_eq!(o.config(Scheme::BASELINE).sim_threads, 4);
     }
 
     #[test]
@@ -758,8 +785,8 @@ mod tests {
     #[test]
     fn runner_caches() {
         let r = Runner::new(tiny_opts());
-        let a = r.run("nn", Scheme::Baseline);
-        let b = r.run("nn", Scheme::Baseline);
+        let a = r.run("nn", Scheme::BASELINE);
+        let b = r.run("nn", Scheme::BASELINE);
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(r.cached(), 1);
     }
@@ -779,8 +806,8 @@ pub fn ablation_ct_entries(runner: &Runner) -> Table {
     let mut plan = runner.plan();
     for bench in ABLATION_CT_BENCHES {
         for (k, &n) in ABLATION_CT_SIZES.iter().enumerate() {
-            plan.add_cfg(bench, Scheme::Malekeh, 200 + k as u64, |o| {
-                let mut c = o.config(Scheme::Malekeh);
+            plan.add_cfg(bench, Scheme::MALEKEH, 200 + k as u64, |o| {
+                let mut c = o.config(Scheme::MALEKEH);
                 c.ct_entries = n;
                 c
             });
@@ -796,8 +823,8 @@ pub fn ablation_ct_entries(runner: &Runner) -> Table {
     for bench in ABLATION_CT_BENCHES {
         let mut vals = Vec::new();
         for (k, &n) in ABLATION_CT_SIZES.iter().enumerate() {
-            let s = runner.run_cfg_key(bench, Scheme::Malekeh, 200 + k as u64, |o| {
-                let mut c = o.config(Scheme::Malekeh);
+            let s = runner.run_cfg_key(bench, Scheme::MALEKEH, 200 + k as u64, |o| {
+                let mut c = o.config(Scheme::MALEKEH);
                 c.ct_entries = n;
                 c
             });
@@ -819,10 +846,10 @@ const ABLATION_RTHLD_BENCHES: [&str; 3] = ["kmeans", "gemm_t1", "srad_v1"];
 pub fn ablation_rthld(runner: &Runner) -> Table {
     let mut plan = runner.plan();
     for bench in ABLATION_RTHLD_BENCHES {
-        plan.add(bench, Scheme::Baseline);
+        plan.add(bench, Scheme::BASELINE);
         for (k, &r) in ABLATION_RTHLDS.iter().enumerate() {
-            plan.add_cfg(bench, Scheme::Malekeh, 300 + k as u64, |o| {
-                let mut c = o.config(Scheme::Malekeh);
+            plan.add_cfg(bench, Scheme::MALEKEH, 300 + k as u64, |o| {
+                let mut c = o.config(Scheme::MALEKEH);
                 c.rthld = r;
                 c
             });
@@ -835,12 +862,12 @@ pub fn ablation_rthld(runner: &Runner) -> Table {
     let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut t = Table::new("Ablation: hit ratio and IPC vs RTHLD", &hdr);
     for bench in ABLATION_RTHLD_BENCHES {
-        let base = runner.run(bench, Scheme::Baseline).ipc();
+        let base = runner.run(bench, Scheme::BASELINE).ipc();
         let mut hit = Vec::new();
         let mut ipc = Vec::new();
         for (k, &r) in ABLATION_RTHLDS.iter().enumerate() {
-            let s = runner.run_cfg_key(bench, Scheme::Malekeh, 300 + k as u64, |o| {
-                let mut c = o.config(Scheme::Malekeh);
+            let s = runner.run_cfg_key(bench, Scheme::MALEKEH, 300 + k as u64, |o| {
+                let mut c = o.config(Scheme::MALEKEH);
                 c.rthld = r;
                 c
             });
@@ -855,7 +882,7 @@ pub fn ablation_rthld(runner: &Runner) -> Table {
 
 /// Baseline config with 8 operand collectors (Ablation C's alternative).
 fn eight_ocu_cfg(o: &ExpOpts) -> GpuConfig {
-    let mut c = o.config(Scheme::Baseline);
+    let mut c = o.config(Scheme::BASELINE);
     c.collectors_per_sub_core = 8;
     c
 }
@@ -867,9 +894,9 @@ pub fn ablation_ocu_scaling(runner: &Runner) -> Table {
     let benches = runner.opts().benchmarks();
     let mut plan = runner.plan();
     for bench in &benches {
-        plan.add(bench, Scheme::Baseline);
-        plan.add_cfg(bench, Scheme::Baseline, 400, eight_ocu_cfg);
-        plan.add(bench, Scheme::Malekeh);
+        plan.add(bench, Scheme::BASELINE);
+        plan.add_cfg(bench, Scheme::BASELINE, 400, eight_ocu_cfg);
+        plan.add(bench, Scheme::MALEKEH);
     }
     runner.execute(&plan);
 
@@ -880,11 +907,11 @@ pub fn ablation_ocu_scaling(runner: &Runner) -> Table {
     let mut c8 = Vec::new();
     let mut cm = Vec::new();
     for bench in &benches {
-        let base2 = runner.run(bench, Scheme::Baseline).ipc();
+        let base2 = runner.run(bench, Scheme::BASELINE).ipc();
         let base8 = runner
-            .run_cfg_key(bench, Scheme::Baseline, 400, eight_ocu_cfg)
+            .run_cfg_key(bench, Scheme::BASELINE, 400, eight_ocu_cfg)
             .ipc();
-        let mal = runner.run(bench, Scheme::Malekeh).ipc();
+        let mal = runner.run(bench, Scheme::MALEKEH).ipc();
         let v = [base8 / base2.max(1e-9), mal / base2.max(1e-9)];
         c8.push(v[0]);
         cm.push(v[1]);
@@ -896,12 +923,29 @@ pub fn ablation_ocu_scaling(runner: &Runner) -> Table {
 
 /// Malekeh with the write filter disabled (Ablation D's comparison point).
 fn unfiltered_cfg(o: &ExpOpts) -> GpuConfig {
-    let mut c = o.config(Scheme::Malekeh);
+    let mut c = o.config(Scheme::MALEKEH);
     c.no_write_filter = true;
     c
 }
 
 const ABLATION_WRITE_BENCHES: [&str; 4] = ["kmeans", "gemm_t1", "rnn_i2", "conv_t1"];
+
+const ABLATION_REPL_BENCHES: [&str; 5] =
+    ["kmeans", "gemm_t1", "rnn_i2", "srad_v1", "hotspot"];
+
+/// Ablation E: replacement policy on identical CCU hardware — every
+/// registry policy in the Fig 17 sweep (traditional LRU, FIFO, the Belady
+/// oracle) bracketing `malekeh`'s reuse-guided chooser. The scheme set is
+/// read from the registry, so a newly registered replacement policy joins
+/// the sweep without touching this builder.
+pub fn ablation_replacement(runner: &Runner) -> Table {
+    hit_ratio_sweep_table(
+        runner,
+        "Ablation: RF hit ratio vs replacement policy (registry sweep)",
+        &ABLATION_REPL_BENCHES,
+        &replacement_sweep_schemes(),
+    )
+}
 
 /// Ablation D (§III-B / §IV-A2): CCU write-back port — filtered single
 /// port vs no write path at all vs unfiltered ("we empirically verified
@@ -909,8 +953,8 @@ const ABLATION_WRITE_BENCHES: [&str; 4] = ["kmeans", "gemm_t1", "rnn_i2", "conv_
 pub fn ablation_write_port(runner: &Runner) -> Table {
     let mut plan = runner.plan();
     for bench in ABLATION_WRITE_BENCHES {
-        plan.add(bench, Scheme::Malekeh);
-        plan.add_cfg(bench, Scheme::Malekeh, 500, unfiltered_cfg);
+        plan.add(bench, Scheme::MALEKEH);
+        plan.add_cfg(bench, Scheme::MALEKEH, 500, unfiltered_cfg);
     }
     runner.execute(&plan);
 
@@ -919,8 +963,8 @@ pub fn ablation_write_port(runner: &Runner) -> Table {
         &["bench", "filtered_hit", "unfiltered_hit", "filtered_wr", "unfiltered_wr"],
     );
     for bench in ABLATION_WRITE_BENCHES {
-        let f = runner.run(bench, Scheme::Malekeh);
-        let u = runner.run_cfg_key(bench, Scheme::Malekeh, 500, unfiltered_cfg);
+        let f = runner.run(bench, Scheme::MALEKEH);
+        let u = runner.run_cfg_key(bench, Scheme::MALEKEH, 500, unfiltered_cfg);
         t.row_f(
             bench,
             &[

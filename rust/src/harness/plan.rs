@@ -234,9 +234,9 @@ mod tests {
     fn plan_resolves_configs_at_add_time() {
         let opts = tiny_opts(1);
         let mut plan = Plan::new(&opts);
-        plan.add("nn", Scheme::Baseline);
-        plan.add_cfg("nn", Scheme::Malekeh, 9, |o| {
-            let mut c = o.config(Scheme::Malekeh);
+        plan.add("nn", Scheme::BASELINE);
+        plan.add_cfg("nn", Scheme::MALEKEH, 9, |o| {
+            let mut c = o.config(Scheme::MALEKEH);
             c.ct_entries = 16;
             c
         });
@@ -251,8 +251,8 @@ mod tests {
     fn execute_dedups_and_fills_cache() {
         let runner = Runner::new(tiny_opts(1));
         let mut plan = runner.plan();
-        plan.add("nn", Scheme::Baseline);
-        plan.add("nn", Scheme::Baseline); // duplicate point
+        plan.add("nn", Scheme::BASELINE);
+        plan.add("nn", Scheme::BASELINE); // duplicate point
         runner.execute(&plan);
         assert_eq!(runner.cached(), 1);
         // re-execution is a no-op (everything cached)
@@ -266,11 +266,11 @@ mod tests {
         let sharded = Runner::new(tiny_opts(2));
         for r in [&serial, &sharded] {
             let mut plan = r.plan();
-            plan.add("nn", Scheme::Baseline);
-            plan.add("nn", Scheme::Malekeh);
+            plan.add("nn", Scheme::BASELINE);
+            plan.add("nn", Scheme::MALEKEH);
             r.execute(&plan);
         }
-        for scheme in [Scheme::Baseline, Scheme::Malekeh] {
+        for scheme in [Scheme::BASELINE, Scheme::MALEKEH] {
             let a = serial.run("nn", scheme);
             let b = sharded.run("nn", scheme);
             assert_eq!(a.cycles, b.cycles, "{scheme}");

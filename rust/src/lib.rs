@@ -15,7 +15,7 @@
 //! |---|---|---|
 //! | workloads | [`isa`], [`trace`] | instruction streams: Table II generators and `.mtrace` record/replay |
 //! | compiler | [`compiler`], [`runtime`] | reuse-distance profiling + near/far annotation (rust engine, or the AOT Pallas artifact via PJRT) |
-//! | machine | [`sim`], [`config`] | the cycle-level GPU: sub-cores, collectors/CCUs, RF banks, L1/L2/DRAM, STHLD control |
+//! | machine | [`sim`], [`config`] | the cycle-level GPU: sub-cores, collectors/CCUs, RF banks, L1/L2/DRAM, STHLD control; every scheme-varying decision lives in the [`sim::policy`] registry |
 //! | measurement | [`stats`], [`energy`] | counters, derived figure metrics, relative RF dynamic energy |
 //! | experiments | [`harness`], [`cli`] | memoising sharded Runner, figure/table builders, the `malekeh` CLI |
 //!

@@ -47,6 +47,7 @@ fn run(args: &[String]) -> Result<(), String> {
         "fig" => cmd_fig(&cli),
         "headline" => cmd_headline(&cli),
         "list" => cmd_list(),
+        "policies" => cmd_policies(),
         "" | "help" | "--help" => {
             print_help();
             Ok(())
@@ -72,6 +73,8 @@ fn print_help() {
            fig <1|2|7|9|10|12|13|14|15|16|17> [--quick|--full] [--jobs N|--serial]\n\
            headline [--quick|--full] [--jobs N|--serial]   abstract's comparison\n\
            list                                        benchmarks + schemes\n\
+           policies                                    the scheme registry, one\n\
+                                                       line per policy\n\
          \n\
          Figure simulations shard across worker threads (--jobs N, default\n\
          one per core); --serial forces the single-thread path. A single\n\
@@ -84,8 +87,7 @@ fn print_help() {
 }
 
 fn build_config(cli: &Cli) -> Result<GpuConfig, String> {
-    let scheme = Scheme::from_name(cli.opt_or("scheme", "baseline"))
-        .ok_or_else(|| "unknown scheme (see `malekeh list`)".to_string())?;
+    let scheme = Scheme::parse(cli.opt_or("scheme", "baseline"))?;
     let mut cfg = GpuConfig::table1_baseline().with_scheme(scheme);
     cfg.num_sms = cli.opt_num("sms", 2usize)?;
     cfg.sim_threads = cli.opt_num("sim-threads", cfg.sim_threads)?;
@@ -388,9 +390,19 @@ fn cmd_list() -> Result<(), String> {
     for b in BENCHMARKS {
         println!("  {:22} {:?}", b.name, b.suite);
     }
-    println!("\nschemes:");
-    for s in Scheme::ALL {
+    println!("\nschemes (details: `malekeh policies`):");
+    for s in Scheme::all() {
         println!("  {}", s.name());
+    }
+    Ok(())
+}
+
+/// One line per registered policy. The output is machine-diffed against
+/// the table in docs/CONFIG.md by CI, so an undocumented policy (or a
+/// silently changed description) fails the build.
+fn cmd_policies() -> Result<(), String> {
+    for s in Scheme::all() {
+        println!("{}", s.policy_line());
     }
     Ok(())
 }

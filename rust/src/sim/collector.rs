@@ -3,7 +3,10 @@
 //!
 //! A single `Collector` struct covers OCU/CCU (the CCU is an OCU plus a
 //! cache table and control); BOW's sliding window lives in the same struct
-//! (`window`) and is only populated for the BOW scheme.
+//! (`window`) and is only populated for the BOW scheme. This module is
+//! policy-free mechanism: *which* entry gets evicted is decided by the
+//! [`VictimFn`] the caller (a [`crate::sim::policy::CachePolicy`]) passes
+//! in — the policy layer's `replacement` decision point.
 
 use std::collections::VecDeque;
 
@@ -12,6 +15,12 @@ use crate::util::Rng;
 
 /// Upper bound on cache-table entries (config.ct_entries must not exceed).
 pub const MAX_CT: usize = 16;
+
+/// Victim chooser invoked when a full cache table must evict — the policy
+/// layer's `replacement` decision point. Called only when no invalid entry
+/// exists; must return an *unlocked* entry index, or `None` to refuse the
+/// allocation. All randomness must come from the passed [`Rng`].
+pub type VictimFn<'a> = &'a mut dyn FnMut(&CacheTable, &mut Rng) -> Option<usize>;
 
 /// One cache-table entry (§III-C: tag, lock, reuse distance, LRU).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -28,6 +37,9 @@ pub struct CtEntry {
     pub from_wb: bool,
     /// LRU priority (higher = more recent).
     pub lru: u32,
+    /// Insertion tick (FIFO-style policies; stable across tag-hit
+    /// updates, so an entry keeps its queue position when refreshed).
+    pub inserted: u32,
 }
 
 /// Fully-associative register cache with the paper's replacement policy.
@@ -101,19 +113,26 @@ impl CacheTable {
         &mut self.entries[i]
     }
 
-    /// Choose a victim and install `(reg, near, locked)`.
+    /// Entry slice (victim choosers inspect the whole table).
+    pub fn entries(&self) -> &[CtEntry] {
+        &self.entries
+    }
+
+    /// Install `(reg, near, locked)`, evicting through `victim` if needed.
     ///
-    /// Paper policy (§IV-A1): skip locked entries; invalid entries first;
-    /// then a random entry among those with *far* reuse; otherwise LRU.
-    /// `traditional` (Fig 17 ablation) uses plain LRU over unlocked
-    /// entries. Returns the index, or `None` if every entry is locked.
+    /// Mechanism common to every policy: a present tag is updated in place
+    /// (tags must stay unique) and invalid entries are filled first; only
+    /// when the table is full does `victim` choose the replacement — the
+    /// policy layer's `replacement` decision point (the paper's §IV-A1
+    /// chooser is [`reuse_guided_victim`]). Returns the index, or `None`
+    /// if `victim` refuses (e.g. every entry is locked).
     pub fn allocate(
         &mut self,
         reg: u8,
         near: bool,
         locked: bool,
         rng: &mut Rng,
-        traditional: bool,
+        victim: VictimFn,
     ) -> Option<usize> {
         // tag already present: update in place (tags must stay unique)
         if let Some(i) = self.lookup(reg) {
@@ -124,37 +143,38 @@ impl CacheTable {
                 return Some(i);
             }
             self.tick += 1;
-            self.entries[i] =
-                CtEntry { reg, valid: true, locked, near, from_wb: false, lru: self.tick };
+            let inserted = self.entries[i].inserted;
+            self.entries[i] = CtEntry {
+                reg,
+                valid: true,
+                locked,
+                near,
+                from_wb: false,
+                lru: self.tick,
+                inserted,
+            };
             return Some(i);
         }
-        // invalid first
-        let victim = if let Some(i) = self.entries.iter().position(|e| !e.valid) {
-            Some(i)
-        } else if traditional {
-            self.lru_victim()
-        } else {
-            let far: Vec<usize> = self
-                .entries
-                .iter()
-                .enumerate()
-                .filter(|(_, e)| !e.locked && !e.near)
-                .map(|(i, _)| i)
-                .collect();
-            if !far.is_empty() {
-                Some(far[rng.below(far.len())])
-            } else {
-                self.lru_victim()
-            }
+        // invalid first; the policy decides only among live entries
+        let i = match self.entries.iter().position(|e| !e.valid) {
+            Some(i) => i,
+            None => victim(&*self, rng)?,
         };
-        let i = victim?;
         self.tick += 1;
-        self.entries[i] =
-            CtEntry { reg, valid: true, locked, near, from_wb: false, lru: self.tick };
+        self.entries[i] = CtEntry {
+            reg,
+            valid: true,
+            locked,
+            near,
+            from_wb: false,
+            lru: self.tick,
+            inserted: self.tick,
+        };
         Some(i)
     }
 
-    fn lru_victim(&self) -> Option<usize> {
+    /// Least-recently-used unlocked entry (the plain-LRU building block).
+    pub fn lru_victim(&self) -> Option<usize> {
         self.entries
             .iter()
             .enumerate()
@@ -162,6 +182,29 @@ impl CacheTable {
             .min_by_key(|(_, e)| e.lru)
             .map(|(i, _)| i)
     }
+}
+
+/// The paper's replacement chooser (§IV-A1), after invalid-first: a random
+/// unlocked entry among those with *far* reuse, otherwise LRU.
+pub fn reuse_guided_victim(ct: &CacheTable, rng: &mut Rng) -> Option<usize> {
+    let far: Vec<usize> = ct
+        .entries()
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| !e.locked && !e.near)
+        .map(|(i, _)| i)
+        .collect();
+    if !far.is_empty() {
+        Some(far[rng.below(far.len())])
+    } else {
+        ct.lru_victim()
+    }
+}
+
+/// Plain LRU over unlocked entries (Fig 17's traditional replacement; no
+/// RNG draws, matching the pre-refactor `traditional` path bit-exactly).
+pub fn plain_lru_victim(ct: &CacheTable, _rng: &mut Rng) -> Option<usize> {
+    ct.lru_victim()
 }
 
 /// One instruction's register set inside a BOW sliding window.
@@ -256,14 +299,15 @@ impl Collector {
     }
 
     /// Allocate as a *Malekeh CCU* (§III-C1): flush on ownership change,
-    /// tag-check every source, lock hits, allocate entries for misses.
+    /// tag-check every source, lock hits, allocate entries for misses
+    /// (evicting through the policy's `victim` chooser).
     pub fn alloc_ccu(
         &mut self,
         warp: u8,
         instr: &Instruction,
         now: u64,
         rng: &mut Rng,
-        traditional: bool,
+        victim: VictimFn,
     ) -> AllocResult {
         debug_assert!(!self.occupied);
         let mut res = AllocResult::default();
@@ -293,7 +337,7 @@ impl Collector {
             } else {
                 let idx = self
                     .ct
-                    .allocate(reg, near, true, rng, traditional)
+                    .allocate(reg, near, true, rng, &mut *victim)
                     .expect("CT must fit all sources (ct_entries >= MAX_SRC)");
                 debug_assert!(idx < MAX_CT);
                 res.misses.push((slot as u8, reg));
@@ -378,15 +422,16 @@ impl Collector {
     }
 
     /// CCU destination writeback (§IV-A2): update on hit; allocate only if
-    /// `near` (write filter) unless `no_write_filter`. Returns true if the
-    /// cache captured the value.
+    /// `near` (write filter) unless `no_write_filter`, evicting through
+    /// the policy's `victim` chooser. Returns true if the cache captured
+    /// the value.
     pub fn ccu_writeback(
         &mut self,
         warp: u8,
         reg: u8,
         near: bool,
         rng: &mut Rng,
-        traditional: bool,
+        victim: VictimFn,
         no_write_filter: bool,
     ) -> bool {
         if self.owner != Some(warp) {
@@ -400,7 +445,7 @@ impl Collector {
             return true;
         }
         if near || no_write_filter {
-            if let Some(i) = self.ct.allocate(reg, near, false, rng, traditional) {
+            if let Some(i) = self.ct.allocate(reg, near, false, rng, victim) {
                 self.ct.entry_mut(i).from_wb = true;
                 return true;
             }
@@ -442,7 +487,7 @@ mod tests {
     fn ct_lookup_and_flush() {
         let mut ct = CacheTable::new(4);
         assert!(ct.lookup(5).is_none());
-        ct.allocate(5, true, false, &mut rng(), false);
+        ct.allocate(5, true, false, &mut rng(), &mut reuse_guided_victim);
         assert!(ct.lookup(5).is_some());
         assert!(ct.has_near_value());
         ct.flush();
@@ -454,11 +499,11 @@ mod tests {
     fn ct_replacement_prefers_invalid_then_far() {
         let mut ct = CacheTable::new(3);
         let mut r = rng();
-        ct.allocate(1, true, false, &mut r, false); // near
-        ct.allocate(2, false, false, &mut r, false); // far
-        ct.allocate(3, true, false, &mut r, false); // near
+        ct.allocate(1, true, false, &mut r, &mut reuse_guided_victim); // near
+        ct.allocate(2, false, false, &mut r, &mut reuse_guided_victim); // far
+        ct.allocate(3, true, false, &mut r, &mut reuse_guided_victim); // near
         // table full; new alloc must evict the far entry (reg 2)
-        ct.allocate(4, true, false, &mut r, false);
+        ct.allocate(4, true, false, &mut r, &mut reuse_guided_victim);
         assert!(ct.lookup(2).is_none(), "far entry must be the victim");
         assert!(ct.lookup(1).is_some() && ct.lookup(3).is_some());
     }
@@ -467,10 +512,10 @@ mod tests {
     fn ct_replacement_falls_back_to_lru_when_all_near() {
         let mut ct = CacheTable::new(2);
         let mut r = rng();
-        ct.allocate(1, true, false, &mut r, false);
-        ct.allocate(2, true, false, &mut r, false);
+        ct.allocate(1, true, false, &mut r, &mut reuse_guided_victim);
+        ct.allocate(2, true, false, &mut r, &mut reuse_guided_victim);
         ct.touch(ct.lookup(1).unwrap()); // reg1 most recent
-        ct.allocate(3, true, false, &mut r, false);
+        ct.allocate(3, true, false, &mut r, &mut reuse_guided_victim);
         assert!(ct.lookup(2).is_none(), "LRU (reg 2) must be evicted");
         assert!(ct.lookup(1).is_some());
     }
@@ -479,9 +524,9 @@ mod tests {
     fn ct_locked_entries_never_evicted() {
         let mut ct = CacheTable::new(2);
         let mut r = rng();
-        ct.allocate(1, false, true, &mut r, false); // locked far
-        ct.allocate(2, false, true, &mut r, false); // locked far
-        assert_eq!(ct.allocate(3, true, false, &mut r, false), None);
+        ct.allocate(1, false, true, &mut r, &mut reuse_guided_victim); // locked far
+        ct.allocate(2, false, true, &mut r, &mut reuse_guided_victim); // locked far
+        assert_eq!(ct.allocate(3, true, false, &mut r, &mut reuse_guided_victim), None);
         assert!(ct.lookup(1).is_some() && ct.lookup(2).is_some());
     }
 
@@ -489,12 +534,12 @@ mod tests {
     fn ct_traditional_uses_plain_lru() {
         let mut ct = CacheTable::new(2);
         let mut r = rng();
-        ct.allocate(1, false, false, &mut r, true); // far, older
-        ct.allocate(2, true, false, &mut r, true); // near, newer
+        ct.allocate(1, false, false, &mut r, &mut plain_lru_victim); // far, older
+        ct.allocate(2, true, false, &mut r, &mut plain_lru_victim); // near, newer
         // traditional LRU evicts reg 1 (oldest) even though reuse-aware
         // policy would also pick it; now make near entry the oldest:
         ct.touch(ct.lookup(1).unwrap());
-        ct.allocate(3, false, false, &mut r, true);
+        ct.allocate(3, false, false, &mut r, &mut plain_lru_victim);
         assert!(
             ct.lookup(2).is_none(),
             "plain LRU must evict the near entry when it is oldest"
@@ -512,7 +557,7 @@ mod tests {
         let mut c = Collector::new(8);
         let mut r = rng();
         let i1 = mma(&[1, 2, 3], &[10]);
-        let res = c.alloc_ccu(0, &i1, 0, &mut r, false);
+        let res = c.alloc_ccu(0, &i1, 0, &mut r, &mut reuse_guided_victim);
         assert_eq!(res.hits, 0);
         assert_eq!(res.misses.len(), 3);
         assert!(!c.ready());
@@ -524,7 +569,7 @@ mod tests {
         assert!(!c.occupied);
         // same warp reuses r2, r3
         let i2 = mma(&[2, 3, 4], &[11]);
-        let res = c.alloc_ccu(0, &i2, 5, &mut r, false);
+        let res = c.alloc_ccu(0, &i2, 5, &mut r, &mut reuse_guided_victim);
         assert_eq!(res.hits, 2);
         assert_eq!(res.misses, vec![(2, 4)]);
         assert!(!res.flushed);
@@ -534,10 +579,10 @@ mod tests {
     fn ccu_flushes_on_owner_change() {
         let mut c = Collector::new(8);
         let mut r = rng();
-        c.alloc_ccu(0, &mma(&[1], &[2]), 0, &mut r, false);
+        c.alloc_ccu(0, &mma(&[1], &[2]), 0, &mut r, &mut reuse_guided_victim);
         c.bank_operand_arrived(0, 1, false);
         c.dispatched(true);
-        let res = c.alloc_ccu(3, &mma(&[1], &[2]), 1, &mut r, false);
+        let res = c.alloc_ccu(3, &mma(&[1], &[2]), 1, &mut r, &mut reuse_guided_victim);
         assert!(res.flushed, "different warp must flush");
         assert_eq!(res.hits, 0);
         assert_eq!(c.owner, Some(3));
@@ -549,7 +594,7 @@ mod tests {
         let mut r = rng();
         // r7 appears twice: second occurrence hits the entry allocated for
         // the first
-        let res = c.alloc_ccu(0, &mma(&[7, 7], &[1]), 0, &mut r, false);
+        let res = c.alloc_ccu(0, &mma(&[7, 7], &[1]), 0, &mut r, &mut reuse_guided_victim);
         assert_eq!(res.hits, 1);
         assert_eq!(res.misses.len(), 1);
     }
@@ -558,21 +603,21 @@ mod tests {
     fn ccu_writeback_policy() {
         let mut c = Collector::new(8);
         let mut r = rng();
-        c.alloc_ccu(0, &mma(&[1], &[9]), 0, &mut r, false);
+        c.alloc_ccu(0, &mma(&[1], &[9]), 0, &mut r, &mut reuse_guided_victim);
         c.bank_operand_arrived(0, 1, false);
         c.dispatched(true);
         // near write allocates
-        assert!(c.ccu_writeback(0, 9, true, &mut r, false, false));
+        assert!(c.ccu_writeback(0, 9, true, &mut r, &mut reuse_guided_victim, false));
         assert!(c.ct.lookup(9).is_some());
         // far write misses and is filtered
-        assert!(!c.ccu_writeback(0, 20, false, &mut r, false, false));
+        assert!(!c.ccu_writeback(0, 20, false, &mut r, &mut reuse_guided_victim, false));
         assert!(c.ct.lookup(20).is_none());
         // far write with filter disabled allocates
-        assert!(c.ccu_writeback(0, 21, false, &mut r, false, true));
+        assert!(c.ccu_writeback(0, 21, false, &mut r, &mut reuse_guided_victim, true));
         // wrong warp ignored
-        assert!(!c.ccu_writeback(2, 22, true, &mut r, false, false));
+        assert!(!c.ccu_writeback(2, 22, true, &mut r, &mut reuse_guided_victim, false));
         // hit updates even when far
-        assert!(c.ccu_writeback(0, 9, false, &mut r, false, false));
+        assert!(c.ccu_writeback(0, 9, false, &mut r, &mut reuse_guided_victim, false));
         let e = c.ct.entry(c.ct.lookup(9).unwrap());
         assert!(!e.near);
     }

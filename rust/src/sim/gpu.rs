@@ -480,7 +480,7 @@ mod tests {
 
     #[test]
     fn baseline_full_sm_completes() {
-        let stats = run_benchmark(&small_cfg(Scheme::Baseline), "backprop", 2);
+        let stats = run_benchmark(&small_cfg(Scheme::BASELINE), "backprop", 2);
         assert_eq!(stats.warps_retired, 32);
         assert!(stats.ipc() > 0.1, "ipc {}", stats.ipc());
         assert!(stats.l1_accesses > 0);
@@ -488,8 +488,8 @@ mod tests {
 
     #[test]
     fn malekeh_reduces_bank_reads_vs_baseline() {
-        let base = run_benchmark(&small_cfg(Scheme::Baseline), "kmeans", 2);
-        let mal = run_benchmark(&small_cfg(Scheme::Malekeh), "kmeans", 2);
+        let base = run_benchmark(&small_cfg(Scheme::BASELINE), "kmeans", 2);
+        let mal = run_benchmark(&small_cfg(Scheme::MALEKEH), "kmeans", 2);
         assert!(mal.rf_hit_ratio() > 0.1, "hit ratio {}", mal.rf_hit_ratio());
         assert!(
             mal.rf_bank_reads < base.rf_bank_reads,
@@ -503,8 +503,8 @@ mod tests {
 
     #[test]
     fn deterministic_across_runs() {
-        let a = run_benchmark(&small_cfg(Scheme::Malekeh), "hotspot", 2);
-        let b = run_benchmark(&small_cfg(Scheme::Malekeh), "hotspot", 2);
+        let a = run_benchmark(&small_cfg(Scheme::MALEKEH), "hotspot", 2);
+        let b = run_benchmark(&small_cfg(Scheme::MALEKEH), "hotspot", 2);
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.instructions, b.instructions);
         assert_eq!(a.rf_cache_reads, b.rf_cache_reads);
@@ -512,7 +512,7 @@ mod tests {
 
     #[test]
     fn dynamic_sthld_records_intervals() {
-        let mut cfg = small_cfg(Scheme::Malekeh);
+        let mut cfg = small_cfg(Scheme::MALEKEH);
         cfg.sthld_interval = 2000; // force several intervals
         let stats = run_benchmark(&cfg, "srad_v1", 2);
         assert!(stats.interval_ipc.len() > 2);
@@ -521,7 +521,7 @@ mod tests {
 
     #[test]
     fn monolithic_config_runs() {
-        let mut cfg = GpuConfig::monolithic().with_scheme(Scheme::Rfc);
+        let mut cfg = GpuConfig::monolithic().with_scheme(Scheme::RFC);
         cfg.num_sms = 1;
         let stats = run_benchmark(&cfg, "hotspot", 2);
         assert_eq!(stats.warps_retired, 32);
@@ -529,7 +529,7 @@ mod tests {
 
     #[test]
     fn trace_smaller_than_gpu_is_ok() {
-        let cfg = small_cfg(Scheme::Baseline);
+        let cfg = small_cfg(Scheme::BASELINE);
         let bench = crate::trace::find("nn").unwrap();
         let trace = KernelTrace::generate(bench, 8, 1); // 8 warps, 32 slots
         let stats = Simulator::new(&cfg, &trace).run();
@@ -540,7 +540,7 @@ mod tests {
     fn sim_threads_do_not_change_results() {
         // the full Table II sweep lives in rust/tests/parallel_determinism;
         // this is the fast in-tree smoke check
-        let mut serial = GpuConfig::table1_baseline().with_scheme(Scheme::Malekeh);
+        let mut serial = GpuConfig::table1_baseline().with_scheme(Scheme::MALEKEH);
         serial.num_sms = 2;
         serial.max_cycles = 30_000;
         let mut par = serial.clone();
@@ -554,7 +554,7 @@ mod tests {
     fn drained_sm_accounts_stall_tail() {
         // 8 warps on a 2-SM GPU: SM1 is empty and must accumulate the
         // stall-empty tail a lock-step engine would have recorded
-        let mut cfg = small_cfg(Scheme::Baseline);
+        let mut cfg = small_cfg(Scheme::BASELINE);
         cfg.num_sms = 2;
         let bench = crate::trace::find("nn").unwrap();
         let trace = KernelTrace::generate(bench, 8, 1);

@@ -27,10 +27,12 @@ pub mod collector;
 pub mod exec;
 pub mod gpu;
 pub mod memory;
+pub mod policy;
 pub mod regfile;
 pub mod sthld;
 pub mod subcore;
 pub mod warp;
 
 pub use gpu::{run_benchmark, run_trace, run_workload, Simulator};
+pub use policy::{CachePolicy, Scheme};
 pub use sthld::{SthldController, SthldState};

@@ -1,0 +1,56 @@
+//! Baseline Turing-style operand collectors: no caching anywhere (§II).
+//!
+//! Issue picks any free OCU uniformly at random, every source operand is
+//! fetched from the RF banks, collector contents are dropped at dispatch,
+//! and writebacks are never captured.
+
+use crate::config::GpuConfig;
+use crate::isa::Instruction;
+use crate::sim::collector::AllocResult;
+use crate::sim::exec::WbEvent;
+
+use super::{free_unit_reservoir, CachePolicy, CollectorChoice, PolicyCtx};
+
+/// The no-cache reference point every figure normalises to.
+pub struct BaselinePolicy;
+
+impl BaselinePolicy {
+    /// Build from config (stateless; the signature matches the registry).
+    pub fn from_config(_cfg: &GpuConfig) -> Self {
+        BaselinePolicy
+    }
+}
+
+impl CachePolicy for BaselinePolicy {
+    fn select_collector(&mut self, ctx: &mut PolicyCtx, _warp: u8) -> CollectorChoice {
+        match free_unit_reservoir(ctx.collectors, ctx.rng) {
+            Some(ci) => CollectorChoice::Unit(ci),
+            None => {
+                ctx.stats.collector_full_stalls += 1;
+                CollectorChoice::StallCycle { waiting: false }
+            }
+        }
+    }
+
+    fn allocate(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ci: usize,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+    ) -> AllocResult {
+        ctx.collectors[ci].alloc_ocu(warp, instr, now)
+    }
+
+    fn capture_writeback(
+        &mut self,
+        _ctx: &mut PolicyCtx,
+        _ev: &WbEvent,
+        _reg: u8,
+        _near: bool,
+        _port_free: bool,
+    ) -> bool {
+        false
+    }
+}

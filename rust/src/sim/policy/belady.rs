@@ -1,0 +1,173 @@
+//! Registry-only comparison policy: CCU hardware under GTO issue with
+//! **Belady (oracle) replacement** — the victim is the entry whose next
+//! use by the owning warp lies farthest in the future, computed from the
+//! warp's own instruction stream (the same exact reuse distances the
+//! compiler pass profiles, §III-A, read forward from the warp's pc
+//! instead of collapsed into a near/far bit). Brackets the paper's
+//! reuse-guided replacement from above in the Fig 17 sweep.
+
+use crate::config::GpuConfig;
+use crate::isa::Instruction;
+use crate::sim::collector::{AllocResult, CacheTable};
+use crate::sim::exec::WbEvent;
+use crate::util::Rng;
+
+use super::{
+    ccu_allocate, ccu_capture, free_unit_reservoir, CachePolicy, CollectorChoice, PolicyCtx,
+};
+
+/// How far ahead the oracle scans. Reuse past this window is far beyond
+/// RTHLD anyway (§III-A), so the bounded scan decides identically to an
+/// unbounded one for every realistic table size.
+const ORACLE_WINDOW: usize = 256;
+
+/// Forward distance (in instructions) from `pc` to the next *read* of
+/// `reg`; a write before any read kills the cached value (`u64::MAX`, the
+/// ideal victim), and no appearance within the window ranks just below.
+fn next_use_distance(reg: u8, stream: &[Instruction], pc: usize) -> u64 {
+    for (d, instr) in stream.iter().skip(pc).take(ORACLE_WINDOW).enumerate() {
+        if instr.sources().contains(&reg) {
+            return d as u64;
+        }
+        if instr.dests().contains(&reg) {
+            return u64::MAX; // overwritten before any read: dead value
+        }
+    }
+    u64::MAX - 1
+}
+
+/// Belady victim: the unlocked entry with the farthest next use (first
+/// such entry on ties, for determinism).
+pub fn belady_victim(ct: &CacheTable, stream: &[Instruction], pc: usize) -> Option<usize> {
+    let mut best: Option<(usize, u64)> = None;
+    for (i, e) in ct.entries().iter().enumerate() {
+        if e.locked {
+            continue;
+        }
+        let d = next_use_distance(e.reg, stream, pc);
+        if best.map_or(true, |(_, bd)| d > bd) {
+            best = Some((i, d));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// CCU hardware + GTO + Belady oracle replacement.
+pub struct BeladyPolicy {
+    ct_entries: usize,
+}
+
+impl BeladyPolicy {
+    /// Capture the table size from the resolved config.
+    pub fn from_config(cfg: &GpuConfig) -> Self {
+        BeladyPolicy { ct_entries: cfg.ct_entries }
+    }
+}
+
+impl CachePolicy for BeladyPolicy {
+    fn caching(&self) -> bool {
+        true
+    }
+
+    fn cache_entries_per_collector(&self) -> f64 {
+        self.ct_entries as f64
+    }
+
+    fn select_collector(&mut self, ctx: &mut PolicyCtx, _warp: u8) -> CollectorChoice {
+        match free_unit_reservoir(ctx.collectors, ctx.rng) {
+            Some(ci) => CollectorChoice::Unit(ci),
+            None => {
+                ctx.stats.collector_full_stalls += 1;
+                CollectorChoice::StallCycle { waiting: false }
+            }
+        }
+    }
+
+    fn allocate(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ci: usize,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+    ) -> AllocResult {
+        // copy the (Copy) stream-slice reference out of the ctx so the
+        // oracle closure does not hold a borrow of `ctx` across the call
+        let streams = ctx.streams;
+        let stream: &[Instruction] = &streams[warp as usize];
+        let pc = ctx.warps[warp as usize].pc;
+        let mut victim = |ct: &CacheTable, _r: &mut Rng| belady_victim(ct, stream, pc);
+        ccu_allocate(ctx, ci, warp, instr, now, &mut victim)
+    }
+
+    fn capture_writeback(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ev: &WbEvent,
+        reg: u8,
+        near: bool,
+        port_free: bool,
+    ) -> bool {
+        let streams = ctx.streams;
+        let stream: &[Instruction] = &streams[ev.warp as usize];
+        let pc = ctx.warps[ev.warp as usize].pc;
+        let mut victim = |ct: &CacheTable, _r: &mut Rng| belady_victim(ct, stream, pc);
+        // unfiltered, like the traditional comparison point
+        ccu_capture(ctx, ev, reg, near, port_free, &mut victim, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::OpClass;
+
+    fn alu(srcs: &[u8], dsts: &[u8]) -> Instruction {
+        Instruction::new(OpClass::Alu, srcs, dsts)
+    }
+
+    #[test]
+    fn oracle_prefers_farthest_next_use() {
+        let stream = vec![
+            alu(&[2], &[10]), // r2 read at distance 0
+            alu(&[1], &[11]), // r1 read at distance 1
+            alu(&[3], &[12]), // r3 read at distance 2
+        ];
+        let mut ct = CacheTable::new(3);
+        let mut r = Rng::new(1);
+        let mut v = |ct: &CacheTable, _r: &mut Rng| belady_victim(ct, &stream, 0);
+        ct.allocate(1, false, false, &mut r, &mut v);
+        ct.allocate(2, false, false, &mut r, &mut v);
+        ct.allocate(3, false, false, &mut r, &mut v);
+        // full: the victim must be r3 (farthest next read)
+        ct.allocate(4, false, false, &mut r, &mut v);
+        assert!(ct.lookup(3).is_none(), "farthest next use must be evicted");
+        assert!(ct.lookup(1).is_some() && ct.lookup(2).is_some());
+    }
+
+    #[test]
+    fn oracle_treats_overwritten_values_as_dead() {
+        let stream = vec![
+            alu(&[9], &[1]),  // r1 overwritten before any read: dead in cache
+            alu(&[1], &[13]), // (reads the NEW r1, not the cached value)
+            alu(&[2], &[14]), // r2 read at distance 2
+        ];
+        let mut ct = CacheTable::new(2);
+        let mut r = Rng::new(1);
+        let mut v = |ct: &CacheTable, _r: &mut Rng| belady_victim(ct, &stream, 0);
+        ct.allocate(1, false, false, &mut r, &mut v);
+        ct.allocate(2, false, false, &mut r, &mut v);
+        ct.allocate(5, false, false, &mut r, &mut v);
+        assert!(ct.lookup(1).is_none(), "dead value is the ideal victim");
+        assert!(ct.lookup(2).is_some());
+    }
+
+    #[test]
+    fn oracle_scan_is_bounded() {
+        // a reg used only past the window ranks as far-but-alive
+        let mut stream = vec![alu(&[], &[]); ORACLE_WINDOW + 10];
+        stream[ORACLE_WINDOW + 5] = alu(&[7], &[15]);
+        assert_eq!(next_use_distance(7, &stream, 0), u64::MAX - 1);
+        assert_eq!(next_use_distance(7, &stream, ORACLE_WINDOW), 5);
+    }
+}

@@ -1,0 +1,75 @@
+//! BOW (§VI-B): private per-warp bypassing operand collectors. Each BOC
+//! keeps a sliding window of the last N instructions' registers; sources
+//! found in the window bypass the banks, and every in-window destination
+//! is captured at writeback (no write port contention, no filter).
+
+use crate::config::GpuConfig;
+use crate::isa::Instruction;
+use crate::sim::collector::{AllocResult, Collector};
+use crate::sim::exec::WbEvent;
+
+use super::{CachePolicy, CollectorChoice, PolicyCtx};
+
+/// BOW with its per-warp sliding window.
+pub struct BowPolicy {
+    window: usize,
+}
+
+impl BowPolicy {
+    /// Capture the window length from the resolved config.
+    pub fn from_config(cfg: &GpuConfig) -> Self {
+        BowPolicy { window: cfg.bow_window }
+    }
+}
+
+impl CachePolicy for BowPolicy {
+    fn caching(&self) -> bool {
+        true
+    }
+
+    fn cache_entries_per_collector(&self) -> f64 {
+        (self.window * 8) as f64 // 6 src + 2 dst per windowed instruction
+    }
+
+    fn select_collector(&mut self, ctx: &mut PolicyCtx, warp: u8) -> CollectorChoice {
+        let ci = warp as usize % ctx.collectors.len();
+        if ctx.collectors[ci].occupied {
+            CollectorChoice::SkipWarp // private unit busy: this warp cannot issue
+        } else {
+            CollectorChoice::Unit(ci)
+        }
+    }
+
+    fn allocate(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ci: usize,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+    ) -> AllocResult {
+        ctx.collectors[ci].alloc_boc(warp, instr, now, self.window)
+    }
+
+    fn capture_writeback(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ev: &WbEvent,
+        reg: u8,
+        _near: bool,
+        _port_free: bool,
+    ) -> bool {
+        // BOW writes every in-window destination
+        let ci = ev.collector as usize;
+        if ci < ctx.collectors.len() {
+            ctx.collectors[ci].boc_writeback(ev.boc_seq, reg)
+        } else {
+            false
+        }
+    }
+
+    fn operand_arrived(&mut self, collector: &mut Collector, slot: u8, reg: u8) {
+        // a fetched value also becomes present in the sliding window
+        collector.bank_operand_arrived(slot, reg, true);
+    }
+}

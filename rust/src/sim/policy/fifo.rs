@@ -1,0 +1,123 @@
+//! Registry-only comparison policy: CCU hardware under GTO issue with
+//! **FIFO replacement** and no write filter — the classic
+//! oldest-insertion-first victim, blind to reuse distance. Exists to
+//! bracket the paper's reuse-guided replacement from below (Fig 17 sweep).
+
+use crate::config::GpuConfig;
+use crate::isa::Instruction;
+use crate::sim::collector::{AllocResult, CacheTable};
+use crate::sim::exec::WbEvent;
+use crate::util::Rng;
+
+use super::{
+    ccu_allocate, ccu_capture, free_unit_reservoir, CachePolicy, CollectorChoice, PolicyCtx,
+};
+
+/// FIFO victim: the oldest-inserted unlocked entry (insertion order is
+/// tracked by [`crate::sim::collector::CtEntry::inserted`] and survives
+/// tag-hit updates, so a refreshed entry keeps its queue position).
+pub fn fifo_victim(ct: &CacheTable, _rng: &mut Rng) -> Option<usize> {
+    ct.entries()
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| !e.locked)
+        .min_by_key(|(_, e)| e.inserted)
+        .map(|(i, _)| i)
+}
+
+/// CCU hardware + GTO + FIFO replacement.
+pub struct FifoPolicy {
+    ct_entries: usize,
+}
+
+impl FifoPolicy {
+    /// Capture the table size from the resolved config.
+    pub fn from_config(cfg: &GpuConfig) -> Self {
+        FifoPolicy { ct_entries: cfg.ct_entries }
+    }
+}
+
+impl CachePolicy for FifoPolicy {
+    fn caching(&self) -> bool {
+        true
+    }
+
+    fn cache_entries_per_collector(&self) -> f64 {
+        self.ct_entries as f64
+    }
+
+    fn select_collector(&mut self, ctx: &mut PolicyCtx, _warp: u8) -> CollectorChoice {
+        match free_unit_reservoir(ctx.collectors, ctx.rng) {
+            Some(ci) => CollectorChoice::Unit(ci),
+            None => {
+                ctx.stats.collector_full_stalls += 1;
+                CollectorChoice::StallCycle { waiting: false }
+            }
+        }
+    }
+
+    fn allocate(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ci: usize,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+    ) -> AllocResult {
+        ccu_allocate(ctx, ci, warp, instr, now, &mut fifo_victim)
+    }
+
+    fn capture_writeback(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ev: &WbEvent,
+        reg: u8,
+        near: bool,
+        port_free: bool,
+    ) -> bool {
+        // unfiltered, like the traditional comparison point
+        ccu_capture(ctx, ev, reg, near, port_free, &mut fifo_victim, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_evicts_oldest_insertion_not_lru() {
+        let mut ct = CacheTable::new(2);
+        let mut r = Rng::new(1);
+        ct.allocate(1, false, false, &mut r, &mut fifo_victim); // inserted first
+        ct.allocate(2, false, false, &mut r, &mut fifo_victim);
+        // touching reg 1 makes it MRU, but FIFO still evicts it (oldest
+        // insertion)
+        ct.touch(ct.lookup(1).unwrap());
+        ct.allocate(3, false, false, &mut r, &mut fifo_victim);
+        assert!(ct.lookup(1).is_none(), "FIFO must evict the oldest insertion");
+        assert!(ct.lookup(2).is_some() && ct.lookup(3).is_some());
+    }
+
+    #[test]
+    fn fifo_tag_hit_keeps_queue_position() {
+        let mut ct = CacheTable::new(2);
+        let mut r = Rng::new(1);
+        ct.allocate(1, false, false, &mut r, &mut fifo_victim);
+        ct.allocate(2, false, false, &mut r, &mut fifo_victim);
+        // re-installing reg 1 must not move it to the back of the queue
+        ct.allocate(1, true, false, &mut r, &mut fifo_victim);
+        ct.allocate(3, false, false, &mut r, &mut fifo_victim);
+        assert!(ct.lookup(1).is_none(), "refreshed entry keeps FIFO position");
+    }
+
+    #[test]
+    fn fifo_skips_locked_entries() {
+        let mut ct = CacheTable::new(2);
+        let mut r = Rng::new(1);
+        ct.allocate(1, false, true, &mut r, &mut fifo_victim); // locked, oldest
+        ct.allocate(2, false, false, &mut r, &mut fifo_victim);
+        ct.allocate(3, false, false, &mut r, &mut fifo_victim);
+        assert!(ct.lookup(1).is_some(), "locked entries are never victims");
+        assert!(ct.lookup(2).is_none());
+    }
+}

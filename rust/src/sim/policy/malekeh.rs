@@ -1,0 +1,136 @@
+//! The paper's scheme: shared CCUs + reuse-guided policies (§III, §IV).
+//!
+//! - **Order** (§IV-B1): warps that own cached values issue first.
+//! - **Allocation** (§IV-B2, Fig 6): a warp reuses its owned CCU; else a
+//!   random far/empty free unit; else the STHLD waiting mechanism.
+//! - **Replacement** (§IV-A1): invalid first, then random-far, then LRU
+//!   (plain LRU when `traditional_replacement` is set — Fig 17 ablation).
+//! - **Writeback** (§IV-A2): single filtered write port — only near
+//!   destinations are captured unless `no_write_filter`.
+
+use crate::config::GpuConfig;
+use crate::isa::Instruction;
+use crate::sim::collector::{AllocResult, Collector};
+use crate::sim::exec::WbEvent;
+use crate::sim::warp::WarpState;
+
+use super::{CachePolicy, CcuKnobs, CollectorChoice, PolicyCtx};
+
+/// Malekeh with shared CCUs.
+pub struct MalekehPolicy {
+    knobs: CcuKnobs,
+}
+
+impl MalekehPolicy {
+    /// Capture the Fig-17 ablation knobs from the resolved config.
+    pub fn from_config(cfg: &GpuConfig) -> Self {
+        MalekehPolicy { knobs: CcuKnobs::from_config(cfg) }
+    }
+}
+
+impl CachePolicy for MalekehPolicy {
+    fn caching(&self) -> bool {
+        true
+    }
+
+    fn cache_entries_per_collector(&self) -> f64 {
+        self.knobs.entries()
+    }
+
+    /// §IV-B1: warps with data in a CCU first (by age), then the rest.
+    fn build_order(
+        &mut self,
+        order: &mut Vec<u8>,
+        greedy: Option<u8>,
+        warps: &[WarpState],
+        collectors: &[Collector],
+    ) {
+        let n = warps.len() as u8;
+        for w in 0..n {
+            if Some(w) == greedy {
+                continue;
+            }
+            let owns = collectors.iter().any(|c| c.owner == Some(w) && c.ct.has_values());
+            if owns {
+                order.push(w);
+            }
+        }
+        for w in 0..n {
+            if Some(w) == greedy || order.contains(&w) {
+                continue;
+            }
+            order.push(w);
+        }
+    }
+
+    /// CCU allocation policy (§IV-B2, Fig 6): the numbered boxes below
+    /// follow the paper's flow chart.
+    fn select_collector(&mut self, ctx: &mut PolicyCtx, warp: u8) -> CollectorChoice {
+        // a warp can own at most one CCU (coherence-free invariant)
+        if let Some(ci) = ctx.collectors.iter().position(|c| c.owner == Some(warp)) {
+            return if ctx.collectors[ci].occupied {
+                CollectorChoice::SkipWarp // box 4: no other CCU may be allocated
+            } else {
+                CollectorChoice::Unit(ci) // box 3: reuse the owned unit
+            };
+        }
+        // reservoir-sample the free and the far/empty-free sets in one
+        // pass (no allocation on the hot path)
+        let mut nfree = 0usize;
+        let mut free_pick = None;
+        let mut nfar = 0usize;
+        let mut far_pick = None;
+        for (i, c) in ctx.collectors.iter().enumerate() {
+            if c.occupied {
+                continue;
+            }
+            nfree += 1;
+            if ctx.rng.below(nfree) == 0 {
+                free_pick = Some(i);
+            }
+            if !c.ct.has_near_value() {
+                nfar += 1;
+                if ctx.rng.below(nfar) == 0 {
+                    far_pick = Some(i);
+                }
+            }
+        }
+        if nfree == 0 {
+            ctx.stats.collector_full_stalls += 1;
+            return CollectorChoice::SkipWarp; // box 6
+        }
+        if let Some(i) = far_pick {
+            return CollectorChoice::Unit(i); // box 5: random far/empty unit
+        }
+        // all free units hold near values: waiting mechanism (boxes 7-9)
+        if *ctx.wait_counter < ctx.sthld {
+            *ctx.wait_counter += 1;
+            CollectorChoice::StallCycle { waiting: true }
+        } else {
+            *ctx.wait_counter = 0;
+            CollectorChoice::Unit(free_pick.expect("nfree > 0"))
+        }
+    }
+
+    fn allocate(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ci: usize,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+    ) -> AllocResult {
+        self.knobs.allocate(ctx, ci, warp, instr, now)
+    }
+
+    fn capture_writeback(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ev: &WbEvent,
+        reg: u8,
+        near: bool,
+        port_free: bool,
+    ) -> bool {
+        self.knobs.capture(ctx, ev, reg, near, port_free)
+    }
+}

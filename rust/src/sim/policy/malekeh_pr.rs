@@ -1,0 +1,64 @@
+//! Malekeh_PR (§VI-B): the Malekeh caching policies on a *private* CCU
+//! per warp — no ownership flushes, but also no pooling, so a busy unit
+//! blocks its warp. GTO issue order (the CCU-priority order is pointless
+//! when every warp always owns a unit).
+
+use crate::config::GpuConfig;
+use crate::isa::Instruction;
+use crate::sim::collector::AllocResult;
+use crate::sim::exec::WbEvent;
+
+use super::{CachePolicy, CcuKnobs, CollectorChoice, PolicyCtx};
+
+/// Malekeh with a private CCU per warp.
+pub struct MalekehPrPolicy {
+    knobs: CcuKnobs,
+}
+
+impl MalekehPrPolicy {
+    /// Capture the ablation knobs from the resolved config.
+    pub fn from_config(cfg: &GpuConfig) -> Self {
+        MalekehPrPolicy { knobs: CcuKnobs::from_config(cfg) }
+    }
+}
+
+impl CachePolicy for MalekehPrPolicy {
+    fn caching(&self) -> bool {
+        true
+    }
+
+    fn cache_entries_per_collector(&self) -> f64 {
+        self.knobs.entries()
+    }
+
+    fn select_collector(&mut self, ctx: &mut PolicyCtx, warp: u8) -> CollectorChoice {
+        let ci = warp as usize % ctx.collectors.len();
+        if ctx.collectors[ci].occupied {
+            CollectorChoice::SkipWarp // private unit busy: this warp cannot issue
+        } else {
+            CollectorChoice::Unit(ci)
+        }
+    }
+
+    fn allocate(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ci: usize,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+    ) -> AllocResult {
+        self.knobs.allocate(ctx, ci, warp, instr, now)
+    }
+
+    fn capture_writeback(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ev: &WbEvent,
+        reg: u8,
+        near: bool,
+        port_free: bool,
+    ) -> bool {
+        self.knobs.capture(ctx, ev, reg, near, port_free)
+    }
+}

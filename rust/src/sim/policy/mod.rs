@@ -1,0 +1,363 @@
+//! Pluggable RF-cache policy layer.
+//!
+//! Every scheme-varying decision the sub-core pipeline makes is owned by a
+//! [`CachePolicy`] implementation — one self-contained file per scheme —
+//! and schemes are looked up by name in the [`registry`]. The sub-core
+//! ([`crate::sim::subcore`]) and collector ([`crate::sim::collector`])
+//! hot paths contain **zero** scheme dispatch: they call through the trait
+//! (enforced by `rust/tests/policy_parity.rs`).
+//!
+//! # Decision points
+//!
+//! | Paper concept | Trait hook |
+//! |---|---|
+//! | issue gate (two-level residency, §VI-A) | [`CachePolicy::issue_gate`] |
+//! | STHLD waiting mechanism (§IV-B2) | [`CachePolicy::select_collector`] returning [`CollectorChoice::StallCycle`] |
+//! | warp priority order (§IV-B1) | [`CachePolicy::build_order`] |
+//! | collector routing (OCU/CCU/BOC/private) | [`CachePolicy::select_collector`] |
+//! | operand capture + tag checks (§III-C1) | [`CachePolicy::allocate`] |
+//! | replacement / victim choice (§IV-A1) | the [`VictimFn`] each policy passes to [`CacheTable::allocate`] |
+//! | writeback capture + write filter (§IV-A2) | [`CachePolicy::capture_writeback`] |
+//! | two-level swap-out (§VI-A) | [`CachePolicy::should_swap_out`] |
+//!
+//! # Adding a scheme
+//!
+//! Write one file implementing [`CachePolicy`], then either add it to the
+//! built-in table in [`registry`] or register it at runtime with
+//! [`registry::register`] (see `examples/custom_policy.rs`). The name
+//! becomes usable everywhere a scheme name is accepted
+//! (`simulate --scheme <name>`, `-s scheme=<name>`, the harness, …).
+//!
+//! # Determinism contract
+//!
+//! Policies draw every tie-break from the per-sub-core [`Rng`] handed to
+//! them via [`PolicyCtx`] and must not read wall clock, thread identity,
+//! or unordered containers — a policy's decisions must be a pure function
+//! of `(sub-core state, its own state, the RNG stream)`. The golden
+//! fingerprint fixture (`rust/tests/golden/fingerprints.txt`) pins each
+//! built-in policy's behavior bit-exactly.
+
+pub mod registry;
+
+mod baseline;
+mod belady;
+mod bow;
+mod fifo;
+mod malekeh;
+mod malekeh_pr;
+mod rfc;
+mod software_rfc;
+mod traditional;
+
+pub use baseline::BaselinePolicy;
+pub use belady::BeladyPolicy;
+pub use bow::BowPolicy;
+pub use fifo::FifoPolicy;
+pub use malekeh::MalekehPolicy;
+pub use malekeh_pr::MalekehPrPolicy;
+pub use registry::{register, PolicyMeta, Scheme};
+pub use rfc::RfcPolicy;
+pub use software_rfc::SoftwareRfcPolicy;
+pub use traditional::MalekehTraditionalPolicy;
+
+use std::sync::Arc;
+
+use crate::config::GpuConfig;
+use crate::energy::EventKind;
+use crate::isa::Instruction;
+use crate::sim::collector::{
+    plain_lru_victim, reuse_guided_victim, AllocResult, CacheTable, Collector, VictimFn,
+};
+use crate::sim::exec::WbEvent;
+use crate::sim::warp::WarpState;
+use crate::stats::Stats;
+use crate::util::Rng;
+
+/// Mutable view of the sub-core state a policy decision may touch. Built
+/// fresh at each hook call from disjoint sub-core fields, so policies can
+/// combine collector mutation, RNG draws, and counter bumps in one call.
+pub struct PolicyCtx<'a> {
+    /// Collector units (2 shared, or one per warp for private schemes).
+    pub collectors: &'a mut [Collector],
+    /// RFC per-warp cache tables (empty unless the policy is two-level).
+    pub rfc: &'a mut [CacheTable],
+    /// Warp state, indexed by local warp id.
+    pub warps: &'a [WarpState],
+    /// Instruction stream per local warp (oracle policies scan ahead).
+    pub streams: &'a [Arc<Vec<Instruction>>],
+    /// The sub-core's seeded policy RNG — the only randomness source.
+    pub rng: &'a mut Rng,
+    /// Run counters (policies bump their own stall/energy events).
+    pub stats: &'a mut Stats,
+    /// Waiting-mechanism counter (§IV-B2, per sub-core).
+    pub wait_counter: &'a mut u32,
+    /// Current STHLD (static, or broadcast by the dynamic controller).
+    pub sthld: u32,
+}
+
+/// Outcome of [`CachePolicy::select_collector`] for one candidate warp.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectorChoice {
+    /// Allocate the instruction into this collector unit.
+    Unit(usize),
+    /// This warp cannot issue; the scheduler tries the next warp in the
+    /// priority order.
+    SkipWarp,
+    /// Nothing issues this cycle (the slot stalls). `waiting: true` marks
+    /// a waiting-mechanism stall (§IV-B2 box 7) for Fig 10 accounting.
+    StallCycle {
+        /// Stall caused by the STHLD waiting mechanism.
+        waiting: bool,
+    },
+}
+
+/// One scheme's complete decision set. One boxed instance lives in every
+/// sub-core (policies may carry per-sub-core state); construction happens
+/// through the [`registry`] from the resolved [`crate::config::GpuConfig`].
+pub trait CachePolicy: Send {
+    /// Collector cache tables survive dispatch (CCU semantics, §III-C1);
+    /// `false` drops the contents like a plain OCU.
+    fn caching(&self) -> bool {
+        false
+    }
+
+    /// Cache entries per collector for the energy model's storage scaling
+    /// (baseline OCU: 6 operand slots).
+    fn cache_entries_per_collector(&self) -> f64 {
+        6.0
+    }
+
+    /// Append this cycle's warp priority order to `order` (the greedy warp,
+    /// if any, is already at the front). Default: GTO — greedy then oldest
+    /// (ascending id = age order).
+    fn build_order(
+        &mut self,
+        order: &mut Vec<u8>,
+        greedy: Option<u8>,
+        warps: &[WarpState],
+        _collectors: &[Collector],
+    ) {
+        for w in 0..warps.len() as u8 {
+            if Some(w) != greedy {
+                order.push(w);
+            }
+        }
+    }
+
+    /// May the issue slot consider this warp at all this cycle? Two-level
+    /// policies gate on active-set residency + activation delay (§VI-A).
+    fn issue_gate(&self, _warp: &WarpState, _now: u64) -> bool {
+        true
+    }
+
+    /// Route a ready warp to a collector unit — and implement any issue
+    /// gating (the STHLD waiting mechanism stalls the slot from here).
+    fn select_collector(&mut self, ctx: &mut PolicyCtx, warp: u8) -> CollectorChoice;
+
+    /// Allocate the issued instruction into collector `ci`: tag-check the
+    /// sources against whatever cache the scheme keeps and return which
+    /// slots still need RF bank reads.
+    fn allocate(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ci: usize,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+    ) -> AllocResult;
+
+    /// The capture decision: should this written-back destination value
+    /// enter the scheme's cache, and with which class? Returns true if
+    /// captured. `port_free` models the single CCU write port (§IV-A2).
+    fn capture_writeback(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ev: &WbEvent,
+        reg: u8,
+        near: bool,
+        port_free: bool,
+    ) -> bool;
+
+    /// A bank-fetched operand arrived over port S. Default: mark the slot
+    /// ready; window-tracking policies (BOW) also record the value.
+    fn operand_arrived(&mut self, collector: &mut Collector, slot: u8, reg: u8) {
+        collector.bank_operand_arrived(slot, reg, false);
+    }
+
+    /// Two-level scheduler: should this *stalled* active warp be swapped
+    /// out for a pending one? Only consulted for two-level policies.
+    fn should_swap_out(&self, _warp: &WarpState, _instr: &Instruction, _now: u64) -> bool {
+        false
+    }
+
+    /// Activation (swap-in) latency of the two-level scheduler (§VI-A).
+    fn activation_delay(&self) -> u64 {
+        4
+    }
+}
+
+// --------------------------------------------------------- shared helpers
+
+/// Reservoir-sample a free collector unit — the baseline OCU allocator's
+/// uniform pick, one RNG draw per free unit, no allocation on the hot path.
+pub fn free_unit_reservoir(collectors: &[Collector], rng: &mut Rng) -> Option<usize> {
+    let mut seen = 0usize;
+    let mut pick = None;
+    for (i, c) in collectors.iter().enumerate() {
+        if !c.occupied {
+            seen += 1;
+            if rng.below(seen) == 0 {
+                pick = Some(i);
+            }
+        }
+    }
+    pick
+}
+
+/// CCU-family allocation: delegate to [`Collector::alloc_ccu`] with the
+/// policy's victim chooser.
+pub fn ccu_allocate(
+    ctx: &mut PolicyCtx,
+    ci: usize,
+    warp: u8,
+    instr: &Instruction,
+    now: u64,
+    victim: VictimFn,
+) -> AllocResult {
+    ctx.collectors[ci].alloc_ccu(warp, instr, now, ctx.rng, victim)
+}
+
+/// CCU-family writeback capture: one write port per CCU (§IV-A2) — the
+/// value enters the cache only when the port is free, costing one OCT
+/// bookkeeping event; `no_write_filter` disables the near-only filter.
+pub fn ccu_capture(
+    ctx: &mut PolicyCtx,
+    ev: &WbEvent,
+    reg: u8,
+    near: bool,
+    port_free: bool,
+    victim: VictimFn,
+    no_write_filter: bool,
+) -> bool {
+    let ci = ev.collector as usize;
+    if port_free && ci < ctx.collectors.len() {
+        ctx.stats.energy.add(EventKind::OctOp, 1);
+        ctx.collectors[ci].ccu_writeback(ev.warp, reg, near, ctx.rng, victim, no_write_filter)
+    } else {
+        false
+    }
+}
+
+/// Shared knobs + plumbing of the CCU-hardware scheme family (`malekeh`,
+/// `malekeh_pr`, `malekeh_traditional`): the Fig-17 ablation flags from
+/// the config, the replacement chooser they select, and the common
+/// allocation/capture delegation — so a knob fix lands in one place.
+pub struct CcuKnobs {
+    traditional: bool,
+    no_write_filter: bool,
+    ct_entries: usize,
+}
+
+impl CcuKnobs {
+    /// Capture the ablation knobs from the resolved config.
+    pub fn from_config(cfg: &GpuConfig) -> Self {
+        CcuKnobs {
+            traditional: cfg.traditional_replacement,
+            no_write_filter: cfg.no_write_filter,
+            ct_entries: cfg.ct_entries,
+        }
+    }
+
+    /// The replacement chooser these knobs select: the paper's
+    /// reuse-guided policy (§IV-A1), or plain LRU under
+    /// `traditional_replacement`.
+    pub fn victim(&self) -> fn(&CacheTable, &mut Rng) -> Option<usize> {
+        if self.traditional {
+            plain_lru_victim
+        } else {
+            reuse_guided_victim
+        }
+    }
+
+    /// Cache-table entries per collector (energy-model storage scaling).
+    pub fn entries(&self) -> f64 {
+        self.ct_entries as f64
+    }
+
+    /// CCU allocation with the selected replacement.
+    pub fn allocate(
+        &self,
+        ctx: &mut PolicyCtx,
+        ci: usize,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+    ) -> AllocResult {
+        ccu_allocate(ctx, ci, warp, instr, now, &mut self.victim())
+    }
+
+    /// CCU writeback capture with the selected replacement and filter.
+    pub fn capture(
+        &self,
+        ctx: &mut PolicyCtx,
+        ev: &WbEvent,
+        reg: u8,
+        near: bool,
+        port_free: bool,
+    ) -> bool {
+        ccu_capture(ctx, ev, reg, near, port_free, &mut self.victim(), self.no_write_filter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn free_unit_reservoir_is_uniform_and_deterministic() {
+        let mut cols: Vec<Collector> = (0..4).map(|_| Collector::new(8)).collect();
+        cols[1].occupied = true;
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        let pa = free_unit_reservoir(&cols, &mut a);
+        let pb = free_unit_reservoir(&cols, &mut b);
+        assert_eq!(pa, pb, "same seed, same pick");
+        assert!(matches!(pa, Some(0 | 2 | 3)), "occupied unit never picked");
+        cols.iter_mut().for_each(|c| c.occupied = true);
+        assert_eq!(free_unit_reservoir(&cols, &mut a), None);
+    }
+
+    #[test]
+    fn default_build_order_is_gto() {
+        struct P;
+        impl CachePolicy for P {
+            fn select_collector(&mut self, _: &mut PolicyCtx, _: u8) -> CollectorChoice {
+                CollectorChoice::SkipWarp
+            }
+            fn allocate(
+                &mut self,
+                _: &mut PolicyCtx,
+                _: usize,
+                _: u8,
+                _: &Instruction,
+                _: u64,
+            ) -> AllocResult {
+                AllocResult::default()
+            }
+            fn capture_writeback(
+                &mut self,
+                _: &mut PolicyCtx,
+                _: &WbEvent,
+                _: u8,
+                _: bool,
+                _: bool,
+            ) -> bool {
+                false
+            }
+        }
+        let warps: Vec<WarpState> = (0..4).map(|i| WarpState::new(i)).collect();
+        let mut order = vec![2u8]; // greedy already pushed by the sub-core
+        P.build_order(&mut order, Some(2), &warps, &[]);
+        assert_eq!(order, vec![2, 0, 1, 3]);
+    }
+}

@@ -1,0 +1,355 @@
+//! String-keyed scheme registry — the single source of scheme names.
+//!
+//! A [`Scheme`] is an opaque, copyable handle into the registry: the
+//! built-in policies occupy fixed slots (the associated constants below),
+//! and [`register`] appends new policies at runtime (see
+//! `examples/custom_policy.rs`). Everything that used to be duplicated
+//! across the old enum — the name table, `from_name`, the
+//! private-per-warp / two-level structural flags — now lives in one
+//! [`PolicyMeta`] per entry, so a new scheme is one file plus one entry
+//! and no string table can drift.
+//!
+//! Builders are cloned out of the registry and invoked with no lock
+//! held, so a policy builder may freely use registry-backed [`Scheme`]
+//! APIs (or even [`register`] another policy).
+
+use std::fmt;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use super::{
+    BaselinePolicy, BeladyPolicy, BowPolicy, CachePolicy, FifoPolicy, MalekehPolicy,
+    MalekehPrPolicy, MalekehTraditionalPolicy, RfcPolicy, SoftwareRfcPolicy,
+};
+use crate::config::GpuConfig;
+
+/// Structural description of a registered policy — everything the config
+/// layer and the harness need to know without building the policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PolicyMeta {
+    /// Stable name used by the CLI, configs, and reports.
+    pub name: &'static str,
+    /// One-line description (`malekeh policies`, docs/CONFIG.md).
+    pub summary: &'static str,
+    /// One private collector per resident warp instead of a shared pool.
+    pub private_per_warp: bool,
+    /// Uses the two-level (active/pending) warp scheduler (§VI-A).
+    pub two_level: bool,
+    /// Part of the Fig 17 traditional-policy comparison sweep.
+    pub fig17_sweep: bool,
+}
+
+type BuildFn = dyn Fn(&GpuConfig) -> Box<dyn CachePolicy> + Send + Sync;
+
+struct Entry {
+    meta: PolicyMeta,
+    build: Arc<BuildFn>,
+}
+
+static REGISTRY: OnceLock<RwLock<Vec<Entry>>> = OnceLock::new();
+
+fn registry() -> &'static RwLock<Vec<Entry>> {
+    REGISTRY.get_or_init(|| RwLock::new(builtin_entries()))
+}
+
+/// Read the registry, shrugging off lock poisoning: entries are only ever
+/// appended (never left half-written), so a panic inside a policy builder
+/// must not cascade into every later `Scheme` operation — `name()` feeds
+/// Display and panic messages, where a poison panic would mask the
+/// original failure.
+fn read_entries() -> std::sync::RwLockReadGuard<'static, Vec<Entry>> {
+    registry().read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Built-in policies in figure-report order. Index == the associated
+/// constants on [`Scheme`]; append only (the constants are public API).
+fn builtin_entries() -> Vec<Entry> {
+    fn e(
+        meta: PolicyMeta,
+        build: impl Fn(&GpuConfig) -> Box<dyn CachePolicy> + Send + Sync + 'static,
+    ) -> Entry {
+        Entry { meta, build: Arc::new(build) }
+    }
+    vec![
+        e(
+            PolicyMeta {
+                name: "baseline",
+                summary: "Turing OCUs, no caching (§II)",
+                private_per_warp: false,
+                two_level: false,
+                fig17_sweep: false,
+            },
+            |cfg| Box::new(BaselinePolicy::from_config(cfg)),
+        ),
+        e(
+            PolicyMeta {
+                name: "malekeh",
+                summary: "shared CCUs, reuse-guided replacement + waiting mechanism (§III–§IV)",
+                private_per_warp: false,
+                two_level: false,
+                fig17_sweep: false,
+            },
+            |cfg| Box::new(MalekehPolicy::from_config(cfg)),
+        ),
+        e(
+            PolicyMeta {
+                name: "malekeh_pr",
+                summary: "Malekeh with a private CCU per warp (§VI-B)",
+                private_per_warp: true,
+                two_level: false,
+                fig17_sweep: false,
+            },
+            |cfg| Box::new(MalekehPrPolicy::from_config(cfg)),
+        ),
+        e(
+            PolicyMeta {
+                name: "bow",
+                summary: "per-warp bypassing collectors with a sliding window (§VI-B)",
+                private_per_warp: true,
+                two_level: false,
+                fig17_sweep: false,
+            },
+            |cfg| Box::new(BowPolicy::from_config(cfg)),
+        ),
+        e(
+            PolicyMeta {
+                name: "rfc",
+                summary: "per-active-warp HW register file cache, two-level scheduler (§VI-A)",
+                private_per_warp: false,
+                two_level: true,
+                fig17_sweep: false,
+            },
+            |cfg| Box::new(RfcPolicy::from_config(cfg)),
+        ),
+        e(
+            PolicyMeta {
+                name: "software_rfc",
+                summary: "compiler-managed RFC with strand swaps (§VI-A)",
+                private_per_warp: false,
+                two_level: true,
+                fig17_sweep: false,
+            },
+            |cfg| Box::new(SoftwareRfcPolicy::from_config(cfg)),
+        ),
+        e(
+            PolicyMeta {
+                name: "malekeh_traditional",
+                summary: "CCU hardware under GTO + plain LRU, no write filter (Fig 17)",
+                private_per_warp: false,
+                two_level: false,
+                fig17_sweep: true,
+            },
+            |cfg| Box::new(MalekehTraditionalPolicy::from_config(cfg)),
+        ),
+        e(
+            PolicyMeta {
+                name: "fifo",
+                summary: "CCU hardware under GTO + FIFO replacement, no write filter",
+                private_per_warp: false,
+                two_level: false,
+                fig17_sweep: true,
+            },
+            |cfg| Box::new(FifoPolicy::from_config(cfg)),
+        ),
+        e(
+            PolicyMeta {
+                name: "belady",
+                summary: "CCU hardware under GTO + oracle (Belady) replacement on exact reuse",
+                private_per_warp: false,
+                two_level: false,
+                fig17_sweep: true,
+            },
+            |cfg| Box::new(BeladyPolicy::from_config(cfg)),
+        ),
+    ]
+}
+
+/// Register a new policy at runtime; its name becomes usable everywhere a
+/// scheme name is accepted. Errors on a duplicate name.
+pub fn register(
+    meta: PolicyMeta,
+    build: impl Fn(&GpuConfig) -> Box<dyn CachePolicy> + Send + Sync + 'static,
+) -> Result<Scheme, String> {
+    let mut reg = registry().write().unwrap_or_else(|e| e.into_inner());
+    if reg.iter().any(|e| e.meta.name == meta.name) {
+        return Err(format!("policy {:?} is already registered", meta.name));
+    }
+    if reg.len() > u16::MAX as usize {
+        return Err("policy registry full".into());
+    }
+    reg.push(Entry { meta, build: Arc::new(build) });
+    Ok(Scheme((reg.len() - 1) as u16))
+}
+
+/// Identifier of a registered cache policy (scheme): an opaque, copyable
+/// handle that keys harness caches and configs exactly like the old enum.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Scheme(u16);
+
+impl Scheme {
+    /// Baseline Turing-style OCUs, no caching (§II).
+    pub const BASELINE: Scheme = Scheme(0);
+    /// Malekeh: shared CCUs with reuse-guided policies (§III, §IV).
+    pub const MALEKEH: Scheme = Scheme(1);
+    /// Malekeh with a private CCU per warp (§VI-B, "Malekeh_PR").
+    pub const MALEKEH_PR: Scheme = Scheme(2);
+    /// BOW: private per-warp bypassing operand collectors, sliding window.
+    pub const BOW: Scheme = Scheme(3);
+    /// RFC: per-active-warp RF cache + two-level scheduler (Gebhart 2011).
+    pub const RFC: Scheme = Scheme(4);
+    /// Software RFC: compiler-managed cache + two-level scheduler (strands).
+    pub const SOFTWARE_RFC: Scheme = Scheme(5);
+    /// Fig 17 ablation: Malekeh hardware, traditional GTO + plain LRU.
+    pub const MALEKEH_TRADITIONAL: Scheme = Scheme(6);
+    /// Registry-only policy: CCU hardware with FIFO replacement.
+    pub const FIFO: Scheme = Scheme(7);
+    /// Registry-only policy: CCU hardware with Belady oracle replacement.
+    pub const BELADY: Scheme = Scheme(8);
+
+    /// Every registered scheme, in registration (= figure-report) order.
+    pub fn all() -> Vec<Scheme> {
+        (0..read_entries().len() as u16).map(Scheme).collect()
+    }
+
+    /// The Fig 17 traditional-policy sweep set, in registration order.
+    pub fn fig17_sweep() -> Vec<Scheme> {
+        read_entries()
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.meta.fig17_sweep)
+            .map(|(i, _)| Scheme(i as u16))
+            .collect()
+    }
+
+    /// Look a scheme up by its registry name.
+    pub fn from_name(s: &str) -> Option<Scheme> {
+        read_entries().iter().position(|e| e.meta.name == s).map(|i| Scheme(i as u16))
+    }
+
+    /// Like [`Scheme::from_name`], but an unknown name errors with the
+    /// list of valid ones.
+    pub fn parse(s: &str) -> Result<Scheme, String> {
+        Scheme::from_name(s).ok_or_else(|| {
+            let names: Vec<&str> =
+                read_entries().iter().map(|e| e.meta.name).collect();
+            format!("unknown scheme {s:?} (valid: {})", names.join(", "))
+        })
+    }
+
+    /// Structural metadata of this scheme.
+    pub fn meta(self) -> PolicyMeta {
+        read_entries()[self.0 as usize].meta
+    }
+
+    /// Stable name used by the CLI and reports.
+    pub fn name(self) -> &'static str {
+        self.meta().name
+    }
+
+    /// Does this scheme use a private collector per warp?
+    pub fn private_per_warp(self) -> bool {
+        self.meta().private_per_warp
+    }
+
+    /// Does this scheme use the two-level (active/pending) scheduler?
+    pub fn two_level(self) -> bool {
+        self.meta().two_level
+    }
+
+    /// Build this scheme's policy for one sub-core under `cfg`.
+    pub fn build_policy(self, cfg: &GpuConfig) -> Box<dyn CachePolicy> {
+        // clone the builder out and drop the guard before invoking it, so
+        // a builder may use registry-backed Scheme APIs without queueing
+        // behind a waiting writer (std RwLock may deadlock there)
+        let build = Arc::clone(&read_entries()[self.0 as usize].build);
+        (*build)(cfg)
+    }
+
+    /// One human/CI-diffable description line (`malekeh policies`; the
+    /// table in docs/CONFIG.md is diffed against these in CI).
+    pub fn policy_line(self) -> String {
+        let m = self.meta();
+        format!(
+            "{:<20} {:<8} {:<8} {}",
+            m.name,
+            if m.private_per_warp { "private" } else { "shared" },
+            if m.two_level { "2-level" } else { "1-level" },
+            m.summary
+        )
+    }
+}
+
+impl fmt::Display for Scheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl fmt::Debug for Scheme {
+    /// Debug prints the registry name (the index is an implementation
+    /// detail).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Scheme({})", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_constants_map_to_names() {
+        for (s, name) in [
+            (Scheme::BASELINE, "baseline"),
+            (Scheme::MALEKEH, "malekeh"),
+            (Scheme::MALEKEH_PR, "malekeh_pr"),
+            (Scheme::BOW, "bow"),
+            (Scheme::RFC, "rfc"),
+            (Scheme::SOFTWARE_RFC, "software_rfc"),
+            (Scheme::MALEKEH_TRADITIONAL, "malekeh_traditional"),
+            (Scheme::FIFO, "fifo"),
+            (Scheme::BELADY, "belady"),
+        ] {
+            assert_eq!(s.name(), name);
+            assert_eq!(Scheme::from_name(name), Some(s));
+        }
+    }
+
+    #[test]
+    fn names_are_unique_and_roundtrip() {
+        let all = Scheme::all();
+        assert!(all.len() >= 9);
+        let mut names: Vec<&str> = all.iter().map(|s| s.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), all.len(), "duplicate scheme name");
+        for s in all {
+            assert_eq!(Scheme::from_name(s.name()), Some(s));
+        }
+    }
+
+    #[test]
+    fn parse_lists_valid_names_on_error() {
+        let err = Scheme::parse("bogus").unwrap_err();
+        assert!(err.contains("baseline") && err.contains("belady"), "{err}");
+        assert_eq!(Scheme::parse("malekeh").unwrap(), Scheme::MALEKEH);
+    }
+
+    #[test]
+    fn structural_flags_match_the_old_enum() {
+        assert!(Scheme::MALEKEH_PR.private_per_warp());
+        assert!(Scheme::BOW.private_per_warp());
+        assert!(!Scheme::MALEKEH.private_per_warp());
+        assert!(Scheme::RFC.two_level());
+        assert!(Scheme::SOFTWARE_RFC.two_level());
+        assert!(!Scheme::BASELINE.two_level());
+    }
+
+    #[test]
+    fn fig17_sweep_set() {
+        let sweep = Scheme::fig17_sweep();
+        assert_eq!(
+            sweep,
+            vec![Scheme::MALEKEH_TRADITIONAL, Scheme::FIFO, Scheme::BELADY]
+        );
+    }
+}

@@ -1,0 +1,93 @@
+//! Hardware RFC (Gebhart 2011, §VI-A): a small per-warp register file
+//! cache for the *active* warps of a two-level scheduler. Write-allocate
+//! only — values enter at writeback, never on read fills — with plain
+//! LRU replacement; warps deactivate on long-latency (load) stalls.
+
+use crate::config::GpuConfig;
+use crate::isa::Instruction;
+use crate::sim::collector::{plain_lru_victim, AllocResult};
+use crate::sim::exec::WbEvent;
+use crate::sim::warp::WarpState;
+
+use super::{free_unit_reservoir, CachePolicy, CollectorChoice, PolicyCtx};
+
+/// Hardware RFC + two-level scheduler.
+pub struct RfcPolicy {
+    entries: usize,
+}
+
+impl RfcPolicy {
+    /// Capture the cache size from the resolved config.
+    pub fn from_config(cfg: &GpuConfig) -> Self {
+        RfcPolicy { entries: cfg.rfc_entries }
+    }
+}
+
+impl CachePolicy for RfcPolicy {
+    fn cache_entries_per_collector(&self) -> f64 {
+        self.entries as f64
+    }
+
+    fn issue_gate(&self, warp: &WarpState, now: u64) -> bool {
+        warp.active && now >= warp.active_since + self.activation_delay()
+    }
+
+    fn select_collector(&mut self, ctx: &mut PolicyCtx, _warp: u8) -> CollectorChoice {
+        match free_unit_reservoir(ctx.collectors, ctx.rng) {
+            Some(ci) => CollectorChoice::Unit(ci),
+            None => {
+                ctx.stats.collector_full_stalls += 1;
+                CollectorChoice::StallCycle { waiting: false }
+            }
+        }
+    }
+
+    fn allocate(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ci: usize,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+    ) -> AllocResult {
+        let mut res = ctx.collectors[ci].alloc_ocu(warp, instr, now);
+        if ctx.warps[warp as usize].active {
+            let cache = &mut ctx.rfc[warp as usize];
+            let mut still_miss = Vec::with_capacity(res.misses.len());
+            for (slot, reg) in res.misses.drain(..) {
+                if cache.lookup(reg).is_some() {
+                    cache.touch(cache.lookup(reg).unwrap());
+                    ctx.collectors[ci].deliver(slot);
+                    res.hits += 1;
+                } else {
+                    still_miss.push((slot, reg));
+                }
+            }
+            res.misses = still_miss;
+        }
+        res
+    }
+
+    fn capture_writeback(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ev: &WbEvent,
+        reg: u8,
+        _near: bool,
+        _port_free: bool,
+    ) -> bool {
+        // hardware RFC: fill if the warp is still active
+        if ctx.warps[ev.warp as usize].active {
+            ctx.rfc[ev.warp as usize]
+                .allocate(reg, true, false, ctx.rng, &mut plain_lru_victim)
+                .is_some()
+        } else {
+            false
+        }
+    }
+
+    /// Deactivate only on long-latency (load) stalls (§VI-A).
+    fn should_swap_out(&self, warp: &WarpState, instr: &Instruction, _now: u64) -> bool {
+        warp.blocked_on_load(instr)
+    }
+}

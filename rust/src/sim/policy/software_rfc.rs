@@ -1,0 +1,104 @@
+//! Software RFC / LTRF-style (§VI-A): the compiler marks which operands
+//! live in the per-warp cache (near bits) and splits code into strands;
+//! the two-level scheduler swaps warps at compiler-placed strand ends (or
+//! after a long stall — the strand timeout). Only near-marked values are
+//! cached, on both the read-check and the writeback path.
+
+use crate::config::GpuConfig;
+use crate::isa::Instruction;
+use crate::sim::collector::{plain_lru_victim, AllocResult};
+use crate::sim::exec::WbEvent;
+use crate::sim::warp::WarpState;
+
+use super::{free_unit_reservoir, CachePolicy, CollectorChoice, PolicyCtx};
+
+/// Compiler-managed RFC + two-level scheduler with strands.
+pub struct SoftwareRfcPolicy {
+    entries: usize,
+    strand_len: u32,
+}
+
+impl SoftwareRfcPolicy {
+    /// Capture cache size and strand length from the resolved config.
+    pub fn from_config(cfg: &GpuConfig) -> Self {
+        SoftwareRfcPolicy {
+            entries: cfg.rfc_entries,
+            strand_len: cfg.swrfc_strand_len as u32,
+        }
+    }
+}
+
+impl CachePolicy for SoftwareRfcPolicy {
+    fn cache_entries_per_collector(&self) -> f64 {
+        self.entries as f64
+    }
+
+    fn issue_gate(&self, warp: &WarpState, now: u64) -> bool {
+        warp.active && now >= warp.active_since + self.activation_delay()
+    }
+
+    fn select_collector(&mut self, ctx: &mut PolicyCtx, _warp: u8) -> CollectorChoice {
+        match free_unit_reservoir(ctx.collectors, ctx.rng) {
+            Some(ci) => CollectorChoice::Unit(ci),
+            None => {
+                ctx.stats.collector_full_stalls += 1;
+                CollectorChoice::StallCycle { waiting: false }
+            }
+        }
+    }
+
+    fn allocate(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ci: usize,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+    ) -> AllocResult {
+        let mut res = ctx.collectors[ci].alloc_ocu(warp, instr, now);
+        if ctx.warps[warp as usize].active {
+            let cache = &mut ctx.rfc[warp as usize];
+            let mut still_miss = Vec::with_capacity(res.misses.len());
+            for (slot, reg) in res.misses.drain(..) {
+                // compiler-managed: only near-marked operands can live in
+                // the cache
+                let allowed = instr.src_is_near(slot as usize);
+                if allowed && cache.lookup(reg).is_some() {
+                    cache.touch(cache.lookup(reg).unwrap());
+                    ctx.collectors[ci].deliver(slot);
+                    res.hits += 1;
+                } else {
+                    still_miss.push((slot, reg));
+                }
+            }
+            res.misses = still_miss;
+        }
+        res
+    }
+
+    fn capture_writeback(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ev: &WbEvent,
+        reg: u8,
+        near: bool,
+        _port_free: bool,
+    ) -> bool {
+        // compiler-managed: only near-marked results are placed in the cache
+        if near && ctx.warps[ev.warp as usize].active {
+            ctx.rfc[ev.warp as usize]
+                .allocate(reg, true, false, ctx.rng, &mut plain_lru_victim)
+                .is_some()
+        } else {
+            false
+        }
+    }
+
+    /// Swaps happen only at compiler-placed strand ends; a warp stuck
+    /// mid-strand is released only after a long stall (the strand
+    /// timeout) — short ALU-dependence stalls keep it resident and idle,
+    /// the state-2 cost of Fig 10.
+    fn should_swap_out(&self, warp: &WarpState, _instr: &Instruction, now: u64) -> bool {
+        warp.strand_pos >= self.strand_len || now.saturating_sub(warp.last_issue) > 64
+    }
+}

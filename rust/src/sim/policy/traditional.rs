@@ -1,0 +1,69 @@
+//! Fig 17 ablation: the Malekeh CCU *hardware* driven by traditional
+//! policies — GTO issue order, any free unit picked at random (like the
+//! baseline OCU allocator), no waiting mechanism. `GpuConfig::with_scheme`
+//! additionally sets plain-LRU replacement and disables the write filter,
+//! which together cause the "excessive flushes when GTO schedules a new
+//! warp" of §VI-C.
+
+use crate::config::GpuConfig;
+use crate::isa::Instruction;
+use crate::sim::collector::AllocResult;
+use crate::sim::exec::WbEvent;
+
+use super::{free_unit_reservoir, CachePolicy, CcuKnobs, CollectorChoice, PolicyCtx};
+
+/// Malekeh hardware under traditional GTO + LRU.
+pub struct MalekehTraditionalPolicy {
+    knobs: CcuKnobs,
+}
+
+impl MalekehTraditionalPolicy {
+    /// Capture the ablation knobs (normally set by `with_scheme`) from the
+    /// resolved config.
+    pub fn from_config(cfg: &GpuConfig) -> Self {
+        MalekehTraditionalPolicy { knobs: CcuKnobs::from_config(cfg) }
+    }
+}
+
+impl CachePolicy for MalekehTraditionalPolicy {
+    fn caching(&self) -> bool {
+        true
+    }
+
+    fn cache_entries_per_collector(&self) -> f64 {
+        self.knobs.entries()
+    }
+
+    fn select_collector(&mut self, ctx: &mut PolicyCtx, _warp: u8) -> CollectorChoice {
+        // any free unit, randomly, like the baseline OCU allocator
+        match free_unit_reservoir(ctx.collectors, ctx.rng) {
+            Some(ci) => CollectorChoice::Unit(ci),
+            None => {
+                ctx.stats.collector_full_stalls += 1;
+                CollectorChoice::StallCycle { waiting: false }
+            }
+        }
+    }
+
+    fn allocate(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ci: usize,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+    ) -> AllocResult {
+        self.knobs.allocate(ctx, ci, warp, instr, now)
+    }
+
+    fn capture_writeback(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ev: &WbEvent,
+        reg: u8,
+        near: bool,
+        port_free: bool,
+    ) -> bool {
+        self.knobs.capture(ctx, ev, reg, near, port_free)
+    }
+}

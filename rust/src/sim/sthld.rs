@@ -42,8 +42,6 @@ pub struct SthldController {
     /// slow decay while climbing, where every per-interval delta is Small
     /// but the cumulative loss is not.
     anchor: f64,
-    /// Direction memory for Backoff (did IPC drop when we increased?).
-    transitions: u64,
 }
 
 impl SthldController {
@@ -56,7 +54,6 @@ impl SthldController {
             epsilon,
             prev_ipc: None,
             anchor: 0.0,
-            transitions: 0,
         }
     }
 
@@ -68,11 +65,6 @@ impl SthldController {
     /// Current state (observability / tests).
     pub fn state(&self) -> SthldState {
         self.state
-    }
-
-    /// Number of state transitions taken.
-    pub fn transitions(&self) -> u64 {
-        self.transitions
     }
 
     fn bump(&mut self, delta: i32) {
@@ -88,7 +80,6 @@ impl SthldController {
             None => {
                 // first interval: asterisk transition Init -> Climb
                 self.state = SthldState::Climb;
-                self.transitions += 1;
                 self.bump(1);
                 return self.sthld;
             }
@@ -98,7 +89,6 @@ impl SthldController {
         let dropped = ipc < prev;
         self.anchor = (self.anchor * 0.995).max(ipc);
         let below_anchor = ipc < self.anchor * (1.0 - self.epsilon);
-        self.transitions += 1;
         use SthldState::*;
         match self.state {
             Init => {
@@ -243,6 +233,44 @@ mod tests {
             c.interval_end(1.0); // perfectly flat: climb forever
         }
         assert!(c.sthld() <= 4);
+    }
+
+    #[test]
+    fn backoff_descends_until_deltas_stabilise() {
+        // The Backoff state carries no direction memory (the field that
+        // once claimed to was write-only and has been removed): it keeps
+        // stepping STHLD down while per-interval deltas stay Large or IPC
+        // sits below the decayed anchor, then settles via Approach.
+        let mut c = SthldController::new(64, 0.02);
+        // climb the flat region to 4 (first call is the Init transition)
+        for _ in 0..4 {
+            c.interval_end(1.0);
+        }
+        assert_eq!(c.state(), SthldState::Climb);
+        assert_eq!(c.sthld(), 4);
+        // a Large upward change moves Climb -> Speculate (one step up)...
+        c.interval_end(1.5);
+        assert_eq!(c.state(), SthldState::Speculate);
+        assert_eq!(c.sthld(), 5);
+        // ...and a Large *drop* while speculating enters Backoff (-2)
+        c.interval_end(1.0);
+        assert_eq!(c.state(), SthldState::Backoff);
+        assert_eq!(c.sthld(), 3, "speculation undone plus one step");
+        // Large deltas (either direction) keep it descending
+        c.interval_end(0.75);
+        assert_eq!(c.state(), SthldState::Backoff);
+        assert_eq!(c.sthld(), 2);
+        c.interval_end(1.5); // large recovery jump: still backing off
+        assert_eq!(c.state(), SthldState::Backoff);
+        assert_eq!(c.sthld(), 1);
+        // a Small delta at the anchor stabilises: Approach, then Hold,
+        // with STHLD untouched
+        c.interval_end(1.5);
+        assert_eq!(c.state(), SthldState::Approach);
+        assert_eq!(c.sthld(), 1);
+        c.interval_end(1.5);
+        assert_eq!(c.state(), SthldState::Hold);
+        assert_eq!(c.sthld(), 1);
     }
 
     #[test]

@@ -1,10 +1,16 @@
 //! One sub-core: issue scheduler, collector array, RF banks, execution
-//! pipes — the cycle-level pipeline of Fig 3/4 and the policies of §IV.
+//! pipes — the cycle-level pipeline of Fig 3/4.
 //!
 //! Per-cycle phase order: writeback -> dispatch -> operand collection
 //! (bank arbitration) -> issue. Writeback first so a value produced at
 //! cycle t can be reused by an allocation in the same cycle (the paper's
 //! waiting mechanism exists exactly to create these reuse windows).
+//!
+//! Every scheme-varying decision — issue gating, warp ordering, collector
+//! routing, operand capture, replacement, writeback capture — is delegated
+//! to the sub-core's [`CachePolicy`] (built from the scheme registry, see
+//! [`crate::sim::policy`]); this file contains no scheme dispatch, only
+//! the scheme-independent machine.
 //!
 //! Memory: global loads go through the per-SM L1 directly; an L1 miss that
 //! needs the shared L2 is *deferred* — the request is queued on the SM's
@@ -16,33 +22,50 @@
 
 use std::sync::Arc;
 
-use crate::config::{GpuConfig, Scheme, SthldMode};
+use crate::config::{GpuConfig, SthldMode};
 use crate::energy::EventKind;
 use crate::isa::{Instruction, OpClass};
-use crate::sim::collector::{AllocResult, CacheTable, Collector};
+use crate::sim::collector::{CacheTable, Collector};
 use crate::sim::exec::{pipe_of, ExecUnits, Pipe, WbEvent, NPIPES};
 use crate::sim::memory::{L1Cache, L1Fetch, MemPort};
+use crate::sim::policy::{CachePolicy, CollectorChoice, PolicyCtx};
 use crate::sim::regfile::{ReadReq, RegFileBanks, WriteReq};
 use crate::sim::warp::WarpState;
 use crate::stats::{SchedState, Stats};
 use crate::util::Rng;
 
+/// Build a [`PolicyCtx`] from a sub-core's fields. Expanded at the call
+/// site so the borrows stay field-granular (a method returning the ctx
+/// would borrow all of `self`, conflicting with the `policy` receiver).
+macro_rules! policy_ctx {
+    ($s:expr) => {
+        PolicyCtx {
+            collectors: &mut $s.collectors,
+            rfc: &mut $s.rfc,
+            warps: &$s.warps,
+            streams: &$s.streams,
+            rng: &mut $s.rng,
+            stats: &mut $s.stats,
+            wait_counter: &mut $s.wait_counter,
+            sthld: $s.sthld,
+        }
+    };
+}
+
 /// One sub-core of an SM.
 pub struct SubCore {
-    scheme: Scheme,
-    traditional: bool,
-    no_write_filter: bool,
-    bow_window: usize,
+    /// The scheme's decision set (one instance per sub-core).
+    policy: Box<dyn CachePolicy>,
+    /// Two-level (active/pending) scheduling in effect (registry meta).
     two_level: bool,
     collector_ports: u8,
-    swrfc_strand_len: u32,
 
     /// Warp state, indexed by local warp id.
     pub warps: Vec<WarpState>,
     streams: Vec<Arc<Vec<Instruction>>>,
     /// Collector units (2 shared, or one per warp for private schemes).
     pub collectors: Vec<Collector>,
-    /// RFC per-warp caches (empty unless scheme is RFC/SoftwareRfc).
+    /// RFC per-warp caches (empty unless the policy is two-level).
     rfc: Vec<CacheTable>,
     banks: RegFileBanks,
     eu: ExecUnits,
@@ -92,13 +115,9 @@ impl SubCore {
             SthldMode::Dynamic => 0,
         };
         SubCore {
-            scheme: cfg.scheme,
-            traditional: cfg.traditional_replacement,
-            no_write_filter: cfg.no_write_filter,
-            bow_window: cfg.bow_window,
+            policy: cfg.scheme.build_policy(cfg),
             two_level,
             collector_ports: cfg.collector_ports.max(1) as u8,
-            swrfc_strand_len: cfg.swrfc_strand_len as u32,
             live_warps: nwarps,
             warps,
             streams,
@@ -126,13 +145,6 @@ impl SubCore {
             && self.banks.pending_reads() == 0
             && self.banks.pending_writes() == 0
             && self.collectors.iter().all(|c| !c.occupied)
-    }
-
-    fn caching(&self) -> bool {
-        matches!(
-            self.scheme,
-            Scheme::Malekeh | Scheme::MalekehPr | Scheme::MalekehTraditional | Scheme::Bow
-        )
     }
 
     /// One cycle. L2-bound loads queue on `port` and defer their dispatch
@@ -169,57 +181,12 @@ impl SubCore {
                 self.stats.rf_writes += 1;
                 self.stats.energy.add(EventKind::BankWrite, 1);
 
-                // collector-cache capture
+                // collector-cache capture: the policy decides what enters
+                // the cache and with which class
                 let port_free = last_col_served != Some(ev.collector);
-                let captured = match self.scheme {
-                    Scheme::Malekeh | Scheme::MalekehPr | Scheme::MalekehTraditional => {
-                        let ci = ev.collector as usize;
-                        if port_free && ci < self.collectors.len() {
-                            self.stats.energy.add(EventKind::OctOp, 1);
-                            self.collectors[ci].ccu_writeback(
-                                warp,
-                                reg,
-                                near,
-                                &mut self.rng,
-                                self.traditional,
-                                self.no_write_filter,
-                            )
-                        } else {
-                            false
-                        }
-                    }
-                    Scheme::Bow => {
-                        let ci = ev.collector as usize;
-                        if ci < self.collectors.len() {
-                            // BOW writes every in-window destination
-                            self.collectors[ci].boc_writeback(ev.boc_seq, reg)
-                        } else {
-                            false
-                        }
-                    }
-                    Scheme::Rfc => {
-                        // hardware RFC: fill if the warp is still active
-                        if self.warps[warp as usize].active {
-                            self.rfc[warp as usize]
-                                .allocate(reg, true, false, &mut self.rng, true)
-                                .is_some()
-                        } else {
-                            false
-                        }
-                    }
-                    Scheme::SoftwareRfc => {
-                        // compiler-managed: only near-marked results are
-                        // placed in the cache
-                        if near && self.warps[warp as usize].active {
-                            self.rfc[warp as usize]
-                                .allocate(reg, true, false, &mut self.rng, true)
-                                .is_some()
-                        } else {
-                            false
-                        }
-                    }
-                    Scheme::Baseline => false,
-                };
+                let captured = self
+                    .policy
+                    .capture_writeback(&mut policy_ctx!(self), ev, reg, near, port_free);
                 if captured {
                     self.stats.rf_cache_writes += 1;
                     self.stats.energy.add(EventKind::CcuWrite, 1);
@@ -280,7 +247,7 @@ impl SubCore {
                 _ => 0,
             };
             let seq = self.collectors[ci].cur_seq;
-            let caching = self.caching();
+            let caching = self.policy.caching();
             self.eu.dispatch(&instr, warp, ci as u8, seq, now, mem_done);
             self.collectors[ci].dispatched(caching);
         }
@@ -292,10 +259,10 @@ impl SubCore {
         self.port_used.iter_mut().for_each(|p| *p = 0);
         let (grants, _writes) =
             self.banks.arbitrate(now, &mut self.port_used, self.collector_ports);
-        let bow = self.scheme == Scheme::Bow;
         for g in &grants {
             let r = g.req;
-            self.collectors[r.collector as usize].bank_operand_arrived(r.slot, r.reg, bow);
+            self.policy
+                .operand_arrived(&mut self.collectors[r.collector as usize], r.slot, r.reg);
             self.stats.rf_bank_reads += 1;
             self.stats.bank_conflict_wait += g.waited;
             self.stats.energy.add(EventKind::BankRead, 1);
@@ -308,45 +275,15 @@ impl SubCore {
 
     // ---------------------------------------------------------------- issue
 
-    /// Build the warp priority order for this cycle into `order_buf`.
+    /// Build the warp priority order for this cycle into `order_buf`: the
+    /// greedy warp first, then the policy's priority order.
     fn build_order(&mut self) {
         self.order_buf.clear();
-        let n = self.warps.len() as u8;
         let greedy = self.last_issued.filter(|&w| !self.warps[w as usize].done);
         if let Some(g) = greedy {
             self.order_buf.push(g);
         }
-        match self.scheme {
-            Scheme::Malekeh => {
-                // §IV-B1: warps with data in a CCU first (by age), then rest
-                for w in 0..n {
-                    if Some(w) == greedy {
-                        continue;
-                    }
-                    let owns = self
-                        .collectors
-                        .iter()
-                        .any(|c| c.owner == Some(w) && c.ct.has_values());
-                    if owns {
-                        self.order_buf.push(w);
-                    }
-                }
-                for w in 0..n {
-                    if Some(w) == greedy || self.order_buf.contains(&w) {
-                        continue;
-                    }
-                    self.order_buf.push(w);
-                }
-            }
-            _ => {
-                // GTO: greedy then oldest (ascending id = age order)
-                for w in 0..n {
-                    if Some(w) != greedy {
-                        self.order_buf.push(w);
-                    }
-                }
-            }
-        }
+        self.policy.build_order(&mut self.order_buf, greedy, &self.warps, &self.collectors);
     }
 
     /// Scoreboard-level readiness of warp `w`.
@@ -362,11 +299,11 @@ impl SubCore {
         (0..self.warps.len()).any(|w| self.warp_ready(w))
     }
 
-    /// Two-level scheduler bookkeeping: swap active warps out on
-    /// long-latency stalls (hardware RFC) or strand boundaries (software
-    /// RFC / LTRF), §VI-A. Short-latency stalls leave the warp active —
-    /// with only 2 active warps this is exactly what produces the state-2
-    /// cycles of Fig 10.
+    /// Two-level scheduler bookkeeping: swap active warps out when the
+    /// policy says so — long-latency stalls (hardware RFC) or strand
+    /// boundaries (software RFC / LTRF), §VI-A. Short-latency stalls leave
+    /// the warp active — with only 2 active warps this is exactly what
+    /// produces the state-2 cycles of Fig 10.
     fn update_active_set(&mut self, now: u64) {
         if !self.two_level {
             return;
@@ -379,7 +316,7 @@ impl SubCore {
             let done = self.warps[w].done;
             // minimum residency: a freshly activated warp cannot be
             // swapped out before its swap-in completes
-            if !done && now < self.warps[w].active_since + self.activation_delay() {
+            if !done && now < self.warps[w].active_since + self.policy.activation_delay() {
                 continue;
             }
             let should_swap = if done {
@@ -390,20 +327,7 @@ impl SubCore {
                     None => continue,
                 };
                 let stalled = !self.warps[w].deps_ready(&instr);
-                match self.scheme {
-                    // hardware RFC: deactivate only on long-latency stalls
-                    Scheme::Rfc => stalled && self.warps[w].blocked_on_load(&instr),
-                    // software RFC / LTRF: swaps happen only at
-                    // compiler-placed strand ends; a warp stuck mid-strand
-                    // is released only after a long stall (the strand
-                    // timeout) — short ALU-dependence stalls keep it
-                    // resident and idle, the state-2 cost of Fig 10
-                    _ => {
-                        stalled
-                            && (self.warps[w].strand_pos >= self.swrfc_strand_len
-                                || now.saturating_sub(self.warps[w].last_issue) > 64)
-                    }
-                }
+                stalled && self.policy.should_swap_out(&self.warps[w], &instr, now)
             };
             if !should_swap {
                 continue;
@@ -439,17 +363,6 @@ impl SubCore {
         }
     }
 
-    /// Activation (swap-in) latency of the two-level scheduler: the newly
-    /// activated warp's RF-cache working set must be moved in — RFC
-    /// allocates cache lines, software RFC/LTRF issue the strand's
-    /// prefetch moves (which is why its swaps are costlier).
-    fn activation_delay(&self) -> u64 {
-        match self.scheme {
-            Scheme::SoftwareRfc => 4,
-            _ => 4,
-        }
-    }
-
     fn issue(&mut self, now: u64) {
         self.update_active_set(now);
         self.build_order();
@@ -459,10 +372,9 @@ impl SubCore {
 
         'warps: for &w in &order {
             let wi = w as usize;
-            if self.two_level
-                && (!self.warps[wi].active
-                    || now < self.warps[wi].active_since + self.activation_delay())
-            {
+            // two-level residency + activation delay (always true for
+            // one-level policies)
+            if !self.policy.issue_gate(&self.warps[wi], now) {
                 continue;
             }
             if self.warps[wi].done || !self.warp_ready(wi) {
@@ -493,71 +405,21 @@ impl SubCore {
                 _ => {}
             }
 
-            // collector selection per scheme
-            let chosen: Option<usize> = match self.scheme {
-                Scheme::MalekehPr | Scheme::Bow => {
-                    let ci = wi % self.collectors.len();
-                    if self.collectors[ci].occupied {
-                        None // private unit busy: this warp cannot issue
-                    } else {
-                        Some(ci)
-                    }
-                }
-                Scheme::Malekeh => {
-                    match self.choose_ccu(w) {
-                        CcuChoice::Unit(ci) => Some(ci),
-                        CcuChoice::Skip => None,
-                        CcuChoice::WaitStall => {
-                            waiting_stall = true;
-                            break 'warps; // §IV-B2 box 7: stall the slot
-                        }
-                    }
-                }
-                Scheme::MalekehTraditional => {
-                    // Fig 17 ablation: CCU hardware but *traditional*
-                    // allocation — any free unit, randomly, like the
-                    // baseline OCU allocator. This causes the "excessive
-                    // flushes when GTO schedules a new warp" of §VI-C.
-                    let mut seen = 0usize;
-                    let mut pick = None;
-                    for (i, c) in self.collectors.iter().enumerate() {
-                        if !c.occupied {
-                            seen += 1;
-                            if self.rng.below(seen) == 0 {
-                                pick = Some(i);
-                            }
-                        }
-                    }
-                    if pick.is_none() {
-                        self.stats.collector_full_stalls += 1;
-                        break 'warps;
-                    }
-                    pick
-                }
-                _ => {
-                    // baseline / RFC: any free unit, random pick
-                    // (reservoir sample: no allocation on the hot path)
-                    let mut seen = 0usize;
-                    let mut pick = None;
-                    for (i, c) in self.collectors.iter().enumerate() {
-                        if !c.occupied {
-                            seen += 1;
-                            if self.rng.below(seen) == 0 {
-                                pick = Some(i);
-                            }
-                        }
-                    }
-                    if pick.is_none() {
-                        self.stats.collector_full_stalls += 1;
-                        break 'warps; // nothing can issue this cycle
-                    }
-                    pick
+            // collector selection (and issue gating) per policy
+            let choice = self.policy.select_collector(&mut policy_ctx!(self), w);
+            let ci = match choice {
+                CollectorChoice::Unit(ci) => ci,
+                CollectorChoice::SkipWarp => continue,
+                CollectorChoice::StallCycle { waiting } => {
+                    // §IV-B2 box 7 (waiting) or collector-full: stall the
+                    // slot for this cycle
+                    waiting_stall = waiting;
+                    break 'warps;
                 }
             };
-            let Some(ci) = chosen else { continue };
 
             // allocate + generate bank reads
-            let res = self.allocate(ci, w, &instr, now);
+            let res = self.policy.allocate(&mut policy_ctx!(self), ci, w, &instr, now);
             self.stats.rf_reads += (res.hits + res.misses.len() as u32) as u64;
             self.stats.rf_cache_reads += res.hits as u64;
             self.stats.cache_write_reused += res.wb_reuse as u64;
@@ -636,102 +498,12 @@ impl SubCore {
             .energy
             .add(EventKind::LeakProxy, n * self.collectors.len() as u64);
     }
-
-    /// Allocate instruction to collector `ci` per scheme; RFC schemes check
-    /// the per-warp cache and shrink the miss list.
-    fn allocate(&mut self, ci: usize, w: u8, instr: &Instruction, now: u64) -> AllocResult {
-        match self.scheme {
-            Scheme::Malekeh | Scheme::MalekehPr | Scheme::MalekehTraditional => self
-                .collectors[ci]
-                .alloc_ccu(w, instr, now, &mut self.rng, self.traditional),
-            Scheme::Bow => self.collectors[ci].alloc_boc(w, instr, now, self.bow_window),
-            Scheme::Baseline => self.collectors[ci].alloc_ocu(w, instr, now),
-            Scheme::Rfc | Scheme::SoftwareRfc => {
-                let mut res = self.collectors[ci].alloc_ocu(w, instr, now);
-                if self.warps[w as usize].active {
-                    let sw = self.scheme == Scheme::SoftwareRfc;
-                    let cache = &mut self.rfc[w as usize];
-                    let mut still_miss = Vec::with_capacity(res.misses.len());
-                    for (slot, reg) in res.misses.drain(..) {
-                        let allowed = !sw || instr.src_is_near(slot as usize);
-                        if allowed && cache.lookup(reg).is_some() {
-                            cache.touch(cache.lookup(reg).unwrap());
-                            self.collectors[ci].deliver(slot);
-                            res.hits += 1;
-                        } else {
-                            still_miss.push((slot, reg));
-                        }
-                    }
-                    res.misses = still_miss;
-                }
-                res
-            }
-        }
-    }
-
-    /// Malekeh CCU allocation policy (§IV-B2, Fig 6).
-    fn choose_ccu(&mut self, w: u8) -> CcuChoice {
-        // a warp can own at most one CCU (coherence-free invariant)
-        if let Some(ci) = self
-            .collectors
-            .iter()
-            .position(|c| c.owner == Some(w))
-        {
-            return if self.collectors[ci].occupied {
-                CcuChoice::Skip // box 4: no other CCU may be allocated
-            } else {
-                CcuChoice::Unit(ci) // box 3: reuse the owned unit
-            };
-        }
-        // reservoir-sample the free and the far/empty-free sets in one
-        // pass (no allocation on the hot path)
-        let mut nfree = 0usize;
-        let mut free_pick = None;
-        let mut nfar = 0usize;
-        let mut far_pick = None;
-        for (i, c) in self.collectors.iter().enumerate() {
-            if c.occupied {
-                continue;
-            }
-            nfree += 1;
-            if self.rng.below(nfree) == 0 {
-                free_pick = Some(i);
-            }
-            if !c.ct.has_near_value() {
-                nfar += 1;
-                if self.rng.below(nfar) == 0 {
-                    far_pick = Some(i);
-                }
-            }
-        }
-        if nfree == 0 {
-            self.stats.collector_full_stalls += 1;
-            return CcuChoice::Skip; // box 6
-        }
-        if let Some(i) = far_pick {
-            return CcuChoice::Unit(i); // box 5: random far/empty unit
-        }
-        // all free units hold near values: waiting mechanism (boxes 7-9)
-        if self.wait_counter < self.sthld {
-            self.wait_counter += 1;
-            CcuChoice::WaitStall
-        } else {
-            self.wait_counter = 0;
-            CcuChoice::Unit(free_pick.expect("nfree > 0"))
-        }
-    }
-}
-
-enum CcuChoice {
-    Unit(usize),
-    Skip,
-    WaitStall,
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::GpuConfig;
+    use crate::config::{GpuConfig, Scheme};
     use crate::sim::memory::SharedMemorySystem;
     use crate::trace::{find, KernelTrace};
 
@@ -794,7 +566,7 @@ mod tests {
 
     #[test]
     fn malekeh_serves_reads_from_cache() {
-        let cfg = GpuConfig::table1_baseline().with_scheme(Scheme::Malekeh);
+        let cfg = GpuConfig::table1_baseline().with_scheme(Scheme::MALEKEH);
         let mut trace = KernelTrace::generate(find("kmeans").unwrap(), 8, 7);
         crate::compiler::profile_and_annotate(&mut trace, 2, cfg.rthld);
         let streams: Vec<_> = trace.warps.into_iter().map(Arc::new).collect();
@@ -819,7 +591,7 @@ mod tests {
 
     #[test]
     fn exit_retires_all_warps_all_schemes() {
-        for scheme in Scheme::ALL {
+        for scheme in Scheme::all() {
             let cfg = GpuConfig::table1_baseline().with_scheme(scheme);
             let sc = run_subcore(&cfg, "backprop", 8, 3_000_000);
             assert!(sc.idle(), "{scheme}: not drained");
@@ -829,7 +601,7 @@ mod tests {
 
     #[test]
     fn two_level_has_state2_stalls() {
-        let cfg = GpuConfig::table1_baseline().with_scheme(Scheme::Rfc);
+        let cfg = GpuConfig::table1_baseline().with_scheme(Scheme::RFC);
         let sc = run_subcore(&cfg, "hotspot", 8, 2_000_000);
         let (_, s2, _) = sc.stats.sched_state_distribution();
         assert!(
@@ -840,7 +612,7 @@ mod tests {
 
     #[test]
     fn waiting_mechanism_counts_stalls() {
-        let mut cfg = GpuConfig::table1_baseline().with_scheme(Scheme::Malekeh);
+        let mut cfg = GpuConfig::table1_baseline().with_scheme(Scheme::MALEKEH);
         cfg.sthld = SthldMode::Static(8);
         let mut trace = KernelTrace::generate(find("kmeans").unwrap(), 8, 7);
         crate::compiler::profile_and_annotate(&mut trace, 2, cfg.rthld);

@@ -17,7 +17,7 @@ fn cfg(scheme: Scheme) -> GpuConfig {
 #[test]
 fn all_schemes_complete_all_suites() {
     for bench in ["hotspot", "bfs", "gemm_t1", "rnn_i1"] {
-        for scheme in Scheme::ALL {
+        for scheme in Scheme::all() {
             let stats = run_benchmark(&cfg(scheme), bench, 2);
             assert_eq!(
                 stats.warps_retired, 32,
@@ -31,7 +31,7 @@ fn all_schemes_complete_all_suites() {
 #[test]
 fn read_conservation_invariant() {
     // every operand read is served exactly once, by cache or banks
-    for scheme in Scheme::ALL {
+    for scheme in Scheme::all() {
         let s = run_benchmark(&cfg(scheme), "kmeans", 2);
         assert_eq!(
             s.rf_reads,
@@ -44,8 +44,8 @@ fn read_conservation_invariant() {
 #[test]
 fn same_workload_same_read_demand() {
     // schemes change WHERE reads are served, not HOW MANY are requested
-    let base = run_benchmark(&cfg(Scheme::Baseline), "srad_v1", 2);
-    for scheme in [Scheme::Malekeh, Scheme::Bow, Scheme::MalekehPr] {
+    let base = run_benchmark(&cfg(Scheme::BASELINE), "srad_v1", 2);
+    for scheme in [Scheme::MALEKEH, Scheme::BOW, Scheme::MALEKEH_PR] {
         let s = run_benchmark(&cfg(scheme), "srad_v1", 2);
         assert_eq!(s.rf_reads, base.rf_reads, "{scheme}");
         assert_eq!(s.instructions, base.instructions, "{scheme}");
@@ -55,7 +55,7 @@ fn same_workload_same_read_demand() {
 
 #[test]
 fn baseline_never_hits_cache() {
-    let s = run_benchmark(&cfg(Scheme::Baseline), "gemm_i1", 2);
+    let s = run_benchmark(&cfg(Scheme::BASELINE), "gemm_i1", 2);
     assert_eq!(s.rf_cache_reads, 0);
     assert_eq!(s.rf_cache_writes, 0);
 }
@@ -67,12 +67,12 @@ fn malekeh_headline_direction_small_config() {
     let mut ipc_rel = Vec::new();
     let mut energy_rel = Vec::new();
     for bench in ["kmeans", "gemm_t1", "rnn_i2", "srad_v1", "hotspot"] {
-        let b = run_benchmark(&cfg(Scheme::Baseline), bench, 2);
-        let m = run_benchmark(&cfg(Scheme::Malekeh), bench, 2);
+        let b = run_benchmark(&cfg(Scheme::BASELINE), bench, 2);
+        let m = run_benchmark(&cfg(Scheme::MALEKEH), bench, 2);
         hit.push(m.rf_hit_ratio());
         ipc_rel.push(m.ipc() / b.ipc());
-        let be = EnergyModel::for_config(&cfg(Scheme::Baseline)).total(&b.energy);
-        let me = EnergyModel::for_config(&cfg(Scheme::Malekeh)).total(&m.energy);
+        let be = EnergyModel::for_config(&cfg(Scheme::BASELINE)).total(&b.energy);
+        let me = EnergyModel::for_config(&cfg(Scheme::MALEKEH)).total(&m.energy);
         energy_rel.push(me / be);
     }
     let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
@@ -87,10 +87,10 @@ fn bow_energy_above_baseline() {
     // dynamic energy than the baseline despite its hits
     let mut rel = Vec::new();
     for bench in ["kmeans", "b+tree", "hotspot"] {
-        let b = run_benchmark(&cfg(Scheme::Baseline), bench, 2);
-        let w = run_benchmark(&cfg(Scheme::Bow), bench, 2);
-        let be = EnergyModel::for_config(&cfg(Scheme::Baseline)).total(&b.energy);
-        let we = EnergyModel::for_config(&cfg(Scheme::Bow)).total(&w.energy);
+        let b = run_benchmark(&cfg(Scheme::BASELINE), bench, 2);
+        let w = run_benchmark(&cfg(Scheme::BOW), bench, 2);
+        let be = EnergyModel::for_config(&cfg(Scheme::BASELINE)).total(&b.energy);
+        let we = EnergyModel::for_config(&cfg(Scheme::BOW)).total(&w.energy);
         rel.push(we / be);
     }
     let mean = rel.iter().sum::<f64>() / rel.len() as f64;
@@ -102,8 +102,8 @@ fn traditional_policies_collapse_hit_ratio() {
     // Fig 17: GTO + plain LRU + no write filter loses most of the hits
     let mut drop = Vec::new();
     for bench in ["kmeans", "nn", "rnn_i2"] {
-        let m = run_benchmark(&cfg(Scheme::Malekeh), bench, 2);
-        let t = run_benchmark(&cfg(Scheme::MalekehTraditional), bench, 2);
+        let m = run_benchmark(&cfg(Scheme::MALEKEH), bench, 2);
+        let t = run_benchmark(&cfg(Scheme::MALEKEH_TRADITIONAL), bench, 2);
         drop.push(t.rf_hit_ratio() / m.rf_hit_ratio().max(1e-9));
     }
     let mean = drop.iter().sum::<f64>() / drop.len() as f64;
@@ -117,8 +117,8 @@ fn two_level_slower_than_one_level_on_subcores() {
     // documented deviation, docs/EXPERIMENTS.md §Fig 2)
     let mut rel = Vec::new();
     for bench in ["hotspot", "srad_v1", "kmeans"] {
-        let b = run_benchmark(&cfg(Scheme::Baseline), bench, 2);
-        let s = run_benchmark(&cfg(Scheme::SoftwareRfc), bench, 2);
+        let b = run_benchmark(&cfg(Scheme::BASELINE), bench, 2);
+        let s = run_benchmark(&cfg(Scheme::SOFTWARE_RFC), bench, 2);
         rel.push(s.ipc() / b.ipc());
     }
     assert!(
@@ -132,12 +132,12 @@ fn sub_core_partitioning_hurts_two_level_more_than_monolithic() {
     // Fig 2: the sub-core drop exceeds the monolithic drop (swRFC), and
     // the two-level scheduler shows substantial ready-but-stalled cycles
     let bench = "hotspot";
-    let sub_base = run_benchmark(&cfg(Scheme::Baseline), bench, 2);
-    let sub_sw = run_benchmark(&cfg(Scheme::SoftwareRfc), bench, 2);
+    let sub_base = run_benchmark(&cfg(Scheme::BASELINE), bench, 2);
+    let sub_sw = run_benchmark(&cfg(Scheme::SOFTWARE_RFC), bench, 2);
     let mut mono = GpuConfig::monolithic();
     mono.num_sms = 1;
     let mono_base = run_benchmark(&mono, bench, 2);
-    let mono_sw = run_benchmark(&mono.clone().with_scheme(Scheme::SoftwareRfc), bench, 2);
+    let mono_sw = run_benchmark(&mono.clone().with_scheme(Scheme::SOFTWARE_RFC), bench, 2);
     let sub_drop = 1.0 - sub_sw.ipc() / sub_base.ipc();
     let mono_drop = 1.0 - mono_sw.ipc() / mono_base.ipc();
     assert!(
@@ -145,7 +145,7 @@ fn sub_core_partitioning_hurts_two_level_more_than_monolithic() {
         "sub-core drop {sub_drop:.3} must exceed monolithic {mono_drop:.3}"
     );
     // Fig 10: state-2 fraction is significant for both two-level schemes
-    let (_, s2_rfc, _) = run_benchmark(&cfg(Scheme::Rfc), bench, 2).sched_state_distribution();
+    let (_, s2_rfc, _) = run_benchmark(&cfg(Scheme::RFC), bench, 2).sched_state_distribution();
     let (_, s2_sw, _) = sub_sw.sched_state_distribution();
     assert!(s2_rfc > 0.1, "rfc state2 {s2_rfc:.3}");
     assert!(s2_sw > 0.1, "swrfc state2 {s2_sw:.3}");
@@ -155,7 +155,7 @@ fn sub_core_partitioning_hurts_two_level_more_than_monolithic() {
 fn precise_vs_partial_profiling_close() {
     // §III-A: binary + partial profiling ~ oracle
     for bench in ["kmeans", "rnn_i2"] {
-        let c = cfg(Scheme::Malekeh);
+        let c = cfg(Scheme::MALEKEH);
         let partial = run_benchmark(&c, bench, 2);
         let oracle = run_benchmark(&c, bench, 0); // 0 = precise annotation
         let rel = partial.rf_hit_ratio() / oracle.rf_hit_ratio().max(1e-9);
@@ -170,8 +170,8 @@ fn precise_vs_partial_profiling_close() {
 
 #[test]
 fn write_filter_reduces_cache_writes() {
-    let c = cfg(Scheme::Malekeh);
-    let mut nof = cfg(Scheme::Malekeh);
+    let c = cfg(Scheme::MALEKEH);
+    let mut nof = cfg(Scheme::MALEKEH);
     nof.no_write_filter = true;
     let filtered = run_benchmark(&c, "conv_t1", 2);
     let unfiltered = run_benchmark(&nof, "conv_t1", 2);
@@ -185,7 +185,7 @@ fn write_filter_reduces_cache_writes() {
 
 #[test]
 fn sthld_zero_means_no_waiting() {
-    let mut c = cfg(Scheme::Malekeh);
+    let mut c = cfg(Scheme::MALEKEH);
     c.sthld = SthldMode::Static(0);
     let s = run_benchmark(&c, "kmeans", 2);
     assert_eq!(s.waiting_stalls, 0);
@@ -196,7 +196,7 @@ fn higher_static_sthld_does_not_reduce_hits() {
     // Fig 7: hit ratio vs STHLD is (weakly) monotone up
     let mut prev = -1.0f64;
     for sthld in [0u32, 4, 16] {
-        let mut c = cfg(Scheme::Malekeh);
+        let mut c = cfg(Scheme::MALEKEH);
         c.sthld = SthldMode::Static(sthld);
         let s = run_benchmark(&c, "gaussian", 2);
         assert!(
@@ -212,7 +212,7 @@ fn simulator_reuses_annotated_trace() {
     // Simulator::new is pure wrt the trace: two sims over the same
     // annotated trace give identical results
     let bench = find("pathfinder").unwrap();
-    let c = cfg(Scheme::Malekeh);
+    let c = cfg(Scheme::MALEKEH);
     let mut trace = KernelTrace::generate(bench, 32, 1);
     compiler::profile_and_annotate(&mut trace, 2, c.rthld);
     let a = Simulator::new(&c, &trace).run();
@@ -224,7 +224,7 @@ fn simulator_reuses_annotated_trace() {
 
 #[test]
 fn dynamic_sthld_tracks_interval_count() {
-    let mut c = cfg(Scheme::Malekeh);
+    let mut c = cfg(Scheme::MALEKEH);
     c.sthld_interval = 1000;
     let s = run_benchmark(&c, "srad_v1", 2);
     assert_eq!(s.interval_ipc.len(), s.sthld_trace.len());

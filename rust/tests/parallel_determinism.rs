@@ -29,7 +29,7 @@ fn opts(jobs: usize) -> ExpOpts {
 }
 
 const BENCHES: [&str; 3] = ["kmeans", "hotspot", "nn"];
-const SCHEMES: [Scheme; 2] = [Scheme::Baseline, Scheme::Malekeh];
+const SCHEMES: [Scheme; 2] = [Scheme::BASELINE, Scheme::MALEKEH];
 
 /// Shard the probe plan, then assemble a figure-style table serially.
 fn build_table(runner: &Runner) -> Table {
@@ -47,8 +47,8 @@ fn build_table(runner: &Runner) -> Table {
     );
     let mut rel = Vec::new();
     for b in BENCHES {
-        let base = runner.run(b, Scheme::Baseline);
-        let m = runner.run(b, Scheme::Malekeh);
+        let base = runner.run(b, Scheme::BASELINE);
+        let m = runner.run(b, Scheme::MALEKEH);
         let r = m.ipc() / base.ipc().max(1e-9);
         rel.push(r);
         // 9 decimals: any cross-shard nondeterminism would show here
@@ -117,10 +117,10 @@ fn sim_threads_fingerprints_identical_across_table2() {
     // fingerprint (every deterministic counter, energy matrix, interval
     // traces) must be bit-identical
     for bench in table2() {
-        let serial = run_benchmark(&threaded_cfg(Scheme::Malekeh, 2, 1), bench.name, 2);
+        let serial = run_benchmark(&threaded_cfg(Scheme::MALEKEH, 2, 1), bench.name, 2);
         for threads in [2usize, 4] {
             let par =
-                run_benchmark(&threaded_cfg(Scheme::Malekeh, 2, threads), bench.name, 2);
+                run_benchmark(&threaded_cfg(Scheme::MALEKEH, 2, threads), bench.name, 2);
             assert_eq!(
                 serial.fingerprint(),
                 par.fingerprint(),
@@ -137,9 +137,9 @@ fn sim_threads_match_uncapped_on_wider_gpu() {
     // stall-empty tail accounting, and genuinely concurrent 4-worker
     // epochs (plus the auto/over-provisioned clamp)
     for (bench, scheme) in [
-        ("kmeans", Scheme::Malekeh),
-        ("gemm_t1", Scheme::Baseline),
-        ("srad_v1", Scheme::Rfc),
+        ("kmeans", Scheme::MALEKEH),
+        ("gemm_t1", Scheme::BASELINE),
+        ("srad_v1", Scheme::RFC),
     ] {
         let fps: Vec<u64> = [1usize, 2, 4, 0]
             .into_iter()
@@ -163,14 +163,14 @@ fn runner_is_shareable_across_threads() {
     let runner = Runner::new(opts(2));
     std::thread::scope(|scope| {
         let r = &runner;
-        scope.spawn(move || r.run("kmeans", Scheme::Baseline));
-        scope.spawn(move || r.run("kmeans", Scheme::Malekeh));
+        scope.spawn(move || r.run("kmeans", Scheme::BASELINE));
+        scope.spawn(move || r.run("kmeans", Scheme::MALEKEH));
     });
     assert_eq!(runner.cached(), 2);
     // a post-join read is a cache hit and matches a fresh serial run
     let serial = Runner::new(opts(1));
     assert_eq!(
-        runner.run("kmeans", Scheme::Malekeh).cycles,
-        serial.run("kmeans", Scheme::Malekeh).cycles
+        runner.run("kmeans", Scheme::MALEKEH).cycles,
+        serial.run("kmeans", Scheme::MALEKEH).cycles
     );
 }

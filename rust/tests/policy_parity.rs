@@ -1,0 +1,234 @@
+//! Policy-parity suite: every Table II benchmark replayed under every
+//! registered policy at `--sim-threads 1` (the engine's reference
+//! configuration), fingerprints pinned against the committed golden
+//! fixture `rust/tests/golden/fingerprints.txt`.
+//!
+//! - A behavior change in any policy shows up as a fingerprint mismatch
+//!   and fails until the fixture is deliberately re-blessed:
+//!   `MALEKEH_BLESS_GOLDEN=1 cargo test --test policy_parity`.
+//! - While the fixture carries the `STATE: bootstrap` marker (no entries
+//!   yet), the suite instead verifies recomputation stability on a
+//!   deterministic sample of points and prints the table to commit.
+//! - A source-level check asserts the sub-core/collector hot paths carry
+//!   zero `Scheme::` dispatch — all scheme variation must flow through
+//!   the policy trait.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use malekeh::config::{GpuConfig, Scheme};
+use malekeh::sim::run_benchmark;
+use malekeh::trace::table2;
+
+const GOLDEN_REL: &str = "rust/tests/golden/fingerprints.txt";
+
+/// Cycle cap keeping the 200-point sweep tractable in debug CI runs;
+/// fingerprints over a capped run are just as pinned as full ones.
+const MAX_CYCLES: u64 = 40_000;
+
+fn golden_path() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join(GOLDEN_REL)
+}
+
+/// The fixture's pinned configuration: Table I baseline on 1 SM, serial
+/// reference engine, capped cycles, 2 profile warps.
+fn parity_cfg(scheme: Scheme) -> GpuConfig {
+    let mut c = GpuConfig::table1_baseline().with_scheme(scheme);
+    c.num_sms = 1;
+    c.sim_threads = 1;
+    c.max_cycles = MAX_CYCLES;
+    c
+}
+
+fn fingerprint(bench: &str, scheme: Scheme) -> u64 {
+    run_benchmark(&parity_cfg(scheme), bench, 2).fingerprint()
+}
+
+/// Compute the full bench x policy fingerprint grid, sharded over a small
+/// worker pool (each point is an independent, deterministic simulation).
+fn compute_grid() -> BTreeMap<(String, String), u64> {
+    let points: Vec<(&'static str, Scheme)> = table2()
+        .flat_map(|b| Scheme::all().into_iter().map(move |s| (b.name, s)))
+        .collect();
+    let results: Mutex<Vec<Option<u64>>> = Mutex::new(vec![None; points.len()]);
+    let next = AtomicUsize::new(0);
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= points.len() {
+                    break;
+                }
+                let (bench, scheme) = points[i];
+                let fp = fingerprint(bench, scheme);
+                results.lock().unwrap()[i] = Some(fp);
+            });
+        }
+    });
+    let results = results.into_inner().unwrap();
+    points
+        .iter()
+        .zip(results)
+        .map(|(&(bench, scheme), fp)| {
+            ((bench.to_string(), scheme.name().to_string()), fp.expect("point computed"))
+        })
+        .collect()
+}
+
+fn render_fixture(grid: &BTreeMap<(String, String), u64>) -> String {
+    let mut out = String::from(
+        "# Golden stats fingerprints: one `<bench> <policy> <fingerprint>` per line.\n\
+         # Config: Table I baseline, num_sms=1, sim_threads=1, max_cycles=40000,\n\
+         # profile_warps=2, scheme applied via GpuConfig::with_scheme.\n\
+         # Bless/update: MALEKEH_BLESS_GOLDEN=1 cargo test --test policy_parity\n\
+         # STATE: blessed\n",
+    );
+    for ((bench, scheme), fp) in grid {
+        let _ = writeln!(out, "{bench} {scheme} {fp:016x}");
+    }
+    out
+}
+
+fn parse_fixture(text: &str) -> (bool, BTreeMap<(String, String), u64>) {
+    let bootstrap = text.contains("STATE: bootstrap");
+    let mut map = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(bench), Some(scheme), Some(fp)) = (it.next(), it.next(), it.next()) else {
+            panic!("malformed golden line: {line:?}");
+        };
+        let fp = u64::from_str_radix(fp, 16)
+            .unwrap_or_else(|_| panic!("bad fingerprint in golden line: {line:?}"));
+        map.insert((bench.to_string(), scheme.to_string()), fp);
+    }
+    (bootstrap, map)
+}
+
+#[test]
+fn golden_fingerprints_match() {
+    let grid = compute_grid();
+    let path = golden_path();
+    // always leave the rendered table where CI can diff it against the
+    // committed fixture without a second full sweep
+    let computed = Path::new(env!("CARGO_TARGET_TMPDIR")).join("fingerprints.computed.txt");
+    std::fs::write(&computed, render_fixture(&grid)).expect("write computed table");
+    if std::env::var("MALEKEH_BLESS_GOLDEN").is_ok() {
+        std::fs::write(&path, render_fixture(&grid)).expect("write golden fixture");
+        eprintln!("blessed {} ({} points)", path.display(), grid.len());
+        return;
+    }
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    let (bootstrap, golden) = parse_fixture(&text);
+    let mut missing = Vec::new();
+    for ((bench, scheme), fp) in &grid {
+        match golden.get(&(bench.clone(), scheme.clone())) {
+            Some(g) => assert_eq!(
+                g,
+                fp,
+                "{bench}/{scheme}: fingerprint changed vs the golden fixture — a \
+                 policy edit altered behavior. If intended, re-bless with \
+                 MALEKEH_BLESS_GOLDEN=1 cargo test --test policy_parity"
+            ),
+            None => missing.push(format!("{bench} {scheme}")),
+        }
+    }
+    // entries for points that no longer exist are stale
+    let stale: Vec<String> = golden
+        .keys()
+        .filter(|k| !grid.contains_key(*k))
+        .map(|(b, s)| format!("{b} {s}"))
+        .collect();
+    if bootstrap {
+        // fixture not yet pinned (the authoring environment had no
+        // toolchain): check recomputation stability on a deterministic
+        // sample, then print the table so it can be committed verbatim
+        for (i, ((bench, scheme), fp)) in grid.iter().enumerate() {
+            if i % 7 != 0 {
+                continue;
+            }
+            let s = Scheme::from_name(scheme).expect("computed points are registered");
+            assert_eq!(
+                *fp,
+                fingerprint(bench, s),
+                "{bench}/{scheme}: fingerprint not stable across recomputation"
+            );
+        }
+        eprintln!(
+            "golden fixture is in bootstrap state; commit this blessed content:\n{}",
+            render_fixture(&grid)
+        );
+        return;
+    }
+    assert!(missing.is_empty(), "points missing from the golden fixture: {missing:?}");
+    assert!(stale.is_empty(), "stale golden entries (re-bless): {stale:?}");
+}
+
+#[test]
+fn fifo_and_belady_fingerprints_are_stable_and_distinct() {
+    // the two registry-only policies must be deterministic (same
+    // fingerprint on recomputation) ...
+    let mut fps = BTreeMap::new();
+    for scheme in [Scheme::FIFO, Scheme::BELADY, Scheme::MALEKEH_TRADITIONAL] {
+        for bench in ["kmeans", "gemm_t1", "srad_v1"] {
+            let a = fingerprint(bench, scheme);
+            let b = fingerprint(bench, scheme);
+            assert_eq!(a, b, "{bench}/{scheme}: fingerprint not stable");
+            fps.insert((scheme.name(), bench), a);
+        }
+    }
+    // ... and actually wired: FIFO and Belady replacement must diverge
+    // from each other somewhere on these cache-pressured benchmarks
+    let diverges = ["kmeans", "gemm_t1", "srad_v1"]
+        .iter()
+        .any(|b| fps[&("fifo", *b)] != fps[&("belady", *b)]);
+    assert!(diverges, "fifo and belady produced identical runs everywhere");
+}
+
+#[test]
+fn hot_paths_carry_no_scheme_dispatch() {
+    // the refactor's acceptance gate: sub-core and collector decide
+    // nothing by scheme — matching on Scheme in these files means a
+    // decision leaked out of the policy layer
+    for file in ["rust/src/sim/subcore.rs", "rust/src/sim/collector.rs"] {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join(file);
+        let src = std::fs::read_to_string(&path).unwrap();
+        let body = src.split("#[cfg(test)]").next().unwrap();
+        assert!(
+            !body.contains("Scheme::"),
+            "{file}: Scheme:: reference in non-test code"
+        );
+        assert!(
+            !body.contains("match self.scheme") && !body.contains(".scheme {"),
+            "{file}: scheme dispatch in non-test code"
+        );
+    }
+}
+
+#[test]
+fn registry_is_reachable_from_config_layer() {
+    // the config layer resolves names through the registry: unknown names
+    // list the valid ones, and every registered name round-trips through
+    // a `-s scheme=<name>` override
+    let mut cfg = GpuConfig::table1_baseline();
+    for s in Scheme::all() {
+        cfg.set("scheme", s.name()).unwrap();
+        assert_eq!(cfg.scheme, s);
+    }
+    let err = cfg.set("scheme", "not_a_policy").unwrap_err();
+    assert!(
+        err.contains("baseline") && err.contains("fifo") && err.contains("belady"),
+        "{err}"
+    );
+}

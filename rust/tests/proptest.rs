@@ -4,7 +4,7 @@
 
 use malekeh::compiler::{windowed_reuse_distances, CAP, DEAD};
 use malekeh::config::{GpuConfig, Scheme, SthldMode};
-use malekeh::sim::collector::CacheTable;
+use malekeh::sim::collector::{plain_lru_victim, reuse_guided_victim, CacheTable, VictimFn};
 use malekeh::sim::SthldController;
 use malekeh::util::Rng;
 
@@ -97,8 +97,12 @@ fn prop_cache_table_invariants() {
                     let reg = rng.below(32) as u8;
                     let lock = rng.chance(0.2) && locked_regs.len() < 5;
                     let near = rng.chance(0.5);
-                    let trad = rng.chance(0.3);
-                    if ct.allocate(reg, near, lock, &mut rng, trad).is_some() && lock {
+                    // alternate between the two built-in victim choosers
+                    // (named bindings: a `&mut fn_item` temporary would not
+                    // outlive the `let` through the if/else arms)
+                    let (mut lru, mut guided) = (plain_lru_victim, reuse_guided_victim);
+                    let victim: VictimFn = if rng.chance(0.3) { &mut lru } else { &mut guided };
+                    if ct.allocate(reg, near, lock, &mut rng, victim).is_some() && lock {
                         locked_regs.push(reg);
                     }
                 }
@@ -156,7 +160,7 @@ fn prop_simulation_conservation_random_configs() {
     for seed in 0..12u64 {
         let mut rng = Rng::new(seed ^ 0xC0DE);
         let mut cfg = GpuConfig::table1_baseline()
-            .with_scheme(*rng.pick(&Scheme::ALL));
+            .with_scheme(*rng.pick(&Scheme::all()));
         cfg.num_sms = 1;
         cfg.warps_per_sm = [8, 16, 32][rng.below(3)];
         cfg.banks_per_sub_core = rng.range(1, 4);

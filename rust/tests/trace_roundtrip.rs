@@ -41,9 +41,9 @@ fn ir_roundtrips_for_every_table2_benchmark() {
 #[test]
 fn replay_is_bit_identical_including_annotation_bits() {
     for (bench, scheme) in [
-        ("kmeans", Scheme::Malekeh),
-        ("gemm_t1", Scheme::Bow),
-        ("b+tree", Scheme::Baseline),
+        ("kmeans", Scheme::MALEKEH),
+        ("gemm_t1", Scheme::BOW),
+        ("b+tree", Scheme::BASELINE),
     ] {
         let c = cfg(scheme);
         let b = find(bench).unwrap();
@@ -67,7 +67,7 @@ fn raw_recording_matches_builtin_workload_run() {
     // a raw (unannotated) recording goes through the same compiler pass as
     // the builtin path, so the file-backed point must reproduce
     // run_benchmark exactly
-    let c = cfg(Scheme::Malekeh);
+    let c = cfg(Scheme::MALEKEH);
     let path = tmp("kmeans_raw.mtrace");
     let t = KernelTrace::generate(
         find("kmeans").unwrap(),
@@ -85,7 +85,7 @@ fn raw_recording_matches_builtin_workload_run() {
 fn annotated_recording_matches_builtin_workload_run() {
     // recording *after* annotation bakes the bits into the file; replay
     // must trust them and still match the builtin run bit for bit
-    let c = cfg(Scheme::Malekeh);
+    let c = cfg(Scheme::MALEKEH);
     let path = tmp("kmeans_annotated.mtrace");
     let mut t = KernelTrace::generate(
         find("kmeans").unwrap(),
@@ -115,13 +115,13 @@ fn trace_points_shard_deterministically() {
             sim_threads: 1,
         });
         let mut plan = runner.plan();
-        plan.add("kmeans", Scheme::Baseline);
-        plan.add_trace(&path, Scheme::Baseline);
-        plan.add_trace(&path, Scheme::Malekeh);
+        plan.add("kmeans", Scheme::BASELINE);
+        plan.add_trace(&path, Scheme::BASELINE);
+        plan.add_trace(&path, Scheme::MALEKEH);
         runner.execute(&plan);
-        let a = runner.run("kmeans", Scheme::Baseline);
-        let b = runner.run_trace(&path, Scheme::Baseline);
-        let c = runner.run_trace(&path, Scheme::Malekeh);
+        let a = runner.run("kmeans", Scheme::BASELINE);
+        let b = runner.run_trace(&path, Scheme::BASELINE);
+        let c = runner.run_trace(&path, Scheme::MALEKEH);
         assert_eq!(runner.cached(), 3, "trace points must cache distinctly");
         a.fingerprint()
             ^ b.fingerprint().rotate_left(1)
@@ -157,7 +157,7 @@ fn transformed_traces_serialise_and_replay() {
     let back = io::read_str(&io::write_string(&out).unwrap()).unwrap();
     assert_eq!(out.warps, back.warps);
     // and the transformed trace still simulates to completion
-    let stats = malekeh::sim::run_trace(&cfg(Scheme::Malekeh), back, 2, false);
+    let stats = malekeh::sim::run_trace(&cfg(Scheme::MALEKEH), back, 2, false);
     assert_eq!(stats.warps_retired, 4);
 }
 
@@ -165,7 +165,7 @@ fn transformed_traces_serialise_and_replay() {
 fn subsampled_replay_keeps_headline_direction() {
     // scenario scaling: a 1-in-4 warp subsample is a smaller but still
     // representative workload — Malekeh must keep a nonzero hit ratio on it
-    let c = cfg(Scheme::Malekeh);
+    let c = cfg(Scheme::MALEKEH);
     let full = KernelTrace::generate(
         find("kmeans").unwrap(),
         c.num_sms * c.warps_per_sm,
