@@ -21,19 +21,24 @@ use malekeh::sim::run_benchmark;
 use malekeh::util::Rng;
 
 /// Evict a uniformly random unlocked entry (one RNG draw per eviction).
+///
+/// Written in the policy layer's allocation-free idiom (see
+/// `sim::policy` "Allocation contract"): count the candidates, draw one
+/// ordinal, resolve it — never collect a candidate `Vec` on the hot path.
+/// The RNG sees the identical single `below(count)` draw a collecting
+/// version would make, so the choice is the same bit-for-bit.
 fn random_victim(ct: &CacheTable, rng: &mut Rng) -> Option<usize> {
-    let unlocked: Vec<usize> = ct
-        .entries()
+    let unlocked = ct.entries().iter().filter(|e| !e.locked).count();
+    if unlocked == 0 {
+        return None;
+    }
+    let k = rng.below(unlocked);
+    ct.entries()
         .iter()
         .enumerate()
         .filter(|(_, e)| !e.locked)
+        .nth(k)
         .map(|(i, _)| i)
-        .collect();
-    if unlocked.is_empty() {
-        None
-    } else {
-        Some(unlocked[rng.below(unlocked.len())])
-    }
 }
 
 /// CCU hardware + GTO + random replacement, defined entirely out of tree.

@@ -4,19 +4,68 @@
 //!
 //!     cargo bench --bench perf_hotpath            # full protocol (best-of-3)
 //!     cargo bench --bench perf_hotpath -- --smoke # CI liveness: 1 rep, capped
+//!     cargo bench --bench perf_hotpath -- --json out.json  # custom JSON path
 //!
 //! Protocol (docs/EXPERIMENTS.md §Perf): release build, best-of-3 wall
 //! clock, report Minstr/s per workload plus the serial-vs-parallel
 //! single-point speedup on the paper's `num_sms = 10` machine.
+//!
+//! Every run also emits a machine-readable `BENCH_PR5.json` (schema:
+//! docs/EXPERIMENTS.md §Bench JSON) at the repo root: the six hot-path
+//! reference points, a best-of-N Minstr/s sweep over every Table II
+//! benchmark, the `--sim-threads 1/2/4` parallel point, and a
+//! `golden_check` block of parity-config fingerprints CI diffs against
+//! the blessed golden table. This file is the perf trajectory of record —
+//! PR 6+ must beat it (target for PR 5 itself: ≥ 1.5x Minstr/s on the
+//! reference points vs the same bench run on the pre-PR5 commit).
 
+use std::fmt::Write as _;
 use std::time::Instant;
 
-use malekeh::config::{GpuConfig, Scheme};
+use malekeh::config::{GOLDEN_PROFILE_WARPS, GpuConfig, Scheme};
 use malekeh::sim::run_benchmark;
+use malekeh::trace::table2;
 
-fn sim_throughput(bench: &str, scheme: Scheme, reps: usize) -> (f64, u64) {
+/// The six hot-path reference points (the ≥ 1.5x PR 5 target applies to
+/// these; docs/EXPERIMENTS.md §Perf).
+const REFERENCE_POINTS: [(&str, Scheme); 6] = [
+    ("gemm_t1", Scheme::BASELINE),
+    ("gemm_t1", Scheme::MALEKEH),
+    ("gemm_t1", Scheme::BOW),
+    ("hotspot", Scheme::MALEKEH),
+    ("kmeans", Scheme::MALEKEH),
+    ("bfs", Scheme::RFC),
+];
+
+/// One measured simulator-throughput point.
+struct Point {
+    bench: String,
+    scheme: &'static str,
+    minstr_per_s: f64,
+    instructions: u64,
+    seconds: f64,
+}
+
+/// One `--sim-threads` entry of the SM-parallelism single point.
+struct ParallelPoint {
+    sim_threads: usize,
+    seconds: f64,
+    speedup: f64,
+    minstr_per_s: f64,
+    fingerprint: u64,
+}
+
+/// One parity-config fingerprint for the CI golden diff.
+struct GoldenPoint {
+    bench: &'static str,
+    scheme: &'static str,
+    fingerprint: u64,
+}
+
+fn sim_throughput(bench: &str, scheme: Scheme, reps: usize, max_cycles: u64) -> Point {
     let mut cfg = GpuConfig::table1_baseline().with_scheme(scheme);
     cfg.num_sms = 1;
+    cfg.max_cycles = max_cycles;
     let mut best = f64::MAX;
     let mut instr = 0;
     for _ in 0..reps {
@@ -26,14 +75,20 @@ fn sim_throughput(bench: &str, scheme: Scheme, reps: usize) -> (f64, u64) {
         best = best.min(dt);
         instr = stats.instructions;
     }
-    (instr as f64 / best / 1e6, instr)
+    Point {
+        bench: bench.to_string(),
+        scheme: scheme.name(),
+        minstr_per_s: instr as f64 / best.max(1e-9) / 1e6,
+        instructions: instr,
+        seconds: best,
+    }
 }
 
 /// §Perf intra-run SM parallelism: one `num_sms = 10` simulation stepped
 /// by 1/2/4 epoch workers. Prints the speedup table recorded in
 /// docs/EXPERIMENTS.md §Perf and asserts the fingerprints stay
 /// bit-identical while doing so.
-fn sm_parallel_point(reps: usize, smoke: bool) {
+fn sm_parallel_point(reps: usize, smoke: bool) -> Vec<ParallelPoint> {
     let mut cfg = GpuConfig::table1_baseline().with_scheme(Scheme::MALEKEH);
     cfg.num_sms = 10;
     if smoke {
@@ -44,6 +99,7 @@ fn sm_parallel_point(reps: usize, smoke: bool) {
         "{:<14}{:>12}{:>12}{:>12}{:>20}",
         "sim-threads", "seconds", "speedup", "Minstr/s", "fingerprint"
     );
+    let mut out = Vec::new();
     let mut serial: Option<(f64, u64)> = None;
     for threads in [1usize, 2, 4] {
         cfg.sim_threads = threads;
@@ -62,46 +118,150 @@ fn sm_parallel_point(reps: usize, smoke: bool) {
             fp, serial_fp,
             "sim-threads={threads} changed the results — determinism broken"
         );
+        let speedup = serial_secs / best.max(1e-9);
+        let mips = instr as f64 / best.max(1e-9) / 1e6;
         println!(
             "{:<14}{:>12.2}{:>12.2}{:>12.2}{:>20x}",
-            threads,
-            best,
-            serial_secs / best.max(1e-9),
-            instr as f64 / best.max(1e-9) / 1e6,
-            fp
+            threads, best, speedup, mips, fp
         );
+        out.push(ParallelPoint {
+            sim_threads: threads,
+            seconds: best,
+            speedup,
+            minstr_per_s: mips,
+            fingerprint: fp,
+        });
     }
     println!("(fingerprints equal: SM-parallel results bit-identical to serial)");
+    out
+}
+
+/// Fingerprints at the golden fixture's pinned configuration
+/// ([`GpuConfig::golden_parity`] — the same constructor the parity suite
+/// uses, so the two can never drift) for CI to machine-diff the bench run
+/// against the blessed table.
+fn golden_check() -> Vec<GoldenPoint> {
+    let mut out = Vec::new();
+    for (bench, scheme) in [
+        ("kmeans", Scheme::BASELINE),
+        ("kmeans", Scheme::MALEKEH),
+        ("gemm_t1", Scheme::BASELINE),
+        ("gemm_t1", Scheme::MALEKEH),
+    ] {
+        let cfg = GpuConfig::golden_parity(scheme);
+        let fp = run_benchmark(&cfg, bench, GOLDEN_PROFILE_WARPS).fingerprint();
+        out.push(GoldenPoint { bench, scheme: scheme.name(), fingerprint: fp });
+    }
+    out
+}
+
+fn push_throughput_json(out: &mut String, key: &str, pts: &[Point]) {
+    let _ = writeln!(out, "  \"{key}\": [");
+    for (i, p) in pts.iter().enumerate() {
+        let comma = if i + 1 == pts.len() { "" } else { "," };
+        let _ = writeln!(
+            out,
+            "    {{\"bench\": \"{}\", \"scheme\": \"{}\", \"minstr_per_s\": {:.4}, \
+             \"instructions\": {}, \"seconds\": {:.6}}}{comma}",
+            p.bench, p.scheme, p.minstr_per_s, p.instructions, p.seconds
+        );
+    }
+    let _ = writeln!(out, "  ],");
+}
+
+/// Hand-rolled emitter (no serde in the offline build): the schema is
+/// documented in docs/EXPERIMENTS.md §Bench JSON and is deliberately flat
+/// so shell/python one-liners in CI can consume it.
+fn write_bench_json(
+    path: &str,
+    smoke: bool,
+    reps: usize,
+    hot: &[Point],
+    t2: &[Point],
+    par: &[ParallelPoint],
+    golden: &[GoldenPoint],
+) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"schema\": \"malekeh-bench/v1\",");
+    let _ = writeln!(s, "  \"pr\": 5,");
+    let _ = writeln!(s, "  \"mode\": \"{}\",", if smoke { "smoke" } else { "full" });
+    let _ = writeln!(s, "  \"reps\": {reps},");
+    let _ = writeln!(
+        s,
+        "  \"target\": {{\"min_speedup_vs_pre_pr5\": 1.5, \"applies_to\": \"hot_path\"}},"
+    );
+    push_throughput_json(&mut s, "hot_path", hot);
+    push_throughput_json(&mut s, "table2", t2);
+    let _ = writeln!(s, "  \"sm_parallel\": [");
+    for (i, p) in par.iter().enumerate() {
+        let comma = if i + 1 == par.len() { "" } else { "," };
+        let _ = writeln!(
+            s,
+            "    {{\"sim_threads\": {}, \"seconds\": {:.6}, \"speedup\": {:.4}, \
+             \"minstr_per_s\": {:.4}, \"fingerprint\": \"{:016x}\"}}{comma}",
+            p.sim_threads, p.seconds, p.speedup, p.minstr_per_s, p.fingerprint
+        );
+    }
+    let _ = writeln!(s, "  ],");
+    let _ = writeln!(s, "  \"golden_check\": [");
+    for (i, p) in golden.iter().enumerate() {
+        let comma = if i + 1 == golden.len() { "" } else { "," };
+        let _ = writeln!(
+            s,
+            "    {{\"bench\": \"{}\", \"scheme\": \"{}\", \"fingerprint\": \"{:016x}\"}}{comma}",
+            p.bench, p.scheme, p.fingerprint
+        );
+    }
+    let _ = writeln!(s, "  ]");
+    s.push_str("}\n");
+    std::fs::write(path, s).unwrap_or_else(|e| panic!("write {path}: {e}"));
+    println!("\nbench JSON written to {path}");
 }
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| format!("{}/BENCH_PR5.json", env!("CARGO_MANIFEST_DIR")));
     let reps = if smoke { 1 } else { 3 };
 
     println!("== §Perf: hot-path microbenchmarks ==");
     println!("{:<44}{:>14}{:>12}", "workload", "Minstr/s", "instrs");
-    for (bench, scheme) in [
-        ("gemm_t1", Scheme::BASELINE),
-        ("gemm_t1", Scheme::MALEKEH),
-        ("gemm_t1", Scheme::BOW),
-        ("hotspot", Scheme::MALEKEH),
-        ("kmeans", Scheme::MALEKEH),
-        ("bfs", Scheme::RFC),
-    ] {
-        let (mips, instr) = sim_throughput(bench, scheme, reps);
+    let mut hot = Vec::new();
+    for (bench, scheme) in REFERENCE_POINTS {
+        let p = sim_throughput(bench, scheme, reps, 0);
         println!(
             "{:<44}{:>14.2}{:>12}",
             format!("sim {bench}/{scheme}"),
-            mips,
-            instr
+            p.minstr_per_s,
+            p.instructions
         );
+        hot.push(p);
     }
 
-    sm_parallel_point(reps, smoke);
+    // Table II Minstr/s sweep (malekeh, num_sms = 1): the per-benchmark
+    // perf trajectory PR 6+ diffs against. Smoke caps each run so CI
+    // stays fast; the full protocol runs every benchmark to completion.
+    println!("\n== §Perf: Table II Minstr/s sweep (malekeh, num_sms=1) ==");
+    println!("{:<24}{:>14}{:>12}", "benchmark", "Minstr/s", "instrs");
+    let t2_cap = if smoke { 40_000 } else { 0 };
+    let mut t2 = Vec::new();
+    for b in table2() {
+        let p = sim_throughput(b.name, Scheme::MALEKEH, reps, t2_cap);
+        println!("{:<24}{:>14.2}{:>12}", p.bench, p.minstr_per_s, p.instructions);
+        t2.push(p);
+    }
+
+    let par = sm_parallel_point(reps, smoke);
+    let golden = golden_check();
+    write_bench_json(&json_path, smoke, reps, &hot, &t2, &par, &golden);
 
     if smoke {
-        println!("\n(smoke mode: 1 rep, capped parallel point, PJRT path skipped)");
+        println!("\n(smoke mode: 1 rep, capped sweeps, PJRT path skipped)");
         return;
     }
 

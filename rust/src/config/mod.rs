@@ -127,6 +127,11 @@ pub struct GpuConfig {
     pub sim_threads: usize,
 }
 
+/// Profile-warp count of the golden parity configuration (the
+/// `profile_warps` argument every fixture point passes to
+/// `sim::run_benchmark`; see [`GpuConfig::golden_parity`]).
+pub const GOLDEN_PROFILE_WARPS: usize = 2;
+
 impl Default for GpuConfig {
     fn default() -> Self {
         GpuConfig::table1_baseline()
@@ -174,6 +179,21 @@ impl GpuConfig {
             seed: 0xC0FFEE,
             sim_threads: 1,
         }
+    }
+
+    /// The golden-fixture parity configuration
+    /// (`rust/tests/golden/fingerprints.txt` header): Table I baseline on
+    /// 1 SM, serial reference engine, 40k-cycle cap; run with
+    /// [`GOLDEN_PROFILE_WARPS`] profile warps. The single source of truth
+    /// for the pinned config — the policy-parity suite and the
+    /// `perf_hotpath` `golden_check` block both build from here, so they
+    /// can never drift apart.
+    pub fn golden_parity(scheme: Scheme) -> Self {
+        let mut c = Self::table1_baseline().with_scheme(scheme);
+        c.num_sms = 1;
+        c.sim_threads = 1;
+        c.max_cycles = 40_000;
+        c
     }
 
     /// Early-Tesla-like monolithic SM for the Fig 2 comparison: one

@@ -112,21 +112,31 @@ impl EnergyModel {
     /// - bank read/write: 1.0 — the large single-ported 32KB-class bank.
     /// - cache read/write: grows ~linearly with per-collector cache bytes
     ///   (8-entry CCU ≈ 1KB → 0.12; BOW 3KB BOC ≈ 0.30); writes slightly
-    ///   above reads (bitline drive).
+    ///   above reads (bitline drive). A scheme reporting **zero** cache
+    ///   entries has no cache structure at all, so its cache-event and
+    ///   cache-leakage costs are exactly zero — the floor below must never
+    ///   charge a cacheless scheme (the baseline) a phantom CCU cost.
     /// - crossbar: per-transfer cost grows with the number of collector
     ///   ports it must span (≈ sqrt scaling of wire length per CACTI),
     ///   baseline 2-port = 0.22.
     /// - arbiter / OCT bookkeeping: small constants.
-    /// - leak proxy: per-cycle, proportional to total collector storage.
+    /// - leak proxy: per-cycle, proportional to total collector cache
+    ///   storage (zero when there is none).
     pub fn for_config(cfg: &GpuConfig) -> Self {
         let ncol = cfg.effective_collectors() as f64;
         // the policy knows its own cache geometry (BOW window slots, RFC
-        // entries, CCU cache-table entries, OCU operand slots)
+        // entries, CCU cache-table entries; 0 = no cache)
         let entries_per_col = cfg.scheme.build_policy(cfg).cache_entries_per_collector();
         // 128B per entry; normalise to the 8-entry CCU = 1KB baseline point.
         let cache_kb = entries_per_col * 128.0 / 1024.0;
-        let cache_read = 0.12 * (cache_kb / 1.0).max(0.25);
-        let cache_write = cache_read * 1.15;
+        // the 0.25KB floor models tag/control overhead of *small* caches;
+        // no cache means no cost at all (Fig 15 baseline point)
+        let (cache_read, cache_write) = if entries_per_col > 0.0 {
+            let read = 0.12 * cache_kb.max(0.25);
+            (read, read * 1.15)
+        } else {
+            (0.0, 0.0)
+        };
         // crossbar wire/port scaling vs the 2-collector baseline
         let xbar = 0.22 * (ncol / 2.0).sqrt();
         let leak = 0.0008 * ncol * cache_kb;
@@ -184,6 +194,44 @@ mod tests {
         assert_eq!(a.get(EventKind::BankRead), 8);
         assert_eq!(a.get(EventKind::CcuRead), 2);
         assert_eq!(a.get(EventKind::BankWrite), 0);
+    }
+
+    #[test]
+    fn cacheless_scheme_has_zero_cache_event_cost() {
+        // Fig 15 baseline point: the baseline policy reports zero cache
+        // entries, so CCU-read/-write and cache-leakage costs must be
+        // exactly zero — the 0.25KB tag floor must never charge a
+        // cacheless scheme a phantom CCU cost
+        let cfg = crate::config::GpuConfig::table1_baseline()
+            .with_scheme(Scheme::BASELINE);
+        let m = EnergyModel::for_config(&cfg);
+        assert_eq!(m.costs()[EventKind::CcuRead as usize], 0.0);
+        assert_eq!(m.costs()[EventKind::CcuWrite as usize], 0.0);
+        assert_eq!(m.costs()[EventKind::LeakProxy as usize], 0.0);
+        // bank / crossbar / arbiter structure is real hardware and still
+        // costs what it did
+        assert_eq!(m.costs()[EventKind::BankRead as usize], 1.0);
+        assert!(m.costs()[EventKind::XbarTransfer as usize] > 0.0);
+        // pin the point: a count matrix carrying (impossible for the
+        // baseline, but defensive) CCU events contributes nothing
+        let mut c = EnergyCounts::new();
+        c.add(EventKind::BankRead, 100);
+        c.add(EventKind::CcuRead, 40);
+        c.add(EventKind::CcuWrite, 40);
+        assert!((m.total(&c) - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cached_scheme_costs_are_unchanged_by_the_zero_entry_fix() {
+        // malekeh: 8-entry CCU = 1KB -> cache read 0.12, write 0.138 — the
+        // pre-fix values, pinned so the zero-entry special case can never
+        // leak into cached schemes
+        let cfg = crate::config::GpuConfig::table1_baseline()
+            .with_scheme(Scheme::MALEKEH);
+        let m = EnergyModel::for_config(&cfg);
+        assert!((m.costs()[EventKind::CcuRead as usize] - 0.12).abs() < 1e-12);
+        assert!((m.costs()[EventKind::CcuWrite as usize] - 0.12 * 1.15).abs() < 1e-12);
+        assert!(m.costs()[EventKind::LeakProxy as usize] > 0.0);
     }
 
     #[test]

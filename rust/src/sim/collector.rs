@@ -7,10 +7,16 @@
 //! policy-free mechanism: *which* entry gets evicted is decided by the
 //! [`VictimFn`] the caller (a [`crate::sim::policy::CachePolicy`]) passes
 //! in — the policy layer's `replacement` decision point.
+//!
+//! Everything here sits on the per-cycle hot path, so the storage is flat
+//! and fixed-capacity: the cache table is an inline `[CtEntry; MAX_CT]`,
+//! an allocation result carries its misses in an inline [`MissList`], and
+//! a BOW window row is an inline register array — no per-event heap
+//! traffic (see `docs/EXPERIMENTS.md` §Perf, PR 5).
 
 use std::collections::VecDeque;
 
-use crate::isa::Instruction;
+use crate::isa::{Instruction, MAX_DST, MAX_SRC};
 use crate::util::Rng;
 
 /// Upper bound on cache-table entries (config.ct_entries must not exceed).
@@ -43,9 +49,13 @@ pub struct CtEntry {
 }
 
 /// Fully-associative register cache with the paper's replacement policy.
+///
+/// Storage is a flat inline array (`n <= MAX_CT`), so cloning or flushing
+/// a table never touches the heap.
 #[derive(Debug, Clone)]
 pub struct CacheTable {
-    entries: Vec<CtEntry>,
+    entries: [CtEntry; MAX_CT],
+    n: u8,
     tick: u32,
 }
 
@@ -53,69 +63,93 @@ impl CacheTable {
     /// `n` entries (8 in the paper).
     pub fn new(n: usize) -> Self {
         assert!(n <= MAX_CT && n >= 1);
-        CacheTable { entries: vec![CtEntry::default(); n], tick: 0 }
+        CacheTable { entries: [CtEntry::default(); MAX_CT], n: n as u8, tick: 0 }
     }
 
     /// Invalidate everything (CCU reallocation to a new warp, §III-C1).
     pub fn flush(&mut self) {
-        for e in &mut self.entries {
+        for e in self.live_mut() {
             *e = CtEntry::default();
         }
         self.tick = 0;
     }
 
+    /// The live entry region (only indices `< n` are ever written).
+    #[inline]
+    fn live(&self) -> &[CtEntry] {
+        &self.entries[..self.n as usize]
+    }
+
+    /// Mutable live entry region.
+    #[inline]
+    fn live_mut(&mut self) -> &mut [CtEntry] {
+        &mut self.entries[..self.n as usize]
+    }
+
     /// Find a valid entry holding `reg`.
     pub fn lookup(&self, reg: u8) -> Option<usize> {
-        self.entries.iter().position(|e| e.valid && e.reg == reg)
+        self.live().iter().position(|e| e.valid && e.reg == reg)
     }
 
     /// Bump LRU recency of entry `i`.
     pub fn touch(&mut self, i: usize) {
         self.tick += 1;
-        self.entries[i].lru = self.tick;
+        let t = self.tick;
+        self.live_mut()[i].lru = t;
     }
 
     /// Any valid entry with near reuse? (the bit sent to the scheduler over
     /// port R, §III-C).
     pub fn has_near_value(&self) -> bool {
-        self.entries.iter().any(|e| e.valid && e.near)
+        self.live().iter().any(|e| e.valid && e.near)
     }
 
     /// Any valid entries at all?
     pub fn has_values(&self) -> bool {
-        self.entries.iter().any(|e| e.valid)
+        self.live().iter().any(|e| e.valid)
     }
 
     /// Count of valid entries.
     pub fn valid_count(&self) -> usize {
-        self.entries.iter().filter(|e| e.valid).count()
+        self.live().iter().filter(|e| e.valid).count()
     }
 
-    /// Registers of all valid entries (RFC write-back flush).
+    /// Registers of all valid entries (allocating convenience; the hot
+    /// path uses [`CacheTable::valid_regs_into`] with a caller-owned
+    /// scratch buffer instead).
     pub fn valid_regs(&self) -> Vec<u8> {
-        self.entries.iter().filter(|e| e.valid).map(|e| e.reg).collect()
+        self.live().iter().filter(|e| e.valid).map(|e| e.reg).collect()
+    }
+
+    /// Registers of all valid entries, written into `out` (cleared first).
+    /// The RFC write-back flush calls this every warp deactivation; a
+    /// reused buffer stops growing after warm-up, so the steady state is
+    /// allocation-free.
+    pub fn valid_regs_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.extend(self.live().iter().filter(|e| e.valid).map(|e| e.reg));
     }
 
     /// Unlock all entries (instruction dispatched, §III-C1).
     pub fn unlock_all(&mut self) {
-        for e in &mut self.entries {
+        for e in self.live_mut() {
             e.locked = false;
         }
     }
 
     /// Entry accessor for tests / energy accounting.
     pub fn entry(&self, i: usize) -> &CtEntry {
-        &self.entries[i]
+        &self.live()[i]
     }
 
     /// Mutable entry accessor.
     pub fn entry_mut(&mut self, i: usize) -> &mut CtEntry {
-        &mut self.entries[i]
+        &mut self.live_mut()[i]
     }
 
     /// Entry slice (victim choosers inspect the whole table).
     pub fn entries(&self) -> &[CtEntry] {
-        &self.entries
+        self.live()
     }
 
     /// Install `(reg, near, locked)`, evicting through `victim` if needed.
@@ -136,46 +170,48 @@ impl CacheTable {
     ) -> Option<usize> {
         // tag already present: update in place (tags must stay unique)
         if let Some(i) = self.lookup(reg) {
-            if self.entries[i].locked && !locked {
+            if self.live()[i].locked && !locked {
                 // a locked entry keeps its pin; just refresh recency/bits
-                self.entries[i].near = near;
+                self.live_mut()[i].near = near;
                 self.touch(i);
                 return Some(i);
             }
             self.tick += 1;
-            let inserted = self.entries[i].inserted;
-            self.entries[i] = CtEntry {
+            let t = self.tick;
+            let inserted = self.live()[i].inserted;
+            self.live_mut()[i] = CtEntry {
                 reg,
                 valid: true,
                 locked,
                 near,
                 from_wb: false,
-                lru: self.tick,
+                lru: t,
                 inserted,
             };
             return Some(i);
         }
         // invalid first; the policy decides only among live entries
-        let i = match self.entries.iter().position(|e| !e.valid) {
+        let i = match self.live().iter().position(|e| !e.valid) {
             Some(i) => i,
             None => victim(&*self, rng)?,
         };
         self.tick += 1;
-        self.entries[i] = CtEntry {
+        let t = self.tick;
+        self.live_mut()[i] = CtEntry {
             reg,
             valid: true,
             locked,
             near,
             from_wb: false,
-            lru: self.tick,
-            inserted: self.tick,
+            lru: t,
+            inserted: t,
         };
         Some(i)
     }
 
     /// Least-recently-used unlocked entry (the plain-LRU building block).
     pub fn lru_victim(&self) -> Option<usize> {
-        self.entries
+        self.live()
             .iter()
             .enumerate()
             .filter(|(_, e)| !e.locked)
@@ -186,19 +222,29 @@ impl CacheTable {
 
 /// The paper's replacement chooser (§IV-A1), after invalid-first: a random
 /// unlocked entry among those with *far* reuse, otherwise LRU.
+///
+/// Two passes over the (≤ [`MAX_CT`]) entries instead of collecting the
+/// candidate set into a `Vec`: the first counts the far unlocked entries,
+/// the second resolves the drawn ordinal to its index. The RNG sees the
+/// same single `below(count)` draw with the same bound and the same
+/// ordinal→entry mapping as the old collecting version, so both the choice
+/// and the stream position are bit-identical — with zero allocation
+/// (`ct_reuse_guided_matches_collecting_reference` pins this).
 pub fn reuse_guided_victim(ct: &CacheTable, rng: &mut Rng) -> Option<usize> {
-    let far: Vec<usize> = ct
-        .entries()
+    fn far(e: &CtEntry) -> bool {
+        !e.locked && !e.near
+    }
+    let nfar = ct.entries().iter().filter(|e| far(e)).count();
+    if nfar == 0 {
+        return ct.lru_victim();
+    }
+    let k = rng.below(nfar);
+    ct.entries()
         .iter()
         .enumerate()
-        .filter(|(_, e)| !e.locked && !e.near)
+        .filter(|(_, e)| far(e))
+        .nth(k)
         .map(|(i, _)| i)
-        .collect();
-    if !far.is_empty() {
-        Some(far[rng.below(far.len())])
-    } else {
-        ct.lru_victim()
-    }
 }
 
 /// Plain LRU over unlocked entries (Fig 17's traditional replacement; no
@@ -207,20 +253,126 @@ pub fn plain_lru_victim(ct: &CacheTable, _rng: &mut Rng) -> Option<usize> {
     ct.lru_victim()
 }
 
-/// One instruction's register set inside a BOW sliding window.
-#[derive(Debug, Clone)]
+/// Register slots one instruction contributes to a BOW window row
+/// (sources + destinations).
+pub const BOC_REGS: usize = MAX_SRC + MAX_DST;
+
+/// One instruction's register set inside a BOW sliding window. Inline
+/// fixed-capacity storage: pushing a row into the window copies a few
+/// dozen bytes in place, never a heap block.
+#[derive(Debug, Clone, Copy)]
 pub struct BocInstr {
     /// Issue sequence number (matches writebacks to window slots).
     pub seq: u64,
-    /// (reg, value present, is destination).
-    pub regs: Vec<(u8, bool, bool)>,
+    /// (reg, value present, is destination); first `nregs` valid.
+    regs: [(u8, bool, bool); BOC_REGS],
+    nregs: u8,
 }
 
-/// Result of allocating an instruction to a collector.
-#[derive(Debug, Clone, Default)]
+impl BocInstr {
+    /// Empty row for sequence number `seq`.
+    fn new(seq: u64) -> Self {
+        BocInstr { seq, regs: [(0, false, false); BOC_REGS], nregs: 0 }
+    }
+
+    /// Append one register slot; panics past `BOC_REGS` (an instruction
+    /// has at most `MAX_SRC + MAX_DST` operands by ISA construction).
+    fn push(&mut self, reg: u8, present: bool, is_dst: bool) {
+        self.regs[self.nregs as usize] = (reg, present, is_dst);
+        self.nregs += 1;
+    }
+
+    /// The valid register slots.
+    #[inline]
+    pub fn regs(&self) -> &[(u8, bool, bool)] {
+        &self.regs[..self.nregs as usize]
+    }
+
+    /// Mutable valid register slots (writeback capture flips `present`).
+    #[inline]
+    pub fn regs_mut(&mut self) -> &mut [(u8, bool, bool)] {
+        &mut self.regs[..self.nregs as usize]
+    }
+}
+
+/// Fixed-capacity list of `(slot, reg)` source operands that missed the
+/// collector cache and must be fetched from the RF banks. Inline storage
+/// (an instruction has at most [`MAX_SRC`] sources), so building one per
+/// issued instruction allocates nothing. Derefs to a slice for iteration
+/// and comparisons.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MissList {
+    items: [(u8, u8); MAX_SRC],
+    len: u8,
+}
+
+/// Equality over the *live* entries only — `retain` compacts in place and
+/// leaves stale values beyond `len`, which must never make two logically
+/// equal lists compare unequal.
+impl PartialEq for MissList {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for MissList {}
+
+impl MissList {
+    /// Append one missing `(slot, reg)`; panics past [`MAX_SRC`].
+    #[inline]
+    pub fn push(&mut self, slot: u8, reg: u8) {
+        self.items[self.len as usize] = (slot, reg);
+        self.len += 1;
+    }
+
+    /// Valid entries as a slice.
+    #[inline]
+    pub fn as_slice(&self) -> &[(u8, u8)] {
+        &self.items[..self.len as usize]
+    }
+
+    /// Number of misses.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    /// No misses recorded?
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Keep only the entries `keep` returns true for, preserving order —
+    /// the in-place replacement for the old drain-into-a-new-`Vec`
+    /// filtering in the RFC policies.
+    pub fn retain(&mut self, mut keep: impl FnMut(u8, u8) -> bool) {
+        let mut kept = 0u8;
+        for i in 0..self.len as usize {
+            let (slot, reg) = self.items[i];
+            if keep(slot, reg) {
+                self.items[kept as usize] = (slot, reg);
+                kept += 1;
+            }
+        }
+        self.len = kept;
+    }
+}
+
+impl std::ops::Deref for MissList {
+    type Target = [(u8, u8)];
+
+    fn deref(&self) -> &[(u8, u8)] {
+        self.as_slice()
+    }
+}
+
+/// Result of allocating an instruction to a collector. `Copy`-sized and
+/// heap-free: the hot issue loop returns one per instruction.
+#[derive(Debug, Clone, Copy, Default)]
 pub struct AllocResult {
     /// Source slots that must be fetched from the banks: (slot, reg).
-    pub misses: Vec<(u8, u8)>,
+    pub misses: MissList,
     /// Source operands served from the cache.
     pub hits: u32,
     /// Hits on values captured via the writeback port (Fig 16: proves
@@ -289,13 +441,11 @@ impl Collector {
         self.issue_cycle = now;
         self.src_ready = 0;
         self.ct.flush();
-        let misses = instr
-            .sources()
-            .iter()
-            .enumerate()
-            .map(|(slot, &reg)| (slot as u8, reg))
-            .collect();
-        AllocResult { misses, ..Default::default() }
+        let mut res = AllocResult::default();
+        for (slot, &reg) in instr.sources().iter().enumerate() {
+            res.misses.push(slot as u8, reg);
+        }
+        res
     }
 
     /// Allocate as a *Malekeh CCU* (§III-C1): flush on ownership change,
@@ -340,7 +490,7 @@ impl Collector {
                     .allocate(reg, near, true, rng, &mut *victim)
                     .expect("CT must fit all sources (ct_entries >= MAX_SRC)");
                 debug_assert!(idx < MAX_CT);
-                res.misses.push((slot as u8, reg));
+                res.misses.push(slot as u8, reg);
             }
         }
         res
@@ -365,29 +515,31 @@ impl Collector {
         self.seq_counter += 1;
         self.cur_seq = self.seq_counter;
 
-        let mut new_regs: Vec<(u8, bool, bool)> = Vec::with_capacity(8);
+        // the row is built inline (fixed capacity) and copied into the
+        // window ring buffer — no per-instruction heap traffic
+        let mut row = BocInstr::new(self.cur_seq);
         for (slot, &reg) in instr.sources().iter().enumerate() {
             // newest-first search over the window + regs already added for
             // this instruction (duplicate sources)
-            let hit = new_regs.iter().any(|&(r, p, _)| r == reg && p)
+            let hit = row.regs().iter().any(|&(r, p, _)| r == reg && p)
                 || self
                     .window
                     .iter()
                     .rev()
-                    .any(|bi| bi.regs.iter().any(|&(r, p, _)| r == reg && p));
+                    .any(|bi| bi.regs().iter().any(|&(r, p, _)| r == reg && p));
             if hit {
                 self.src_ready |= 1 << slot;
                 res.hits += 1;
-                new_regs.push((reg, true, false));
+                row.push(reg, true, false);
             } else {
-                res.misses.push((slot as u8, reg));
-                new_regs.push((reg, false, false)); // present once fetched
+                res.misses.push(slot as u8, reg);
+                row.push(reg, false, false); // present once fetched
             }
         }
         for &reg in instr.dests() {
-            new_regs.push((reg, false, true)); // present at writeback
+            row.push(reg, false, true); // present at writeback
         }
-        self.window.push_back(BocInstr { seq: self.cur_seq, regs: new_regs });
+        self.window.push_back(row);
         while self.window.len() > window_len {
             self.window.pop_front(); // slid out: pending dsts go RF-only
         }
@@ -400,7 +552,7 @@ impl Collector {
         self.deliver(slot);
         if bow {
             if let Some(bi) = self.window.iter_mut().find(|bi| bi.seq == self.cur_seq) {
-                for e in bi.regs.iter_mut() {
+                for e in bi.regs_mut() {
                     if e.0 == reg && !e.2 {
                         e.1 = true;
                     }
@@ -459,7 +611,7 @@ impl Collector {
     pub fn boc_writeback(&mut self, seq: u64, reg: u8) -> bool {
         if let Some(bi) = self.window.iter_mut().find(|bi| bi.seq == seq) {
             let mut hit = false;
-            for e in bi.regs.iter_mut() {
+            for e in bi.regs_mut() {
                 if e.0 == reg && e.2 {
                     e.1 = true;
                     hit = true;
@@ -571,7 +723,7 @@ mod tests {
         let i2 = mma(&[2, 3, 4], &[11]);
         let res = c.alloc_ccu(0, &i2, 5, &mut r, &mut reuse_guided_victim);
         assert_eq!(res.hits, 2);
-        assert_eq!(res.misses, vec![(2, 4)]);
+        assert_eq!(res.misses.as_slice(), &[(2, 4)]);
         assert!(!res.flushed);
     }
 
@@ -651,7 +803,7 @@ mod tests {
         // i2 reuses r1 (present), needs r4
         let r2 = c.alloc_boc(0, &mma(&[1, 4], &[5]), 1, 3);
         assert_eq!(r2.hits, 1);
-        assert_eq!(r2.misses, vec![(1, 4)]);
+        assert_eq!(r2.misses.as_slice(), &[(1, 4)]);
         c.bank_operand_arrived(1, 4, true);
         c.dispatched(true);
         // fill the window beyond 3: r1's entry slides out
@@ -665,6 +817,126 @@ mod tests {
         // r2 only appeared in i1, which has slid out (window = i3,i4,i5)
         let r5 = c.alloc_boc(0, &mma(&[2], &[10]), 4, 3);
         assert_eq!(r5.hits, 0, "r2 slid out of the window");
+    }
+
+    // ---- zero-allocation scratch paths (PR 5) ----
+
+    /// The pre-refactor allocating chooser, kept verbatim as the test
+    /// reference for the two-pass [`reuse_guided_victim`].
+    fn reuse_guided_victim_collecting(ct: &CacheTable, rng: &mut Rng) -> Option<usize> {
+        let far: Vec<usize> = ct
+            .entries()
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| !e.locked && !e.near)
+            .map(|(i, _)| i)
+            .collect();
+        if !far.is_empty() {
+            Some(far[rng.below(far.len())])
+        } else {
+            ct.lru_victim()
+        }
+    }
+
+    #[test]
+    fn ct_reuse_guided_matches_collecting_reference() {
+        // drive many random table states: the zero-alloc two-pass chooser
+        // must pick the same victim from the same RNG state AND leave the
+        // stream at the same position (bit-identity of whole runs depends
+        // on both)
+        let mut gen = Rng::new(99);
+        for round in 0..500u64 {
+            let n = gen.below(MAX_CT) + 1;
+            let mut ct = CacheTable::new(n);
+            let fill = gen.below(n) + 1;
+            for k in 0..fill {
+                // unique tags per slot; random near/locked classes
+                let reg = (k * 8 + gen.below(8)) as u8;
+                let near = gen.chance(0.5);
+                let locked = gen.chance(0.3);
+                ct.allocate(reg, near, locked, &mut Rng::new(round), &mut plain_lru_victim);
+            }
+            let seed = gen.next_u64();
+            let mut ra = Rng::new(seed);
+            let mut rb = Rng::new(seed);
+            assert_eq!(
+                reuse_guided_victim(&ct, &mut ra),
+                reuse_guided_victim_collecting(&ct, &mut rb),
+                "round {round}: victims diverge"
+            );
+            assert_eq!(
+                ra.next_u64(),
+                rb.next_u64(),
+                "round {round}: RNG stream position diverges"
+            );
+        }
+    }
+
+    #[test]
+    fn ct_valid_regs_into_reuses_capacity_and_matches_alloc_path() {
+        let mut ct = CacheTable::new(8);
+        let mut r = rng();
+        let mut buf = Vec::new();
+        let mut warm_cap = 0;
+        for round in 0..64u8 {
+            ct.flush();
+            for k in 0..(round % 8) {
+                ct.allocate(
+                    k.wrapping_mul(7).wrapping_add(round),
+                    k % 2 == 0,
+                    false,
+                    &mut r,
+                    &mut reuse_guided_victim,
+                );
+            }
+            ct.valid_regs_into(&mut buf);
+            assert_eq!(
+                buf,
+                ct.valid_regs(),
+                "scratch path must return exactly what the allocating path did"
+            );
+            if round == 7 {
+                // by now the buffer has seen the largest fill (7 entries)
+                warm_cap = buf.capacity();
+            }
+            if round > 7 {
+                assert_eq!(buf.capacity(), warm_cap, "no growth after warm-up");
+            }
+        }
+    }
+
+    #[test]
+    fn miss_list_push_retain_deref() {
+        let mut m = MissList::default();
+        assert!(m.is_empty());
+        for (slot, reg) in [(0u8, 10u8), (1, 11), (2, 12), (3, 13)] {
+            m.push(slot, reg);
+        }
+        assert_eq!(m.len(), 4);
+        assert_eq!(m[1], (1, 11)); // Deref indexing
+        // retain keeps order and compacts in place
+        m.retain(|slot, _| slot % 2 == 0);
+        assert_eq!(m.as_slice(), &[(0, 10), (2, 12)]);
+        // equality sees only live entries, not the stale compacted-over
+        // storage beyond len
+        let mut fresh = MissList::default();
+        fresh.push(0, 10);
+        fresh.push(2, 12);
+        assert_eq!(m, fresh);
+        m.retain(|_, _| false);
+        assert!(m.is_empty());
+        assert_eq!(m, MissList::default());
+    }
+
+    #[test]
+    fn boc_window_rows_are_fixed_capacity() {
+        // a full MMA (6 src + 2 dst) exactly fills one window row
+        let mut c = Collector::new(8);
+        let i = Instruction::new(OpClass::Mma, &[1, 2, 3, 4, 5, 6], &[7, 8]);
+        c.alloc_boc(0, &i, 0, 4);
+        let row = c.window.back().unwrap();
+        assert_eq!(row.regs().len(), BOC_REGS);
+        assert!(row.regs().iter().all(|&(_, p, _)| !p), "nothing present yet");
     }
 
     #[test]

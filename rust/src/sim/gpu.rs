@@ -37,7 +37,7 @@ use std::sync::{Arc, Barrier, Mutex};
 
 use crate::config::{GpuConfig, SthldMode};
 use crate::isa::Instruction;
-use crate::sim::memory::{L1Cache, L2Request, MemPort, SharedMemorySystem};
+use crate::sim::memory::{L1Cache, L2Request, L2Response, MemPort, SharedMemorySystem};
 use crate::sim::sthld::SthldController;
 use crate::sim::subcore::SubCore;
 use crate::stats::Stats;
@@ -333,7 +333,10 @@ impl Simulator {
         let mut advance_all = advance_all;
         let interval = self.cfg.sthld_interval.max(1);
         let mut target = interval.min(cap);
+        // request/response buffers live for the whole run: the serial L2
+        // phase stops allocating once their capacity has warmed up
         let mut reqs: Vec<L2Request> = Vec::new();
+        let mut resps: Vec<L2Response> = Vec::new();
         loop {
             advance_all(target);
             // ---- serial L2 phase ----
@@ -342,7 +345,9 @@ impl Simulator {
                 sm.lock().unwrap().port.drain_into(&mut reqs);
             }
             if !reqs.is_empty() {
-                for r in self.shared.service(&mut reqs) {
+                resps.clear();
+                self.shared.service_into(&mut reqs, &mut resps);
+                for r in &resps {
                     sms[r.sm_id as usize]
                         .lock()
                         .unwrap()
@@ -408,6 +413,9 @@ impl Simulator {
         total.l1_hits = self.sms.iter().map(|sm| sm.l1.hits).sum();
         total.l2_accesses = self.shared.accesses;
         total.l2_hits = self.shared.hits;
+        // interval traces are GPU-wide series sampled by the controller at
+        // interval boundaries — this is their single owner; `Stats::merge`
+        // asserts per-SM inputs never carry any (see stats::Stats::merge)
         total.interval_ipc = self.interval_ipc.clone();
         total.sthld_trace = self.sthld_trace.clone();
         // per-SM IPC convention: instructions summed over the GPU but the
@@ -517,6 +525,43 @@ mod tests {
         let stats = run_benchmark(&cfg, "srad_v1", 2);
         assert!(stats.interval_ipc.len() > 2);
         assert_eq!(stats.interval_ipc.len(), stats.sthld_trace.len());
+    }
+
+    #[test]
+    fn interval_traces_cover_every_sm() {
+        // regression for the old `Stats::merge` trace handling (it claimed
+        // to concatenate but kept only the first non-empty trace): the
+        // GPU-level controller owns the interval series and samples
+        // GPU-wide IPC, so over a run capped at an interval boundary the
+        // trace must account for every SM's instructions exactly.
+        let mut cfg = GpuConfig::table1_baseline().with_scheme(Scheme::MALEKEH);
+        cfg.num_sms = 2;
+        cfg.sthld_interval = 500;
+        cfg.max_cycles = 3_000; // boundary-aligned cap: every interval sampled
+        let stats = run_benchmark(&cfg, "kmeans", 2);
+        assert_eq!(
+            stats.cycles, 3_000,
+            "run must still be busy at the cap for the accounting identity"
+        );
+        assert_eq!(stats.interval_ipc.len(), 6);
+        assert_eq!(stats.sthld_trace.len(), 6);
+        let traced: f64 = stats.interval_ipc.iter().sum::<f64>() * 500.0;
+        let total = stats.instructions as f64;
+        assert!(
+            (traced - total).abs() < 1e-6 * total.max(1.0),
+            "interval trace dropped instructions: traced {traced}, committed {total}"
+        );
+        // both SMs actually contributed (a 1-SM run of the same workload
+        // commits strictly fewer instructions in the same window)
+        let mut one = cfg.clone();
+        one.num_sms = 1;
+        let s1 = run_benchmark(&one, "kmeans", 2);
+        assert!(
+            stats.instructions > s1.instructions,
+            "2-SM run must out-commit 1 SM ({} vs {})",
+            stats.instructions,
+            s1.instructions
+        );
     }
 
     #[test]

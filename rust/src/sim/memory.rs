@@ -225,15 +225,23 @@ impl SharedMemorySystem {
     /// thread-count invariance rests on (unit-tested below, enforced
     /// end-to-end by `rust/tests/parallel_determinism.rs`).
     pub fn service(&mut self, reqs: &mut [L2Request]) -> Vec<L2Response> {
+        let mut out = Vec::with_capacity(reqs.len());
+        self.service_into(reqs, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`SharedMemorySystem::service`]:
+    /// responses are appended to the caller-owned `out` (the epoch loop
+    /// reuses one buffer across the whole run, so the serial L2 phase
+    /// stops allocating once both buffers have warmed up).
+    pub fn service_into(&mut self, reqs: &mut [L2Request], out: &mut Vec<L2Response>) {
         reqs.sort_unstable_by_key(|r| (r.cycle, r.sm_id, r.seq));
-        reqs.iter()
-            .map(|r| L2Response {
-                sm_id: r.sm_id,
-                line: r.line,
-                cycle: r.cycle,
-                extra: self.miss_from_l1(r.line, r.cycle),
-            })
-            .collect()
+        out.extend(reqs.iter().map(|r| L2Response {
+            sm_id: r.sm_id,
+            line: r.line,
+            cycle: r.cycle,
+            extra: self.miss_from_l1(r.line, r.cycle),
+        }));
     }
 }
 

@@ -36,6 +36,20 @@
 //! of `(sub-core state, its own state, the RNG stream)`. The golden
 //! fingerprint fixture (`rust/tests/golden/fingerprints.txt`) pins each
 //! built-in policy's behavior bit-exactly.
+//!
+//! # Allocation contract
+//!
+//! Every hook here runs on the per-cycle hot path, so policies must not
+//! heap-allocate per event. All scratch is caller-owned: the sub-core
+//! passes its reusable buffers through [`PolicyCtx`] (`order` in
+//! [`CachePolicy::build_order`] is the sub-core's scratch, miss lists are
+//! inline [`AllocResult`] storage), and set selection uses streaming
+//! patterns — reservoir sampling ([`free_unit_reservoir`], one RNG draw
+//! per candidate) or count-then-pick two-pass selection
+//! ([`reuse_guided_victim`](crate::sim::collector::reuse_guided_victim),
+//! one draw total) — instead of collecting candidate `Vec`s. When porting
+//! an allocating chooser, keep the RNG draw sequence identical or the
+//! golden fingerprints will (correctly) fail.
 
 pub mod registry;
 
@@ -121,10 +135,15 @@ pub trait CachePolicy: Send {
         false
     }
 
-    /// Cache entries per collector for the energy model's storage scaling
-    /// (baseline OCU: 6 operand slots).
+    /// Cache entries per collector for the energy model's storage scaling.
+    /// Default 0: a scheme without a cache (the baseline OCU) must report
+    /// zero entries, and zero entries means the energy model charges
+    /// nothing for cache events — the OCU's operand latches are pipeline
+    /// plumbing, not a cache, so Fig 15's baseline point has no
+    /// CCU-read/-write or cache-leakage component (`energy::tests` pins
+    /// this).
     fn cache_entries_per_collector(&self) -> f64 {
-        6.0
+        0.0
     }
 
     /// Append this cycle's warp priority order to `order` (the greedy warp,

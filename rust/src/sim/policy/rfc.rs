@@ -52,18 +52,22 @@ impl CachePolicy for RfcPolicy {
     ) -> AllocResult {
         let mut res = ctx.collectors[ci].alloc_ocu(warp, instr, now);
         if ctx.warps[warp as usize].active {
+            // filter cache hits out of the miss list in place (the list is
+            // inline fixed-capacity storage — no per-instruction Vec)
             let cache = &mut ctx.rfc[warp as usize];
-            let mut still_miss = Vec::with_capacity(res.misses.len());
-            for (slot, reg) in res.misses.drain(..) {
-                if cache.lookup(reg).is_some() {
-                    cache.touch(cache.lookup(reg).unwrap());
-                    ctx.collectors[ci].deliver(slot);
-                    res.hits += 1;
+            let col = &mut ctx.collectors[ci];
+            let mut hits = 0u32;
+            res.misses.retain(|slot, reg| {
+                if let Some(i) = cache.lookup(reg) {
+                    cache.touch(i);
+                    col.deliver(slot);
+                    hits += 1;
+                    false
                 } else {
-                    still_miss.push((slot, reg));
+                    true
                 }
-            }
-            res.misses = still_miss;
+            });
+            res.hits += hits;
         }
         res
     }

@@ -91,7 +91,9 @@ impl RegFileBanks {
     /// One arbitration cycle. `port_used[collector]` counts operands
     /// already delivered to each collector this cycle (updated in place);
     /// `ports_per_collector` is the crossbar output width per collector.
-    /// Returns granted reads and the number of writes drained.
+    /// Granted reads are appended to the caller-owned `grants` buffer (the
+    /// sub-core reuses one across all cycles, so arbitration never
+    /// allocates); returns the number of writes drained.
     ///
     /// Per bank: a pending write consumes the port (write priority, §II);
     /// otherwise the oldest read whose collector port is free is granted.
@@ -101,8 +103,8 @@ impl RegFileBanks {
         now: u64,
         port_used: &mut [u8],
         ports_per_collector: u8,
-    ) -> (Vec<Grant>, u64) {
-        let mut grants = Vec::new();
+        grants: &mut Vec<Grant>,
+    ) -> u64 {
         let mut writes = 0u64;
         for b in 0..self.nbanks {
             if let Some(_w) = self.write_q[b].pop_front() {
@@ -121,7 +123,7 @@ impl RegFileBanks {
                 }
             }
         }
-        (grants, writes)
+        writes
     }
 
     /// Drop all queued reads for a collector (used when a CCU is flushed /
@@ -141,6 +143,18 @@ mod tests {
         ReadReq { collector, slot: 0, warp, reg, enqueued: t }
     }
 
+    /// Collecting wrapper over the out-param API for test ergonomics.
+    fn arb(
+        rf: &mut RegFileBanks,
+        now: u64,
+        port_used: &mut [u8],
+        ports: u8,
+    ) -> (Vec<Grant>, u64) {
+        let mut grants = Vec::new();
+        let writes = rf.arbitrate(now, port_used, ports, &mut grants);
+        (grants, writes)
+    }
+
     #[test]
     fn bank_mapping_interleaves_by_warp() {
         let rf = RegFileBanks::new(2);
@@ -154,10 +168,10 @@ mod tests {
         // same bank (reg 2 & 4, warp 0 -> bank 0)
         rf.push_read(rr(0, 2, 0, 0));
         rf.push_read(rr(1, 4, 0, 0));
-        let (g1, _) = rf.arbitrate(1, &mut [0u8; 4], 1);
+        let (g1, _) = arb(&mut rf, 1, &mut [0u8; 4], 1);
         assert_eq!(g1.len(), 1);
         assert_eq!(g1[0].req.reg, 2, "FIFO order");
-        let (g2, _) = rf.arbitrate(2, &mut [0u8; 4], 1);
+        let (g2, _) = arb(&mut rf, 2, &mut [0u8; 4], 1);
         assert_eq!(g2.len(), 1);
         assert_eq!(g2[0].req.reg, 4);
         assert_eq!(g2[0].waited, 2);
@@ -168,7 +182,7 @@ mod tests {
         let mut rf = RegFileBanks::new(2);
         rf.push_read(rr(0, 2, 0, 0)); // bank 0
         rf.push_read(rr(1, 3, 0, 0)); // bank 1
-        let (g, _) = rf.arbitrate(0, &mut [0u8; 4], 1);
+        let (g, _) = arb(&mut rf, 0, &mut [0u8; 4], 1);
         assert_eq!(g.len(), 2);
     }
 
@@ -177,10 +191,10 @@ mod tests {
         let mut rf = RegFileBanks::new(1);
         rf.push_read(rr(0, 1, 0, 0));
         rf.push_write(WriteReq { reg: 3, warp: 0 });
-        let (g, w) = rf.arbitrate(0, &mut [0u8; 4], 1);
+        let (g, w) = arb(&mut rf, 0, &mut [0u8; 4], 1);
         assert!(g.is_empty(), "write must take the port");
         assert_eq!(w, 1);
-        let (g, w) = rf.arbitrate(1, &mut [0u8; 4], 1);
+        let (g, w) = arb(&mut rf, 1, &mut [0u8; 4], 1);
         assert_eq!(g.len(), 1);
         assert_eq!(w, 0);
     }
@@ -191,7 +205,7 @@ mod tests {
         rf.push_read(rr(0, 2, 0, 0)); // bank 0 -> collector 0
         rf.push_read(rr(0, 3, 0, 0)); // bank 1 -> collector 0 too
         let mut used = [0u8; 4];
-        let (g, _) = rf.arbitrate(0, &mut used, 1);
+        let (g, _) = arb(&mut rf, 0, &mut used, 1);
         assert_eq!(g.len(), 1, "one operand per collector per cycle");
         assert_eq!(rf.pending_reads(), 1);
     }

@@ -25,11 +25,11 @@ use std::sync::Arc;
 use crate::config::{GpuConfig, SthldMode};
 use crate::energy::EventKind;
 use crate::isa::{Instruction, OpClass};
-use crate::sim::collector::{CacheTable, Collector};
+use crate::sim::collector::{CacheTable, Collector, MAX_CT};
 use crate::sim::exec::{pipe_of, ExecUnits, Pipe, WbEvent, NPIPES};
 use crate::sim::memory::{L1Cache, L1Fetch, MemPort};
 use crate::sim::policy::{CachePolicy, CollectorChoice, PolicyCtx};
-use crate::sim::regfile::{ReadReq, RegFileBanks, WriteReq};
+use crate::sim::regfile::{Grant, ReadReq, RegFileBanks, WriteReq};
 use crate::sim::warp::WarpState;
 use crate::stats::{SchedState, Stats};
 use crate::util::Rng;
@@ -86,10 +86,13 @@ pub struct SubCore {
     /// Live (not yet exited) warps.
     pub live_warps: usize,
 
-    // scratch buffers (no allocation in the hot loop)
+    // scratch buffers (no allocation in the hot loop): each is cleared
+    // and refilled every cycle, so capacity stabilises after warm-up
     wb_buf: Vec<WbEvent>,
     order_buf: Vec<u8>,
     port_used: Vec<u8>,
+    grant_buf: Vec<Grant>,
+    rfc_flush_buf: Vec<u8>,
 }
 
 impl SubCore {
@@ -135,6 +138,8 @@ impl SubCore {
             wb_buf: Vec::with_capacity(8),
             order_buf: Vec::with_capacity(64),
             port_used: vec![0u8; ncol],
+            grant_buf: Vec::with_capacity(8),
+            rfc_flush_buf: Vec::with_capacity(MAX_CT),
         }
     }
 
@@ -162,6 +167,23 @@ impl SubCore {
 
     // ------------------------------------------------------------ writeback
 
+    /// Stable insertion sort of one cycle's (small) writeback batch by
+    /// `(collector, far-destination-last)` — byte-identical ordering to
+    /// the stable `sort_by_key` it replaces, but never allocating the
+    /// merge buffer std's stable sort needs for longer runs.
+    fn sort_wb_batch(buf: &mut [WbEvent]) {
+        fn key(e: &WbEvent) -> (u8, bool) {
+            (e.collector, e.dst_near == 0)
+        }
+        for i in 1..buf.len() {
+            let mut j = i;
+            while j > 0 && key(&buf[j - 1]) > key(&buf[j]) {
+                buf.swap(j - 1, j);
+                j -= 1;
+            }
+        }
+    }
+
     fn writeback(&mut self, now: u64) {
         let mut buf = std::mem::take(&mut self.wb_buf);
         buf.clear();
@@ -169,7 +191,7 @@ impl SubCore {
         // Single CCU write port (§IV-A2): if several writebacks target the
         // same collector this cycle, the one with a near destination wins.
         // Sort so near-destination events come first per collector.
-        buf.sort_by_key(|e| (e.collector, e.dst_near == 0));
+        Self::sort_wb_batch(&mut buf);
         let mut last_col_served: Option<u8> = None;
         for ev in &buf {
             let warp = ev.warp;
@@ -257,9 +279,14 @@ impl SubCore {
 
     fn collect_operands(&mut self, now: u64) {
         self.port_used.iter_mut().for_each(|p| *p = 0);
-        let (grants, _writes) =
-            self.banks.arbitrate(now, &mut self.port_used, self.collector_ports);
-        for g in &grants {
+        self.grant_buf.clear();
+        let _writes = self.banks.arbitrate(
+            now,
+            &mut self.port_used,
+            self.collector_ports,
+            &mut self.grant_buf,
+        );
+        for g in &self.grant_buf {
             let r = g.req;
             self.policy
                 .operand_arrived(&mut self.collectors[r.collector as usize], r.slot, r.reg);
@@ -347,8 +374,10 @@ impl SubCore {
                     // deactivation every dirty entry must be written to the
                     // MRF banks, stealing read bandwidth — the hidden cost
                     // that makes two-level swaps expensive on 2-bank
-                    // sub-cores (§VI-A)
-                    for reg in self.rfc[w].valid_regs() {
+                    // sub-cores (§VI-A). The register list goes through the
+                    // sub-core's reusable scratch buffer, not a fresh Vec.
+                    self.rfc[w].valid_regs_into(&mut self.rfc_flush_buf);
+                    for &reg in &self.rfc_flush_buf {
                         self.banks.push_write(WriteReq { reg, warp: w as u8 });
                         self.stats.energy.add(EventKind::BankWrite, 1);
                     }
@@ -432,12 +461,12 @@ impl SubCore {
             self.stats
                 .energy
                 .add(EventKind::OctOp, instr.nsrc as u64); // tag checks
-            for (slot, reg) in &res.misses {
+            for &(slot, reg) in res.misses.iter() {
                 self.banks.push_read(ReadReq {
                     collector: ci as u8,
-                    slot: *slot,
+                    slot,
                     warp: w,
-                    reg: *reg,
+                    reg,
                     enqueued: now,
                 });
             }
@@ -504,7 +533,7 @@ impl SubCore {
 mod tests {
     use super::*;
     use crate::config::{GpuConfig, Scheme};
-    use crate::sim::memory::SharedMemorySystem;
+    use crate::sim::memory::{L2Request, L2Response, SharedMemorySystem};
     use crate::trace::{find, KernelTrace};
 
     fn mem_sys(cfg: &GpuConfig) -> (L1Cache, SharedMemorySystem) {
@@ -523,15 +552,36 @@ mod tests {
 
     /// One-SM epoch driver: step, then (as the GPU-level scheduler would
     /// after the SM blocks) service any queued L2 requests and post the
-    /// fills so deferred dispatches retry next cycle.
-    fn step_epoch(sc: &mut SubCore, l1: &mut L1Cache, l2: &mut SharedMemorySystem, t: u64) {
-        let mut port = MemPort::new(0);
-        sc.step(t, l1, &mut port);
-        let mut reqs = Vec::new();
-        port.drain_into(&mut reqs);
-        if !reqs.is_empty() {
-            for r in l2.service(&mut reqs) {
-                l1.resolve_fill(r.line, r.cycle, r.extra);
+    /// fills so deferred dispatches retry next cycle. Owns the run-long
+    /// port and request/response buffers, exactly like the real epoch
+    /// loop — no per-cycle allocation.
+    struct EpochDriver {
+        port: MemPort,
+        reqs: Vec<L2Request>,
+        resps: Vec<L2Response>,
+    }
+
+    impl EpochDriver {
+        fn new() -> Self {
+            EpochDriver { port: MemPort::new(0), reqs: Vec::new(), resps: Vec::new() }
+        }
+
+        fn step(
+            &mut self,
+            sc: &mut SubCore,
+            l1: &mut L1Cache,
+            l2: &mut SharedMemorySystem,
+            t: u64,
+        ) {
+            sc.step(t, l1, &mut self.port);
+            self.reqs.clear();
+            self.port.drain_into(&mut self.reqs);
+            if !self.reqs.is_empty() {
+                self.resps.clear();
+                l2.service_into(&mut self.reqs, &mut self.resps);
+                for r in &self.resps {
+                    l1.resolve_fill(r.line, r.cycle, r.extra);
+                }
             }
         }
     }
@@ -541,9 +591,10 @@ mod tests {
         let streams: Vec<_> = trace.warps.into_iter().map(Arc::new).collect();
         let mut sc = SubCore::new(cfg, streams, 3);
         let (mut l1, mut l2) = mem_sys(cfg);
+        let mut drv = EpochDriver::new();
         let mut t = 0;
         while !sc.idle() && t < max {
-            step_epoch(&mut sc, &mut l1, &mut l2, t);
+            drv.step(&mut sc, &mut l1, &mut l2, t);
             t += 1;
         }
         sc.stats.cycles = t;
@@ -572,9 +623,10 @@ mod tests {
         let streams: Vec<_> = trace.warps.into_iter().map(Arc::new).collect();
         let mut sc = SubCore::new(&cfg, streams, 3);
         let (mut l1, mut l2) = mem_sys(&cfg);
+        let mut drv = EpochDriver::new();
         let mut t = 0;
         while !sc.idle() && t < 2_000_000 {
-            step_epoch(&mut sc, &mut l1, &mut l2, t);
+            drv.step(&mut sc, &mut l1, &mut l2, t);
             t += 1;
         }
         assert!(sc.idle());
@@ -619,9 +671,10 @@ mod tests {
         let streams: Vec<_> = trace.warps.into_iter().map(Arc::new).collect();
         let mut sc = SubCore::new(&cfg, streams, 3);
         let (mut l1, mut l2) = mem_sys(&cfg);
+        let mut drv = EpochDriver::new();
         let mut t = 0;
         while !sc.idle() && t < 2_000_000 {
-            step_epoch(&mut sc, &mut l1, &mut l2, t);
+            drv.step(&mut sc, &mut l1, &mut l2, t);
             t += 1;
         }
         assert!(sc.stats.waiting_stalls > 0, "sthld=8 should cause waits");
@@ -639,9 +692,10 @@ mod tests {
         let streams: Vec<_> = trace.warps.into_iter().map(Arc::new).collect();
         let mut sc = SubCore::new(&cfg, streams, 3);
         let (mut l1, mut l2) = mem_sys(&cfg);
+        let mut drv = EpochDriver::new();
         let mut t = 0;
         while !sc.idle() && t < 2_000_000 {
-            step_epoch(&mut sc, &mut l1, &mut l2, t);
+            drv.step(&mut sc, &mut l1, &mut l2, t);
             t += 1;
         }
         assert_eq!(sc.stats.instructions, expect);

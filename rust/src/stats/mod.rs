@@ -208,10 +208,23 @@ impl Stats {
         h
     }
 
-    /// Merge another counter set into this one (SM-level aggregation).
-    /// `cycles` takes the max (SMs run in lock-step wall-clock), counters
-    /// add, interval traces concatenate only if empty here.
+    /// Merge another counter set into this one (SM/sub-core aggregation).
+    /// `cycles` takes the max (SMs share the wall clock), scalar counters
+    /// add.
+    ///
+    /// Interval traces (`interval_ipc`/`sthld_trace`) are **not** merged:
+    /// they are GPU-wide series sampled at interval boundaries, owned
+    /// exclusively by the GPU-level controller
+    /// (`sim::Simulator::collect_stats` attaches them once per run).
+    /// Per-SM inputs must therefore carry none — debug builds assert this
+    /// instead of silently keeping whichever copy arrived first, which is
+    /// what the old "concatenate"-documented behavior actually did.
     pub fn merge(&mut self, other: &Stats) {
+        debug_assert!(
+            other.interval_ipc.is_empty() && other.sthld_trace.is_empty(),
+            "Stats::merge: interval traces are owned by the GPU-level \
+             controller; per-SM/sub-core stats must not carry them"
+        );
         self.cycles = self.cycles.max(other.cycles);
         self.instructions += other.instructions;
         self.warps_retired += other.warps_retired;
@@ -233,10 +246,6 @@ impl Stats {
         self.l2_accesses += other.l2_accesses;
         self.l2_hits += other.l2_hits;
         self.energy.merge(&other.energy);
-        if self.interval_ipc.is_empty() {
-            self.interval_ipc = other.interval_ipc.clone();
-            self.sthld_trace = other.sthld_trace.clone();
-        }
     }
 }
 
@@ -301,6 +310,21 @@ mod tests {
         assert_eq!(a.cycles, 100);
         assert_eq!(a.instructions, 30);
         assert_eq!(a.rf_reads, 12);
+    }
+
+    #[test]
+    fn merge_leaves_interval_traces_to_the_gpu_owner() {
+        // the GPU-level controller attaches the interval series once per
+        // run; merging per-SM counter sets must never touch them
+        let mut total = Stats::new();
+        total.interval_ipc = vec![1.0, 2.0];
+        total.sthld_trace = vec![3, 4];
+        let mut sm = Stats::new();
+        sm.instructions = 7;
+        total.merge(&sm);
+        assert_eq!(total.interval_ipc, vec![1.0, 2.0]);
+        assert_eq!(total.sthld_trace, vec![3, 4]);
+        assert_eq!(total.instructions, 7);
     }
 
     #[test]
