@@ -18,7 +18,7 @@
 
 use std::collections::HashMap;
 
-use crate::isa::Instruction;
+use crate::isa::{Instruction, MAX_DST, MAX_SRC, NUM_REGS};
 use crate::trace::KernelTrace;
 
 /// Window (in accesses) of the forward scan; must match
@@ -116,6 +116,56 @@ pub fn reuse_histogram(trace: &KernelTrace) -> [u64; HIST_BUCKETS] {
         }
     }
     h
+}
+
+/// LTRF-style register-interval partition (Sadrosadati et al., PAPERS.md):
+/// greedily split `stream` into maximal contiguous intervals whose distinct
+/// register working set fits `max_working_set`, and return the interval
+/// index of every instruction. The LTRF policy prefetches an interval's
+/// registers into the per-warp RFC when the warp enters it, so a run's
+/// interval sequence is the software half of the software/hardware
+/// cooperative scheme.
+///
+/// An instruction whose own operand set exceeds `max_working_set` still
+/// gets an interval (an instruction cannot be split) — the hardware simply
+/// cannot hold all of it at once. Interval indices are non-decreasing and
+/// start at 0; an empty stream yields an empty table.
+pub fn register_intervals(stream: &[Instruction], max_working_set: usize) -> Vec<u32> {
+    let cap = max_working_set.max(1);
+    let mut out = Vec::with_capacity(stream.len());
+    let mut interval = 0u32;
+    let mut in_set = [false; NUM_REGS];
+    let mut set_size = 0usize;
+    for instr in stream {
+        // distinct operand registers this instruction would add to the set
+        let mut fresh = [0u8; MAX_SRC + MAX_DST];
+        let mut nfresh = 0usize;
+        for &r in instr.sources().iter().chain(instr.dests().iter()) {
+            if !in_set[r as usize] && !fresh[..nfresh].contains(&r) {
+                fresh[nfresh] = r;
+                nfresh += 1;
+            }
+        }
+        if set_size + nfresh > cap && set_size > 0 {
+            // working set would overflow: start a new interval here
+            interval += 1;
+            in_set = [false; NUM_REGS];
+            set_size = 0;
+            nfresh = 0;
+            for &r in instr.sources().iter().chain(instr.dests().iter()) {
+                if !fresh[..nfresh].contains(&r) {
+                    fresh[nfresh] = r;
+                    nfresh += 1;
+                }
+            }
+        }
+        for &r in &fresh[..nfresh] {
+            in_set[r as usize] = true;
+        }
+        set_size += nfresh;
+        out.push(interval);
+    }
+    out
 }
 
 /// Static-operand signature the votes are keyed by.
@@ -371,6 +421,64 @@ mod tests {
             deep > rod,
             "deepbench >10 frac {deep:.3} should exceed rodinia {rod:.3}"
         );
+    }
+
+    #[test]
+    fn register_intervals_partition_basics() {
+        let alu = |s: &[u8], d: &[u8]| Instruction::new(OpClass::Alu, s, d);
+        // working set per instruction: {1,2},{1,2},{3,4},{3,4}
+        let stream =
+            vec![alu(&[1], &[2]), alu(&[2], &[1]), alu(&[3], &[4]), alu(&[4], &[3])];
+        // cap 2: the first pair fits one interval, the second pair the next
+        assert_eq!(register_intervals(&stream, 2), vec![0, 0, 1, 1]);
+        // cap 4 (>= total distinct): everything is one interval
+        assert_eq!(register_intervals(&stream, 4), vec![0, 0, 0, 0]);
+        // cap 1: every register introduction overflows the set
+        assert_eq!(register_intervals(&stream, 1), vec![0, 1, 2, 3]);
+        assert!(register_intervals(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn register_intervals_are_nondecreasing_and_bounded() {
+        let b = find("gemm_t1").unwrap();
+        let t = KernelTrace::generate(b, 2, 13);
+        for w in &t.warps {
+            let cap = 6usize;
+            let table = register_intervals(w, cap);
+            assert_eq!(table.len(), w.len());
+            assert!(table.windows(2).all(|p| p[0] <= p[1] && p[1] - p[0] <= 1));
+            // replay the partition: each interval's distinct register set
+            // fits the cap unless a single instruction alone exceeds it
+            let mut seen: Vec<u8> = Vec::new();
+            for (i, instr) in w.iter().enumerate() {
+                if i > 0 && table[i] != table[i - 1] {
+                    seen.clear();
+                }
+                let start = seen.len();
+                for &r in instr.sources().iter().chain(instr.dests().iter()) {
+                    if !seen.contains(&r) {
+                        seen.push(r);
+                    }
+                }
+                let solo = seen.len() - start;
+                assert!(
+                    seen.len() <= cap || seen.len() == solo,
+                    "interval working set {} exceeds cap {cap}",
+                    seen.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn register_intervals_oversized_instruction_gets_own_interval() {
+        // an 8-operand MMA cannot fit a 4-entry set but must still be placed
+        let wide = Instruction::new(OpClass::Mma, &[1, 2, 3, 4, 5, 6], &[7, 8]);
+        let narrow = Instruction::new(OpClass::Alu, &[9], &[10]);
+        let table = register_intervals(&[narrow, wide, narrow], 4);
+        assert_eq!(table.len(), 3);
+        assert_eq!(table[0], 0);
+        assert!(table[1] > table[0], "overflowing instr opens a new interval");
     }
 
     #[test]

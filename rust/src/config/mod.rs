@@ -66,6 +66,25 @@ pub struct GpuConfig {
     pub active_warps_per_sub_core: usize,
     /// Software-RFC strand length (instructions between swap points).
     pub swrfc_strand_len: usize,
+    // ---- related-work scheme knobs (PAPERS.md policies) ----
+    /// GREENER power-gate wake-up latency in cycles (slice re-activation;
+    /// Jatala et al.) — replaces the plain two-level activation delay.
+    pub greener_wakeup: u64,
+    /// Compression policy: register ids below this are treated as
+    /// compressible (narrow values) and admitted to the cache (Angerd et
+    /// al.; the trace has no values, so low ids — parameters, counters —
+    /// proxy for compressibility).
+    pub compress_regs: u8,
+    /// LTRF software-prefetch latency in cycles: the activation delay the
+    /// prefetch engine needs to stage a register interval (Sadrosadati et
+    /// al.).
+    pub ltrf_prefetch: u64,
+    /// RegDem: register ids at or above this cutoff are demoted to
+    /// shared-memory spill space (Sakdhnagool et al.).
+    pub regdem_cutoff: u8,
+    /// RegDem: issue-throttle cycles charged per demoted source operand
+    /// (the shared-memory access latency the spill path adds).
+    pub regdem_penalty: u32,
     // ---- Malekeh policies (§IV) ----
     /// Scheme under test.
     pub scheme: Scheme,
@@ -153,6 +172,11 @@ impl GpuConfig {
             rfc_entries: 6,
             active_warps_per_sub_core: 2,
             swrfc_strand_len: 10,
+            greener_wakeup: 6,
+            compress_regs: 32,
+            ltrf_prefetch: 8,
+            regdem_cutoff: 32,
+            regdem_penalty: 2,
             scheme: Scheme::BASELINE,
             sthld: SthldMode::Dynamic,
             sthld_interval: 10_000,
@@ -258,6 +282,11 @@ impl GpuConfig {
                 self.active_warps_per_sub_core = p(key, value)?
             }
             "swrfc_strand_len" => self.swrfc_strand_len = p(key, value)?,
+            "greener_wakeup" => self.greener_wakeup = p(key, value)?,
+            "compress_regs" => self.compress_regs = p(key, value)?,
+            "ltrf_prefetch" => self.ltrf_prefetch = p(key, value)?,
+            "regdem_cutoff" => self.regdem_cutoff = p(key, value)?,
+            "regdem_penalty" => self.regdem_penalty = p(key, value)?,
             "scheme" => self.scheme = Scheme::parse(value.trim())?,
             "sthld" => {
                 self.sthld = if value.trim() == "dynamic" {
@@ -408,6 +437,27 @@ mod tests {
         assert_eq!(c.sim_threads, 4);
         assert!(c.set("nonsense_key", "1").is_err());
         assert!(c.set("rthld", "xyz").is_err());
+    }
+
+    #[test]
+    fn related_work_knobs_default_and_roundtrip() {
+        let mut c = GpuConfig::table1_baseline();
+        assert_eq!(c.greener_wakeup, 6);
+        assert_eq!(c.compress_regs, 32);
+        assert_eq!(c.ltrf_prefetch, 8);
+        assert_eq!(c.regdem_cutoff, 32);
+        assert_eq!(c.regdem_penalty, 2);
+        c.set("greener_wakeup", "12").unwrap();
+        c.set("compress_regs", "48").unwrap();
+        c.set("ltrf_prefetch", "16").unwrap();
+        c.set("regdem_cutoff", "40").unwrap();
+        c.set("regdem_penalty", "5").unwrap();
+        assert_eq!(c.greener_wakeup, 12);
+        assert_eq!(c.compress_regs, 48);
+        assert_eq!(c.ltrf_prefetch, 16);
+        assert_eq!(c.regdem_cutoff, 40);
+        assert_eq!(c.regdem_penalty, 5);
+        assert!(c.set("compress_regs", "300").is_err(), "u8 range enforced");
     }
 
     #[test]

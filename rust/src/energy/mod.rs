@@ -260,6 +260,56 @@ mod tests {
     }
 
     #[test]
+    fn related_work_scheme_cost_rows_are_pinned() {
+        // the Fig 15-style cost rows of the related-work frontier
+        // (docs/CONFIG.md table): entries/collector -> (ccu_read,
+        // ccu_write, leak_proxy). Greener powers 1.5 of 6 entries
+        // (2 active / 8 warps), compress stores 8 entries half-width,
+        // ltrf keeps the full 6-entry per-warp RFC, regdem has no cache.
+        let base = crate::config::GpuConfig::table1_baseline();
+        for (scheme, read, write, leak) in [
+            (Scheme::GREENER, 0.03, 0.0345, 0.0003),
+            (Scheme::COMPRESS, 0.06, 0.069, 0.0008),
+            (Scheme::LTRF, 0.09, 0.1035, 0.0012),
+            (Scheme::REGDEM, 0.0, 0.0, 0.0),
+        ] {
+            let m = EnergyModel::for_config(&base.clone().with_scheme(scheme));
+            let c = m.costs();
+            assert!(
+                (c[EventKind::CcuRead as usize] - read).abs() < 1e-12,
+                "{scheme}: ccu_read {} != {read}",
+                c[EventKind::CcuRead as usize]
+            );
+            assert!(
+                (c[EventKind::CcuWrite as usize] - write).abs() < 1e-12,
+                "{scheme}: ccu_write {} != {write}",
+                c[EventKind::CcuWrite as usize]
+            );
+            assert!(
+                (c[EventKind::LeakProxy as usize] - leak).abs() < 1e-12,
+                "{scheme}: leak_proxy {} != {leak}",
+                c[EventKind::LeakProxy as usize]
+            );
+        }
+    }
+
+    #[test]
+    fn zero_entry_policies_incur_zero_cache_event_energy() {
+        // regdem routes all spill traffic through bank/xbar events; like
+        // the baseline it reports zero cache entries, so any CcuRead /
+        // CcuWrite counts it produces must evaluate to exactly 0 energy
+        for scheme in [Scheme::BASELINE, Scheme::REGDEM] {
+            let cfg = crate::config::GpuConfig::table1_baseline().with_scheme(scheme);
+            let m = EnergyModel::for_config(&cfg);
+            let mut c = EnergyCounts::new();
+            c.add(EventKind::CcuRead, 1_000);
+            c.add(EventKind::CcuWrite, 1_000);
+            c.add(EventKind::LeakProxy, 1_000);
+            assert_eq!(m.total(&c), 0.0, "{scheme} charged phantom cache energy");
+        }
+    }
+
+    #[test]
     fn total_is_dot_product() {
         let cfg = crate::config::GpuConfig::table1_baseline();
         let m = EnergyModel::for_config(&cfg);

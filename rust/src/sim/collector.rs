@@ -459,6 +459,27 @@ impl Collector {
         rng: &mut Rng,
         victim: VictimFn,
     ) -> AllocResult {
+        // RNG-identical to the pre-admission code: the always-true
+        // predicate reproduces the original per-source sequence exactly
+        self.alloc_ccu_admit(warp, instr, now, rng, victim, &mut |_, _| true)
+    }
+
+    /// [`Collector::alloc_ccu`] with a cache-*admission* predicate
+    /// (`admit(slot, reg)`): a missing source the predicate rejects is
+    /// still fetched from the banks but gets **no** cache-table entry —
+    /// the hook selective-caching policies (e.g. the compression scheme's
+    /// compressibility signal) use to keep uncacheable values out of the
+    /// table. Hits are always served regardless of the predicate (the
+    /// value is already resident).
+    pub fn alloc_ccu_admit(
+        &mut self,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+        rng: &mut Rng,
+        victim: VictimFn,
+        admit: &mut dyn FnMut(usize, u8) -> bool,
+    ) -> AllocResult {
         debug_assert!(!self.occupied);
         let mut res = AllocResult::default();
         if self.owner != Some(warp) {
@@ -484,12 +505,15 @@ impl Collector {
                 self.ct.touch(i);
                 self.src_ready |= 1 << slot;
                 res.hits += 1;
-            } else {
+            } else if admit(slot, reg) {
                 let idx = self
                     .ct
                     .allocate(reg, near, true, rng, &mut *victim)
                     .expect("CT must fit all sources (ct_entries >= MAX_SRC)");
                 debug_assert!(idx < MAX_CT);
+                res.misses.push(slot as u8, reg);
+            } else {
+                // not admitted: bank fetch only, no table entry
                 res.misses.push(slot as u8, reg);
             }
         }
@@ -749,6 +773,79 @@ mod tests {
         let res = c.alloc_ccu(0, &mma(&[7, 7], &[1]), 0, &mut r, &mut reuse_guided_victim);
         assert_eq!(res.hits, 1);
         assert_eq!(res.misses.len(), 1);
+    }
+
+    #[test]
+    fn ccu_admit_predicate_gates_table_entries_not_fetches() {
+        let mut c = Collector::new(8);
+        let mut r = rng();
+        // admit only registers < 10: r3 gets an entry, r20 is fetch-only
+        let res = c.alloc_ccu_admit(
+            0,
+            &mma(&[3, 20], &[1]),
+            0,
+            &mut r,
+            &mut reuse_guided_victim,
+            &mut |_, reg| reg < 10,
+        );
+        assert_eq!(res.hits, 0);
+        assert_eq!(res.misses.as_slice(), &[(0, 3), (1, 20)], "both still fetched");
+        assert!(c.ct.lookup(3).is_some(), "admitted miss gets an entry");
+        assert!(c.ct.lookup(20).is_none(), "rejected miss gets none");
+        c.bank_operand_arrived(0, 3, false);
+        c.bank_operand_arrived(1, 20, false);
+        assert!(c.ready(), "readiness is slot-based, not table-based");
+        c.dispatched(true);
+        // a later instruction hits the admitted value only
+        let res = c.alloc_ccu_admit(
+            0,
+            &mma(&[3, 20], &[2]),
+            1,
+            &mut r,
+            &mut reuse_guided_victim,
+            &mut |_, reg| reg < 10,
+        );
+        assert_eq!(res.hits, 1);
+        assert_eq!(res.misses.as_slice(), &[(1, 20)]);
+    }
+
+    #[test]
+    fn ccu_admit_always_true_matches_alloc_ccu_and_rng_stream() {
+        // the delegation contract: an always-admit predicate must be
+        // bit-identical to alloc_ccu, including the RNG stream position
+        let seed = 0xFEED;
+        let mut ca = Collector::new(8);
+        let mut cb = Collector::new(8);
+        let mut ra = Rng::new(seed);
+        let mut rb = Rng::new(seed);
+        for (k, instr) in [
+            mma(&[1, 2, 3], &[10]),
+            mma(&[2, 3, 4], &[11]),
+            mma(&[9, 9, 1], &[12]),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let a = ca.alloc_ccu(0, instr, k as u64, &mut ra, &mut reuse_guided_victim);
+            let b = cb.alloc_ccu_admit(
+                0,
+                instr,
+                k as u64,
+                &mut rb,
+                &mut reuse_guided_victim,
+                &mut |_, _| true,
+            );
+            assert_eq!(a.hits, b.hits);
+            assert_eq!(a.misses, b.misses);
+            assert_eq!(a.wb_reuse, b.wb_reuse);
+            for (slot, &reg) in instr.sources().iter().enumerate() {
+                ca.bank_operand_arrived(slot as u8, reg, false);
+                cb.bank_operand_arrived(slot as u8, reg, false);
+            }
+            ca.dispatched(true);
+            cb.dispatched(true);
+        }
+        assert_eq!(ra.next_u64(), rb.next_u64(), "RNG stream position diverged");
     }
 
     #[test]

@@ -1,0 +1,131 @@
+//! Static data-compression RF cache (Angerd et al., PAPERS.md): values the
+//! compiler proves compressible are stored compressed, so the same SRAM
+//! budget caches more of them — modelled here as a cache-*admission*
+//! signal. The trace carries no values, so compressibility is approximated
+//! statically from the register id: low ids hold kernel parameters, loop
+//! counters, and address bases — the narrow-value population the paper
+//! compresses best — while high ids hold wide accumulators and vector
+//! temporaries. Ids below `compress_regs` are admitted; everything else is
+//! fetched from the banks but never occupies a table entry
+//! ([`Collector::alloc_ccu_admit`]'s predicate).
+//!
+//! Because only compressed (half-width) values are stored, the physical
+//! table is half the CCU's size for the same entry count:
+//! [`CachePolicy::cache_entries_per_collector`] reports `ct_entries / 2`.
+//! Replacement is plain LRU — the admission filter, not the victim
+//! chooser, is this scheme's contribution.
+
+use crate::config::GpuConfig;
+use crate::isa::Instruction;
+use crate::sim::collector::{plain_lru_victim, AllocResult};
+use crate::sim::exec::WbEvent;
+
+use super::{ccu_capture, free_unit_reservoir, CachePolicy, CollectorChoice, PolicyCtx};
+
+/// Compression-admission CCU under GTO.
+pub struct CompressPolicy {
+    ct_entries: usize,
+    compress_regs: u8,
+}
+
+impl CompressPolicy {
+    /// Capture table geometry and the compressibility cutoff from the
+    /// resolved config.
+    pub fn from_config(cfg: &GpuConfig) -> Self {
+        CompressPolicy {
+            ct_entries: cfg.ct_entries,
+            compress_regs: cfg.compress_regs,
+        }
+    }
+
+    /// The static compressibility approximation: is `reg` admissible?
+    fn compressible(&self, reg: u8) -> bool {
+        reg < self.compress_regs
+    }
+}
+
+impl CachePolicy for CompressPolicy {
+    /// CCU semantics: the table survives dispatch.
+    fn caching(&self) -> bool {
+        true
+    }
+
+    /// Compressed entries are half-width, so the same entry count costs
+    /// half the storage.
+    fn cache_entries_per_collector(&self) -> f64 {
+        self.ct_entries as f64 / 2.0
+    }
+
+    fn select_collector(&mut self, ctx: &mut PolicyCtx, _warp: u8) -> CollectorChoice {
+        match free_unit_reservoir(ctx.collectors, ctx.rng) {
+            Some(ci) => CollectorChoice::Unit(ci),
+            None => {
+                ctx.stats.collector_full_stalls += 1;
+                CollectorChoice::StallCycle { waiting: false }
+            }
+        }
+    }
+
+    fn allocate(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ci: usize,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+    ) -> AllocResult {
+        let cut = self.compress_regs;
+        ctx.collectors[ci].alloc_ccu_admit(
+            warp,
+            instr,
+            now,
+            ctx.rng,
+            &mut plain_lru_victim,
+            &mut |_, reg| reg < cut,
+        )
+    }
+
+    fn capture_writeback(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ev: &WbEvent,
+        reg: u8,
+        near: bool,
+        port_free: bool,
+    ) -> bool {
+        // admission replaces the near/far write filter: a compressible
+        // result is worth caching regardless of its reuse class (it is
+        // cheap to hold), an incompressible one never enters
+        if self.compressible(reg) {
+            ccu_capture(ctx, ev, reg, near, port_free, &mut plain_lru_victim, true)
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuConfig;
+
+    #[test]
+    fn compressed_table_is_half_storage() {
+        let cfg = GpuConfig::table1_baseline();
+        let p = CompressPolicy::from_config(&cfg);
+        // Table I: 8-entry CCU stored compressed = 4 entry-equivalents
+        assert!((p.cache_entries_per_collector() - 4.0).abs() < 1e-12);
+        assert!(p.caching());
+    }
+
+    #[test]
+    fn admission_follows_the_static_cutoff() {
+        let mut cfg = GpuConfig::table1_baseline();
+        cfg.compress_regs = 16;
+        let p = CompressPolicy::from_config(&cfg);
+        assert!(p.compressible(0));
+        assert!(p.compressible(15));
+        assert!(!p.compressible(16));
+        assert!(!p.compressible(200));
+    }
+}

@@ -1,0 +1,181 @@
+//! GREENER-style power-gated, sliced register file (Jatala et al.,
+//! PAPERS.md): the RF is partitioned into per-warp slices and only the
+//! slices of the *active* warps are powered; everything else is gated off.
+//!
+//! Mapping onto this simulator: the two-level scheduler's active set *is*
+//! the powered slice set — an inactive warp's slice is gated, so the warp
+//! cannot issue at all ([`CachePolicy::issue_gate`]) and re-powering a
+//! slice costs the gate wake-up latency (`greener_wakeup`, longer than the
+//! plain two-level activation delay). The per-warp RFC tables model the
+//! retention latches of a powered slice: any register of an active warp
+//! may hit ([`CachePolicy::allocate`]), but only near-marked results are
+//! retained at writeback (gating pressure keeps the latch set small). The
+//! energy model sees only the powered fraction of the cache storage:
+//! [`CachePolicy::cache_entries_per_collector`] reports
+//! `rfc_entries x active / warps` — the gated slices charge nothing,
+//! which is the scheme's whole point.
+//!
+//! Aggressive gating: a warp is swapped out (slice gated) not just on load
+//! stalls but after a short idle timeout, trading activation latency for
+//! leakage — the GREENER trade-off the Fig 15-style rows expose.
+
+use crate::config::GpuConfig;
+use crate::isa::Instruction;
+use crate::sim::collector::{plain_lru_victim, AllocResult};
+use crate::sim::exec::WbEvent;
+use crate::sim::warp::WarpState;
+
+use super::{free_unit_reservoir, CachePolicy, CollectorChoice, PolicyCtx};
+
+/// Idle cycles after which an active warp's slice is gated off.
+const GATE_IDLE_CYCLES: u64 = 32;
+
+/// Power-gated/sliced RF + two-level scheduler.
+pub struct GreenerPolicy {
+    rfc_entries: usize,
+    active_warps: usize,
+    warps_per_sub_core: usize,
+    wakeup: u64,
+}
+
+impl GreenerPolicy {
+    /// Capture slice geometry and the gate wake-up latency from the
+    /// resolved config.
+    pub fn from_config(cfg: &GpuConfig) -> Self {
+        GreenerPolicy {
+            rfc_entries: cfg.rfc_entries,
+            active_warps: cfg.active_warps_per_sub_core,
+            warps_per_sub_core: cfg.warps_per_sub_core(),
+            wakeup: cfg.greener_wakeup,
+        }
+    }
+}
+
+impl CachePolicy for GreenerPolicy {
+    /// Only the powered (active) fraction of the slice storage exists as
+    /// far as the energy model is concerned — gated slices leak nothing.
+    fn cache_entries_per_collector(&self) -> f64 {
+        self.rfc_entries as f64 * self.active_warps as f64 / self.warps_per_sub_core.max(1) as f64
+    }
+
+    /// A gated slice cannot feed the pipeline: the warp must be active and
+    /// past the gate wake-up latency.
+    fn issue_gate(&self, warp: &WarpState, now: u64) -> bool {
+        warp.active && now >= warp.active_since + self.activation_delay()
+    }
+
+    fn select_collector(&mut self, ctx: &mut PolicyCtx, _warp: u8) -> CollectorChoice {
+        match free_unit_reservoir(ctx.collectors, ctx.rng) {
+            Some(ci) => CollectorChoice::Unit(ci),
+            None => {
+                ctx.stats.collector_full_stalls += 1;
+                CollectorChoice::StallCycle { waiting: false }
+            }
+        }
+    }
+
+    fn allocate(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ci: usize,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+    ) -> AllocResult {
+        let mut res = ctx.collectors[ci].alloc_ocu(warp, instr, now);
+        if ctx.warps[warp as usize].active {
+            // powered slice: any retained register may hit (filtered out of
+            // the miss list in place — inline storage, no per-event heap)
+            let cache = &mut ctx.rfc[warp as usize];
+            let col = &mut ctx.collectors[ci];
+            let mut hits = 0u32;
+            res.misses.retain(|slot, reg| {
+                if let Some(i) = cache.lookup(reg) {
+                    cache.touch(i);
+                    col.deliver(slot);
+                    hits += 1;
+                    false
+                } else {
+                    true
+                }
+            });
+            res.hits += hits;
+        }
+        res
+    }
+
+    fn capture_writeback(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ev: &WbEvent,
+        reg: u8,
+        near: bool,
+        _port_free: bool,
+    ) -> bool {
+        // retention latches are scarce under gating pressure: keep only
+        // near-reuse results of a still-powered slice
+        if near && ctx.warps[ev.warp as usize].active {
+            ctx.rfc[ev.warp as usize]
+                .allocate(reg, true, false, ctx.rng, &mut plain_lru_victim)
+                .is_some()
+        } else {
+            false
+        }
+    }
+
+    /// Gate the slice on load stalls *and* after a short idle timeout —
+    /// GREENER gates more aggressively than a plain two-level RFC.
+    fn should_swap_out(&self, warp: &WarpState, instr: &Instruction, now: u64) -> bool {
+        warp.blocked_on_load(instr) || now.saturating_sub(warp.last_issue) > GATE_IDLE_CYCLES
+    }
+
+    /// Power-gate wake-up: slower than the plain scheduler swap-in.
+    fn activation_delay(&self) -> u64 {
+        self.wakeup
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuConfig;
+
+    #[test]
+    fn energy_model_sees_only_powered_slices() {
+        let cfg = GpuConfig::table1_baseline();
+        let p = GreenerPolicy::from_config(&cfg);
+        // Table I: 6 entries x 2 active / 8 warps = 1.5 powered entries
+        assert!((p.cache_entries_per_collector() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gate_wakeup_is_the_activation_delay() {
+        let mut cfg = GpuConfig::table1_baseline();
+        cfg.greener_wakeup = 11;
+        let p = GreenerPolicy::from_config(&cfg);
+        assert_eq!(p.activation_delay(), 11);
+        // a freshly powered slice is unusable until the wake-up elapses
+        let mut w = WarpState::new(0);
+        w.active = true;
+        w.active_since = 100;
+        assert!(!p.issue_gate(&w, 105));
+        assert!(p.issue_gate(&w, 111));
+        w.active = false;
+        assert!(!p.issue_gate(&w, 200), "gated slice never issues");
+    }
+
+    #[test]
+    fn idle_timeout_gates_the_slice() {
+        let cfg = GpuConfig::table1_baseline();
+        let p = GreenerPolicy::from_config(&cfg);
+        let mut w = WarpState::new(0);
+        w.active = true;
+        w.last_issue = 10;
+        let instr = Instruction::new(crate::isa::OpClass::Alu, &[1], &[2]);
+        assert!(!p.should_swap_out(&w, &instr, 20), "short stall keeps power");
+        assert!(
+            p.should_swap_out(&w, &instr, 10 + GATE_IDLE_CYCLES + 1),
+            "idle past the timeout gates the slice"
+        );
+    }
+}

@@ -1,0 +1,300 @@
+//! LTRF-style latency-tolerant register file (Sadrosadati et al.,
+//! PAPERS.md): a software/hardware cooperative scheme. The *compiler*
+//! partitions each warp's code into register intervals whose working set
+//! fits the per-warp cache ([`crate::compiler::register_intervals`]); the
+//! *hardware* prefetches an interval's registers into the per-warp RFC
+//! when the warp enters it, hiding the RF access latency behind the
+//! two-level scheduler's activation delay (`ltrf_prefetch`).
+//!
+//! Cooperation shows up in three hooks:
+//! - [`CachePolicy::allocate`] detects interval entry (the compiler's
+//!   marks) and runs the hardware prefetch engine: write back the old
+//!   interval's contents, then stage the new interval's source registers
+//!   — each prefetch is a real bank read plus a cache fill, charged to
+//!   the energy model.
+//! - [`CachePolicy::operand_arrived`] is the hardware half of the fill
+//!   path: operands the prefetch missed but the banks fetched anyway are
+//!   recorded and installed into the warp's cache on the next allocation
+//!   (the "fill on return" of the paper).
+//! - [`CachePolicy::build_order`] prioritises warps deepest into their
+//!   interval (largest `strand_pos`), so a staged interval is drained
+//!   before the scheduler pays for staging another — deterministic
+//!   selection with an ascending-id tie-break, no allocation.
+
+use crate::compiler::register_intervals;
+use crate::config::GpuConfig;
+use crate::energy::EventKind;
+use crate::isa::Instruction;
+use crate::sim::collector::{plain_lru_victim, AllocResult, Collector};
+use crate::sim::exec::WbEvent;
+use crate::sim::warp::WarpState;
+
+use super::{free_unit_reservoir, CachePolicy, CollectorChoice, PolicyCtx};
+
+/// Capacity of the fill-on-return staging buffer (drained every
+/// allocation, so a handful of slots suffices).
+const PENDING_FILLS: usize = 8;
+
+/// Idle cycles after which a mid-interval warp is deactivated anyway.
+const INTERVAL_TIMEOUT: u64 = 64;
+
+/// Marker: the warp has not entered any interval yet.
+const NO_INTERVAL: u32 = u32::MAX;
+
+/// Software/hardware cooperative RFC prefetch + two-level scheduler.
+pub struct LtrfPolicy {
+    entries: usize,
+    prefetch: u64,
+    /// Compiler interval table per local warp (lazily computed once from
+    /// the warp's stream — a pure function, so determinism is preserved).
+    intervals: Vec<Vec<u32>>,
+    /// Interval each warp currently has staged.
+    cur_interval: Vec<u32>,
+    /// Fill-on-return staging: `(warp, reg)` operands fetched from the
+    /// banks, installed into the warp's cache at the next allocation.
+    pending: [(u8, u8); PENDING_FILLS],
+    n_pending: u8,
+}
+
+impl LtrfPolicy {
+    /// Capture cache size and prefetch latency from the resolved config.
+    pub fn from_config(cfg: &GpuConfig) -> Self {
+        LtrfPolicy {
+            entries: cfg.rfc_entries,
+            prefetch: cfg.ltrf_prefetch,
+            intervals: Vec::new(),
+            cur_interval: Vec::new(),
+            pending: [(0, 0); PENDING_FILLS],
+            n_pending: 0,
+        }
+    }
+
+    /// One-time sizing of the per-warp state (the hook signatures do not
+    /// carry the warp count, so it is learned at the first allocation).
+    fn ensure_warp_state(&mut self, nwarps: usize) {
+        if self.intervals.len() < nwarps {
+            self.intervals.resize_with(nwarps, Vec::new);
+            self.cur_interval.resize(nwarps, NO_INTERVAL);
+        }
+    }
+}
+
+impl CachePolicy for LtrfPolicy {
+    fn cache_entries_per_collector(&self) -> f64 {
+        self.entries as f64
+    }
+
+    fn issue_gate(&self, warp: &WarpState, now: u64) -> bool {
+        warp.active && now >= warp.active_since + self.activation_delay()
+    }
+
+    /// Drain staged intervals first: deepest `strand_pos` issues ahead,
+    /// ascending warp id breaks ties (deterministic, allocation-free).
+    fn build_order(
+        &mut self,
+        order: &mut Vec<u8>,
+        greedy: Option<u8>,
+        warps: &[WarpState],
+        _collectors: &[Collector],
+    ) {
+        let n = warps.len();
+        debug_assert!(n <= 128, "selection mask is 128 bits wide");
+        let mut picked: u128 = 0;
+        if let Some(g) = greedy {
+            picked |= 1u128 << g; // already at the front of `order`
+        }
+        loop {
+            let mut best: Option<u8> = None;
+            for w in 0..n as u8 {
+                if picked & (1u128 << w) != 0 {
+                    continue;
+                }
+                match best {
+                    None => best = Some(w),
+                    Some(b) => {
+                        if warps[w as usize].strand_pos > warps[b as usize].strand_pos {
+                            best = Some(w);
+                        }
+                    }
+                }
+            }
+            let Some(b) = best else { break };
+            picked |= 1u128 << b;
+            order.push(b);
+        }
+    }
+
+    fn select_collector(&mut self, ctx: &mut PolicyCtx, _warp: u8) -> CollectorChoice {
+        match free_unit_reservoir(ctx.collectors, ctx.rng) {
+            Some(ci) => CollectorChoice::Unit(ci),
+            None => {
+                ctx.stats.collector_full_stalls += 1;
+                CollectorChoice::StallCycle { waiting: false }
+            }
+        }
+    }
+
+    fn allocate(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ci: usize,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+    ) -> AllocResult {
+        self.ensure_warp_state(ctx.warps.len());
+        // fill on return: install operands the banks fetched since the
+        // last allocation into their warps' caches
+        for k in 0..self.n_pending as usize {
+            let (w, reg) = self.pending[k];
+            if ctx.warps[w as usize].active {
+                ctx.rfc[w as usize].allocate(reg, true, false, ctx.rng, &mut plain_lru_victim);
+                ctx.stats.energy.add(EventKind::CcuWrite, 1);
+            }
+        }
+        self.n_pending = 0;
+
+        let wi = warp as usize;
+        // compiler half: the interval table is a pure function of the
+        // stream, computed once per warp (one-time init, not per-event)
+        if self.intervals[wi].is_empty() && !ctx.streams[wi].is_empty() {
+            self.intervals[wi] = register_intervals(&ctx.streams[wi], self.entries);
+        }
+        let pc = ctx.warps[wi].pc;
+        let table = &self.intervals[wi];
+        if pc < table.len() && table[pc] != self.cur_interval[wi] {
+            // hardware half: interval entry — retire the old interval's
+            // contents and stage the new one's source registers
+            let iv = table[pc];
+            self.cur_interval[wi] = iv;
+            let stream = &ctx.streams[wi];
+            let cache = &mut ctx.rfc[wi];
+            let dirty = cache.valid_count() as u64;
+            if dirty > 0 {
+                ctx.stats.energy.add(EventKind::BankWrite, dirty);
+            }
+            cache.flush();
+            let mut j = pc;
+            while j < stream.len() && table[j] == iv && cache.valid_count() < self.entries {
+                for &r in stream[j].sources() {
+                    if cache.valid_count() >= self.entries {
+                        break;
+                    }
+                    if cache.lookup(r).is_none() {
+                        cache.allocate(r, true, false, ctx.rng, &mut plain_lru_victim);
+                        ctx.stats.energy.add(EventKind::BankRead, 1);
+                        ctx.stats.energy.add(EventKind::CcuWrite, 1);
+                    }
+                }
+                j += 1;
+            }
+        }
+
+        let mut res = ctx.collectors[ci].alloc_ocu(warp, instr, now);
+        if ctx.warps[wi].active {
+            // staged registers hit; the rest go to the banks (and come
+            // back through the fill-on-return path)
+            let cache = &mut ctx.rfc[wi];
+            let col = &mut ctx.collectors[ci];
+            let mut hits = 0u32;
+            res.misses.retain(|slot, reg| {
+                if let Some(i) = cache.lookup(reg) {
+                    cache.touch(i);
+                    col.deliver(slot);
+                    hits += 1;
+                    false
+                } else {
+                    true
+                }
+            });
+            res.hits += hits;
+        }
+        res
+    }
+
+    fn capture_writeback(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ev: &WbEvent,
+        reg: u8,
+        near: bool,
+        _port_free: bool,
+    ) -> bool {
+        // results stay in the staged interval only when the compiler marked
+        // them near (they will be read again before the interval ends)
+        if near && ctx.warps[ev.warp as usize].active {
+            ctx.rfc[ev.warp as usize]
+                .allocate(reg, true, false, ctx.rng, &mut plain_lru_victim)
+                .is_some()
+        } else {
+            false
+        }
+    }
+
+    /// Fill on return: remember which warp's operand the banks produced;
+    /// installed at the next allocation (this hook has no cache access).
+    fn operand_arrived(&mut self, collector: &mut Collector, slot: u8, reg: u8) {
+        if let Some(w) = collector.owner {
+            if (self.n_pending as usize) < PENDING_FILLS {
+                self.pending[self.n_pending as usize] = (w, reg);
+                self.n_pending += 1;
+            }
+        }
+        collector.bank_operand_arrived(slot, reg, false);
+    }
+
+    fn should_swap_out(&self, warp: &WarpState, instr: &Instruction, now: u64) -> bool {
+        warp.blocked_on_load(instr) || now.saturating_sub(warp.last_issue) > INTERVAL_TIMEOUT
+    }
+
+    /// Staging an interval takes the software-prefetch latency.
+    fn activation_delay(&self) -> u64 {
+        self.prefetch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuConfig;
+
+    #[test]
+    fn prefetch_latency_is_the_activation_delay() {
+        let mut cfg = GpuConfig::table1_baseline();
+        cfg.ltrf_prefetch = 13;
+        let p = LtrfPolicy::from_config(&cfg);
+        assert_eq!(p.activation_delay(), 13);
+        assert!((p.cache_entries_per_collector() - cfg.rfc_entries as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn build_order_drains_deepest_interval_first() {
+        let cfg = GpuConfig::table1_baseline();
+        let mut p = LtrfPolicy::from_config(&cfg);
+        let mut warps: Vec<WarpState> = (0..4u32).map(WarpState::new).collect();
+        warps[0].strand_pos = 2;
+        warps[1].strand_pos = 5;
+        warps[2].strand_pos = 9;
+        warps[3].strand_pos = 2;
+        let mut order = Vec::new();
+        p.build_order(&mut order, None, &warps, &[]);
+        // descending strand_pos; the 0/3 tie resolves to the lower id
+        assert_eq!(order, vec![2, 1, 0, 3]);
+        // a greedy warp is already at the front and never re-pushed
+        let mut order = vec![2u8];
+        p.build_order(&mut order, Some(2), &warps, &[]);
+        assert_eq!(order, vec![2, 1, 0, 3]);
+    }
+
+    #[test]
+    fn fill_buffer_is_bounded() {
+        let cfg = GpuConfig::table1_baseline();
+        let mut p = LtrfPolicy::from_config(&cfg);
+        let mut c = Collector::new(8);
+        c.owner = Some(1);
+        for k in 0..(PENDING_FILLS + 4) as u8 {
+            p.operand_arrived(&mut c, k % 6, k);
+        }
+        assert_eq!(p.n_pending as usize, PENDING_FILLS, "overflow is dropped");
+    }
+}

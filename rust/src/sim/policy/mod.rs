@@ -56,9 +56,13 @@ pub mod registry;
 mod baseline;
 mod belady;
 mod bow;
+mod compress;
 mod fifo;
+mod greener;
+mod ltrf;
 mod malekeh;
 mod malekeh_pr;
+mod regdem;
 mod rfc;
 mod software_rfc;
 mod traditional;
@@ -66,9 +70,13 @@ mod traditional;
 pub use baseline::BaselinePolicy;
 pub use belady::BeladyPolicy;
 pub use bow::BowPolicy;
+pub use compress::CompressPolicy;
 pub use fifo::FifoPolicy;
+pub use greener::GreenerPolicy;
+pub use ltrf::LtrfPolicy;
 pub use malekeh::MalekehPolicy;
 pub use malekeh_pr::MalekehPrPolicy;
+pub use regdem::RegdemPolicy;
 pub use registry::{register, PolicyMeta, Scheme};
 pub use rfc::RfcPolicy;
 pub use software_rfc::SoftwareRfcPolicy;

@@ -1,0 +1,187 @@
+//! RegDem-style register demotion (Sakdhnagool et al., PAPERS.md): the
+//! compiler demotes the coldest architectural registers to shared-memory
+//! slots, shrinking the physical RF so more thread blocks fit. There is no
+//! operand cache at all — the price is *spill traffic*: every access to a
+//! demoted register is a shared-memory transaction instead of an RF bank
+//! read/write.
+//!
+//! Mapping onto this simulator: registers at or above `regdem_cutoff` are
+//! the demoted set (the allocator assigns hot ids first, so high ids are
+//! the cold tail). Demoted source operands never touch the RF banks — they
+//! are delivered through [`crate::sim::memory::SpillModel`], which charges
+//! bank-read + crossbar energy per transaction, and demoted destinations
+//! likewise spill on writeback. Shared memory is slower than the RF, so an
+//! instruction with demoted sources pays `regdem_penalty` scheduler passes
+//! per demoted operand before it may claim a collector
+//! ([`CachePolicy::select_collector`] returns `SkipWarp` while the spill
+//! loads are in flight).
+//!
+//! Reports zero cache entries: the energy model sees no CCU storage, and
+//! the Fig 15-style cost table for this scheme is all zeros — the spill
+//! traffic shows up in the `BankRead`/`BankWrite`/`XbarTransfer` rows
+//! instead.
+
+use crate::config::GpuConfig;
+use crate::isa::Instruction;
+use crate::sim::collector::AllocResult;
+use crate::sim::exec::WbEvent;
+use crate::sim::memory::SpillModel;
+
+use super::{free_unit_reservoir, CachePolicy, CollectorChoice, PolicyCtx};
+
+/// Shared-memory register demotion under GTO; no operand cache.
+pub struct RegdemPolicy {
+    cutoff: u8,
+    penalty: u32,
+    spill: SpillModel,
+    /// Per-warp countdown of scheduler passes spent waiting on in-flight
+    /// spill loads (sized lazily at the first selection).
+    spill_wait: Vec<u32>,
+}
+
+impl RegdemPolicy {
+    /// Capture the demotion cutoff and shared-memory penalty from the
+    /// resolved config.
+    pub fn from_config(cfg: &GpuConfig) -> Self {
+        RegdemPolicy {
+            cutoff: cfg.regdem_cutoff,
+            penalty: cfg.regdem_penalty,
+            spill: SpillModel::new(),
+            spill_wait: Vec::new(),
+        }
+    }
+
+    /// Is `reg` in the demoted (shared-memory-backed) set?
+    fn demoted(&self, reg: u8) -> bool {
+        reg >= self.cutoff
+    }
+
+    /// How many of `instr`'s sources live in shared memory?
+    fn demoted_sources(&self, instr: &Instruction) -> u32 {
+        instr.sources().iter().filter(|&&r| self.demoted(r)).count() as u32
+    }
+
+    /// Total spill transactions issued so far (test hook).
+    #[cfg(test)]
+    fn spill_accesses(&self) -> u64 {
+        self.spill.accesses()
+    }
+}
+
+impl CachePolicy for RegdemPolicy {
+    fn select_collector(&mut self, ctx: &mut PolicyCtx, warp: u8) -> CollectorChoice {
+        if self.spill_wait.len() < ctx.warps.len() {
+            self.spill_wait.resize(ctx.warps.len(), 0);
+        }
+        let wi = warp as usize;
+        // shared memory is slower than the RF: an instruction with demoted
+        // sources waits `penalty` passes per spilled operand before it may
+        // claim a collector (Exit/Ctrl bypass the policy, so `pc` always
+        // points at an operand-collecting instruction here)
+        let instr = &ctx.streams[wi][ctx.warps[wi].pc];
+        let need = self.demoted_sources(instr).saturating_mul(self.penalty);
+        if need > 0 && self.spill_wait[wi] < need {
+            self.spill_wait[wi] += 1;
+            return CollectorChoice::SkipWarp;
+        }
+        self.spill_wait[wi] = 0;
+        match free_unit_reservoir(ctx.collectors, ctx.rng) {
+            Some(ci) => CollectorChoice::Unit(ci),
+            None => {
+                ctx.stats.collector_full_stalls += 1;
+                CollectorChoice::StallCycle { waiting: false }
+            }
+        }
+    }
+
+    fn allocate(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        ci: usize,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+    ) -> AllocResult {
+        let mut res = ctx.collectors[ci].alloc_ocu(warp, instr, now);
+        // demoted sources never reach the RF banks: deliver them through
+        // the spill path (the penalty was already paid in selection) and
+        // charge the shared-memory traffic to the energy model
+        let col = &mut ctx.collectors[ci];
+        let spill = &mut self.spill;
+        let cutoff = self.cutoff;
+        let energy = &mut ctx.stats.energy;
+        let mut spilled = 0u32;
+        res.misses.retain(|slot, reg| {
+            if reg >= cutoff {
+                spill.spill_read(energy);
+                col.deliver(slot);
+                spilled += 1;
+                false
+            } else {
+                true
+            }
+        });
+        res.hits += spilled;
+        res
+    }
+
+    fn capture_writeback(
+        &mut self,
+        ctx: &mut PolicyCtx,
+        _ev: &WbEvent,
+        reg: u8,
+        _near: bool,
+        _port_free: bool,
+    ) -> bool {
+        // demoted destinations spill to shared memory; claiming the event
+        // keeps the result out of the (shrunk) RF write path, and with
+        // zero cache entries the CcuWrite the sub-core charges costs 0 pJ
+        if self.demoted(reg) {
+            self.spill.spill_write(&mut ctx.stats.energy);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuConfig;
+    use crate::isa::OpClass;
+
+    #[test]
+    fn no_cache_storage_is_reported() {
+        let cfg = GpuConfig::table1_baseline();
+        let p = RegdemPolicy::from_config(&cfg);
+        assert!(!p.caching());
+        assert_eq!(p.cache_entries_per_collector(), 0.0);
+        assert_eq!(p.spill_accesses(), 0);
+    }
+
+    #[test]
+    fn demotion_set_is_the_cold_tail() {
+        let mut cfg = GpuConfig::table1_baseline();
+        cfg.regdem_cutoff = 40;
+        let p = RegdemPolicy::from_config(&cfg);
+        assert!(!p.demoted(0));
+        assert!(!p.demoted(39));
+        assert!(p.demoted(40));
+        assert!(p.demoted(255));
+        let instr = Instruction::new(OpClass::Alu, &[10, 40, 50], &[2]);
+        assert_eq!(p.demoted_sources(&instr), 2);
+    }
+
+    #[test]
+    fn penalty_scales_with_demoted_operand_count() {
+        let mut cfg = GpuConfig::table1_baseline();
+        cfg.regdem_cutoff = 32;
+        cfg.regdem_penalty = 3;
+        let p = RegdemPolicy::from_config(&cfg);
+        let hot = Instruction::new(OpClass::Alu, &[1, 2], &[3]);
+        let cold = Instruction::new(OpClass::Alu, &[40, 50], &[3]);
+        assert_eq!(p.demoted_sources(&hot) * cfg.regdem_penalty, 0);
+        assert_eq!(p.demoted_sources(&cold) * cfg.regdem_penalty, 6);
+    }
+}

@@ -17,8 +17,9 @@ use std::fmt;
 use std::sync::{Arc, OnceLock, RwLock};
 
 use super::{
-    BaselinePolicy, BeladyPolicy, BowPolicy, CachePolicy, FifoPolicy, MalekehPolicy,
-    MalekehPrPolicy, MalekehTraditionalPolicy, RfcPolicy, SoftwareRfcPolicy,
+    BaselinePolicy, BeladyPolicy, BowPolicy, CachePolicy, CompressPolicy, FifoPolicy,
+    GreenerPolicy, LtrfPolicy, MalekehPolicy, MalekehPrPolicy, MalekehTraditionalPolicy,
+    RegdemPolicy, RfcPolicy, SoftwareRfcPolicy,
 };
 use crate::config::GpuConfig;
 
@@ -160,6 +161,46 @@ fn builtin_entries() -> Vec<Entry> {
             },
             |cfg| Box::new(BeladyPolicy::from_config(cfg)),
         ),
+        e(
+            PolicyMeta {
+                name: "greener",
+                summary: "power-gated RF slices, only active warps powered (GREENER)",
+                private_per_warp: false,
+                two_level: true,
+                fig17_sweep: true,
+            },
+            |cfg| Box::new(GreenerPolicy::from_config(cfg)),
+        ),
+        e(
+            PolicyMeta {
+                name: "compress",
+                summary: "static compression admission, half-width cache entries (Angerd et al.)",
+                private_per_warp: false,
+                two_level: false,
+                fig17_sweep: true,
+            },
+            |cfg| Box::new(CompressPolicy::from_config(cfg)),
+        ),
+        e(
+            PolicyMeta {
+                name: "ltrf",
+                summary: "compiler register intervals + HW prefetch into per-warp RFC (LTRF)",
+                private_per_warp: false,
+                two_level: true,
+                fig17_sweep: true,
+            },
+            |cfg| Box::new(LtrfPolicy::from_config(cfg)),
+        ),
+        e(
+            PolicyMeta {
+                name: "regdem",
+                summary: "cold registers demoted to shared-memory spills, no cache (RegDem)",
+                private_per_warp: false,
+                two_level: false,
+                fig17_sweep: true,
+            },
+            |cfg| Box::new(RegdemPolicy::from_config(cfg)),
+        ),
     ]
 }
 
@@ -204,6 +245,14 @@ impl Scheme {
     pub const FIFO: Scheme = Scheme(7);
     /// Registry-only policy: CCU hardware with Belady oracle replacement.
     pub const BELADY: Scheme = Scheme(8);
+    /// GREENER: power-gated/sliced RF, two-level active set (PAPERS.md).
+    pub const GREENER: Scheme = Scheme(9);
+    /// Static data-compression admission CCU (Angerd et al., PAPERS.md).
+    pub const COMPRESS: Scheme = Scheme(10);
+    /// LTRF: compiler register intervals + hardware prefetch (PAPERS.md).
+    pub const LTRF: Scheme = Scheme(11);
+    /// RegDem: cold registers demoted to shared-memory spills (PAPERS.md).
+    pub const REGDEM: Scheme = Scheme(12);
 
     /// Every registered scheme, in registration (= figure-report) order.
     pub fn all() -> Vec<Scheme> {
@@ -308,6 +357,10 @@ mod tests {
             (Scheme::MALEKEH_TRADITIONAL, "malekeh_traditional"),
             (Scheme::FIFO, "fifo"),
             (Scheme::BELADY, "belady"),
+            (Scheme::GREENER, "greener"),
+            (Scheme::COMPRESS, "compress"),
+            (Scheme::LTRF, "ltrf"),
+            (Scheme::REGDEM, "regdem"),
         ] {
             assert_eq!(s.name(), name);
             assert_eq!(Scheme::from_name(name), Some(s));
@@ -349,7 +402,27 @@ mod tests {
         let sweep = Scheme::fig17_sweep();
         assert_eq!(
             sweep,
-            vec![Scheme::MALEKEH_TRADITIONAL, Scheme::FIFO, Scheme::BELADY]
+            vec![
+                Scheme::MALEKEH_TRADITIONAL,
+                Scheme::FIFO,
+                Scheme::BELADY,
+                Scheme::GREENER,
+                Scheme::COMPRESS,
+                Scheme::LTRF,
+                Scheme::REGDEM,
+            ]
         );
+    }
+
+    #[test]
+    fn related_work_schemes_structural_flags() {
+        assert!(Scheme::GREENER.two_level());
+        assert!(Scheme::LTRF.two_level());
+        assert!(!Scheme::COMPRESS.two_level());
+        assert!(!Scheme::REGDEM.two_level());
+        for s in [Scheme::GREENER, Scheme::COMPRESS, Scheme::LTRF, Scheme::REGDEM] {
+            assert!(!s.private_per_warp(), "{s} uses the shared collector pool");
+            assert!(s.meta().fig17_sweep, "{s} joins the comparison sweep");
+        }
     }
 }

@@ -176,6 +176,108 @@ fn golden_fingerprints_match() {
     assert!(stale.is_empty(), "stale golden entries (re-bless): {stale:?}");
 }
 
+/// Differential configuration: 4 SMs (so `sim_threads` actually shards
+/// work) with a tighter cycle cap than the golden config — the grid is
+/// 286 points x 2 engines, and a capped run's fingerprint is just as
+/// discriminating.
+fn differential_config(scheme: Scheme, sim_threads: usize) -> GpuConfig {
+    let mut c = GpuConfig::table1_baseline().with_scheme(scheme);
+    c.num_sms = 4;
+    c.sim_threads = sim_threads;
+    c.max_cycles = 15_000;
+    c
+}
+
+fn differential_fingerprint(bench: &str, scheme: Scheme, sim_threads: usize) -> u64 {
+    run_benchmark(&differential_config(scheme, sim_threads), bench, GOLDEN_PROFILE_WARPS)
+        .fingerprint()
+}
+
+#[test]
+fn differential_grid_is_thread_count_invariant() {
+    // every registered policy x every Table II bench on 4 SMs: the epoch
+    // engine must produce bit-identical stats at sim-threads 1 and 4 —
+    // the hardened form of the determinism contract (a policy that reads
+    // thread identity, wall clock, or unordered containers fails here)
+    let points: Vec<(&'static str, Scheme)> = table2()
+        .flat_map(|b| Scheme::all().into_iter().map(move |s| (b.name, s)))
+        .collect();
+    let failures: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let next = AtomicUsize::new(0);
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= points.len() {
+                    break;
+                }
+                let (bench, scheme) = points[i];
+                let serial = differential_fingerprint(bench, scheme, 1);
+                let sharded = differential_fingerprint(bench, scheme, 4);
+                if serial != sharded {
+                    failures.lock().unwrap().push(format!(
+                        "{bench}/{scheme}: {serial:016x} (threads=1) != {sharded:016x} (threads=4)"
+                    ));
+                }
+            });
+        }
+    });
+    let failures = failures.into_inner().unwrap();
+    assert!(
+        failures.is_empty(),
+        "sim-threads changed simulation results:\n{}",
+        failures.join("\n")
+    );
+}
+
+#[test]
+fn related_work_schemes_are_stable_and_diverge() {
+    // the four related-work policies (greener / compress / ltrf / regdem)
+    // must be deterministic AND actually wired: each must differ from the
+    // baseline and from malekeh on at least one cache-pressured Table II
+    // bench, at both engine shardings
+    let benches = ["kmeans", "gemm_t1", "srad_v1"];
+    for threads in [1usize, 4] {
+        let refs: Vec<(u64, u64)> = benches
+            .iter()
+            .map(|b| {
+                (
+                    differential_fingerprint(b, Scheme::BASELINE, threads),
+                    differential_fingerprint(b, Scheme::MALEKEH, threads),
+                )
+            })
+            .collect();
+        for scheme in [Scheme::GREENER, Scheme::COMPRESS, Scheme::LTRF, Scheme::REGDEM] {
+            let mut vs_baseline = false;
+            let mut vs_malekeh = false;
+            for (bench, &(base_fp, mal_fp)) in benches.iter().zip(&refs) {
+                let a = differential_fingerprint(bench, scheme, threads);
+                let b = differential_fingerprint(bench, scheme, threads);
+                assert_eq!(
+                    a, b,
+                    "{bench}/{scheme} (threads={threads}): fingerprint not stable"
+                );
+                vs_baseline |= a != base_fp;
+                vs_malekeh |= a != mal_fp;
+            }
+            assert!(
+                vs_baseline,
+                "{scheme} (threads={threads}) is indistinguishable from the baseline \
+                 on every probe bench — the policy is not wired"
+            );
+            assert!(
+                vs_malekeh,
+                "{scheme} (threads={threads}) is indistinguishable from malekeh \
+                 on every probe bench — the policy is not wired"
+            );
+        }
+    }
+}
+
 #[test]
 fn fifo_and_belady_fingerprints_are_stable_and_distinct() {
     // the two registry-only policies must be deterministic (same

@@ -1,0 +1,150 @@
+//! Property-style tests for the trace transform pipeline
+//! (`trace/io/transform.rs`): hand-rolled input sweeps (benches x seeds x
+//! transform parameters) instead of a property-testing crate, asserting
+//! the invariants that matter to scenario scaling:
+//!
+//! - any composed `subsample ∘ window ∘ remap` result survives the
+//!   `.mtrace` writer -> reader round trip **bit-identically**,
+//! - `apply_all` composes left to right (order is observable),
+//! - degenerate parameters (empty window, identity/full-permutation
+//!   remap, subsample factor past the warp count) degrade gracefully
+//!   instead of panicking.
+
+use malekeh::trace::io::{apply_all, read_str, write_string};
+use malekeh::trace::{find, KernelTrace, Transform};
+
+fn sample(bench: &str, nwarps: usize, seed: u64) -> KernelTrace {
+    KernelTrace::generate(find(bench).unwrap(), nwarps, seed)
+}
+
+/// The composed pipeline under test, parameterised by the sweep.
+fn composed(k: usize, start: usize, len: usize, pairs: Vec<(u8, u8)>) -> Vec<Transform> {
+    vec![
+        Transform::WarpSubsample { keep_one_in: k },
+        Transform::InstructionWindow { start, len },
+        Transform::RegisterRemap { pairs },
+    ]
+}
+
+#[test]
+fn composed_transforms_round_trip_bit_identically() {
+    for bench in ["hotspot", "kmeans", "gemm_t1"] {
+        for seed in [1u64, 7, 1234] {
+            for (k, start, len) in [(1, 0, 1000), (2, 5, 10), (3, 0, 1), (8, 2, 4)] {
+                let t = sample(bench, 8, seed);
+                let out = apply_all(&t, &composed(k, start, len, vec![(2, 200), (7, 3)]));
+                let s1 = write_string(&out).expect("serialize transformed trace");
+                let back = read_str(&s1).expect("parse own writer output");
+                let s2 = write_string(&back).expect("re-serialize");
+                assert_eq!(
+                    s1, s2,
+                    "{bench} seed={seed} k={k} window=[{start},{start}+{len}): \
+                     writer->reader->writer is not bit-identical"
+                );
+                assert_eq!(back.warps, out.warps, "instruction streams drifted");
+                assert_eq!(back.kernel_id, out.kernel_id);
+            }
+        }
+    }
+}
+
+#[test]
+fn apply_all_order_is_observable() {
+    // window-then-subsample == subsample-then-window only for the warp
+    // axis vs instruction axis — but remap-then-window differs from
+    // window-then-remap when the remap collides with sliced-off operands?
+    // No: remap is per-instruction, so those commute. The observable
+    // non-commutation is subsample ∘ window vs window ∘ subsample on a
+    // *warp-varying* trace... which also commutes (different axes). What
+    // cannot commute is two windows: [5,15) then [0,5) picks instructions
+    // 5..10, while [0,5) then [5,15) leaves only the EXIT. Pin that.
+    let t = sample("hotspot", 8, 7);
+    let a = apply_all(
+        &t,
+        &[
+            Transform::InstructionWindow { start: 5, len: 10 },
+            Transform::InstructionWindow { start: 0, len: 5 },
+        ],
+    );
+    let b = apply_all(
+        &t,
+        &[
+            Transform::InstructionWindow { start: 0, len: 5 },
+            Transform::InstructionWindow { start: 5, len: 10 },
+        ],
+    );
+    // a: instructions 5..10 of the original (+EXIT); b: nothing survives
+    for (w, orig) in a.warps.iter().zip(t.warps.iter()) {
+        assert_eq!(w.len(), 6);
+        assert_eq!(&w[..5], &orig[5..10]);
+    }
+    assert!(
+        b.warps.iter().all(|w| w.len() == 1),
+        "second window past the first's end must leave only EXIT"
+    );
+    // and chained remaps apply left to right: r->a then a->b moves the
+    // original r *through* to b, while the reverse order parks it at a.
+    // Probe registers come from the trace itself (the workload generators
+    // only use part of the id space)
+    let used = |reg: u8, tr: &KernelTrace| {
+        tr.warps
+            .iter()
+            .flatten()
+            .any(|i| i.sources().contains(&reg) || i.dests().contains(&reg))
+    };
+    let r = *t.warps[0]
+        .iter()
+        .flat_map(|i| i.sources())
+        .next()
+        .expect("probe trace has a source operand");
+    let mut free = (0..=255u8).filter(|&x| !used(x, &t));
+    let a = free.next().expect("an unused register id exists");
+    let b = free.next().expect("a second unused register id exists");
+    let c = apply_all(
+        &t,
+        &[
+            Transform::RegisterRemap { pairs: vec![(r, a)] },
+            Transform::RegisterRemap { pairs: vec![(a, b)] },
+        ],
+    );
+    let d = apply_all(
+        &t,
+        &[
+            Transform::RegisterRemap { pairs: vec![(a, b)] },
+            Transform::RegisterRemap { pairs: vec![(r, a)] },
+        ],
+    );
+    assert!(!used(r, &c) && !used(a, &c) && used(b, &c), "r must chain through to b");
+    assert!(
+        used(a, &d) && !used(b, &d),
+        "reverse remap order must park r at a (the a->b hop ran first, on nothing)"
+    );
+}
+
+#[test]
+fn degenerate_parameters_do_not_panic() {
+    let t = sample("hotspot", 8, 7);
+    // empty window: every warp degrades to a bare EXIT and still
+    // serializes/parses
+    let empty = apply_all(&t, &[Transform::InstructionWindow { start: 0, len: 0 }]);
+    assert!(empty.warps.iter().all(|w| w.len() == 1));
+    let s = write_string(&empty).expect("empty-window trace serializes");
+    assert_eq!(read_str(&s).expect("and parses").warps, empty.warps);
+    // window entirely past the end (saturating arithmetic territory)
+    let past = apply_all(
+        &t,
+        &[Transform::InstructionWindow { start: usize::MAX, len: usize::MAX }],
+    );
+    assert!(past.warps.iter().all(|w| w.len() == 1));
+    // full-permutation remap (every id named, including fixpoints) is a
+    // bijection: applying it then its inverse restores the trace
+    let fwd: Vec<(u8, u8)> = (0..=255u8).map(|r| (r, r.wrapping_add(1))).collect();
+    let inv: Vec<(u8, u8)> = (0..=255u8).map(|r| (r, r.wrapping_sub(1))).collect();
+    let there = apply_all(&t, &[Transform::RegisterRemap { pairs: fwd }]);
+    let back = apply_all(&there, &[Transform::RegisterRemap { pairs: inv }]);
+    assert_eq!(back.warps, t.warps, "permutation remap must invert cleanly");
+    // subsample factor beyond the warp count keeps exactly warp 0
+    let one = apply_all(&t, &[Transform::WarpSubsample { keep_one_in: 1000 }]);
+    assert_eq!(one.warps.len(), 1);
+    assert_eq!(one.warps[0], t.warps[0]);
+}
