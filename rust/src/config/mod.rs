@@ -334,6 +334,92 @@ impl GpuConfig {
         Ok(())
     }
 
+    /// Canonical `key = value` serialisation of every **behaviour-bearing**
+    /// field, in declaration order — the preimage of
+    /// [`GpuConfig::fingerprint`].
+    ///
+    /// `sim_threads` is deliberately excluded: it is a wall-clock-only
+    /// knob (results are bit-identical at any thread count — the crate's
+    /// determinism contract), so a result computed at `--sim-threads 4`
+    /// must content-address identically to the `--sim-threads 1`
+    /// reference run. Every key here parses back through
+    /// [`GpuConfig::set`] (enforced by a unit test), so the canonical
+    /// form doubles as a loadable config file.
+    pub fn canonical_string(&self) -> String {
+        let mut s = String::with_capacity(1024);
+        let mut kv = |k: &str, v: String| {
+            s.push_str(k);
+            s.push_str(" = ");
+            s.push_str(&v);
+            s.push('\n');
+        };
+        kv("num_sms", self.num_sms.to_string());
+        kv("sub_cores_per_sm", self.sub_cores_per_sm.to_string());
+        kv("warps_per_sm", self.warps_per_sm.to_string());
+        kv("banks_per_sub_core", self.banks_per_sub_core.to_string());
+        kv("collectors_per_sub_core", self.collectors_per_sub_core.to_string());
+        kv("collector_ports", self.collector_ports.to_string());
+        kv("ct_entries", self.ct_entries.to_string());
+        kv("bow_window", self.bow_window.to_string());
+        kv("rfc_entries", self.rfc_entries.to_string());
+        kv(
+            "active_warps_per_sub_core",
+            self.active_warps_per_sub_core.to_string(),
+        );
+        kv("swrfc_strand_len", self.swrfc_strand_len.to_string());
+        kv("greener_wakeup", self.greener_wakeup.to_string());
+        kv("compress_regs", self.compress_regs.to_string());
+        kv("ltrf_prefetch", self.ltrf_prefetch.to_string());
+        kv("regdem_cutoff", self.regdem_cutoff.to_string());
+        kv("regdem_penalty", self.regdem_penalty.to_string());
+        kv("scheme", self.scheme.name().to_string());
+        kv(
+            "sthld",
+            match self.sthld {
+                SthldMode::Dynamic => "dynamic".to_string(),
+                SthldMode::Static(v) => v.to_string(),
+            },
+        );
+        kv("sthld_interval", self.sthld_interval.to_string());
+        // f64 Display prints the shortest round-tripping decimal, so the
+        // canonical text is both readable and bit-exact
+        kv("sthld_epsilon", self.sthld_epsilon.to_string());
+        kv("sthld_max", self.sthld_max.to_string());
+        kv("rthld", self.rthld.to_string());
+        kv(
+            "traditional_replacement",
+            self.traditional_replacement.to_string(),
+        );
+        kv("no_write_filter", self.no_write_filter.to_string());
+        kv("alu_latency", self.alu.latency.to_string());
+        kv("sfu_latency", self.sfu.latency.to_string());
+        kv("mma_latency", self.mma.latency.to_string());
+        kv("mma_initiation", self.mma.initiation.to_string());
+        kv("lds_latency", self.lds_latency.to_string());
+        kv("l1_bytes", self.l1_bytes.to_string());
+        kv("l1_ways", self.l1_ways.to_string());
+        kv("line_bytes", self.line_bytes.to_string());
+        kv("l1_latency", self.l1_latency.to_string());
+        kv("l1_mshrs", self.l1_mshrs.to_string());
+        kv("l2_bytes", self.l2_bytes.to_string());
+        kv("l2_ways", self.l2_ways.to_string());
+        kv("l2_latency", self.l2_latency.to_string());
+        kv("dram_latency", self.dram_latency.to_string());
+        kv("dram_reqs_per_cycle", self.dram_reqs_per_cycle.to_string());
+        kv("max_cycles", self.max_cycles.to_string());
+        kv("seed", self.seed.to_string());
+        s
+    }
+
+    /// FNV-1a digest of [`GpuConfig::canonical_string`] — one third of the
+    /// persistent result store's content address
+    /// (`config x workload x policy`, see [`crate::serve::store`]). Two
+    /// configs fingerprint equal iff every behaviour-bearing field is
+    /// equal; `sim_threads` never participates.
+    pub fn fingerprint(&self) -> u64 {
+        crate::util::fnv1a_bytes(self.canonical_string().as_bytes())
+    }
+
     /// Sanity-check invariants; returns a description of the first violation.
     pub fn validate(&self) -> Result<(), String> {
         if self.num_sms == 0 {
@@ -473,6 +559,51 @@ mod tests {
         let mut c = GpuConfig::table1_baseline().with_scheme(Scheme::RFC);
         c.active_warps_per_sub_core = 100;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn canonical_string_parses_back_through_set() {
+        // the canonical form doubles as a loadable config file: every
+        // line must round-trip through the override parser and reproduce
+        // the same fingerprint
+        let mut c = GpuConfig::table1_baseline().with_scheme(Scheme::MALEKEH);
+        c.sthld = SthldMode::Static(4);
+        c.sthld_epsilon = 0.125;
+        let pairs = parse_kv_str(&c.canonical_string()).unwrap();
+        let mut rebuilt = GpuConfig::table1_baseline();
+        rebuilt.apply(&pairs).unwrap();
+        rebuilt.sim_threads = c.sim_threads;
+        assert_eq!(rebuilt, c);
+        assert_eq!(rebuilt.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_tracks_behaviour_fields_only() {
+        let base = GpuConfig::table1_baseline();
+        let fp = base.fingerprint();
+        assert_eq!(fp, base.clone().fingerprint(), "pure function of fields");
+
+        // every behaviour-bearing change must show
+        let mut c = base.clone();
+        c.seed = 1;
+        assert_ne!(fp, c.fingerprint(), "seed must show");
+        let mut c = base.clone();
+        c.rthld += 1;
+        assert_ne!(fp, c.fingerprint(), "rthld must show");
+        let c = base.clone().with_scheme(Scheme::MALEKEH);
+        assert_ne!(fp, c.fingerprint(), "scheme must show");
+        let mut c = base.clone();
+        c.sthld = SthldMode::Static(0);
+        assert_ne!(fp, c.fingerprint(), "sthld mode must show");
+        let mut c = base.clone();
+        c.max_cycles = 40_000;
+        assert_ne!(fp, c.fingerprint(), "max_cycles must show");
+
+        // sim_threads is wall-clock only: results are bit-identical at
+        // any thread count, so the content address must not split on it
+        let mut c = base.clone();
+        c.sim_threads = 4;
+        assert_eq!(fp, c.fingerprint(), "sim_threads must NOT show");
     }
 
     #[test]

@@ -82,6 +82,13 @@ impl EnergyCounts {
         self.counts
     }
 
+    /// Rebuild from a raw column-order row — the inverse of
+    /// [`EnergyCounts::raw`], used by the persistent result store to
+    /// deserialise records losslessly.
+    pub fn from_raw(counts: [u64; NEVENTS]) -> Self {
+        EnergyCounts { counts }
+    }
+
     /// Raw row in artifact column order (f32 for the AOT path).
     pub fn as_f32_row(&self) -> [f32; NEVENTS] {
         let mut r = [0f32; NEVENTS];
@@ -182,6 +189,14 @@ impl EnergyModel {
 mod tests {
     use super::*;
     use crate::config::Scheme;
+
+    #[test]
+    fn raw_roundtrips_through_from_raw() {
+        let mut a = EnergyCounts::new();
+        a.add(EventKind::BankRead, 7);
+        a.add(EventKind::LeakProxy, 123_456);
+        assert_eq!(EnergyCounts::from_raw(a.raw()), a);
+    }
 
     #[test]
     fn counts_add_and_merge() {

@@ -47,12 +47,13 @@ pub use plan::{Plan, SimPoint};
 pub use table::{geomean, mean, Table};
 
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::config::{GpuConfig, Scheme, SthldMode};
 use crate::energy::EnergyModel;
+use crate::serve::store::{Store, StoreKey};
 use crate::sim::{run_benchmark, run_workload};
 use crate::stats::Stats;
 use crate::trace::{table2, Suite, Workload};
@@ -77,6 +78,13 @@ pub struct ExpOpts {
     /// (0) divides the available cores by this value. Results are
     /// bit-identical at any setting.
     pub sim_threads: usize,
+    /// Back the in-process memo cache with a persistent content-addressed
+    /// result store (`serve::Store`) rooted here. Points already in the
+    /// store are served without simulating; fresh results are written
+    /// back, so re-running a figure suite across process restarts is
+    /// warm-cache reads. `None` (the default) keeps the memo in-memory
+    /// only.
+    pub store_dir: Option<PathBuf>,
 }
 
 impl Default for ExpOpts {
@@ -88,6 +96,7 @@ impl Default for ExpOpts {
             quick: false,
             jobs: 0,
             sim_threads: 1,
+            store_dir: None,
         }
     }
 }
@@ -104,7 +113,8 @@ fn parse_val<T: std::str::FromStr>(args: &[String], i: usize, flag: &str) -> T {
 impl ExpOpts {
     /// Parse bench-binary argv: `--full` (10 SMs, all benchmarks),
     /// `--quick`, `--sms N`, `--seed N`, `--jobs N`, `--serial`,
-    /// `--sim-threads N` (intra-simulation SM parallelism).
+    /// `--sim-threads N` (intra-simulation SM parallelism),
+    /// `--store DIR` (persistent result store).
     pub fn from_args(args: &[String]) -> ExpOpts {
         let mut o = ExpOpts::default();
         let mut i = 0;
@@ -131,6 +141,10 @@ impl ExpOpts {
                 "--sim-threads" => {
                     i += 1;
                     o.sim_threads = parse_val(args, i, "--sim-threads");
+                }
+                "--store" => {
+                    i += 1;
+                    o.store_dir = Some(parse_val::<PathBuf>(args, i, "--store"));
                 }
                 _ => {}
             }
@@ -188,12 +202,23 @@ impl ExpOpts {
 pub struct Runner {
     opts: ExpOpts,
     pub(crate) cache: Mutex<HashMap<(String, Scheme, u64), Stats>>,
+    pub(crate) store: Option<Store>,
 }
 
 impl Runner {
-    /// New runner.
+    /// New runner. When `opts.store_dir` is set the memo cache is backed
+    /// by the persistent store; a store that cannot be opened degrades to
+    /// in-memory-only operation with a warning rather than failing the
+    /// experiment.
     pub fn new(opts: ExpOpts) -> Self {
-        Runner { opts, cache: Mutex::new(HashMap::new()) }
+        let store = opts.store_dir.as_ref().and_then(|dir| match Store::open(dir) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("warning: --store {}: {e}; running without", dir.display());
+                None
+            }
+        });
+        Runner { opts, cache: Mutex::new(HashMap::new()), store }
     }
 
     /// Options in use.
@@ -242,8 +267,9 @@ impl Runner {
     }
 
     /// Simulate (cached) an arbitrary workload source. Trace-file points
-    /// are keyed by `trace:<path>`, so they can never collide with
-    /// registry benchmark names in the memo cache.
+    /// are keyed by `trace:<content-fingerprint>` (never the path), so
+    /// editing a trace file in place invalidates its cached stats and
+    /// two paths to identical bytes share one entry.
     pub fn run_workload_cfg_key(
         &self,
         workload: &Workload,
@@ -252,17 +278,43 @@ impl Runner {
         make: impl FnOnce(&ExpOpts) -> GpuConfig,
     ) -> Stats {
         let name = workload.cache_name();
-        let k = (name.clone(), scheme, key);
+        let k = (workload.cache_key(), scheme, key);
         if let Some(s) = self.cache.lock().unwrap().get(&k) {
             return s.clone();
         }
         let cfg = make(&self.opts);
+        if let Some(stats) = self.store_lookup(&cfg, workload) {
+            self.cache.lock().unwrap().insert(k, stats.clone());
+            return stats;
+        }
         let t0 = Instant::now();
         let stats = run_workload(&cfg, workload, self.opts.profile_warps)
             .unwrap_or_else(|e| panic!("[{name}] {e}"));
         plan::log_point(&name, scheme, key, &stats, t0.elapsed().as_secs_f64());
+        self.store_publish(&cfg, workload, &stats);
         self.cache.lock().unwrap().insert(k, stats.clone());
         stats
+    }
+
+    /// Consult the persistent store for a point (no-op without `--store`).
+    pub(crate) fn store_lookup(&self, cfg: &GpuConfig, workload: &Workload) -> Option<Stats> {
+        let store = self.store.as_ref()?;
+        let key = StoreKey::for_run(cfg, workload, self.opts.profile_warps).ok()?;
+        store.get(&key)
+    }
+
+    /// Write a freshly simulated point through to the persistent store.
+    /// Store write failures are warnings, never experiment failures.
+    pub(crate) fn store_publish(&self, cfg: &GpuConfig, workload: &Workload, stats: &Stats) {
+        let Some(store) = self.store.as_ref() else { return };
+        match StoreKey::for_run(cfg, workload, self.opts.profile_warps) {
+            Ok(key) => {
+                if let Err(e) = store.put(&key, stats) {
+                    eprintln!("warning: store write failed: {e}");
+                }
+            }
+            Err(e) => eprintln!("warning: store key for {}: {e}", workload.cache_name()),
+        }
     }
 }
 
@@ -735,6 +787,7 @@ mod tests {
             quick: true,
             jobs: 1,
             sim_threads: 1,
+            store_dir: None,
         }
     }
 

@@ -48,7 +48,10 @@ impl SimPoint {
     }
 
     fn cache_key(&self) -> (String, Scheme, u64) {
-        (self.workload.cache_name(), self.scheme, self.key)
+        // content-based (`Workload::cache_key`), matching
+        // `Runner::run_workload_cfg_key` — NOT the display label: a trace
+        // file edited in place must become a fresh point, not a stale hit
+        (self.workload.cache_key(), self.scheme, self.key)
     }
 }
 
@@ -187,8 +190,18 @@ impl Runner {
                     }
                     let p = todo[i];
                     let t0 = Instant::now();
-                    let stats = run_workload(&p.cfg, &p.workload, profile_warps)
-                        .unwrap_or_else(|e| panic!("[{}] {e}", p.label()));
+                    // persistent store first (no-op without --store), then
+                    // simulate-and-publish — same tiering as the serial path
+                    let stats = match self.store_lookup(&p.cfg, &p.workload) {
+                        Some(stats) => stats,
+                        None => {
+                            let stats =
+                                run_workload(&p.cfg, &p.workload, profile_warps)
+                                    .unwrap_or_else(|e| panic!("[{}] {e}", p.label()));
+                            self.store_publish(&p.cfg, &p.workload, &stats);
+                            stats
+                        }
+                    };
                     results.lock().unwrap()[i] =
                         Some((stats, t0.elapsed().as_secs_f64()));
                 });
@@ -227,6 +240,7 @@ mod tests {
             quick: true,
             jobs,
             sim_threads: 1,
+            store_dir: None,
         }
     }
 

@@ -45,6 +45,7 @@ pub mod energy;
 pub mod harness;
 pub mod isa;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod stats;
 pub mod trace;

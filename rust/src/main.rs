@@ -9,13 +9,18 @@
 //!   trace info         inspect a `.mtrace` file
 //!   fig <id>           regenerate a paper figure (1,2,7,9,10,12..17)
 //!   headline           the abstract's headline comparison
+//!   serve              simulation daemon over TCP (docs/SERVING.md)
+//!   submit             submit one simulation to a running daemon
+//!   serve-ctl          ping/stats/shutdown a running daemon
+//!   store              inspect or garbage-collect a result store
 //!   list               list benchmarks and schemes
 //!
 //! Common options: `--scheme S`, `--sms N`, `--quick`, `--full`,
 //! `--jobs N` / `--serial` (experiment shard count),
+//! `--store DIR` (persistent content-addressed result store),
 //! `-s key=value` (any `config::GpuConfig` key).
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use malekeh::cli::Cli;
@@ -23,9 +28,12 @@ use malekeh::config::{GpuConfig, Scheme};
 use malekeh::energy::EnergyModel;
 use malekeh::harness::{self, ExpOpts, Runner};
 use malekeh::isa::OpClass;
-use malekeh::sim::{run_benchmark, run_trace};
+use malekeh::serve::protocol::{JobSpec, JobState, PROTOCOL_VERSION};
+use malekeh::serve::store::DEFAULT_STORE_DIR;
+use malekeh::serve::{Client, Server, ServerOpts, Store, StoreKey};
+use malekeh::sim::{run_trace, run_workload};
 use malekeh::stats::Stats;
-use malekeh::trace::{self, io as trace_io, KernelTrace, Transform, BENCHMARKS};
+use malekeh::trace::{self, io as trace_io, KernelTrace, Transform, Workload, BENCHMARKS};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -46,6 +54,10 @@ fn run(args: &[String]) -> Result<(), String> {
         "trace" => cmd_trace(&cli),
         "fig" => cmd_fig(&cli),
         "headline" => cmd_headline(&cli),
+        "serve" => cmd_serve(&cli),
+        "submit" => cmd_submit(&cli),
+        "serve-ctl" => cmd_serve_ctl(&cli),
+        "store" => cmd_store(&cli),
         "list" => cmd_list(),
         "policies" => cmd_policies(),
         "" | "help" | "--help" => {
@@ -63,7 +75,7 @@ fn print_help() {
          USAGE: malekeh <command> [args]\n\
          \n\
          COMMANDS:\n\
-           simulate <bench> [--scheme S] [--sim-threads N] [-s k=v]...\n\
+           simulate <bench> [--scheme S] [--sim-threads N] [--json] [-s k=v]...\n\
                                                        simulate one benchmark\n\
            simulate --trace <file> [--scheme S] [--reannotate]   replay a .mtrace\n\
            annotate <bench> [--engine rust|pjrt]       compiler reuse pass\n\
@@ -72,6 +84,12 @@ fn print_help() {
            trace info <file>                           inspect a .mtrace file\n\
            fig <1|2|7|9|10|12|13|14|15|16|17> [--quick|--full] [--jobs N|--serial]\n\
            headline [--quick|--full] [--jobs N|--serial]   abstract's comparison\n\
+           serve [--addr H:P] [--workers N] [--store DIR|--no-store]\n\
+                                                       simulation daemon (TCP)\n\
+           submit <bench> [--addr H:P] [--scheme S] [--sms N] [--no-wait] [-s k=v]...\n\
+           submit --trace <daemon-side file> [--addr H:P]   submit a .mtrace replay\n\
+           serve-ctl <ping|stats|shutdown> [--addr H:P]\n\
+           store <info|gc --budget BYTES> [--store DIR]\n\
            list                                        benchmarks + schemes\n\
            policies                                    the scheme registry, one\n\
                                                        line per policy\n\
@@ -81,6 +99,9 @@ fn print_help() {
          simulation can itself step its SMs in parallel (--sim-threads N,\n\
          default 1; the core budget is shared with --jobs). Output tables\n\
          and stats fingerprints are bit-identical at any thread count.\n\
+         --store DIR backs simulate/fig/headline (and the daemon) with a\n\
+         persistent content-addressed result store: known points are served\n\
+         from disk, fresh ones written back (docs/SERVING.md).\n\
          Recorded traces replay bit-identically to their builtin run\n\
          (docs/TRACES.md; engine details in docs/ARCHITECTURE.md)."
     );
@@ -100,9 +121,35 @@ fn build_config(cli: &Cli) -> Result<GpuConfig, String> {
     Ok(cfg)
 }
 
+/// Simulate `workload`, optionally through a persistent store: verified
+/// record → serve it without simulating; miss → simulate and write back.
+fn run_stored(
+    cfg: &GpuConfig,
+    workload: &Workload,
+    profile_warps: usize,
+    store: Option<&Store>,
+) -> Result<Stats, String> {
+    let Some(store) = store else {
+        return run_workload(cfg, workload, profile_warps);
+    };
+    let key = StoreKey::for_run(cfg, workload, profile_warps)?;
+    if let Some(stats) = store.get(&key) {
+        return Ok(stats);
+    }
+    let stats = run_workload(cfg, workload, profile_warps)?;
+    if let Err(e) = store.put(&key, &stats) {
+        eprintln!("warning: store write failed: {e}");
+    }
+    Ok(stats)
+}
+
 fn cmd_simulate(cli: &Cli) -> Result<(), String> {
     let cfg = build_config(cli)?;
     let profile_warps = cli.opt_num("profile-warps", 2usize)?;
+    let store = match cli.options.get("store") {
+        Some(dir) => Some(Store::open(dir).map_err(|e| format!("--store {dir}: {e}"))?),
+        None => None,
+    };
     let t0 = std::time::Instant::now();
     let (label, stats): (String, Stats) = if let Some(file) = cli.options.get("trace")
     {
@@ -124,17 +171,35 @@ fn cmd_simulate(cli: &Cli) -> Result<(), String> {
         let label = loaded.name.clone();
         // --reannotate discards recorded near/far bits and re-runs the
         // compiler pass under the current config
-        let force = cli.has_flag("reannotate");
-        (label, run_trace(&cfg, loaded, profile_warps, force))
+        if cli.has_flag("reannotate") {
+            // re-annotation changes results without changing the trace
+            // bytes, so the content-addressed store must stay out of it
+            if store.is_some() {
+                eprintln!("note: --reannotate bypasses --store");
+            }
+            (label, run_trace(&cfg, loaded, profile_warps, true))
+        } else {
+            let workload = Workload::trace_file(path);
+            (label, run_stored(&cfg, &workload, profile_warps, store.as_ref())?)
+        }
     } else {
         let bench = cli
             .positional
             .first()
             .ok_or("usage: simulate <bench> (or simulate --trace <file>)")?
             .as_str();
-        (bench.to_string(), run_benchmark(&cfg, bench, profile_warps))
+        let workload = Workload::builtin(bench);
+        (
+            bench.to_string(),
+            run_stored(&cfg, &workload, profile_warps, store.as_ref())?,
+        )
     };
     let dt = t0.elapsed().as_secs_f64();
+    if cli.has_flag("json") {
+        // one machine-readable object: all counters + the fingerprint
+        println!("{}", stats.to_json());
+        return Ok(());
+    }
     let model = EnergyModel::for_config(&cfg);
     println!("benchmark            {label}");
     println!("scheme               {}", cfg.scheme);
@@ -354,6 +419,7 @@ fn exp_opts(cli: &Cli) -> Result<ExpOpts, String> {
     }
     o.jobs = cli.opt_num("jobs", o.jobs)?;
     o.sim_threads = cli.opt_num("sim-threads", o.sim_threads)?;
+    o.store_dir = cli.options.get("store").map(PathBuf::from);
     Ok(o)
 }
 
@@ -382,6 +448,126 @@ fn cmd_fig(cli: &Cli) -> Result<(), String> {
 fn cmd_headline(cli: &Cli) -> Result<(), String> {
     let runner = Runner::new(exp_opts(cli)?);
     harness::headline(&runner).print();
+    Ok(())
+}
+
+// ------------------------- simulation-as-a-service --------------------------
+
+/// Daemon address shared by `serve` / `submit` / `serve-ctl`.
+fn serve_addr(cli: &Cli) -> String {
+    cli.opt_or("addr", "127.0.0.1:7757").to_string()
+}
+
+fn cmd_serve(cli: &Cli) -> Result<(), String> {
+    let store_dir = if cli.has_flag("no-store") {
+        None
+    } else {
+        Some(PathBuf::from(cli.opt_or("store", DEFAULT_STORE_DIR)))
+    };
+    let server = Server::bind(ServerOpts {
+        addr: serve_addr(cli),
+        workers: cli.opt_num("workers", 0usize)?,
+        store_dir: store_dir.clone(),
+    })?;
+    eprintln!(
+        "malekeh serve: {} on {} (store: {})",
+        PROTOCOL_VERSION,
+        server.local_addr(),
+        store_dir
+            .as_deref()
+            .map_or("disabled".to_string(), |d| d.display().to_string()),
+    );
+    server.run()
+}
+
+fn cmd_submit(cli: &Cli) -> Result<(), String> {
+    let mut spec = if let Some(path) = cli.options.get("trace") {
+        // resolved against the DAEMON's working directory, not ours
+        JobSpec::trace(path)
+    } else {
+        let bench = cli.positional.first().ok_or(
+            "usage: submit <bench> [--addr H:P] (or submit --trace <daemon-side path>)",
+        )?;
+        JobSpec::bench(bench)
+    };
+    spec.scheme = cli.opt_or("scheme", "baseline").to_string();
+    spec.sms = cli.opt_num("sms", 2usize)?;
+    spec.profile_warps = cli.opt_num("profile-warps", 2usize)?;
+    spec.overrides = cli.overrides.clone();
+    let mut client = Client::connect(&serve_addr(cli))?;
+    let (id, state) = client.submit(&spec)?;
+    eprintln!("job {id} {}", state.as_str());
+    if cli.has_flag("no-wait") {
+        // print the id for scripting; STATUS/RESULT pick it up later
+        println!("{id}");
+        return Ok(());
+    }
+    if client.wait(id)? != JobState::Done {
+        // RESULT on a failed job carries the reason as the error
+        return match client.result_json(id) {
+            Err(reason) => Err(reason),
+            Ok(_) => Err(format!("job {id} failed")),
+        };
+    }
+    println!("{}", client.result_json(id)?);
+    Ok(())
+}
+
+fn cmd_serve_ctl(cli: &Cli) -> Result<(), String> {
+    let sub = cli
+        .positional
+        .first()
+        .ok_or("usage: serve-ctl <ping|stats|shutdown> [--addr H:P]")?
+        .as_str();
+    let mut client = Client::connect(&serve_addr(cli))?;
+    match sub {
+        "ping" => println!("{}", client.ping()?),
+        "stats" => println!("{}", client.stats_json()?),
+        "shutdown" => {
+            client.shutdown()?;
+            println!("shutdown acknowledged");
+        }
+        other => return Err(format!("unknown serve-ctl subcommand {other:?}")),
+    }
+    Ok(())
+}
+
+fn cmd_store(cli: &Cli) -> Result<(), String> {
+    let sub = cli
+        .positional
+        .first()
+        .ok_or("usage: store <info|gc> [--store DIR]")?
+        .as_str();
+    let dir = PathBuf::from(cli.opt_or("store", DEFAULT_STORE_DIR));
+    if !dir.is_dir() {
+        // inspecting or collecting a store that was never created should
+        // not create it as a side effect
+        println!("store {} does not exist (0 records)", dir.display());
+        return Ok(());
+    }
+    let store = Store::open(&dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    match sub {
+        "info" => {
+            let info = store.info().map_err(|e| format!("{}: {e}", dir.display()))?;
+            println!("store     {}", dir.display());
+            println!("records   {}", info.records);
+            println!("bytes     {}", info.bytes);
+        }
+        "gc" => {
+            let budget: u64 = cli
+                .options
+                .get("budget")
+                .ok_or("store gc requires --budget <bytes>")?
+                .parse()
+                .map_err(|_| "bad --budget (want a byte count)".to_string())?;
+            let report = store.gc(budget).map_err(|e| format!("{}: {e}", dir.display()))?;
+            println!(
+                "deleted {} record(s), reclaimed {} bytes; {} record(s), {} bytes remain",
+                report.deleted, report.reclaimed, report.after.records, report.after.bytes
+            );
+        }
+        other => return Err(format!("unknown store subcommand {other:?} (info|gc)")),
+    }
     Ok(())
 }
 

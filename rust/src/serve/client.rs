@@ -1,0 +1,127 @@
+//! Client side of the serve protocol (`malekeh submit` / `serve-ctl`).
+//!
+//! One [`Client`] = one TCP connection. Every method is a synchronous
+//! request/response round-trip; [`Client::wait`] blocks server-side (the
+//! daemon parks the connection handler until the job settles), so a
+//! submit-and-wait needs no client polling loop.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use super::protocol::{JobSpec, JobState, Request, Response, PROTOCOL_VERSION};
+
+/// A connected protocol client.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    /// Connect to a daemon and verify its greeting speaks our protocol
+    /// version.
+    pub fn connect(addr: &str) -> Result<Client, String> {
+        let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        let writer = stream.try_clone().map_err(|e| format!("connect {addr}: {e}"))?;
+        let mut client = Client { reader: BufReader::new(stream), writer };
+        let greeting = client.read_line()?;
+        match greeting.split_ascii_whitespace().next() {
+            Some(v) if v == PROTOCOL_VERSION => Ok(client),
+            _ => Err(format!(
+                "{addr} is not a {PROTOCOL_VERSION} server (greeting {greeting:?})"
+            )),
+        }
+    }
+
+    fn read_line(&mut self) -> Result<String, String> {
+        let mut line = String::new();
+        let n = self
+            .reader
+            .read_line(&mut line)
+            .map_err(|e| format!("read: {e}"))?;
+        if n == 0 {
+            return Err("server closed the connection".to_string());
+        }
+        Ok(line.trim_end_matches(['\r', '\n']).to_string())
+    }
+
+    /// One request/response round-trip; `ERR` responses surface as `Err`.
+    fn call(&mut self, req: &Request) -> Result<String, String> {
+        self.writer
+            .write_all(format!("{}\n", req.encode()).as_bytes())
+            .and_then(|()| self.writer.flush())
+            .map_err(|e| format!("write: {e}"))?;
+        match Response::parse(&self.read_line()?)? {
+            Response::Ok(payload) => Ok(payload),
+            Response::Err(msg) => Err(msg),
+        }
+    }
+
+    /// Strip the expected payload tag (`job`, `result <id>`, ...).
+    fn expect_tag<'a>(payload: &'a str, tag: &str) -> Result<&'a str, String> {
+        payload
+            .strip_prefix(tag)
+            .map(str::trim_start)
+            .ok_or_else(|| format!("unexpected payload {payload:?} (want {tag} ...)"))
+    }
+
+    /// PING; returns the pong payload (carries the server's version).
+    pub fn ping(&mut self) -> Result<String, String> {
+        self.call(&Request::Ping)
+    }
+
+    /// SUBMIT; returns the job id and its state at submission time
+    /// (`done` means a dedupe or store hit served it instantly).
+    pub fn submit(&mut self, spec: &JobSpec) -> Result<(u64, JobState), String> {
+        let payload = self.call(&Request::Submit(spec.clone()))?;
+        Response::parse_job_payload(&payload)
+    }
+
+    /// STATUS; non-blocking state query.
+    pub fn status(&mut self, id: u64) -> Result<JobState, String> {
+        let payload = self.call(&Request::Status(id))?;
+        Ok(Response::parse_job_payload(&payload)?.1)
+    }
+
+    /// WAIT; blocks until the job settles, returns `done` or `failed`.
+    pub fn wait(&mut self, id: u64) -> Result<JobState, String> {
+        let payload = self.call(&Request::Wait(id))?;
+        Ok(Response::parse_job_payload(&payload)?.1)
+    }
+
+    /// RESULT; the finished job's stats as one-line JSON.
+    pub fn result_json(&mut self, id: u64) -> Result<String, String> {
+        let payload = self.call(&Request::Result(id))?;
+        let rest = Self::expect_tag(&payload, "result")?;
+        match rest.split_once(' ') {
+            Some((got_id, json)) if got_id == id.to_string() => Ok(json.to_string()),
+            _ => Err(format!("unexpected RESULT payload {payload:?}")),
+        }
+    }
+
+    /// STATS; server health as one-line JSON.
+    pub fn stats_json(&mut self) -> Result<String, String> {
+        let payload = self.call(&Request::Stats)?;
+        Ok(Self::expect_tag(&payload, "stats")?.to_string())
+    }
+
+    /// SHUTDOWN the daemon.
+    pub fn shutdown(&mut self) -> Result<(), String> {
+        self.call(&Request::Shutdown).map(|_| ())
+    }
+
+    /// Convenience: submit, wait, and fetch the result JSON in one call.
+    pub fn run_to_completion(&mut self, spec: &JobSpec) -> Result<(u64, String), String> {
+        let (id, state) = self.submit(spec)?;
+        if state != JobState::Done {
+            let settled = self.wait(id)?;
+            if settled != JobState::Done {
+                // surface the failure reason RESULT carries
+                return match self.result_json(id) {
+                    Err(e) => Err(e),
+                    Ok(_) => Err(format!("job {id} settled as {}", settled.as_str())),
+                };
+            }
+        }
+        Ok((id, self.result_json(id)?))
+    }
+}

@@ -1,0 +1,406 @@
+//! Versioned line-delimited request/response wire format.
+//!
+//! One connection = one greeting line from the server
+//! (`MALEKEH-SERVE/1 ready`), then any number of request/response pairs.
+//! Every message is exactly one `\n`-terminated line of ASCII; values
+//! that could contain whitespace (trace paths, policy names) are
+//! percent-escaped. The full grammar with a worked example lives in
+//! `docs/SERVING.md`; this module is the single source of truth for
+//! encode/parse on both sides, so client and server cannot drift.
+//!
+//! Requests:
+//!
+//! ```text
+//! PING
+//! SUBMIT bench=<name>|trace=<path> [scheme=<s>] [sms=<n>]
+//!        [profile_warps=<n>] [set:<key>=<value>]...
+//! STATUS <job-id>
+//! WAIT <job-id>
+//! RESULT <job-id>
+//! STATS
+//! SHUTDOWN
+//! ```
+//!
+//! Responses are `OK <payload>` or `ERR <message>`; SUBMIT/STATUS/WAIT
+//! answer with the payload `job <id> <queued|running|done|failed>`,
+//! RESULT with `result <id> <one-line stats JSON>`, STATS with
+//! `stats <one-line server-health JSON>`.
+
+/// Protocol identifier; also the first token of the server greeting.
+/// Bump the suffix on any incompatible grammar change — a client checks
+/// it before speaking.
+pub const PROTOCOL_VERSION: &str = "MALEKEH-SERVE/1";
+
+/// Full greeting line the server sends on accept.
+pub fn greeting() -> String {
+    format!("{PROTOCOL_VERSION} ready")
+}
+
+/// Percent-escape a token value so it survives space-delimited framing.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for b in s.bytes() {
+        match b {
+            b'%' | b' ' | b'\t' | b'\n' | b'\r' | b'=' => {
+                out.push_str(&format!("%{b:02X}"));
+            }
+            _ => out.push(b as char),
+        }
+    }
+    out
+}
+
+/// Inverse of [`escape`]. Unknown or truncated `%xx` sequences error
+/// rather than passing through silently.
+pub fn unescape(s: &str) -> Result<String, String> {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'%' {
+            let hex = bytes
+                .get(i + 1..i + 3)
+                .ok_or_else(|| format!("truncated escape in {s:?}"))?;
+            let hex = std::str::from_utf8(hex).map_err(|_| format!("bad escape in {s:?}"))?;
+            out.push(
+                u8::from_str_radix(hex, 16).map_err(|_| format!("bad escape %{hex} in {s:?}"))?,
+            );
+            i += 3;
+        } else {
+            out.push(bytes[i]);
+            i += 1;
+        }
+    }
+    String::from_utf8(out).map_err(|_| format!("escape decoded to non-UTF8 in {s:?}"))
+}
+
+/// What to simulate: a registry benchmark or a `.mtrace` file (resolved
+/// against the *server's* working directory).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorkloadSpec {
+    /// Registry benchmark by name.
+    Bench(String),
+    /// Recorded trace file path.
+    Trace(String),
+}
+
+/// One simulation request, mirroring the `malekeh simulate` surface:
+/// the Table-1 baseline config with a scheme, an SM count, the
+/// compiler's `profile_warps`, and arbitrary `-s key=value` overrides.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobSpec {
+    /// What to simulate.
+    pub workload: WorkloadSpec,
+    /// Policy name (registry); default `baseline`.
+    pub scheme: String,
+    /// SM count; default 2 (same as `simulate`).
+    pub sms: usize,
+    /// Compiler profiling warps; default 2 (same as `simulate`).
+    pub profile_warps: usize,
+    /// `GpuConfig` key overrides, applied in order.
+    pub overrides: Vec<(String, String)>,
+}
+
+impl JobSpec {
+    /// Spec with `simulate`'s defaults.
+    pub fn bench(name: &str) -> JobSpec {
+        JobSpec {
+            workload: WorkloadSpec::Bench(name.to_string()),
+            scheme: "baseline".to_string(),
+            sms: 2,
+            profile_warps: 2,
+            overrides: Vec::new(),
+        }
+    }
+
+    /// Spec replaying a trace file (server-side path).
+    pub fn trace(path: &str) -> JobSpec {
+        JobSpec {
+            workload: WorkloadSpec::Trace(path.to_string()),
+            ..JobSpec::bench("")
+        }
+    }
+
+    /// The SUBMIT argument string (everything after the verb).
+    pub fn encode(&self) -> String {
+        let mut out = match &self.workload {
+            WorkloadSpec::Bench(name) => format!("bench={}", escape(name)),
+            WorkloadSpec::Trace(path) => format!("trace={}", escape(path)),
+        };
+        out.push_str(&format!(
+            " scheme={} sms={} profile_warps={}",
+            escape(&self.scheme),
+            self.sms,
+            self.profile_warps
+        ));
+        for (k, v) in &self.overrides {
+            out.push_str(&format!(" set:{}={}", escape(k), escape(v)));
+        }
+        out
+    }
+
+    /// Parse the SUBMIT argument string.
+    pub fn parse(args: &str) -> Result<JobSpec, String> {
+        let mut workload: Option<WorkloadSpec> = None;
+        let mut spec = JobSpec::bench("");
+        for tok in args.split_ascii_whitespace() {
+            let (key, value) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("bad SUBMIT token {tok:?}, want key=value"))?;
+            let value = unescape(value)?;
+            match key {
+                "bench" => workload = Some(WorkloadSpec::Bench(value)),
+                "trace" => workload = Some(WorkloadSpec::Trace(value)),
+                "scheme" => spec.scheme = value,
+                "sms" => {
+                    spec.sms = value.parse().map_err(|_| format!("bad sms={value:?}"))?;
+                }
+                "profile_warps" => {
+                    spec.profile_warps = value
+                        .parse()
+                        .map_err(|_| format!("bad profile_warps={value:?}"))?;
+                }
+                _ => match key.strip_prefix("set:") {
+                    Some(cfg_key) => {
+                        spec.overrides.push((unescape(cfg_key)?, value));
+                    }
+                    None => return Err(format!("unknown SUBMIT key {key:?}")),
+                },
+            }
+        }
+        spec.workload =
+            workload.ok_or("SUBMIT needs bench=<name> or trace=<path>")?;
+        Ok(spec)
+    }
+}
+
+/// Client-to-server message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Liveness + version check.
+    Ping,
+    /// Schedule (or dedupe) a simulation.
+    Submit(JobSpec),
+    /// Non-blocking job state query.
+    Status(u64),
+    /// Block until the job leaves queued/running.
+    Wait(u64),
+    /// Fetch a finished job's stats as one-line JSON.
+    Result(u64),
+    /// Server health + store size, as one-line JSON.
+    Stats,
+    /// Stop accepting connections and exit the daemon.
+    Shutdown,
+}
+
+impl Request {
+    /// Wire line (without the trailing newline).
+    pub fn encode(&self) -> String {
+        match self {
+            Request::Ping => "PING".to_string(),
+            Request::Submit(spec) => format!("SUBMIT {}", spec.encode()),
+            Request::Status(id) => format!("STATUS {id}"),
+            Request::Wait(id) => format!("WAIT {id}"),
+            Request::Result(id) => format!("RESULT {id}"),
+            Request::Stats => "STATS".to_string(),
+            Request::Shutdown => "SHUTDOWN".to_string(),
+        }
+    }
+
+    /// Parse one request line (tolerates trailing `\r\n`).
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let line = line.trim_end_matches(['\r', '\n']);
+        let (verb, rest) = match line.split_once(' ') {
+            Some((v, r)) => (v, r.trim()),
+            None => (line, ""),
+        };
+        let id = |rest: &str| -> Result<u64, String> {
+            rest.parse().map_err(|_| format!("bad job id {rest:?}"))
+        };
+        match verb {
+            "PING" => Ok(Request::Ping),
+            "SUBMIT" => Ok(Request::Submit(JobSpec::parse(rest)?)),
+            "STATUS" => Ok(Request::Status(id(rest)?)),
+            "WAIT" => Ok(Request::Wait(id(rest)?)),
+            "RESULT" => Ok(Request::Result(id(rest)?)),
+            "STATS" => Ok(Request::Stats),
+            "SHUTDOWN" => Ok(Request::Shutdown),
+            other => Err(format!("unknown request {other:?}")),
+        }
+    }
+}
+
+/// Lifecycle of a submitted job, as reported on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Accepted, waiting for a worker.
+    Queued,
+    /// A worker is simulating it.
+    Running,
+    /// Finished; RESULT will serve it.
+    Done,
+    /// Simulation errored; STATUS/WAIT report it.
+    Failed,
+}
+
+impl JobState {
+    /// Wire token.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+
+    /// Parse a wire token.
+    pub fn parse(s: &str) -> Result<JobState, String> {
+        match s {
+            "queued" => Ok(JobState::Queued),
+            "running" => Ok(JobState::Running),
+            "done" => Ok(JobState::Done),
+            "failed" => Ok(JobState::Failed),
+            other => Err(format!("unknown job state {other:?}")),
+        }
+    }
+}
+
+/// Server-to-client message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Response {
+    /// Success; the payload grammar depends on the request verb.
+    Ok(String),
+    /// Failure, with a human-readable reason.
+    Err(String),
+}
+
+impl Response {
+    /// Wire line (without the trailing newline).
+    pub fn encode(&self) -> String {
+        match self {
+            Response::Ok(payload) if payload.is_empty() => "OK".to_string(),
+            Response::Ok(payload) => format!("OK {payload}"),
+            Response::Err(msg) => {
+                // an error reason must stay one line on the wire
+                format!("ERR {}", msg.replace(['\n', '\r'], " "))
+            }
+        }
+    }
+
+    /// Parse one response line (tolerates trailing `\r\n`).
+    pub fn parse(line: &str) -> Result<Response, String> {
+        let line = line.trim_end_matches(['\r', '\n']);
+        if let Some(rest) = line.strip_prefix("OK") {
+            return Ok(Response::Ok(rest.trim_start().to_string()));
+        }
+        if let Some(rest) = line.strip_prefix("ERR") {
+            return Ok(Response::Err(rest.trim_start().to_string()));
+        }
+        Err(format!("unparseable response line {line:?}"))
+    }
+
+    /// Payload for SUBMIT/STATUS/WAIT.
+    pub fn job_payload(id: u64, state: JobState) -> String {
+        format!("job {id} {}", state.as_str())
+    }
+
+    /// Parse a `job <id> <state>` payload.
+    pub fn parse_job_payload(payload: &str) -> Result<(u64, JobState), String> {
+        let mut it = payload.split_ascii_whitespace();
+        match (it.next(), it.next(), it.next(), it.next()) {
+            (Some("job"), Some(id), Some(state), None) => Ok((
+                id.parse().map_err(|_| format!("bad job id {id:?}"))?,
+                JobState::parse(state)?,
+            )),
+            _ => Err(format!("bad job payload {payload:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escape_roundtrips_awkward_values() {
+        for s in ["plain", "with space", "a=b", "100%", "tab\there", "nl\nthere", ""] {
+            assert_eq!(unescape(&escape(s)).unwrap(), s, "{s:?}");
+        }
+        assert!(unescape("%").is_err(), "truncated escape");
+        assert!(unescape("%zz").is_err(), "non-hex escape");
+    }
+
+    #[test]
+    fn requests_roundtrip_through_the_wire_form() {
+        let mut spec = JobSpec::bench("hotspot");
+        spec.scheme = "malekeh".into();
+        spec.overrides.push(("rthld".into(), "7".into()));
+        spec.overrides.push(("max_cycles".into(), "5000".into()));
+        let reqs = [
+            Request::Ping,
+            Request::Submit(spec),
+            Request::Submit(JobSpec::trace("runs/my trace.mtrace")),
+            Request::Status(7),
+            Request::Wait(0),
+            Request::Result(42),
+            Request::Stats,
+            Request::Shutdown,
+        ];
+        for r in reqs {
+            let line = r.encode();
+            assert!(!line.contains('\n'));
+            assert_eq!(Request::parse(&line).unwrap(), r, "{line}");
+            // tolerate CRLF clients (telnet-style probing)
+            assert_eq!(Request::parse(&format!("{line}\r\n")).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn submit_defaults_mirror_simulate() {
+        let spec = JobSpec::parse("bench=kmeans").unwrap();
+        assert_eq!(spec.workload, WorkloadSpec::Bench("kmeans".into()));
+        assert_eq!(spec.scheme, "baseline");
+        assert_eq!(spec.sms, 2);
+        assert_eq!(spec.profile_warps, 2);
+        assert!(spec.overrides.is_empty());
+        // override order is preserved (later overrides win in GpuConfig)
+        let spec = JobSpec::parse("bench=x set:rthld=3 set:rthld=9").unwrap();
+        assert_eq!(spec.overrides, vec![
+            ("rthld".to_string(), "3".to_string()),
+            ("rthld".to_string(), "9".to_string()),
+        ]);
+    }
+
+    #[test]
+    fn submit_rejects_malformed_input() {
+        assert!(JobSpec::parse("").is_err(), "workload is mandatory");
+        assert!(JobSpec::parse("scheme=malekeh").is_err(), "still no workload");
+        assert!(JobSpec::parse("bench=x spurious").is_err(), "token without =");
+        assert!(JobSpec::parse("bench=x sms=abc").is_err());
+        assert!(JobSpec::parse("bench=x unknown=1").is_err());
+        assert!(Request::parse("FROBNICATE 1").is_err());
+        assert!(Request::parse("STATUS notanid").is_err());
+    }
+
+    #[test]
+    fn responses_and_job_payloads_roundtrip() {
+        for r in [
+            Response::Ok(String::new()),
+            Response::Ok("pong MALEKEH-SERVE/1".into()),
+            Response::Err("no such job".into()),
+        ] {
+            assert_eq!(Response::parse(&r.encode()).unwrap(), r);
+        }
+        // multi-line error reasons are flattened, not smuggled
+        let r = Response::Err("line1\nline2".into());
+        assert!(!r.encode().contains('\n'));
+
+        for st in [JobState::Queued, JobState::Running, JobState::Done, JobState::Failed] {
+            let payload = Response::job_payload(9, st);
+            assert_eq!(Response::parse_job_payload(&payload).unwrap(), (9, st));
+        }
+        assert!(Response::parse_job_payload("job x done").is_err());
+        assert!(Response::parse_job_payload("nope").is_err());
+    }
+}

@@ -1,0 +1,457 @@
+//! The `malekeh serve` daemon.
+//!
+//! One TCP listener, N simulation workers, one shared job table. A
+//! SUBMIT is resolved in three tiers, cheapest first:
+//!
+//! 1. **job-table dedupe** — the same [`super::store::StoreKey`] already
+//!    has a job in this process (queued, running, or finished): the
+//!    submission attaches to that job's id instead of creating work;
+//! 2. **persistent store** — the key has a verified record on disk: the
+//!    job is born `done` with the stored stats, no simulation runs;
+//! 3. **simulate** — the job queues for a worker, which runs
+//!    [`crate::sim::run_workload`] and writes the result to the store
+//!    *before* publishing `done` (so a client that observed `done` can
+//!    rely on the record surviving a daemon restart).
+//!
+//! Connection handling is one thread per client (blocking reads; WAIT
+//! parks the handler on the job condvar, not the worker pool), mirroring
+//! how `Runner::execute` shards figure points across scoped workers.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::config::{GpuConfig, Scheme};
+use crate::sim::run_workload;
+use crate::stats::Stats;
+use crate::trace::Workload;
+
+use super::protocol::{self, JobSpec, JobState, Request, Response, WorkloadSpec};
+use super::store::{Store, StoreKey};
+
+/// Daemon configuration (`malekeh serve`).
+#[derive(Debug, Clone)]
+pub struct ServerOpts {
+    /// Listen address, e.g. `127.0.0.1:7757` (port 0 = ephemeral).
+    pub addr: String,
+    /// Simulation workers; 0 = one per core.
+    pub workers: usize,
+    /// Persistent store directory; `None` disables tiers 2/3 persistence
+    /// (the in-process job table still dedupes).
+    pub store_dir: Option<PathBuf>,
+}
+
+impl Default for ServerOpts {
+    fn default() -> Self {
+        ServerOpts { addr: "127.0.0.1:7757".to_string(), workers: 0, store_dir: None }
+    }
+}
+
+/// One submitted simulation.
+struct Job {
+    cfg: GpuConfig,
+    workload: Workload,
+    profile_warps: usize,
+    state: JobState,
+    stats: Option<Stats>,
+    error: Option<String>,
+}
+
+/// Everything behind the job-table lock.
+#[derive(Default)]
+struct Table {
+    jobs: Vec<Job>,
+    queue: VecDeque<usize>,
+    index: HashMap<StoreKey, usize>,
+    // health counters (reported by STATS)
+    submitted: u64,
+    dedup_hits: u64,
+    store_hits: u64,
+    sims_completed: u64,
+    sims_failed: u64,
+}
+
+/// State shared by the accept loop, workers, and connection handlers.
+struct Shared {
+    table: Mutex<Table>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    store: Option<Store>,
+    addr: SocketAddr,
+}
+
+/// A bound (but not yet serving) daemon. `bind` then [`Server::run`];
+/// the split lets tests bind port 0 and read [`Server::local_addr`]
+/// before serving starts.
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    workers: usize,
+}
+
+impl Server {
+    /// Bind the listen socket and open the store.
+    pub fn bind(opts: ServerOpts) -> Result<Server, String> {
+        let listener = TcpListener::bind(&opts.addr)
+            .map_err(|e| format!("bind {}: {e}", opts.addr))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| format!("local_addr: {e}"))?;
+        let store = match &opts.store_dir {
+            Some(dir) => Some(
+                Store::open(dir).map_err(|e| format!("store {}: {e}", dir.display()))?,
+            ),
+            None => None,
+        };
+        Ok(Server {
+            listener,
+            shared: Arc::new(Shared {
+                table: Mutex::new(Table::default()),
+                cv: Condvar::new(),
+                shutdown: AtomicBool::new(false),
+                store,
+                addr,
+            }),
+            workers: opts.workers,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Serve until a client sends SHUTDOWN. Joins the worker pool before
+    /// returning, so every completed simulation's store record is on
+    /// disk when this returns.
+    pub fn run(self) -> Result<(), String> {
+        let nworkers = if self.workers == 0 {
+            std::thread::available_parallelism().map_or(1, |n| n.get())
+        } else {
+            self.workers
+        };
+        let mut pool = Vec::with_capacity(nworkers);
+        for _ in 0..nworkers {
+            let shared = Arc::clone(&self.shared);
+            pool.push(std::thread::spawn(move || worker_loop(&shared)));
+        }
+        for conn in self.listener.incoming() {
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    let shared = Arc::clone(&self.shared);
+                    // one handler thread per client; WAIT blocks here,
+                    // never a simulation worker
+                    std::thread::spawn(move || {
+                        let _ = handle_connection(&shared, stream);
+                    });
+                }
+                Err(e) => {
+                    if self.shared.shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    eprintln!("serve: accept failed: {e}");
+                }
+            }
+        }
+        self.shared.cv.notify_all();
+        for w in pool {
+            let _ = w.join();
+        }
+        Ok(())
+    }
+}
+
+/// Worker: pop queued jobs, simulate, persist, publish.
+fn worker_loop(shared: &Shared) {
+    loop {
+        // claim one queued job (or exit on shutdown)
+        let (id, cfg, workload, profile_warps) = {
+            let mut t = shared.table.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(id) = t.queue.pop_front() {
+                    t.jobs[id].state = JobState::Running;
+                    shared.cv.notify_all();
+                    let j = &t.jobs[id];
+                    break (id, j.cfg.clone(), j.workload.clone(), j.profile_warps);
+                }
+                t = shared.cv.wait(t).unwrap();
+            }
+        };
+        let outcome = run_workload(&cfg, &workload, profile_warps);
+        // persist BEFORE publishing `done`: a client that saw `done` may
+        // immediately restart the daemon and expect the record to exist
+        if let (Ok(stats), Some(store)) = (&outcome, &shared.store) {
+            if let Ok(key) = StoreKey::for_run(&cfg, &workload, profile_warps) {
+                if let Err(e) = store.put(&key, stats) {
+                    eprintln!("serve: store write for job {id} failed: {e}");
+                }
+            }
+        }
+        let mut t = shared.table.lock().unwrap();
+        match outcome {
+            Ok(stats) => {
+                t.jobs[id].stats = Some(stats);
+                t.jobs[id].state = JobState::Done;
+                t.sims_completed += 1;
+            }
+            Err(e) => {
+                t.jobs[id].error = Some(e);
+                t.jobs[id].state = JobState::Failed;
+                t.sims_failed += 1;
+            }
+        }
+        shared.cv.notify_all();
+    }
+}
+
+/// Build the `GpuConfig` a [`JobSpec`] describes. Mirrors the binary's
+/// `simulate` config construction (Table-1 baseline + scheme + SM count
+/// + overrides), so a daemon result is bit-identical to the same point
+/// run through `malekeh simulate`.
+fn build_job(spec: &JobSpec) -> Result<(GpuConfig, Workload, usize), String> {
+    let scheme = Scheme::parse(&spec.scheme)?;
+    let mut cfg = GpuConfig::table1_baseline().with_scheme(scheme);
+    cfg.num_sms = spec.sms;
+    cfg.apply(&spec.overrides)?;
+    cfg.validate()?;
+    let workload = match &spec.workload {
+        WorkloadSpec::Bench(name) => Workload::builtin(name),
+        WorkloadSpec::Trace(path) => Workload::trace_file(path),
+    };
+    Ok((cfg, workload, spec.profile_warps))
+}
+
+/// SUBMIT: resolve through the three tiers; returns the job id + state.
+fn submit(shared: &Shared, spec: &JobSpec) -> Result<(u64, JobState), String> {
+    let (cfg, workload, profile_warps) = build_job(spec)?;
+    // the content address also validates the workload (unknown benchmark
+    // or unreadable trace file fails here, before a job exists)
+    let key = StoreKey::for_run(&cfg, &workload, profile_warps)?;
+    let mut t = shared.table.lock().unwrap();
+    t.submitted += 1;
+    if let Some(&id) = t.index.get(&key) {
+        t.dedup_hits += 1;
+        return Ok((id as u64, t.jobs[id].state));
+    }
+    let mut job = Job {
+        cfg,
+        workload,
+        profile_warps,
+        state: JobState::Queued,
+        stats: None,
+        error: None,
+    };
+    if let Some(store) = &shared.store {
+        if let Some(stats) = store.get(&key) {
+            job.stats = Some(stats);
+            job.state = JobState::Done;
+            t.store_hits += 1;
+        }
+    }
+    let id = t.jobs.len();
+    let state = job.state;
+    t.index.insert(key, id);
+    t.jobs.push(job);
+    if state == JobState::Queued {
+        t.queue.push_back(id);
+        shared.cv.notify_all();
+    }
+    Ok((id as u64, state))
+}
+
+/// Server-health JSON (the STATS payload body).
+fn stats_json(shared: &Shared) -> String {
+    let (records, bytes) = match &shared.store {
+        Some(store) => match store.info() {
+            Ok(i) => (i.records as u64, i.bytes),
+            Err(_) => (0, 0),
+        },
+        None => (0, 0),
+    };
+    let t = shared.table.lock().unwrap();
+    format!(
+        "{{\"jobs\":{},\"submitted\":{},\"dedup_hits\":{},\"store_hits\":{},\
+         \"sims_completed\":{},\"sims_failed\":{},\"store_records\":{records},\
+         \"store_bytes\":{bytes}}}",
+        t.jobs.len(),
+        t.submitted,
+        t.dedup_hits,
+        t.store_hits,
+        t.sims_completed,
+        t.sims_failed,
+    )
+}
+
+/// Execute one request. Blocking verbs (WAIT) park on the condvar here,
+/// in the connection handler's thread.
+fn dispatch(shared: &Shared, req: Request) -> Response {
+    let job_state = |id: u64| -> Result<JobState, String> {
+        let t = shared.table.lock().unwrap();
+        t.jobs
+            .get(id as usize)
+            .map(|j| j.state)
+            .ok_or_else(|| format!("no such job {id}"))
+    };
+    match req {
+        Request::Ping => Response::Ok(format!("pong {}", protocol::PROTOCOL_VERSION)),
+        Request::Submit(spec) => match submit(shared, &spec) {
+            Ok((id, state)) => Response::Ok(Response::job_payload(id, state)),
+            Err(e) => Response::Err(e),
+        },
+        Request::Status(id) => match job_state(id) {
+            Ok(state) => Response::Ok(Response::job_payload(id, state)),
+            Err(e) => Response::Err(e),
+        },
+        Request::Wait(id) => {
+            let mut t = shared.table.lock().unwrap();
+            if id as usize >= t.jobs.len() {
+                return Response::Err(format!("no such job {id}"));
+            }
+            while matches!(t.jobs[id as usize].state, JobState::Queued | JobState::Running) {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return Response::Err("server shutting down".to_string());
+                }
+                t = shared.cv.wait(t).unwrap();
+            }
+            Response::Ok(Response::job_payload(id, t.jobs[id as usize].state))
+        }
+        Request::Result(id) => {
+            let t = shared.table.lock().unwrap();
+            match t.jobs.get(id as usize) {
+                None => Response::Err(format!("no such job {id}")),
+                Some(j) => match (j.state, &j.stats, &j.error) {
+                    (JobState::Done, Some(stats), _) => {
+                        Response::Ok(format!("result {id} {}", stats.to_json()))
+                    }
+                    (JobState::Failed, _, Some(e)) => {
+                        Response::Err(format!("job {id} failed: {e}"))
+                    }
+                    _ => Response::Err(format!("job {id} not finished (try WAIT)")),
+                },
+            }
+        }
+        Request::Stats => Response::Ok(format!("stats {}", stats_json(shared))),
+        Request::Shutdown => {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            shared.cv.notify_all();
+            // unblock the accept loop so it observes the flag
+            let _ = TcpStream::connect(shared.addr);
+            Response::Ok("bye".to_string())
+        }
+    }
+}
+
+/// One client connection: greeting, then request/response lines until
+/// EOF (or the client stops after SHUTDOWN).
+fn handle_connection(shared: &Shared, stream: TcpStream) -> std::io::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    writer.write_all(format!("{}\n", protocol::greeting()).as_bytes())?;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client hung up
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match Request::parse(&line) {
+            Ok(req) => dispatch(shared, req),
+            Err(e) => Response::Err(e),
+        };
+        writer.write_all(format!("{}\n", response.encode()).as_bytes())?;
+        writer.flush()?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::Client;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("malekeh_server_unit_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn spawn(store_dir: Option<PathBuf>) -> (SocketAddr, std::thread::JoinHandle<()>) {
+        let server = Server::bind(ServerOpts {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            store_dir,
+        })
+        .unwrap();
+        let addr = server.local_addr();
+        let handle = std::thread::spawn(move || server.run().unwrap());
+        (addr, handle)
+    }
+
+    /// A spec small enough to simulate in well under a second.
+    fn quick_spec(scheme: &str) -> JobSpec {
+        let mut spec = JobSpec::bench("hotspot");
+        spec.scheme = scheme.to_string();
+        spec.overrides.push(("max_cycles".to_string(), "2000".to_string()));
+        spec
+    }
+
+    #[test]
+    fn ping_submit_wait_result_shutdown() {
+        let dir = tmp_dir("e2e");
+        let (addr, handle) = spawn(Some(dir.clone()));
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        assert!(c.ping().unwrap().contains(protocol::PROTOCOL_VERSION));
+
+        let (id, state) = c.submit(&quick_spec("malekeh")).unwrap();
+        assert!(matches!(state, JobState::Queued | JobState::Running | JobState::Done));
+        assert_eq!(c.wait(id).unwrap(), JobState::Done);
+        let json = c.result_json(id).unwrap();
+        assert!(json.contains("\"fingerprint\":\""), "{json}");
+
+        // identical resubmission attaches to the same job, no new sim
+        let (id2, state2) = c.submit(&quick_spec("malekeh")).unwrap();
+        assert_eq!(id2, id);
+        assert_eq!(state2, JobState::Done);
+        // a different scheme is a different job
+        let (id3, _) = c.submit(&quick_spec("baseline")).unwrap();
+        assert_ne!(id3, id);
+        assert_eq!(c.wait(id3).unwrap(), JobState::Done);
+
+        let health = c.stats_json().unwrap();
+        assert!(health.contains("\"dedup_hits\":1"), "{health}");
+        assert!(health.contains("\"sims_completed\":2"), "{health}");
+
+        c.shutdown().unwrap();
+        handle.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bad_submissions_are_errors_not_jobs() {
+        let (addr, handle) = spawn(None);
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        let mut bogus = JobSpec::bench("no_such_benchmark");
+        assert!(c.submit(&bogus).is_err(), "unknown benchmark");
+        bogus = quick_spec("no_such_scheme");
+        assert!(c.submit(&bogus).is_err(), "unknown scheme");
+        bogus = quick_spec("malekeh");
+        bogus.overrides.push(("no_such_key".to_string(), "1".to_string()));
+        assert!(c.submit(&bogus).is_err(), "unknown config key");
+        assert!(c.result_json(99).is_err(), "no such job");
+        // the connection survives errors
+        assert!(c.ping().is_ok());
+        c.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,527 @@
+//! Persistent on-disk content-addressed result store.
+//!
+//! One record file per simulated point, named by its [`StoreKey`]
+//! (`<config_fp>-<workload_fp>-<policy>.rec`), in a flat directory
+//! (default `.malekeh-store/`). The format is versioned, textual, and
+//! self-verifying:
+//!
+//! ```text
+//! MALEKEH-STORE/1
+//! config_fp = 0123456789abcdef
+//! workload_fp = fedcba9876543210
+//! policy = malekeh
+//! stats_fp = 00c0ffee00c0ffee
+//! cycles = 40000
+//! ...one line per Stats counter...
+//! energy = 8 space-separated u64s (EVENT_NAMES order)
+//! interval_ipc = f64-to_bits hex words
+//! sthld_trace = u32s
+//! END
+//! ```
+//!
+//! Reads are **corruption-tolerant**: a missing file, truncated record
+//! (no `END`), unparseable line, key mismatch (file renamed or moved
+//! between stores), or a `stats_fp` that does not match the fingerprint
+//! recomputed from the parsed counters all surface as a cache *miss* —
+//! the caller re-simulates and overwrites. Writes go to a temp file in
+//! the same directory and are published with an atomic rename, so
+//! concurrent writers of the same key (shard workers, racing daemons)
+//! each publish a complete record and the last rename wins — which is
+//! harmless, because any two writers of one key computed bit-identical
+//! stats (the determinism contract).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::GpuConfig;
+use crate::energy::{EnergyCounts, NEVENTS};
+use crate::stats::Stats;
+use crate::trace::Workload;
+use crate::util::Fnv1a;
+
+/// First line of every record; bump the suffix on format changes —
+/// readers treat any other first line as a miss, so old stores degrade
+/// to cold caches instead of crashing new binaries (and vice versa).
+pub const RECORD_VERSION: &str = "MALEKEH-STORE/1";
+
+/// Default store directory (relative to the working directory).
+pub const DEFAULT_STORE_DIR: &str = ".malekeh-store";
+
+/// The scalar `Stats` counters a record carries, in record order. One
+/// macro feeds both the serialiser and the parser, so the two can never
+/// drift apart (a field added to `Stats` but not here still changes
+/// `stats_fp`, which the round-trip test catches).
+macro_rules! with_stats_scalars {
+    ($m:ident!($($extra:tt)*)) => {
+        $m!(($($extra)*)
+            cycles, instructions, warps_retired, rf_reads, rf_bank_reads,
+            rf_cache_reads, rf_writes, rf_cache_writes, cache_write_reused,
+            bank_conflict_wait, sched_issued, sched_stall_ready,
+            sched_stall_empty, waiting_stalls, collector_full_stalls,
+            ccu_flushes, l1_accesses, l1_hits, l2_accesses, l2_hits)
+    };
+}
+
+/// Content address of one simulated point:
+/// `config fingerprint x workload fingerprint x policy name`.
+///
+/// The config half is [`GpuConfig::fingerprint`] (canonical
+/// serialisation; `sim_threads` excluded) extended with the harness-level
+/// `profile_warps` knob, which also shapes results (it bounds the
+/// compiler's reuse profiling pass). The workload half is
+/// [`Workload::content_fingerprint`] — generated or on-disk trace
+/// *content*, never a file path. The policy name is carried redundantly
+/// (it is already inside the config fingerprint via `scheme = <name>`)
+/// to keep store filenames and `store info` listings human-readable.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct StoreKey {
+    /// FNV-1a over the canonical config serialisation + `profile_warps`.
+    pub config_fp: u64,
+    /// FNV-1a over the workload content.
+    pub workload_fp: u64,
+    /// Registry policy name (`GpuConfig::scheme`).
+    pub policy: String,
+}
+
+impl StoreKey {
+    /// Address of the simulation `run_workload(cfg, workload,
+    /// profile_warps)` would perform. Errs when the workload content
+    /// cannot be resolved (unknown benchmark, unreadable trace file).
+    pub fn for_run(
+        cfg: &GpuConfig,
+        workload: &Workload,
+        profile_warps: usize,
+    ) -> Result<StoreKey, String> {
+        let nwarps = cfg.num_sms * cfg.warps_per_sm;
+        let workload_fp = workload.content_fingerprint(nwarps, cfg.seed)?;
+        let mut h = Fnv1a::new();
+        h.bytes(cfg.canonical_string().as_bytes());
+        h.bytes(format!("profile_warps = {profile_warps}\n").as_bytes());
+        Ok(StoreKey {
+            config_fp: h.finish(),
+            workload_fp,
+            policy: cfg.scheme.name().to_string(),
+        })
+    }
+
+    /// Record filename for this key. Policy names are sanitised to a
+    /// conservative character set; a collision between two sanitised
+    /// names cannot serve a wrong result because the record carries the
+    /// full key and [`Store::get`] verifies it.
+    pub fn file_name(&self) -> String {
+        let safe: String = self
+            .policy
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == '-' { c } else { '_' })
+            .collect();
+        format!("{:016x}-{:016x}-{safe}.rec", self.config_fp, self.workload_fp)
+    }
+}
+
+/// Aggregate store statistics (`malekeh store info`, server health).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StoreInfo {
+    /// Record files present.
+    pub records: usize,
+    /// Total record bytes.
+    pub bytes: u64,
+}
+
+/// What `Store::gc` did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct GcReport {
+    /// Records deleted (oldest first).
+    pub deleted: usize,
+    /// Bytes reclaimed.
+    pub reclaimed: u64,
+    /// Store size after collection.
+    pub after: StoreInfo,
+}
+
+/// Handle to one store directory. Cheap to clone conceptually (it is just
+/// the root path); all methods take `&self` and are safe to call from
+/// many threads — the filesystem provides the synchronisation
+/// (atomic-rename publishes, unlinked reads).
+#[derive(Debug, Clone)]
+pub struct Store {
+    root: PathBuf,
+}
+
+/// Per-process tie-breaker for temp-file names: two threads of one
+/// process writing the same key must not share a temp file.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl Store {
+    /// Open (creating if needed) the store rooted at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> std::io::Result<Store> {
+        let root = dir.into();
+        std::fs::create_dir_all(&root)?;
+        Ok(Store { root })
+    }
+
+    /// Store directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Look up a key. `None` covers every kind of absence: no record,
+    /// version mismatch, truncation, parse failure, key mismatch, or an
+    /// integrity failure (recomputed stats fingerprint != recorded one).
+    pub fn get(&self, key: &StoreKey) -> Option<Stats> {
+        let text = std::fs::read_to_string(self.root.join(key.file_name())).ok()?;
+        parse_record(&text, key).ok()
+    }
+
+    /// Persist `stats` under `key` (write-temp-then-rename; overwrites
+    /// any existing record — safe, see the module docs on racing
+    /// writers). Returns the record path.
+    pub fn put(&self, key: &StoreKey, stats: &Stats) -> std::io::Result<PathBuf> {
+        let final_path = self.root.join(key.file_name());
+        let tmp_path = self.root.join(format!(
+            ".tmp-{}-{}-{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed),
+            key.file_name()
+        ));
+        let mut f = std::fs::File::create(&tmp_path)?;
+        f.write_all(format_record(key, stats).as_bytes())?;
+        f.sync_all()?;
+        drop(f);
+        match std::fs::rename(&tmp_path, &final_path) {
+            Ok(()) => Ok(final_path),
+            Err(e) => {
+                let _ = std::fs::remove_file(&tmp_path);
+                Err(e)
+            }
+        }
+    }
+
+    /// Record files with size and modification time, oldest first (ties
+    /// broken by name so iteration order is deterministic). Temp files
+    /// and foreign files are ignored.
+    fn entries(&self) -> std::io::Result<Vec<(PathBuf, u64, std::time::SystemTime)>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.root)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if !name.ends_with(".rec") || name.starts_with(".tmp-") {
+                continue;
+            }
+            let meta = match entry.metadata() {
+                Ok(m) if m.is_file() => m,
+                _ => continue,
+            };
+            let mtime = meta.modified().unwrap_or(std::time::UNIX_EPOCH);
+            out.push((entry.path(), meta.len(), mtime));
+        }
+        out.sort_by(|a, b| a.2.cmp(&b.2).then_with(|| a.0.cmp(&b.0)));
+        Ok(out)
+    }
+
+    /// Aggregate size.
+    pub fn info(&self) -> std::io::Result<StoreInfo> {
+        let entries = self.entries()?;
+        Ok(StoreInfo {
+            records: entries.len(),
+            bytes: entries.iter().map(|e| e.1).sum(),
+        })
+    }
+
+    /// Delete oldest records until total size fits `budget_bytes`.
+    /// `budget_bytes = 0` empties the store.
+    pub fn gc(&self, budget_bytes: u64) -> std::io::Result<GcReport> {
+        let entries = self.entries()?;
+        let mut total: u64 = entries.iter().map(|e| e.1).sum();
+        let mut report = GcReport::default();
+        for (path, size, _) in entries {
+            if total <= budget_bytes {
+                break;
+            }
+            std::fs::remove_file(&path)?;
+            total -= size;
+            report.deleted += 1;
+            report.reclaimed += size;
+        }
+        report.after = self.info()?;
+        Ok(report)
+    }
+}
+
+/// Serialise one record (the format in the module docs).
+fn format_record(key: &StoreKey, stats: &Stats) -> String {
+    let mut out = String::with_capacity(1024);
+    out.push_str(RECORD_VERSION);
+    out.push('\n');
+    out.push_str(&format!("config_fp = {:016x}\n", key.config_fp));
+    out.push_str(&format!("workload_fp = {:016x}\n", key.workload_fp));
+    out.push_str(&format!("policy = {}\n", key.policy));
+    out.push_str(&format!("stats_fp = {:016x}\n", stats.fingerprint()));
+    macro_rules! emit {
+        (($out:ident, $stats:ident) $($f:ident),*) => {
+            $( $out.push_str(&format!("{} = {}\n", stringify!($f), $stats.$f)); )*
+        };
+    }
+    with_stats_scalars!(emit!(out, stats));
+    let energy: Vec<String> =
+        stats.energy.raw().iter().map(|v| v.to_string()).collect();
+    out.push_str(&format!("energy = {}\n", energy.join(" ")));
+    // f64 as to_bits hex: bit-exact, no decimal round-trip to trust
+    let ipc: Vec<String> = stats
+        .interval_ipc
+        .iter()
+        .map(|v| format!("{:016x}", v.to_bits()))
+        .collect();
+    out.push_str(&format!("interval_ipc = {}\n", ipc.join(" ")));
+    let sthld: Vec<String> =
+        stats.sthld_trace.iter().map(|v| v.to_string()).collect();
+    out.push_str(&format!("sthld_trace = {}\n", sthld.join(" ")));
+    out.push_str("END\n");
+    out
+}
+
+/// Parse + verify one record against the key that addressed it. Any
+/// error string means "treat as miss".
+fn parse_record(text: &str, key: &StoreKey) -> Result<Stats, String> {
+    let mut lines = text.lines();
+    if lines.next() != Some(RECORD_VERSION) {
+        return Err("bad or missing version line".into());
+    }
+    let mut fields: Vec<(&str, &str)> = Vec::with_capacity(32);
+    let mut terminated = false;
+    for line in lines {
+        if line == "END" {
+            terminated = true;
+            break;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("bad record line {line:?}"))?;
+        fields.push((k.trim(), v.trim()));
+    }
+    if !terminated {
+        return Err("truncated record (no END)".into());
+    }
+    let take = |k: &str| -> Result<&str, String> {
+        fields
+            .iter()
+            .find(|(fk, _)| *fk == k)
+            .map(|(_, v)| *v)
+            .ok_or_else(|| format!("missing field {k}"))
+    };
+    let hex64 = |k: &str| -> Result<u64, String> {
+        u64::from_str_radix(take(k)?, 16).map_err(|e| format!("bad {k}: {e}"))
+    };
+    // the record must be the one this key addresses — a renamed/moved
+    // file or a sanitised-name collision is a miss, not a wrong answer
+    if hex64("config_fp")? != key.config_fp
+        || hex64("workload_fp")? != key.workload_fp
+        || take("policy")? != key.policy
+    {
+        return Err("record key mismatch".into());
+    }
+    let mut stats = Stats::new();
+    macro_rules! absorb {
+        (($stats:ident, $take:ident) $($f:ident),*) => {
+            $( $stats.$f = $take(stringify!($f))?
+                .parse::<u64>()
+                .map_err(|e| format!("bad {}: {e}", stringify!($f)))?; )*
+        };
+    }
+    with_stats_scalars!(absorb!(stats, take));
+    let energy_row: Vec<u64> = take("energy")?
+        .split_whitespace()
+        .map(|t| t.parse::<u64>().map_err(|e| format!("bad energy: {e}")))
+        .collect::<Result<_, _>>()?;
+    let energy: [u64; NEVENTS] = energy_row
+        .try_into()
+        .map_err(|_| format!("energy row must have {NEVENTS} entries"))?;
+    stats.energy = EnergyCounts::from_raw(energy);
+    stats.interval_ipc = take("interval_ipc")?
+        .split_whitespace()
+        .map(|t| {
+            u64::from_str_radix(t, 16)
+                .map(f64::from_bits)
+                .map_err(|e| format!("bad interval_ipc: {e}"))
+        })
+        .collect::<Result<_, _>>()?;
+    stats.sthld_trace = take("sthld_trace")?
+        .split_whitespace()
+        .map(|t| t.parse::<u32>().map_err(|e| format!("bad sthld_trace: {e}")))
+        .collect::<Result<_, _>>()?;
+    // integrity: the record's fingerprint must match what the parsed
+    // counters actually hash to — a flipped digit anywhere is a miss
+    let recorded = hex64("stats_fp")?;
+    let recomputed = stats.fingerprint();
+    if recorded != recomputed {
+        return Err(format!(
+            "integrity failure: recorded {recorded:016x} != recomputed {recomputed:016x}"
+        ));
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scheme;
+
+    fn tmp_store(name: &str) -> Store {
+        let dir = std::env::temp_dir()
+            .join(format!("malekeh_store_unit_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        Store::open(dir).unwrap()
+    }
+
+    fn sample_stats() -> Stats {
+        let mut s = Stats::new();
+        s.cycles = 40_000;
+        s.instructions = 123_456;
+        s.rf_reads = 999;
+        s.rf_cache_reads = 400;
+        s.energy.add(crate::energy::EventKind::BankRead, 77);
+        s.energy.add(crate::energy::EventKind::LeakProxy, 40_000);
+        s.interval_ipc = vec![1.5, 2.25, 0.125];
+        s.sthld_trace = vec![0, 2, 4];
+        s
+    }
+
+    fn sample_key() -> StoreKey {
+        StoreKey {
+            config_fp: 0x0123_4567_89ab_cdef,
+            workload_fp: 0xfedc_ba98_7654_3210,
+            policy: "malekeh".into(),
+        }
+    }
+
+    #[test]
+    fn record_roundtrips_bit_exactly() {
+        let key = sample_key();
+        let stats = sample_stats();
+        let text = format_record(&key, &stats);
+        let back = parse_record(&text, &key).unwrap();
+        assert_eq!(back.fingerprint(), stats.fingerprint());
+        assert_eq!(back.interval_ipc, stats.interval_ipc);
+        assert_eq!(back.sthld_trace, stats.sthld_trace);
+        assert_eq!(back.energy, stats.energy);
+    }
+
+    #[test]
+    fn parse_rejects_version_truncation_and_key_mismatch() {
+        let key = sample_key();
+        let text = format_record(&key, &sample_stats());
+        // wrong version line
+        let wrong = text.replacen("MALEKEH-STORE/1", "MALEKEH-STORE/9", 1);
+        assert!(parse_record(&wrong, &key).is_err());
+        // truncation: drop END (and anything after it)
+        let cut = &text[..text.len() - "END\n".len()];
+        assert!(parse_record(cut, &key).unwrap_err().contains("truncated"));
+        // key mismatch: same record addressed by a different key
+        let mut other = key.clone();
+        other.workload_fp ^= 1;
+        assert!(parse_record(&text, &other).unwrap_err().contains("mismatch"));
+    }
+
+    #[test]
+    fn parse_rejects_integrity_failures() {
+        let key = sample_key();
+        let text = format_record(&key, &sample_stats());
+        // flip one counter digit: the recomputed fingerprint must not match
+        let corrupted = text.replacen("instructions = 123456", "instructions = 123457", 1);
+        assert_ne!(corrupted, text, "corruption edit must apply");
+        let err = parse_record(&corrupted, &key).unwrap_err();
+        assert!(err.contains("integrity"), "got: {err}");
+    }
+
+    #[test]
+    fn store_get_put_and_miss_semantics() {
+        let store = tmp_store("getput");
+        let key = sample_key();
+        assert!(store.get(&key).is_none(), "empty store is a miss");
+        let stats = sample_stats();
+        let path = store.put(&key, &stats).unwrap();
+        assert!(path.ends_with(key.file_name()));
+        let back = store.get(&key).unwrap();
+        assert_eq!(back.fingerprint(), stats.fingerprint());
+        // corrupt on disk -> miss, not a crash
+        std::fs::write(&path, "MALEKEH-STORE/1\ngarbage\n").unwrap();
+        assert!(store.get(&key).is_none());
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn store_key_for_run_tracks_inputs() {
+        let cfg = GpuConfig::golden_parity(Scheme::MALEKEH);
+        let w = Workload::builtin("kmeans");
+        let k1 = StoreKey::for_run(&cfg, &w, 2).unwrap();
+        let k2 = StoreKey::for_run(&cfg, &w, 2).unwrap();
+        assert_eq!(k1, k2, "pure function of the run inputs");
+        assert_eq!(k1.policy, "malekeh");
+
+        // profile_warps shapes the compiler pass -> must split the address
+        let k3 = StoreKey::for_run(&cfg, &w, 3).unwrap();
+        assert_ne!(k1.config_fp, k3.config_fp);
+        assert_eq!(k1.workload_fp, k3.workload_fp);
+
+        // sim_threads is wall-clock only -> must NOT split the address
+        let mut threaded = cfg.clone();
+        threaded.sim_threads = 4;
+        assert_eq!(StoreKey::for_run(&threaded, &w, 2).unwrap(), k1);
+
+        // the workload half tracks content: another benchmark differs
+        let k4 = StoreKey::for_run(&cfg, &Workload::builtin("hotspot"), 2).unwrap();
+        assert_ne!(k1.workload_fp, k4.workload_fp);
+
+        // and a behaviour knob splits the config half
+        let mut capped = cfg.clone();
+        capped.max_cycles = 1_000;
+        assert_ne!(StoreKey::for_run(&capped, &w, 2).unwrap().config_fp, k1.config_fp);
+    }
+
+    #[test]
+    fn file_names_are_sanitised_but_keys_stay_exact() {
+        let key = StoreKey {
+            config_fp: 1,
+            workload_fp: 2,
+            policy: "weird/policy name".into(),
+        };
+        let name = key.file_name();
+        assert!(!name.contains('/') && !name.contains(' '), "{name}");
+        // a sanitised-name collision still cannot serve a wrong result:
+        // the record carries the exact policy string and get() verifies it
+        let store = tmp_store("sanitise");
+        store.put(&key, &sample_stats()).unwrap();
+        let imposter = StoreKey { policy: "weird_policy_name".into(), ..key.clone() };
+        assert_eq!(imposter.file_name(), key.file_name());
+        assert!(store.get(&imposter).is_none(), "exact-policy check must gate");
+        assert!(store.get(&key).is_some());
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn info_and_gc_honour_the_budget() {
+        let store = tmp_store("gc");
+        let stats = sample_stats();
+        let mut keys = Vec::new();
+        for i in 0..4u64 {
+            let key = StoreKey { config_fp: i, workload_fp: i, policy: "baseline".into() };
+            store.put(&key, &stats).unwrap();
+            keys.push(key);
+        }
+        let info = store.info().unwrap();
+        assert_eq!(info.records, 4);
+        assert!(info.bytes > 0);
+        let per_record = info.bytes / 4;
+        // budget for ~2 records: the oldest must go first
+        let report = store.gc(per_record * 2).unwrap();
+        assert!(report.deleted >= 2, "deleted {}", report.deleted);
+        assert_eq!(report.after.records, 4 - report.deleted);
+        assert!(report.after.bytes <= per_record * 2);
+        // budget 0 empties the store
+        let report = store.gc(0).unwrap();
+        assert_eq!(report.after.records, 0);
+        assert!(store.get(&keys[0]).is_none());
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+}

@@ -208,6 +208,82 @@ impl Stats {
         h
     }
 
+    /// One-line JSON object carrying every counter, the derived figure
+    /// metrics, the energy event row (by [`crate::energy::EVENT_NAMES`]),
+    /// the interval traces, and the [`Stats::fingerprint`] as zero-padded
+    /// hex — the machine-readable form consumed by `malekeh simulate
+    /// --json`, the serve protocol's `RESULT` line, and CI fingerprint
+    /// diffs. Hand-rolled (serde is unavailable offline); every number is
+    /// a plain JSON number (`f64` Display prints the shortest
+    /// round-tripping decimal and all derived ratios are finite by
+    /// construction).
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(1024);
+        s.push('{');
+        let mut first = true;
+        let mut field = |s: &mut String, k: &str, v: String| {
+            if !first {
+                s.push(',');
+            }
+            first = false;
+            s.push('"');
+            s.push_str(k);
+            s.push_str("\":");
+            s.push_str(&v);
+        };
+        field(&mut s, "cycles", self.cycles.to_string());
+        field(&mut s, "instructions", self.instructions.to_string());
+        field(&mut s, "warps_retired", self.warps_retired.to_string());
+        field(&mut s, "rf_reads", self.rf_reads.to_string());
+        field(&mut s, "rf_bank_reads", self.rf_bank_reads.to_string());
+        field(&mut s, "rf_cache_reads", self.rf_cache_reads.to_string());
+        field(&mut s, "rf_writes", self.rf_writes.to_string());
+        field(&mut s, "rf_cache_writes", self.rf_cache_writes.to_string());
+        field(&mut s, "cache_write_reused", self.cache_write_reused.to_string());
+        field(&mut s, "bank_conflict_wait", self.bank_conflict_wait.to_string());
+        field(&mut s, "sched_issued", self.sched_issued.to_string());
+        field(&mut s, "sched_stall_ready", self.sched_stall_ready.to_string());
+        field(&mut s, "sched_stall_empty", self.sched_stall_empty.to_string());
+        field(&mut s, "waiting_stalls", self.waiting_stalls.to_string());
+        field(
+            &mut s,
+            "collector_full_stalls",
+            self.collector_full_stalls.to_string(),
+        );
+        field(&mut s, "ccu_flushes", self.ccu_flushes.to_string());
+        field(&mut s, "l1_accesses", self.l1_accesses.to_string());
+        field(&mut s, "l1_hits", self.l1_hits.to_string());
+        field(&mut s, "l2_accesses", self.l2_accesses.to_string());
+        field(&mut s, "l2_hits", self.l2_hits.to_string());
+        field(&mut s, "ipc", self.ipc().to_string());
+        field(&mut s, "rf_hit_ratio", self.rf_hit_ratio().to_string());
+        field(&mut s, "l1_hit_ratio", self.l1_hit_ratio().to_string());
+        field(
+            &mut s,
+            "cache_write_fraction",
+            self.cache_write_fraction().to_string(),
+        );
+        let energy: Vec<String> = crate::energy::EVENT_NAMES
+            .iter()
+            .zip(self.energy.raw())
+            .map(|(name, n)| format!("\"{name}\":{n}"))
+            .collect();
+        field(&mut s, "energy", format!("{{{}}}", energy.join(",")));
+        let ipc_row: Vec<String> =
+            self.interval_ipc.iter().map(|v| v.to_string()).collect();
+        field(&mut s, "interval_ipc", format!("[{}]", ipc_row.join(",")));
+        let sthld_row: Vec<String> =
+            self.sthld_trace.iter().map(|v| v.to_string()).collect();
+        field(&mut s, "sthld_trace", format!("[{}]", sthld_row.join(",")));
+        field(
+            &mut s,
+            "fingerprint",
+            format!("\"{:016x}\"", self.fingerprint()),
+        );
+        s.push('}');
+        s
+    }
+
     /// Merge another counter set into this one (SM/sub-core aggregation).
     /// `cycles` takes the max (SMs share the wall clock), scalar counters
     /// add.
@@ -339,6 +415,29 @@ mod tests {
         s.rf_cache_reads -= 1;
         s.interval_ipc.push(1.25);
         assert_ne!(base, s.fingerprint(), "interval trace change must show");
+    }
+
+    #[test]
+    fn to_json_is_one_line_and_carries_the_fingerprint() {
+        let mut s = Stats::new();
+        s.cycles = 100;
+        s.instructions = 250;
+        s.rf_reads = 10;
+        s.rf_cache_reads = 4;
+        s.interval_ipc.push(2.5);
+        s.sthld_trace.push(3);
+        s.energy.add(crate::energy::EventKind::BankRead, 7);
+        let j = s.to_json();
+        assert!(!j.contains('\n'), "must be line-delimited-protocol safe");
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"cycles\":100"));
+        assert!(j.contains("\"ipc\":2.5"));
+        assert!(j.contains("\"bank_read\":7"));
+        assert!(j.contains("\"interval_ipc\":[2.5]"));
+        assert!(j.contains("\"sthld_trace\":[3]"));
+        assert!(j.contains(&format!("\"fingerprint\":\"{:016x}\"", s.fingerprint())));
+        // stable under clone (pure function of the counters)
+        assert_eq!(j, s.clone().to_json());
     }
 
     #[test]

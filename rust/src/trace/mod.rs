@@ -70,6 +70,38 @@ impl KernelTrace {
         self.warps.iter().map(|w| w.len()).sum()
     }
 
+    /// Order-stable FNV-1a digest over the trace **content**: kernel name,
+    /// kernel id, warp structure, and every field of every instruction
+    /// (including the compiler near/far bits and memory addresses). Two
+    /// traces fingerprint equal iff the simulator would consume identical
+    /// streams — this is the workload half of the persistent store's
+    /// content address ([`crate::serve::store`]), deliberately independent
+    /// of where (or whether) the trace lives on disk.
+    pub fn content_fingerprint(&self) -> u64 {
+        let mut h = crate::util::Fnv1a::new();
+        h.bytes(self.name.as_bytes());
+        h.word(u64::from(self.kernel_id));
+        h.word(self.warps.len() as u64);
+        for w in &self.warps {
+            h.word(w.len() as u64);
+            for i in w {
+                h.word(i.op as u64);
+                h.word(u64::from(i.nsrc));
+                h.word(u64::from(i.ndst));
+                for &r in &i.srcs[..i.nsrc as usize] {
+                    h.word(u64::from(r));
+                }
+                for &r in &i.dsts[..i.ndst as usize] {
+                    h.word(u64::from(r));
+                }
+                h.word(u64::from(i.src_near));
+                h.word(u64::from(i.dst_near));
+                h.word(u64::from(i.line_addr));
+            }
+        }
+        h.finish()
+    }
+
     /// Flatten the first `nwarps` warps into padded `(ids, pos, rw)` access
     /// streams for the reuse-annotation path (rust `compiler::` or the AOT
     /// artifact). Each register operand of each instruction becomes one
@@ -133,13 +165,47 @@ impl Workload {
         Workload::TraceFile(path.into())
     }
 
-    /// Stable identity used as the harness memo-cache key and in logs:
-    /// the registry name, or `trace:<path>` for file-backed workloads
-    /// (the prefix keeps the two namespaces from colliding).
+    /// Display identity used in logs and error messages: the registry
+    /// name, or `trace:<path>` for file-backed workloads (the prefix keeps
+    /// the two namespaces from colliding).
     pub fn cache_name(&self) -> String {
         match self {
             Workload::Builtin(name) => name.clone(),
             Workload::TraceFile(path) => format!("trace:{}", path.display()),
+        }
+    }
+
+    /// Memo-cache identity. Builtin workloads key by registry name (the
+    /// generator is pure), but trace files key by **content digest**, not
+    /// path: keying by path silently served stale stats after a `.mtrace`
+    /// file was edited in place between two runs of one process. An
+    /// unreadable file falls back to the path form — the subsequent
+    /// [`Workload::load`] surfaces the real I/O error.
+    pub fn cache_key(&self) -> String {
+        match self {
+            Workload::Builtin(name) => name.clone(),
+            Workload::TraceFile(path) => match std::fs::read(path) {
+                Ok(bytes) => {
+                    format!("trace:{:016x}", crate::util::fnv1a_bytes(&bytes))
+                }
+                Err(_) => format!("trace:{}", path.display()),
+            },
+        }
+    }
+
+    /// Content fingerprint of the instruction streams this workload
+    /// resolves to — the workload half of the persistent store's address
+    /// ([`crate::serve::store::StoreKey`]). Builtin generators digest
+    /// their generated content (a pure function of name x `nwarps` x
+    /// `seed`, both of which the config fingerprint also pins); trace
+    /// files digest their raw bytes, so renaming or moving a file never
+    /// changes its identity and editing it always does.
+    pub fn content_fingerprint(&self, nwarps: usize, seed: u64) -> Result<u64, String> {
+        match self {
+            Workload::Builtin(_) => Ok(self.load(nwarps, seed)?.content_fingerprint()),
+            Workload::TraceFile(path) => std::fs::read(path)
+                .map(|bytes| crate::util::fnv1a_bytes(&bytes))
+                .map_err(|e| format!("{}: {e}", path.display())),
         }
     }
 
@@ -249,6 +315,56 @@ mod tests {
         let direct = KernelTrace::generate(find("nn").unwrap(), 4, 9);
         assert_eq!(t.warps, direct.warps);
         assert!(Workload::builtin("nope").load(1, 0).is_err());
+    }
+
+    #[test]
+    fn content_fingerprint_tracks_every_instruction_field() {
+        let b = find("kmeans").unwrap();
+        let t = KernelTrace::generate(b, 2, 1);
+        let base = t.content_fingerprint();
+        assert_eq!(base, t.clone().content_fingerprint(), "pure function");
+
+        let mut c = t.clone();
+        c.kernel_id = 9;
+        assert_ne!(base, c.content_fingerprint(), "kernel id must show");
+        let mut c = t.clone();
+        c.warps[0][0].line_addr ^= 1;
+        assert_ne!(base, c.content_fingerprint(), "address must show");
+        let mut c = t.clone();
+        c.warps[0][0].src_near ^= 1;
+        assert_ne!(base, c.content_fingerprint(), "annotation bits must show");
+        let mut c = t.clone();
+        c.warps[1].pop();
+        assert_ne!(base, c.content_fingerprint(), "stream length must show");
+        // different seed -> different generated content
+        let other = KernelTrace::generate(b, 2, 2);
+        assert_ne!(base, other.content_fingerprint());
+    }
+
+    #[test]
+    fn workload_fingerprint_is_content_not_path() {
+        use std::io::Write;
+        let dir = std::env::temp_dir();
+        let p1 = dir.join(format!("malekeh_wfp_a_{}.mtrace", std::process::id()));
+        let p2 = dir.join(format!("malekeh_wfp_b_{}.mtrace", std::process::id()));
+        let t = KernelTrace::generate(find("nn").unwrap(), 2, 3);
+        io::write_path(&p1, &t).unwrap();
+        std::fs::copy(&p1, &p2).unwrap();
+        let f1 = Workload::trace_file(&p1).content_fingerprint(0, 0).unwrap();
+        let f2 = Workload::trace_file(&p2).content_fingerprint(0, 0).unwrap();
+        assert_eq!(f1, f2, "identical bytes under different paths must match");
+        // editing the file in place must change the identity
+        let mut f = std::fs::OpenOptions::new().append(true).open(&p2).unwrap();
+        writeln!(f, "# trailing comment").unwrap();
+        drop(f);
+        let f2b = Workload::trace_file(&p2).content_fingerprint(0, 0).unwrap();
+        assert_ne!(f1, f2b);
+        // builtin fingerprints pin the generated content
+        let wa = Workload::builtin("nn").content_fingerprint(2, 3).unwrap();
+        assert_eq!(wa, t.content_fingerprint());
+        assert!(Workload::builtin("nope").content_fingerprint(1, 0).is_err());
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p2);
     }
 
     #[test]

@@ -1,0 +1,113 @@
+//! Streaming FNV-1a — the repo-wide content-identity hash.
+//!
+//! [`crate::stats::Stats::fingerprint`] established FNV-1a as the
+//! bit-identity check for simulation *results*; the serving layer
+//! ([`crate::serve`]) extends the same construction to the *inputs*:
+//! [`crate::config::GpuConfig::fingerprint`] digests the canonical config
+//! serialisation and [`crate::trace::KernelTrace::content_fingerprint`]
+//! digests workload content, and together they form the persistent
+//! store's content address. This module is the one implementation all
+//! three share, so the mixing constants can never drift apart.
+
+/// Incremental 64-bit FNV-1a hasher.
+///
+/// Two feeding granularities are exposed — raw bytes ([`Fnv1a::bytes`])
+/// and whole `u64` words ([`Fnv1a::word`], the `Stats::fingerprint`
+/// construction). They advance the same state, so a caller picks
+/// whichever matches its data; mixing the two within one digest is fine
+/// as long as the feed order is deterministic.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv1a(u64);
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0100_0000_01B3;
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv1a {
+    /// Fresh hasher at the FNV offset basis.
+    pub fn new() -> Self {
+        Fnv1a(FNV_OFFSET)
+    }
+
+    /// Absorb raw bytes (classic byte-wise FNV-1a).
+    #[inline]
+    pub fn bytes(&mut self, data: &[u8]) -> &mut Self {
+        for &b in data {
+            self.0 = (self.0 ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    /// Absorb one 64-bit word (the `Stats::fingerprint` word-wise mix).
+    #[inline]
+    pub fn word(&mut self, v: u64) -> &mut Self {
+        self.0 = (self.0 ^ v).wrapping_mul(FNV_PRIME);
+        self
+    }
+
+    /// Current digest.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// One-shot byte-wise FNV-1a (file contents, canonical strings).
+pub fn fnv1a_bytes(data: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.bytes(data);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // published FNV-1a/64 test vectors
+        assert_eq!(fnv1a_bytes(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_bytes(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_bytes(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn streaming_equals_one_shot() {
+        let mut h = Fnv1a::new();
+        h.bytes(b"foo").bytes(b"bar");
+        assert_eq!(h.finish(), fnv1a_bytes(b"foobar"));
+    }
+
+    #[test]
+    fn word_feed_matches_stats_fingerprint_construction() {
+        // the exact fold Stats::fingerprint has always used
+        fn mix(h: u64, v: u64) -> u64 {
+            (h ^ v).wrapping_mul(0x0100_0000_01B3)
+        }
+        let want = [3u64, 1, 4, 1, 5]
+            .iter()
+            .fold(0xcbf2_9ce4_8422_2325u64, |h, &v| mix(h, v));
+        let mut h = Fnv1a::new();
+        for v in [3u64, 1, 4, 1, 5] {
+            h.word(v);
+        }
+        assert_eq!(h.finish(), want);
+    }
+
+    #[test]
+    fn byte_and_word_feeds_differ() {
+        // feeding a u64 as a word is not the same as feeding its bytes —
+        // callers must pick one granularity per field and stick to it
+        assert_ne!(
+            Fnv1a::new().word(0x61).finish(),
+            fnv1a_bytes(b"a"),
+            "word(0x61) must not alias bytes(\"a\")"
+        );
+    }
+}

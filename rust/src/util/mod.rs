@@ -1,3 +1,5 @@
-//! Small shared utilities (deterministic PRNG, etc.).
+//! Small shared utilities (deterministic PRNG, content hashing, etc.).
+pub mod fnv;
 pub mod rng;
+pub use fnv::{fnv1a_bytes, Fnv1a};
 pub use rng::Rng;

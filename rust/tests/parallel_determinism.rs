@@ -25,6 +25,7 @@ fn opts(jobs: usize) -> ExpOpts {
         quick: true,
         jobs,
         sim_threads: 1,
+            store_dir: None,
     }
 }
 

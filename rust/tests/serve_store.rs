@@ -1,0 +1,292 @@
+//! Integration tests for the serving subsystem (`serve::*`): persistent
+//! store semantics across process "restarts" and writer races, the
+//! content-based (not path-based) workload cache keying, harness
+//! store-backing, and the end-to-end daemon dedupe + restart-persistence
+//! contract over real localhost TCP.
+
+use std::path::PathBuf;
+
+use malekeh::config::{GpuConfig, Scheme};
+use malekeh::harness::{ExpOpts, Runner};
+use malekeh::serve::protocol::{JobSpec, JobState};
+use malekeh::serve::{Client, Server, ServerOpts, Store, StoreKey};
+use malekeh::sim::run_workload;
+use malekeh::stats::Stats;
+use malekeh::trace::{self, io as trace_io, KernelTrace, Workload};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("malekeh_serve_it_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Small options every test here shares: 1 SM, quick, serial, capped by
+/// the benchmark size ("nn" is the smallest registry benchmark).
+fn tiny_opts(store_dir: Option<PathBuf>) -> ExpOpts {
+    ExpOpts {
+        num_sms: 1,
+        seed: 7,
+        profile_warps: 2,
+        quick: true,
+        jobs: 1,
+        sim_threads: 1,
+        store_dir,
+    }
+}
+
+/// A Stats value no simulation would produce, but internally consistent
+/// (its fingerprint is computed from its own counters, so the store's
+/// integrity check passes). Finding it in a Runner result proves the
+/// store — not the simulator — served the point.
+fn sentinel_stats() -> Stats {
+    let mut s = Stats::new();
+    s.cycles = 424_242;
+    s.instructions = 999_999_999;
+    s.warps_retired = 77;
+    s.rf_reads = 5;
+    s.interval_ipc = vec![3.25];
+    s.sthld_trace = vec![9];
+    s
+}
+
+#[test]
+fn store_roundtrips_across_reopen() {
+    let dir = tmp_dir("reopen");
+    let cfg = tiny_opts(None).config(Scheme::MALEKEH);
+    let w = Workload::builtin("nn");
+    let key = StoreKey::for_run(&cfg, &w, 2).unwrap();
+    let stats = run_workload(&cfg, &w, 2).unwrap();
+    {
+        let store = Store::open(&dir).unwrap();
+        store.put(&key, &stats).unwrap();
+    } // handle dropped: the record must live on disk, not in the handle
+    let store = Store::open(&dir).unwrap();
+    let back = store.get(&key).expect("record survives reopen");
+    assert_eq!(back.fingerprint(), stats.fingerprint());
+    assert_eq!(back.cycles, stats.cycles);
+    assert_eq!(back.interval_ipc, stats.interval_ipc);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_writers_of_one_key_never_corrupt_it() {
+    let dir = tmp_dir("race");
+    let store = Store::open(&dir).unwrap();
+    let key = StoreKey { config_fp: 1, workload_fp: 2, policy: "baseline".into() };
+    let stats = sentinel_stats();
+    // hammer the same key from many threads; atomic temp+rename means
+    // every published record is complete, whichever rename lands last
+    std::thread::scope(|scope| {
+        for _ in 0..8 {
+            scope.spawn(|| {
+                for _ in 0..20 {
+                    store.put(&key, &stats).unwrap();
+                    if let Some(got) = store.get(&key) {
+                        assert_eq!(got.fingerprint(), stats.fingerprint());
+                    }
+                }
+            });
+        }
+    });
+    let got = store.get(&key).expect("record present after the race");
+    assert_eq!(got.fingerprint(), stats.fingerprint());
+    // no temp droppings left behind
+    let leftovers: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref().unwrap().file_name().to_string_lossy().starts_with(".tmp-")
+        })
+        .collect();
+    assert!(leftovers.is_empty(), "{leftovers:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn damaged_records_are_misses_and_the_runner_recovers() {
+    let dir = tmp_dir("damage");
+    let store = Store::open(&dir).unwrap();
+    let cfg = tiny_opts(None).config(Scheme::BASELINE);
+    let w = Workload::builtin("nn");
+    let key = StoreKey::for_run(&cfg, &w, 2).unwrap();
+    store.put(&key, &sentinel_stats()).unwrap();
+    let path = dir.join(key.file_name());
+
+    // truncation -> miss
+    let full = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+    assert!(store.get(&key).is_none(), "truncated record must miss");
+
+    // counter tampering -> fingerprint mismatch -> miss
+    std::fs::write(&path, full.replace("cycles = 424242", "cycles = 424243")).unwrap();
+    assert!(store.get(&key).is_none(), "tampered record must miss");
+
+    // a Runner over the damaged store recovers by simulating (and its
+    // write-back heals the record)
+    let runner = Runner::new(tiny_opts(Some(dir.clone())));
+    let fresh = runner.run("nn", Scheme::BASELINE);
+    assert_ne!(fresh.cycles, 424_242, "must have re-simulated, not trusted damage");
+    let healed = store.get(&key).expect("write-back heals the record");
+    assert_eq!(healed.fingerprint(), fresh.fingerprint());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn runner_is_store_backed_across_restarts() {
+    let dir = tmp_dir("runner");
+    // seed the store with a sentinel under the exact key the runner will
+    // compute for ("nn", MALEKEH)
+    let opts = tiny_opts(Some(dir.clone()));
+    let cfg = opts.config(Scheme::MALEKEH);
+    let key = StoreKey::for_run(&cfg, &Workload::builtin("nn"), opts.profile_warps).unwrap();
+    Store::open(&dir).unwrap().put(&key, &sentinel_stats()).unwrap();
+
+    // "restarted process": a fresh Runner with an empty memo cache must
+    // serve the sentinel from the store instead of simulating
+    let runner = Runner::new(opts.clone());
+    let served = runner.run("nn", Scheme::MALEKEH);
+    assert_eq!(served.cycles, 424_242, "store, not simulator, must serve this");
+    assert_eq!(runner.cached(), 1, "store hit still lands in the memo cache");
+
+    // the sharded Plan path consults the store too
+    let runner2 = Runner::new(ExpOpts { jobs: 2, ..opts });
+    let mut plan = runner2.plan();
+    plan.add("nn", Scheme::MALEKEH);
+    plan.add("nn", Scheme::BASELINE); // a genuine miss, to keep >1 point
+    runner2.execute(&plan);
+    assert_eq!(runner2.run("nn", Scheme::MALEKEH).cycles, 424_242);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gc_respects_the_byte_budget() {
+    let dir = tmp_dir("gc");
+    let store = Store::open(&dir).unwrap();
+    let stats = sentinel_stats();
+    for i in 0..6u64 {
+        let key = StoreKey { config_fp: i, workload_fp: 0, policy: "baseline".into() };
+        store.put(&key, &stats).unwrap();
+    }
+    let before = store.info().unwrap();
+    assert_eq!(before.records, 6);
+    let budget = before.bytes / 2;
+    let report = store.gc(budget).unwrap();
+    assert!(report.after.bytes <= budget, "{report:?}");
+    assert_eq!(report.after.records, 6 - report.deleted);
+    assert!(report.deleted >= 3, "oldest-first deletion until under budget");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite regression: the Runner used to key trace points by path
+/// string, so editing a trace file in place served the OLD stats. Keys
+/// are content fingerprints now — a rewrite is a miss, identical bytes
+/// at another path are a hit.
+#[test]
+fn rewritten_trace_file_is_a_cache_miss_not_stale_stats() {
+    let dir = tmp_dir("rekey");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("point.mtrace");
+    let bench = trace::find("nn").unwrap();
+
+    let runner = Runner::new(tiny_opts(None));
+    trace_io::write_path(&path, &KernelTrace::generate(bench, 4, 11)).unwrap();
+    let first = runner.run_trace(&path, Scheme::MALEKEH);
+    assert_eq!(runner.cached(), 1);
+
+    // rewrite the same path with different content: MUST re-simulate
+    trace_io::write_path(&path, &KernelTrace::generate(bench, 4, 99)).unwrap();
+    let second = runner.run_trace(&path, Scheme::MALEKEH);
+    assert_eq!(runner.cached(), 2, "in-place rewrite must be a miss");
+    assert_ne!(
+        first.fingerprint(),
+        second.fingerprint(),
+        "different trace content must produce different stats"
+    );
+
+    // identical bytes under a different path: pure hit, no new entry
+    let copy = dir.join("copy.mtrace");
+    std::fs::copy(&path, &copy).unwrap();
+    let third = runner.run_trace(&copy, Scheme::MALEKEH);
+    assert_eq!(runner.cached(), 2, "same content at a new path must be a hit");
+    assert_eq!(second.fingerprint(), third.fingerprint());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Pull the 16-hex-digit `fingerprint` field out of a stats JSON line.
+fn json_fingerprint(json: &str) -> u64 {
+    let tag = "\"fingerprint\":\"";
+    let at = json.find(tag).unwrap_or_else(|| panic!("no fingerprint in {json}"));
+    u64::from_str_radix(&json[at + tag.len()..at + tag.len() + 16], 16).unwrap()
+}
+
+/// The acceptance criterion, end to end over real TCP: the same job
+/// submitted twice to one daemon, and once more after a daemon restart,
+/// performs exactly ONE simulation, and the served result is bit-identical
+/// to a fresh storeless `--sim-threads 1` run of the same point.
+#[test]
+fn daemon_dedupes_in_flight_and_survives_restart() {
+    let dir = tmp_dir("daemon");
+    let spec = {
+        let mut s = JobSpec::bench("nn");
+        s.scheme = "malekeh".to_string();
+        s.overrides.push(("max_cycles".to_string(), "20000".to_string()));
+        s
+    };
+
+    let bind = |store: PathBuf| {
+        Server::bind(ServerOpts {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            store_dir: Some(store),
+        })
+        .unwrap()
+    };
+
+    // ---- first daemon lifetime: miss, then in-process dedupe ----
+    let server = bind(dir.clone());
+    let addr = server.local_addr().to_string();
+    let daemon = std::thread::spawn(move || server.run().unwrap());
+    let mut client = Client::connect(&addr).unwrap();
+    let (id, _) = client.submit(&spec).unwrap();
+    assert_eq!(client.wait(id).unwrap(), JobState::Done);
+    let fp_first = json_fingerprint(&client.result_json(id).unwrap());
+
+    let (id2, state2) = client.submit(&spec).unwrap();
+    assert_eq!(id2, id, "identical submission attaches to the same job");
+    assert_eq!(state2, JobState::Done);
+    let health = client.stats_json().unwrap();
+    assert!(health.contains("\"sims_completed\":1"), "one sim only: {health}");
+    assert!(health.contains("\"dedup_hits\":1"), "{health}");
+    client.shutdown().unwrap();
+    daemon.join().unwrap();
+
+    // ---- second daemon lifetime: the store serves it, zero sims ----
+    let server = bind(dir.clone());
+    let addr = server.local_addr().to_string();
+    let daemon = std::thread::spawn(move || server.run().unwrap());
+    let mut client = Client::connect(&addr).unwrap();
+    let (id3, state3) = client.submit(&spec).unwrap();
+    assert_eq!(state3, JobState::Done, "store hit is done at submission time");
+    let fp_restarted = json_fingerprint(&client.result_json(id3).unwrap());
+    let health = client.stats_json().unwrap();
+    assert!(health.contains("\"sims_completed\":0"), "no sim after restart: {health}");
+    assert!(health.contains("\"store_hits\":1"), "{health}");
+    client.shutdown().unwrap();
+    daemon.join().unwrap();
+
+    assert_eq!(fp_first, fp_restarted, "restart must not change a single bit");
+
+    // ---- reference: fresh storeless run of the same point ----
+    let mut cfg = GpuConfig::table1_baseline().with_scheme(Scheme::MALEKEH);
+    cfg.num_sms = 2; // JobSpec::bench default, same as `malekeh simulate`
+    cfg.apply(&spec.overrides).unwrap();
+    cfg.validate().unwrap();
+    assert_eq!(cfg.sim_threads, 1, "reference runs at --sim-threads 1");
+    let reference = run_workload(&cfg, &Workload::builtin("nn"), 2).unwrap();
+    assert_eq!(
+        reference.fingerprint(),
+        fp_first,
+        "daemon result must be bit-identical to a direct storeless run"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -113,6 +113,7 @@ fn trace_points_shard_deterministically() {
             quick: true,
             jobs,
             sim_threads: 1,
+            store_dir: None,
         });
         let mut plan = runner.plan();
         plan.add("kmeans", Scheme::BASELINE);
