@@ -720,6 +720,23 @@ pub fn fig17(runner: &Runner) -> Table {
     )
 }
 
+/// Corpus sweep (`malekeh fig corpus`): the six generated corpus kernels
+/// ([`crate::trace::corpus`]) against **every** registered policy —
+/// Table-II-style RF-hit-ratio grid with a MEAN row. The corpus stresses
+/// irregular control flow, pointer chasing and WAW churn, so this is the
+/// sweep that shows where compiler-approximated reuse distances (and the
+/// related-work prefetch/compression schemes) fall off the GEMM-shaped
+/// Table II results. Ignores quick mode: the corpus is always all six.
+pub fn fig_corpus(runner: &Runner) -> Table {
+    let benches: Vec<&'static str> = crate::trace::corpus().map(|b| b.name).collect();
+    hit_ratio_sweep_table(
+        runner,
+        "Corpus sweep: RF hit ratio, generated-kernel corpus x all registered policies",
+        &benches,
+        &Scheme::all(),
+    )
+}
+
 /// Headline table: the abstract's claims vs this reproduction.
 pub fn headline(runner: &Runner) -> Table {
     let opts = runner.opts().clone();

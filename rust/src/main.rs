@@ -81,8 +81,11 @@ fn print_help() {
            annotate <bench> [--engine rust|pjrt]       compiler reuse pass\n\
            trace record <bench> --out <file> [--sms N] [--warps N] [--seed N]\n\
                  [--kernel-id K] [--annotate] [--subsample K] [--window S:L]\n\
+                 [--format v1|v2]                      v2 = binary, streamable\n\
            trace info <file>                           inspect a .mtrace file\n\
-           fig <1|2|7|9|10|12|13|14|15|16|17> [--quick|--full] [--jobs N|--serial]\n\
+           trace convert <file> --out <file> [--to v1|v2]   re-encode a trace\n\
+           fig <1|2|7|9|10|12|13|14|15|16|17|corpus> [--quick|--full]\n\
+                 [--jobs N|--serial]\n\
            headline [--quick|--full] [--jobs N|--serial]   abstract's comparison\n\
            serve [--addr H:P] [--workers N] [--store DIR|--no-store]\n\
                                                        simulation daemon (TCP)\n\
@@ -154,21 +157,24 @@ fn cmd_simulate(cli: &Cli) -> Result<(), String> {
     let (label, stats): (String, Stats) = if let Some(file) = cli.options.get("trace")
     {
         let path = Path::new(file);
-        let loaded = trace_io::read_path(path)
-            .map_err(|e| format!("{}: {e}", path.display()))?;
+        // header probe only: a huge v2 trace must stay on disk here — the
+        // replay itself streams through `Workload::load_limited`
+        let label = trace_io::TraceStream::open(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?
+            .header()
+            .name
+            .clone();
         // `simulate <bench> --trace <file>` is allowed, but the file must
         // actually be a recording of <bench> — otherwise the output would
         // masquerade as a builtin run of the named benchmark
         if let Some(bench) = cli.positional.first() {
-            if *bench != loaded.name {
+            if *bench != label {
                 return Err(format!(
-                    "--trace {file} records kernel {:?}, not {bench:?}; \
-                     omit the benchmark argument to replay it as-is",
-                    loaded.name
+                    "--trace {file} records kernel {label:?}, not {bench:?}; \
+                     omit the benchmark argument to replay it as-is"
                 ));
             }
         }
-        let label = loaded.name.clone();
         // --reannotate discards recorded near/far bits and re-runs the
         // compiler pass under the current config
         if cli.has_flag("reannotate") {
@@ -177,6 +183,8 @@ fn cmd_simulate(cli: &Cli) -> Result<(), String> {
             if store.is_some() {
                 eprintln!("note: --reannotate bypasses --store");
             }
+            let loaded = trace_io::read_path(path)
+                .map_err(|e| format!("{}: {e}", path.display()))?;
             (label, run_trace(&cfg, loaded, profile_warps, true))
         } else {
             let workload = Workload::trace_file(path);
@@ -228,12 +236,15 @@ fn cmd_trace(cli: &Cli) -> Result<(), String> {
     let sub = cli
         .positional
         .first()
-        .ok_or("usage: trace <record|info> ...")?
+        .ok_or("usage: trace <record|info|convert> ...")?
         .as_str();
     match sub {
         "record" => cmd_trace_record(cli),
         "info" => cmd_trace_info(cli),
-        other => Err(format!("unknown trace subcommand {other:?} (record|info)")),
+        "convert" => cmd_trace_convert(cli),
+        other => Err(format!(
+            "unknown trace subcommand {other:?} (record|info|convert)"
+        )),
     }
 }
 
@@ -287,21 +298,75 @@ fn cmd_trace_record(cli: &Cli) -> Result<(), String> {
         transforms.push(parse_window(spec)?);
     }
     let t = trace_io::apply_all(&t, &transforms);
-    trace_io::write_path(Path::new(out.as_str()), &t)
-        .map_err(|e| format!("{out}: {e}"))?;
+    let fmt = cli.opt_or("format", "v1");
+    match fmt {
+        "v1" | "1" => trace_io::write_path(Path::new(out.as_str()), &t),
+        "v2" | "2" => trace_io::write_v2_path(Path::new(out.as_str()), &t),
+        other => return Err(format!("bad --format {other:?} (v1|v2)")),
+    }
+    .map_err(|e| format!("{out}: {e}"))?;
     println!(
-        "recorded `{}` (kernel {}): {} warps, {} instructions -> {}",
+        "recorded `{}` (kernel {}): {} warps, {} instructions -> {} ({})",
         t.name,
         t.kernel_id,
         t.warps.len(),
         t.total_instructions(),
-        out
+        out,
+        if matches!(fmt, "v2" | "2") { "binary v2" } else { "text v1" }
+    );
+    Ok(())
+}
+
+/// `trace convert <in> --out <file> [--to v1|v2]`: re-encode a trace
+/// between the textual v1 and binary v2 containers with bit-identical
+/// decoded semantics (same IR, same replay fingerprint, same store
+/// identity). Without `--to`, converts to the *other* version of the
+/// input. Conversion decodes the whole trace in memory — the streaming
+/// bound applies to v2 *replay*, not to re-encoding.
+fn cmd_trace_convert(cli: &Cli) -> Result<(), String> {
+    let file = cli
+        .positional
+        .get(1)
+        .ok_or("usage: trace convert <file> --out <file> [--to v1|v2]")?;
+    let out = cli
+        .options
+        .get("out")
+        .ok_or("trace convert requires --out <file>")?;
+    let path = Path::new(file.as_str());
+    let from = trace_io::sniff_path_version(path).map_err(|e| format!("{file}: {e}"))?;
+    let to = match cli.options.get("to").map(String::as_str) {
+        Some("v1" | "1") => 1,
+        Some("v2" | "2") => trace_io::VERSION2,
+        Some(other) => return Err(format!("bad --to {other:?} (v1|v2)")),
+        None => {
+            if from == trace_io::VERSION2 {
+                1
+            } else {
+                trace_io::VERSION2
+            }
+        }
+    };
+    let t = trace_io::read_path(path).map_err(|e| format!("{file}: {e}"))?;
+    let out_path = Path::new(out.as_str());
+    if to == trace_io::VERSION2 {
+        trace_io::write_v2_path(out_path, &t)
+    } else {
+        trace_io::write_path(out_path, &t)
+    }
+    .map_err(|e| format!("{out}: {e}"))?;
+    println!(
+        "converted {file} (v{from}) -> {out} (v{to}): kernel `{}`, {} warps, {} instructions",
+        t.name,
+        t.warps.len(),
+        t.total_instructions()
     );
     Ok(())
 }
 
 fn cmd_trace_info(cli: &Cli) -> Result<(), String> {
     let file = cli.positional.get(1).ok_or("usage: trace info <file>")?;
+    let version = trace_io::sniff_path_version(Path::new(file.as_str()))
+        .map_err(|e| format!("{file}: {e}"))?;
     let t = trace_io::read_path(Path::new(file.as_str()))
         .map_err(|e| format!("{file}: {e}"))?;
     let total = t.total_instructions();
@@ -317,6 +382,10 @@ fn cmd_trace_info(cli: &Cli) -> Result<(), String> {
         .iter()
         .fold((usize::MAX, 0usize), |(lo, hi), w| (lo.min(w.len()), hi.max(w.len())));
     println!("kernel               {}", t.name);
+    println!(
+        "format               v{version} ({})",
+        if version == trace_io::VERSION2 { "binary, chunked" } else { "text" }
+    );
     println!("kernel id            {}", t.kernel_id);
     println!("warps                {}", t.warps.len());
     println!("instructions         {total}");
@@ -439,6 +508,7 @@ fn cmd_fig(cli: &Cli) -> Result<(), String> {
         "15" => harness::fig15(&runner),
         "16" => harness::fig16(&runner),
         "17" => harness::fig17(&runner),
+        "corpus" => harness::fig_corpus(&runner),
         other => return Err(format!("no figure {other}; see DESIGN.md §5")),
     };
     table.print();

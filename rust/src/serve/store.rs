@@ -71,7 +71,9 @@ macro_rules! with_stats_scalars {
 /// `profile_warps` knob, which also shapes results (it bounds the
 /// compiler's reuse profiling pass). The workload half is
 /// [`Workload::content_fingerprint`] — generated or on-disk trace
-/// *content*, never a file path. The policy name is carried redundantly
+/// *content*, never a file path or its byte encoding: a `.mtrace` and
+/// its `trace convert`ed v2 twin decode to the same instructions and
+/// therefore share one record. The policy name is carried redundantly
 /// (it is already inside the config fingerprint via `scheme = <name>`)
 /// to keep store filenames and `store info` listings human-readable.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]

@@ -447,25 +447,36 @@ pub fn run_trace(
 /// any recorded annotation bits (and get the same compiler pass as the
 /// builtin path when the file carries none — which is what makes a raw
 /// recording replay bit-identically to its generator run).
+///
+/// Trace files load through [`Workload::load_limited`]: only the warps
+/// the config can schedule are materialised, so replaying a huge v2
+/// recording on a small config streams in bounded memory instead of
+/// cloning every warp only to drop it at slot assignment. The annotation
+/// decision still keys off the **whole file** (`LimitedLoad::annotated`),
+/// so truncation never changes whether the compiler pass runs — the
+/// retained warps simulate bit-identically to the unlimited path.
 pub fn run_workload(
     cfg: &GpuConfig,
     workload: &Workload,
     profile_warps: usize,
 ) -> Result<Stats, String> {
     let nwarps = cfg.num_sms * cfg.warps_per_sm;
-    let trace = workload.load(nwarps, cfg.seed)?;
-    if trace.warps.len() > nwarps {
+    let loaded = workload.load_limited(nwarps, cfg.seed)?;
+    if loaded.total_warps > nwarps {
         // the simulator drops warps beyond the GPU's slots — loud, because
         // a truncated replay can never match the recording's source run
         eprintln!(
             "warning: {} carries {} warps but the config has {nwarps} slots; \
              extra warps are dropped (raise --sms or subsample the trace)",
             workload.cache_name(),
-            trace.warps.len()
+            loaded.total_warps
         );
     }
-    let force = matches!(workload, Workload::Builtin(_));
-    Ok(run_trace(cfg, trace, profile_warps, force))
+    let mut trace = loaded.trace;
+    if matches!(workload, Workload::Builtin(_)) || !loaded.annotated {
+        crate::compiler::annotate_trace(&mut trace, profile_warps, cfg.rthld);
+    }
+    Ok(Simulator::new(cfg, &trace).run())
 }
 
 /// Convenience: generate + annotate + simulate one benchmark under `cfg`.

@@ -1,0 +1,276 @@
+//! Generated-kernel corpus: six structurally diverse kernels beyond the
+//! GEMM-shaped Table II set, modeled on the small hand-written assembly
+//! suites RISC-V simulators ship for differential testing.
+//!
+//! The paper's evaluation (and Table II) leans heavily on regular,
+//! tile-structured kernels — exactly where compiler-approximated reuse
+//! distances are most accurate. This corpus deliberately stresses the
+//! other end: data-dependent control flow, pointer chasing, write-after-
+//! write churn and store-dominated streams, where LTRF-style interval
+//! prefetch and Malekeh's sliding window can mispredict. The six kernels
+//! register as [`Suite::Corpus`][super::Suite::Corpus] in
+//! [`BENCHMARKS`][super::BENCHMARKS] and sweep against all registered
+//! policies via `malekeh fig corpus` (docs/EXPERIMENTS.md §Corpus sweep);
+//! `rust/tests/policy_parity.rs` pins their fingerprints into the golden
+//! grid and asserts the generators stay mutually distinct.
+//!
+//! Same generation contract as `workloads.rs`: every warp's program is a
+//! pure function of `(WarpCtx, seed)`, 400..20 000 instructions, one
+//! trailing `EXIT`.
+
+use super::program::{AddrGen, ProgramBuilder};
+use super::workloads::{seed_for, WarpCtx};
+use crate::isa::Instruction;
+
+/// FMA-based register-tiled matrix multiply (no tensor cores — contrast
+/// with `gemm_t1`'s MMA tiles): a 4x4 accumulator grid where every ALU op
+/// reads two freshly loaded fragments plus its accumulator, so accumulator
+/// reuse is near while fragment reuse dies each iteration.
+pub fn gen_matmul_tiled(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    const TM: usize = 4;
+    const TN: usize = 4;
+    let mut b = ProgramBuilder::new(28, 32, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    let a0 = 2u8;
+    let b0 = a0 + TM as u8;
+    let acc0 = b0 + TN as u8;
+    for it in 0..60usize {
+        for i in 0..TM {
+            b.ldg_u(a0 + i as u8, ag.stream(1));
+        }
+        // B tile comes from the kernel-shared weight region
+        for j in 0..TN {
+            b.ldg_u(b0 + j as u8, ag.shared((it * TN + j) as u32, 1024));
+        }
+        for i in 0..TM {
+            for j in 0..TN {
+                let acc = acc0 + (i * TN + j) as u8;
+                b.alu(&[a0 + i as u8, b0 + j as u8, acc], acc);
+            }
+        }
+    }
+    for k in 0..(TM * TN) {
+        b.stg_u(acc0 + k as u8, ag.stream(1));
+    }
+    b.finish()
+}
+
+/// Quicksort partition passes: a hot pivot register compared against a
+/// streamed run, with a data-dependent (≈50/50) divergent branch per
+/// element deciding between a swap-store and a bound update.
+pub fn gen_quicksort(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(8, 40, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    let pivot = 2u8;
+    let lo = 3u8;
+    let hi = 4u8;
+    for _ in 0..12usize {
+        b.ldg_u(pivot, ag.indirect(&mut b.rng, 1 << 14));
+        b.ldg_u(lo, ag.stream(1));
+        b.ldg_u(hi, ag.stream(1));
+        for _ in 0..24usize {
+            let x = b.tmp();
+            b.ldg_u(x, ag.stream(1));
+            let c = b.tmp();
+            b.alu(&[x, pivot], c);
+            if b.rng.below(100) < 50 {
+                // taken arm: swap the element into place
+                b.ctrl();
+                let d = b.tmp();
+                b.alu(&[c, lo], d);
+                b.stg_u(x, ag.indirect(&mut b.rng, 1 << 14));
+                b.alu(&[lo, d], lo);
+            } else {
+                b.alu(&[c, hi], hi);
+            }
+        }
+        let t = b.tmp();
+        b.alu(&[lo, hi], t);
+    }
+    b.finish()
+}
+
+/// Single-strand pointer chase: every load's address register is the
+/// previous load's destination, so there is no instruction-level overlap
+/// and near-zero register reuse — the worst case for any RF cache.
+pub fn gen_pointer_chase(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(8, 32, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    for _ in 0..110usize {
+        let mut p = b.tmp();
+        b.ldg_u(p, ag.indirect(&mut b.rng, 1 << 16));
+        for _ in 0..10usize {
+            let n = b.tmp();
+            b.ldg(p, n, ag.indirect(&mut b.rng, 1 << 16));
+            p = n;
+        }
+        let t = b.tmp();
+        b.alu(&[p], t);
+    }
+    b.finish()
+}
+
+/// 3x3 box filter: nine taps per pixel (one column re-read from a shared
+/// halo region), pairwise reduction tree, normalise, store — a wide
+/// fan-in of short-lived values with overlap between adjacent pixels.
+pub fn gen_box_blur(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(8, 40, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    for px in 0..88usize {
+        let mut taps = Vec::with_capacity(9);
+        for k in 0..9usize {
+            let d = b.tmp();
+            if k % 3 == 0 {
+                b.ldg_u(d, ag.shared((px * 9 + k) as u32, 2048));
+            } else {
+                b.ldg_u(d, ag.stream(1));
+            }
+            taps.push(d);
+        }
+        let mut acc = taps[0];
+        for &v in &taps[1..] {
+            let d = b.tmp();
+            b.alu(&[acc, v], d);
+            acc = d;
+        }
+        let out = b.tmp();
+        b.alu(&[acc], out);
+        b.stg_u(out, ag.stream(1));
+    }
+    b.finish()
+}
+
+/// Sieve of Eratosthenes marking passes: a hot prime register drives a
+/// long run of next-multiple/store pairs at a per-prime stride — the
+/// store-dominated end of the spectrum (~45% stores), where the CCU's
+/// write traffic, not read reuse, is what a policy pays for.
+pub fn gen_prime_sieve(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(8, 32, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    let prime = 2u8;
+    for pi in 0..16u32 {
+        b.ldg_u(prime, ag.shared(pi, 64));
+        let sq = b.tmp();
+        b.alu(&[prime, prime], sq);
+        let mut cur = sq;
+        for m in 0..38usize {
+            let nxt = b.tmp();
+            b.alu(&[cur, prime], nxt);
+            b.stg_u(nxt, ag.stream(3 + 2 * (pi % 7)));
+            cur = nxt;
+            if m % 13 == 12 {
+                b.ctrl();
+            }
+        }
+    }
+    b.finish()
+}
+
+/// Hazard stress: bursts of back-to-back writes to a rotating set of hot
+/// registers with no intervening reads (WAW churn the allocator must
+/// coalesce), interleaved with ≈40% divergent branches and a trailing
+/// dependent chain that finally consumes the last write.
+pub fn gen_hazard_stress(ctx: &WarpCtx, seed: u64) -> Vec<Instruction> {
+    let mut b = ProgramBuilder::new(8, 24, seed_for(ctx, seed));
+    let mut ag = AddrGen::new(ctx.warp_id, ctx.kernel_id);
+    let hot = [2u8, 3, 4, 5];
+    let x = 6u8;
+    b.ldg_u(x, ag.stream(1));
+    for it in 0..150usize {
+        let d = hot[it % hot.len()];
+        // WAW burst: only the last of these four writes is ever read
+        for _ in 0..4usize {
+            b.alu(&[x], d);
+        }
+        if b.rng.below(100) < 40 {
+            b.ctrl();
+            let t = b.tmp();
+            b.alu(&[d], t);
+        }
+        let end = b.chain(d, 3);
+        // the load then overwrites the hot register again (load/ALU WAW)
+        b.ldg_u(d, ag.indirect(&mut b.rng, 1 << 12));
+        b.stg_u(end, ag.stream(1));
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::OpClass;
+    use crate::trace::{corpus, find, Suite};
+
+    fn ctx(warp: u32) -> WarpCtx {
+        WarpCtx { warp_id: warp, nwarps: 32, kernel_id: 0 }
+    }
+
+    #[test]
+    fn corpus_is_registered_and_findable() {
+        let names: Vec<&str> = corpus().map(|b| b.name).collect();
+        assert_eq!(
+            names,
+            ["matmul_tiled", "quicksort", "pointer_chase", "box_blur", "prime_sieve",
+             "hazard_stress"],
+        );
+        for n in names {
+            assert_eq!(find(n).unwrap().suite, Suite::Corpus);
+        }
+    }
+
+    #[test]
+    fn corpus_kernels_avoid_tensor_cores() {
+        // the corpus contrasts with Deepbench: scalar FMA tiles, no MMA
+        for b in corpus() {
+            let p = (b.gen)(&ctx(0), 1);
+            assert!(p.iter().all(|i| i.op != OpClass::Mma), "{}", b.name);
+        }
+    }
+
+    #[test]
+    fn pointer_chase_is_dependent_loads() {
+        let p = gen_pointer_chase(&ctx(1), 7);
+        let loads = p.iter().filter(|i| i.op == OpClass::LdGlobal);
+        let (dep, total) = loads.fold((0usize, 0usize), |(d, t), i| {
+            (d + usize::from(i.nsrc > 0), t + 1)
+        });
+        assert!(
+            dep * 10 >= total * 8,
+            "chase must be address-dependent: {dep}/{total}"
+        );
+    }
+
+    #[test]
+    fn prime_sieve_is_store_heavy() {
+        let p = gen_prime_sieve(&ctx(0), 3);
+        let stores = p.iter().filter(|i| i.op == OpClass::StGlobal).count();
+        assert!(
+            stores * 10 >= p.len() * 3,
+            "sieve must be store-dominated: {stores}/{}",
+            p.len()
+        );
+    }
+
+    #[test]
+    fn hazard_stress_has_waw_bursts_and_divergence() {
+        let p = gen_hazard_stress(&ctx(2), 9);
+        let waw = p
+            .windows(2)
+            .filter(|w| {
+                w[0].op == OpClass::Alu
+                    && w[1].op == OpClass::Alu
+                    && w[0].dests() == w[1].dests()
+                    && !w[1].sources().contains(&w[0].dests()[0])
+            })
+            .count();
+        assert!(waw > 100, "expected WAW bursts, saw {waw}");
+        assert!(p.iter().any(|i| i.op == OpClass::Ctrl), "no divergence");
+    }
+
+    #[test]
+    fn quicksort_diverges_per_element() {
+        let p = gen_quicksort(&ctx(4), 11);
+        let ctrls = p.iter().filter(|i| i.op == OpClass::Ctrl).count();
+        assert!(ctrls > 80, "expected heavy divergence, saw {ctrls} branches");
+    }
+}

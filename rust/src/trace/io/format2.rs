@@ -1,0 +1,813 @@
+//! Binary `.mtrace` **v2**: length-prefixed chunked records with varint
+//! packing and per-chunk delta/RLE compression.
+//!
+//! The textual v1 grammar ([`super::format`]) is convenient to diff but
+//! parses line-by-line into a fully in-memory [`KernelTrace`] — it does
+//! not survive multi-GB traces. v2 is the scalable sibling: the same IR,
+//! serialised as a sequence of bounded, length-prefixed **chunks** that a
+//! streaming reader ([`V2Reader`], wrapped by
+//! [`super::stream::TraceStream`]) can validate and hand to the simulator
+//! one window at a time, holding at most one chunk of decode state.
+//!
+//! # Grammar (byte level)
+//!
+//! ```text
+//! file    := magic header chunk* trailer
+//! magic   := "mtrace v2\n"                      (10 ASCII bytes)
+//! header  := name_len:uv name:bytes kernel_id:uv nwarps:uv
+//! chunk   := 0xC1 warp:uv count:uv enc:u8 payload_len:uv payload
+//! trailer := 0xC0 total_instructions:uv digest:u64le
+//! ```
+//!
+//! `uv` is a canonical little-endian base-128 varint (LEB128): at most 10
+//! bytes, non-minimal encodings rejected. Chunks appear warp-major: all
+//! chunks of warp 0, then warp 1, ... — warp indices step by exactly one
+//! and every warp owns at least one chunk. `enc` selects the payload
+//! record encoding:
+//!
+//! - `0` (**raw**): per instruction — one shape byte
+//!   `op(3 bits) | nsrc<<3 | ndst<<6`, then `nsrc` source and `ndst`
+//!   destination register bytes, the near/far masks (2 bytes), and, for
+//!   memory ops only, the absolute line address as `uv`.
+//! - `1` (**packed**): run-length groups `run:uv record`, where the
+//!   record is the raw shape but its line address is replaced by a
+//!   zigzag-varint **delta** against the previous memory address in the
+//!   chunk (reset to 0 at each chunk start). A run of `n` repeats the
+//!   record `n` times, re-applying the delta each time — so a constant
+//!   -stride load/store stream collapses to a single group.
+//!
+//! The trailer's `digest` is a streaming FNV-1a over the **decoded**
+//! content (name, kernel id, warp count, then per warp its index followed
+//! by every instruction field) — encoding-independent, so any byte
+//! corruption that survives the structural checks still fails the digest
+//! (the fuzz battery in `rust/tests/trace_v2_fuzz.rs` leans on this).
+//! Every declared length is capped before allocation, so a hostile file
+//! can never make the parser balloon: names ≤ [`NAME_CAP`], warps ≤
+//! [`WARP_CAP`], chunk records ≤ [`CHUNK_INSTR_CAP`], chunk payloads ≤
+//! [`CHUNK_PAYLOAD_CAP`]. Full grammar prose lives in `docs/TRACES.md`.
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+use super::format::{self, TraceHeader};
+use super::TraceIoError;
+use crate::isa::{Instruction, OpClass, MAX_DST, MAX_SRC};
+use crate::trace::{fold_instruction, KernelTrace};
+use crate::util::Fnv1a;
+
+/// First bytes of every v2 file (the textual v1 magic line never starts
+/// with these ten bytes, so a prefix probe fully disambiguates).
+pub const MAGIC2: &[u8; 10] = b"mtrace v2\n";
+/// Format version written and accepted by this module.
+pub const VERSION2: u32 = 2;
+/// Longest accepted kernel name, in bytes.
+pub const NAME_CAP: usize = 255;
+/// Most warps a v2 header may declare.
+pub const WARP_CAP: usize = 1 << 20;
+/// Most instruction records one chunk may declare.
+pub const CHUNK_INSTR_CAP: usize = 1 << 16;
+/// Largest accepted chunk payload, in bytes (a full-size chunk of
+/// worst-case records stays well under this).
+pub const CHUNK_PAYLOAD_CAP: usize = 4 << 20;
+/// Instructions per chunk emitted by [`write_v2`] — the reader-side
+/// memory bound is `CHUNK_INSTR_CAP`, this is just the writer's choice.
+pub const WRITER_CHUNK_INSTRS: usize = 4096;
+
+const TAG_CHUNK: u8 = 0xC1;
+const TAG_END: u8 = 0xC0;
+const ENC_RAW: u8 = 0;
+const ENC_PACKED: u8 = 1;
+
+fn verr(off: u64, msg: impl std::fmt::Display) -> TraceIoError {
+    TraceIoError::at(0, format!("v2 offset {off}: {msg}"))
+}
+
+// ---------------------------------------------------------------- varints
+
+fn push_uv(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+fn unzigzag(z: u64) -> i64 {
+    ((z >> 1) as i64) ^ -((z & 1) as i64)
+}
+
+// --------------------------------------------------------- payload decode
+
+/// Cursor over one chunk payload (already bounded by
+/// [`CHUNK_PAYLOAD_CAP`], so everything here is slice arithmetic).
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    /// File offset of `buf[0]`, for error anchoring.
+    base: u64,
+}
+
+impl Cur<'_> {
+    fn off(&self) -> u64 {
+        self.base + self.pos as u64
+    }
+
+    fn byte(&mut self, what: &str) -> Result<u8, TraceIoError> {
+        let b = *self
+            .buf
+            .get(self.pos)
+            .ok_or_else(|| verr(self.off(), format!("chunk payload truncated in {what}")))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn uv(&mut self, what: &str) -> Result<u64, TraceIoError> {
+        let start = self.off();
+        let mut val = 0u64;
+        for k in 0..10u32 {
+            let b = self.byte(what)?;
+            if k == 9 && b > 1 {
+                return Err(verr(start, format!("varint overflows u64 in {what}")));
+            }
+            val |= u64::from(b & 0x7F) << (7 * k);
+            if b & 0x80 == 0 {
+                if k > 0 && b == 0 {
+                    return Err(verr(start, format!("non-canonical varint in {what}")));
+                }
+                return Ok(val);
+            }
+        }
+        Err(verr(start, format!("varint longer than 10 bytes in {what}")))
+    }
+}
+
+/// Decode the encoding-invariant record prefix (shape byte, registers,
+/// near masks); the caller supplies the line address per the chunk
+/// encoding. Returns the instruction (address still 0) and whether it is
+/// a memory op (= carries an address field).
+fn decode_record(c: &mut Cur) -> Result<(Instruction, bool), TraceIoError> {
+    let at = c.off();
+    let b0 = c.byte("record shape byte")?;
+    let op = OpClass::ALL[usize::from(b0 & 0x07)];
+    let nsrc = usize::from((b0 >> 3) & 0x07);
+    let ndst = usize::from(b0 >> 6);
+    if nsrc > MAX_SRC {
+        return Err(verr(at, format!("{nsrc} sources exceed the ISA bound {MAX_SRC}")));
+    }
+    if ndst > MAX_DST {
+        return Err(verr(
+            at,
+            format!("{ndst} destinations exceed the ISA bound {MAX_DST}"),
+        ));
+    }
+    let mut srcs = [0u8; MAX_SRC];
+    for s in srcs.iter_mut().take(nsrc) {
+        *s = c.byte("source register")?;
+    }
+    let mut dsts = [0u8; MAX_DST];
+    for d in dsts.iter_mut().take(ndst) {
+        *d = c.byte("destination register")?;
+    }
+    let src_near = c.byte("source near mask")?;
+    let dst_near = c.byte("destination near mask")?;
+    if u32::from(src_near) >= (1u32 << nsrc) {
+        return Err(verr(
+            at,
+            format!("near mask {src_near} names sources beyond the {nsrc} declared"),
+        ));
+    }
+    if u32::from(dst_near) >= (1u32 << ndst) {
+        return Err(verr(
+            at,
+            format!("near mask {dst_near} names destinations beyond the {ndst} declared"),
+        ));
+    }
+    let mut i = Instruction::new(op, &srcs[..nsrc], &dsts[..ndst]);
+    i.src_near = src_near;
+    i.dst_near = dst_near;
+    Ok((i, op.is_mem()))
+}
+
+/// Decode one chunk payload into `out` (appended); `count` records must
+/// consume the payload exactly.
+fn decode_payload(
+    enc: u8,
+    payload: &[u8],
+    base_off: u64,
+    count: usize,
+    out: &mut Vec<Instruction>,
+) -> Result<(), TraceIoError> {
+    let mut c = Cur { buf: payload, pos: 0, base: base_off };
+    match enc {
+        ENC_RAW => {
+            for _ in 0..count {
+                let (mut i, mem) = decode_record(&mut c)?;
+                if mem {
+                    let at = c.off();
+                    let a = c.uv("line address")?;
+                    if a > u64::from(u32::MAX) {
+                        return Err(verr(at, "line address exceeds u32"));
+                    }
+                    i.line_addr = a as u32;
+                }
+                out.push(i);
+            }
+        }
+        ENC_PACKED => {
+            let mut prev: i64 = 0;
+            let mut remaining = count;
+            while remaining > 0 {
+                let at = c.off();
+                let run = c.uv("run length")?;
+                if run == 0 || run > remaining as u64 {
+                    return Err(verr(
+                        at,
+                        format!("run length {run} invalid with {remaining} records left"),
+                    ));
+                }
+                let (proto, mem) = decode_record(&mut c)?;
+                let delta = if mem { unzigzag(c.uv("address delta")?) } else { 0 };
+                for _ in 0..run {
+                    let mut i = proto;
+                    if mem {
+                        let a = prev + delta;
+                        if !(0..=i64::from(u32::MAX)).contains(&a) {
+                            return Err(verr(at, "delta walks the line address out of u32"));
+                        }
+                        i.line_addr = a as u32;
+                        prev = a;
+                    }
+                    out.push(i);
+                }
+                remaining -= run as usize;
+            }
+        }
+        other => {
+            return Err(verr(base_off, format!("unknown chunk encoding {other}")));
+        }
+    }
+    if c.pos != payload.len() {
+        return Err(verr(
+            c.off(),
+            format!("{} unconsumed payload bytes after the declared records", payload.len() - c.pos),
+        ));
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- encoding
+
+fn push_record(out: &mut Vec<u8>, i: &Instruction) {
+    out.push((i.op as u8) | (i.nsrc << 3) | (i.ndst << 6));
+    out.extend_from_slice(&i.srcs[..usize::from(i.nsrc)]);
+    out.extend_from_slice(&i.dsts[..usize::from(i.ndst)]);
+    out.push(i.src_near);
+    out.push(i.dst_near);
+}
+
+/// Do two instructions encode to the same record modulo the address?
+fn same_shape(a: &Instruction, b: &Instruction) -> bool {
+    a.op == b.op
+        && a.nsrc == b.nsrc
+        && a.ndst == b.ndst
+        && a.srcs == b.srcs
+        && a.dsts == b.dsts
+        && a.src_near == b.src_near
+        && a.dst_near == b.dst_near
+}
+
+/// Packed-encode one chunk: delta addresses + RLE over identical
+/// (record, delta) groups. Constant-stride streams collapse to one group.
+fn encode_packed(chunk: &[Instruction], out: &mut Vec<u8>) {
+    let mut prev: i64 = 0;
+    let mut k = 0usize;
+    while k < chunk.len() {
+        let first = &chunk[k];
+        let mem = first.op.is_mem();
+        let d0 = if mem { i64::from(first.line_addr) - prev } else { 0 };
+        let mut p = if mem { i64::from(first.line_addr) } else { prev };
+        let mut run = 1usize;
+        while k + run < chunk.len() {
+            let c = &chunk[k + run];
+            if !same_shape(c, first) {
+                break;
+            }
+            if mem {
+                if i64::from(c.line_addr) - p != d0 {
+                    break;
+                }
+                p = i64::from(c.line_addr);
+            }
+            run += 1;
+        }
+        push_uv(out, run as u64);
+        push_record(out, first);
+        if mem {
+            push_uv(out, zigzag(d0));
+        }
+        prev = p;
+        k += run;
+    }
+}
+
+// ---------------------------------------------------------------- reader
+
+/// Incremental v2 parser: hands out one decoded chunk at a time, holding
+/// only bounded state (one payload buffer), and finishes with the
+/// whole-file checks — warp coverage, EXIT invariants, instruction total,
+/// content digest, and no trailing bytes.
+pub struct V2Reader<R: Read> {
+    r: R,
+    off: u64,
+    header: TraceHeader,
+    digest: Fnv1a,
+    /// Warp currently receiving chunks (None before the first chunk).
+    cur_warp: Option<usize>,
+    warps_closed: usize,
+    cur_exits: usize,
+    cur_ends_exit: bool,
+    total: u64,
+    finished: bool,
+    payload: Vec<u8>,
+}
+
+impl<R: Read> V2Reader<R> {
+    /// Parse the magic and header; the stream is then positioned at the
+    /// first chunk.
+    pub fn new(r: R) -> Result<Self, TraceIoError> {
+        let mut rd = V2Reader {
+            r,
+            off: 0,
+            header: TraceHeader { name: String::new(), kernel_id: 0, nwarps: 0 },
+            digest: Fnv1a::new(),
+            cur_warp: None,
+            warps_closed: 0,
+            cur_exits: 0,
+            cur_ends_exit: false,
+            total: 0,
+            finished: false,
+            payload: Vec::new(),
+        };
+        let mut magic = [0u8; MAGIC2.len()];
+        rd.fill(&mut magic, "magic")?;
+        if magic != *MAGIC2 {
+            return Err(verr(0, "not an mtrace v2 file (bad magic)"));
+        }
+        let at = rd.off;
+        let name_len = rd.uv("name length")? as usize;
+        if name_len == 0 || name_len > NAME_CAP {
+            return Err(verr(at, format!("kernel name length {name_len} outside 1..={NAME_CAP}")));
+        }
+        let mut name = vec![0u8; name_len];
+        rd.fill(&mut name, "kernel name")?;
+        let name = String::from_utf8(name)
+            .map_err(|_| verr(at, "kernel name is not valid UTF-8"))?;
+        format::validate_name(&name).map_err(|m| verr(at, m))?;
+        let at = rd.off;
+        let kernel_id = rd.uv("kernel id")?;
+        if kernel_id > u64::from(u32::MAX) {
+            return Err(verr(at, "kernel id exceeds u32"));
+        }
+        let at = rd.off;
+        let nwarps = rd.uv("warp count")? as usize;
+        if nwarps > WARP_CAP {
+            return Err(verr(at, format!("{nwarps} warps exceed the cap {WARP_CAP}")));
+        }
+        rd.header = TraceHeader { name, kernel_id: kernel_id as u32, nwarps };
+        rd.digest.bytes(rd.header.name.as_bytes());
+        rd.digest.word(kernel_id);
+        rd.digest.word(nwarps as u64);
+        Ok(rd)
+    }
+
+    /// Header decoded from the front of the file.
+    pub fn header(&self) -> &TraceHeader {
+        &self.header
+    }
+
+    fn fill(&mut self, buf: &mut [u8], what: &str) -> Result<(), TraceIoError> {
+        let at = self.off;
+        self.r
+            .read_exact(buf)
+            .map_err(|e| verr(at, format!("truncated in {what}: {e}")))?;
+        self.off += buf.len() as u64;
+        Ok(())
+    }
+
+    fn byte(&mut self, what: &str) -> Result<u8, TraceIoError> {
+        let mut b = [0u8; 1];
+        self.fill(&mut b, what)?;
+        Ok(b[0])
+    }
+
+    fn uv(&mut self, what: &str) -> Result<u64, TraceIoError> {
+        let start = self.off;
+        let mut val = 0u64;
+        for k in 0..10u32 {
+            let b = self.byte(what)?;
+            if k == 9 && b > 1 {
+                return Err(verr(start, format!("varint overflows u64 in {what}")));
+            }
+            val |= u64::from(b & 0x7F) << (7 * k);
+            if b & 0x80 == 0 {
+                if k > 0 && b == 0 {
+                    return Err(verr(start, format!("non-canonical varint in {what}")));
+                }
+                return Ok(val);
+            }
+        }
+        Err(verr(start, format!("varint longer than 10 bytes in {what}")))
+    }
+
+    fn close_warp(&mut self) -> Result<(), TraceIoError> {
+        if let Some(w) = self.cur_warp {
+            if self.cur_exits != 1 || !self.cur_ends_exit {
+                return Err(verr(
+                    self.off,
+                    format!("warp {w} must end with exactly one EXIT marker"),
+                ));
+            }
+            self.warps_closed += 1;
+        }
+        Ok(())
+    }
+
+    fn open_warp(&mut self, w: usize) {
+        self.cur_warp = Some(w);
+        self.cur_exits = 0;
+        self.cur_ends_exit = false;
+        self.digest.word(w as u64);
+    }
+
+    /// Decode the next chunk into `out` (cleared first) and return its
+    /// warp index, or `None` once the trailer validated cleanly. After
+    /// `None`, further calls keep returning `None`.
+    pub fn next_chunk(&mut self, out: &mut Vec<Instruction>) -> Result<Option<usize>, TraceIoError> {
+        out.clear();
+        if self.finished {
+            return Ok(None);
+        }
+        let at = self.off;
+        match self.byte("chunk tag")? {
+            TAG_END => {
+                self.close_warp()?;
+                if self.warps_closed != self.header.nwarps {
+                    return Err(verr(
+                        at,
+                        format!(
+                            "header declares {} warps but {} were encoded",
+                            self.header.nwarps, self.warps_closed
+                        ),
+                    ));
+                }
+                let declared = self.uv("instruction total")?;
+                if declared != self.total {
+                    return Err(verr(
+                        at,
+                        format!("trailer declares {declared} instructions, decoded {}", self.total),
+                    ));
+                }
+                let mut d = [0u8; 8];
+                self.fill(&mut d, "content digest")?;
+                if u64::from_le_bytes(d) != self.digest.finish() {
+                    return Err(verr(at, "content digest mismatch (corrupt trace)"));
+                }
+                let mut probe = [0u8; 1];
+                match self.r.read(&mut probe) {
+                    Ok(0) => {}
+                    Ok(_) => return Err(verr(self.off, "trailing bytes after the trailer")),
+                    Err(e) => return Err(verr(self.off, e)),
+                }
+                self.finished = true;
+                Ok(None)
+            }
+            TAG_CHUNK => {
+                let w = self.uv("chunk warp index")? as usize;
+                match self.cur_warp {
+                    None => {
+                        if w != 0 {
+                            return Err(verr(at, format!("first chunk must be warp 0, got {w}")));
+                        }
+                        if self.header.nwarps == 0 {
+                            return Err(verr(at, "chunk present but header declares 0 warps"));
+                        }
+                        self.open_warp(0);
+                    }
+                    Some(cw) if w == cw => {}
+                    Some(cw) if w == cw + 1 => {
+                        self.close_warp()?;
+                        if w >= self.header.nwarps {
+                            return Err(verr(
+                                at,
+                                format!("warp {w} beyond the {} declared", self.header.nwarps),
+                            ));
+                        }
+                        self.open_warp(w);
+                    }
+                    Some(cw) => {
+                        return Err(verr(
+                            at,
+                            format!("chunks must be warp-sequential (got {w} after {cw})"),
+                        ));
+                    }
+                }
+                let count = self.uv("chunk record count")? as usize;
+                if count == 0 || count > CHUNK_INSTR_CAP {
+                    return Err(verr(
+                        at,
+                        format!("chunk record count {count} outside 1..={CHUNK_INSTR_CAP}"),
+                    ));
+                }
+                let enc = self.byte("chunk encoding")?;
+                let plen = self.uv("chunk payload length")? as usize;
+                if plen == 0 || plen > CHUNK_PAYLOAD_CAP {
+                    return Err(verr(
+                        at,
+                        format!("chunk payload length {plen} outside 1..={CHUNK_PAYLOAD_CAP}"),
+                    ));
+                }
+                self.payload.resize(plen, 0);
+                let payload_off = self.off;
+                let mut payload = std::mem::take(&mut self.payload);
+                let res = self.fill(&mut payload, "chunk payload");
+                self.payload = payload;
+                res?;
+                out.reserve(count);
+                decode_payload(enc, &self.payload, payload_off, count, out)?;
+                for i in out.iter() {
+                    fold_instruction(&mut self.digest, i);
+                    if i.op == OpClass::Exit {
+                        self.cur_exits += 1;
+                    }
+                    self.cur_ends_exit = i.op == OpClass::Exit;
+                }
+                self.total += count as u64;
+                Ok(Some(w))
+            }
+            other => Err(verr(at, format!("unknown section tag 0x{other:02X}"))),
+        }
+    }
+}
+
+// ------------------------------------------------------------ entry points
+
+/// Read a whole v2 stream into a [`KernelTrace`] (in-memory counterpart
+/// of the chunked path; `super::stream::TraceStream` is the bounded one).
+pub fn read_v2<R: Read>(r: R) -> Result<KernelTrace, TraceIoError> {
+    let mut rd = V2Reader::new(r)?;
+    let mut warps: Vec<Vec<Instruction>> = Vec::new();
+    let mut buf = Vec::new();
+    while let Some(w) = rd.next_chunk(&mut buf)? {
+        if w == warps.len() {
+            warps.push(Vec::new());
+        }
+        warps[w].extend_from_slice(&buf);
+    }
+    let h = rd.header().clone();
+    Ok(KernelTrace { name: h.name, kernel_id: h.kernel_id, warps })
+}
+
+/// Read a v2 trace from an in-memory byte buffer (tests, fuzzing).
+pub fn read_v2_slice(bytes: &[u8]) -> Result<KernelTrace, TraceIoError> {
+    read_v2(bytes)
+}
+
+/// Serialise `trace` as v2 to any writer. Deterministic: same trace, same
+/// bytes. Mirrors the reader's validation (name, EXIT invariants, no
+/// address on non-memory ops) so it can never emit a file [`read_v2`]
+/// rejects.
+pub fn write_v2<W: Write>(mut w: W, trace: &KernelTrace) -> Result<(), TraceIoError> {
+    format::validate_name(&trace.name).map_err(|m| TraceIoError::at(0, m))?;
+    if trace.name.len() > NAME_CAP {
+        return Err(TraceIoError::at(0, format!("kernel name longer than {NAME_CAP} bytes")));
+    }
+    if trace.warps.len() > WARP_CAP {
+        return Err(TraceIoError::at(0, format!("more than {WARP_CAP} warps")));
+    }
+    for (i, warp) in trace.warps.iter().enumerate() {
+        let exits = warp.iter().filter(|x| x.op == OpClass::Exit).count();
+        if exits != 1 || warp.last().map(|x| x.op) != Some(OpClass::Exit) {
+            return Err(TraceIoError::at(
+                0,
+                format!("warp {i} must end with exactly one EXIT marker"),
+            ));
+        }
+        if warp.iter().any(|x| x.line_addr != 0 && !x.op.is_mem()) {
+            return Err(TraceIoError::at(
+                0,
+                format!("warp {i}: non-memory instruction carries a line address"),
+            ));
+        }
+    }
+    let mut digest = Fnv1a::new();
+    digest.bytes(trace.name.as_bytes());
+    digest.word(u64::from(trace.kernel_id));
+    digest.word(trace.warps.len() as u64);
+    w.write_all(MAGIC2).map_err(TraceIoError::from_io)?;
+    let mut head = Vec::new();
+    push_uv(&mut head, trace.name.len() as u64);
+    head.extend_from_slice(trace.name.as_bytes());
+    push_uv(&mut head, u64::from(trace.kernel_id));
+    push_uv(&mut head, trace.warps.len() as u64);
+    w.write_all(&head).map_err(TraceIoError::from_io)?;
+    let mut total = 0u64;
+    let mut hdr = Vec::new();
+    let mut payload = Vec::new();
+    for (wi, warp) in trace.warps.iter().enumerate() {
+        digest.word(wi as u64);
+        for instr in warp {
+            fold_instruction(&mut digest, instr);
+        }
+        for chunk in warp.chunks(WRITER_CHUNK_INSTRS) {
+            payload.clear();
+            encode_packed(chunk, &mut payload);
+            hdr.clear();
+            hdr.push(TAG_CHUNK);
+            push_uv(&mut hdr, wi as u64);
+            push_uv(&mut hdr, chunk.len() as u64);
+            hdr.push(ENC_PACKED);
+            push_uv(&mut hdr, payload.len() as u64);
+            w.write_all(&hdr).map_err(TraceIoError::from_io)?;
+            w.write_all(&payload).map_err(TraceIoError::from_io)?;
+            total += chunk.len() as u64;
+        }
+    }
+    let mut tail = vec![TAG_END];
+    push_uv(&mut tail, total);
+    tail.extend_from_slice(&digest.finish().to_le_bytes());
+    w.write_all(&tail).map_err(TraceIoError::from_io)
+}
+
+/// Serialise as v2 to a file path (parent directory must exist).
+pub fn write_v2_path(path: &Path, trace: &KernelTrace) -> Result<(), TraceIoError> {
+    let f = File::create(path).map_err(TraceIoError::from_io)?;
+    let mut w = BufWriter::new(f);
+    write_v2(&mut w, trace)?;
+    w.flush().map_err(TraceIoError::from_io)
+}
+
+/// Serialise as v2 into an in-memory buffer (tests, round trips).
+pub fn write_v2_bytes(trace: &KernelTrace) -> Result<Vec<u8>, TraceIoError> {
+    let mut buf = Vec::new();
+    write_v2(&mut buf, trace)?;
+    Ok(buf)
+}
+
+/// Probe the first bytes of `path` and classify the container format:
+/// [`VERSION2`] when the binary v2 magic matches, else 1 (presumed
+/// textual — the v1 reader surfaces the real error for garbage input).
+pub fn sniff_path_version(path: &Path) -> Result<u32, TraceIoError> {
+    let mut f = File::open(path).map_err(TraceIoError::from_io)?;
+    let mut probe = [0u8; MAGIC2.len()];
+    let mut n = 0usize;
+    while n < probe.len() {
+        match f.read(&mut probe[n..]) {
+            Ok(0) => break,
+            Ok(k) => n += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(TraceIoError::from_io(e)),
+        }
+    }
+    Ok(if n == probe.len() && probe == *MAGIC2 { VERSION2 } else { 1 })
+}
+
+/// Probe an in-memory buffer the same way [`sniff_path_version`] probes a
+/// file.
+pub fn is_v2_bytes(bytes: &[u8]) -> bool {
+    bytes.len() >= MAGIC2.len() && bytes[..MAGIC2.len()] == MAGIC2[..]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::find;
+
+    fn tiny() -> KernelTrace {
+        let mut ld = Instruction::mem(OpClass::LdGlobal, &[], &[2], 0x40);
+        ld.set_dst_near(0, true);
+        KernelTrace {
+            name: "tiny".into(),
+            kernel_id: 1,
+            warps: vec![vec![
+                ld,
+                Instruction::new(OpClass::Alu, &[2], &[3]),
+                Instruction::new(OpClass::Exit, &[], &[]),
+            ]],
+        }
+    }
+
+    #[test]
+    fn varints_roundtrip_canonically() {
+        for v in [0u64, 1, 127, 128, 300, 1 << 20, u64::from(u32::MAX), u64::MAX] {
+            let mut buf = Vec::new();
+            push_uv(&mut buf, v);
+            let mut c = Cur { buf: &buf, pos: 0, base: 0 };
+            assert_eq!(c.uv("t").unwrap(), v);
+            assert_eq!(c.pos, buf.len(), "value {v} not fully consumed");
+        }
+        // non-canonical: 0 written with a continuation group
+        let mut c = Cur { buf: &[0x80, 0x00], pos: 0, base: 0 };
+        assert!(c.uv("t").is_err());
+        // overflow: 11 continuation bytes
+        let mut c = Cur { buf: &[0x80; 11], pos: 0, base: 0 };
+        assert!(c.uv("t").is_err());
+    }
+
+    #[test]
+    fn zigzag_roundtrips() {
+        for v in [0i64, 1, -1, 63, -64, i64::from(u32::MAX), -i64::from(u32::MAX)] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+    }
+
+    #[test]
+    fn tiny_roundtrips_bit_identically() {
+        let t = tiny();
+        let bytes = write_v2_bytes(&t).unwrap();
+        assert!(is_v2_bytes(&bytes));
+        let back = read_v2_slice(&bytes).unwrap();
+        assert_eq!(back.name, t.name);
+        assert_eq!(back.kernel_id, t.kernel_id);
+        assert_eq!(back.warps, t.warps);
+        // writer is deterministic
+        assert_eq!(bytes, write_v2_bytes(&t).unwrap());
+    }
+
+    #[test]
+    fn generated_benchmarks_roundtrip() {
+        for name in ["kmeans", "gemm_t1", "b+tree"] {
+            let mut t = KernelTrace::generate(find(name).unwrap(), 4, 0xC0FFEE);
+            crate::compiler::annotate_precise(&mut t, 12);
+            let back = read_v2_slice(&write_v2_bytes(&t).unwrap())
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(back.warps, t.warps, "{name}: IR not preserved");
+        }
+    }
+
+    #[test]
+    fn zero_warp_trace_roundtrips() {
+        let t = KernelTrace { name: "empty".into(), kernel_id: 0, warps: vec![] };
+        let back = read_v2_slice(&write_v2_bytes(&t).unwrap()).unwrap();
+        assert_eq!(back.warps.len(), 0);
+    }
+
+    #[test]
+    fn packed_encoding_compresses_streaming_sequences() {
+        // a constant-stride store stream from one register is one RLE group
+        let mut warp: Vec<Instruction> = (0..1000)
+            .map(|k| Instruction::mem(OpClass::StGlobal, &[7], &[], 0x1000 + k))
+            .collect();
+        warp.push(Instruction::new(OpClass::Exit, &[], &[]));
+        let t = KernelTrace { name: "stream".into(), kernel_id: 0, warps: vec![warp] };
+        let v2 = write_v2_bytes(&t).unwrap();
+        // raw would need >= 5 bytes per store; RLE collapses the run
+        assert!(v2.len() < 200, "packed stream took {} bytes", v2.len());
+        assert_eq!(read_v2_slice(&v2).unwrap().warps, t.warps);
+    }
+
+    #[test]
+    fn every_strict_prefix_is_rejected() {
+        let bytes = write_v2_bytes(&tiny()).unwrap();
+        for cut in 0..bytes.len() {
+            assert!(
+                read_v2_slice(&bytes[..cut]).is_err(),
+                "prefix of {cut}/{} bytes parsed",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_and_digest_corruption_are_rejected() {
+        let t = tiny();
+        let mut bytes = write_v2_bytes(&t).unwrap();
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(read_v2_slice(&extra).is_err(), "trailing byte accepted");
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF; // digest byte
+        assert!(read_v2_slice(&bytes).is_err(), "digest corruption accepted");
+    }
+
+    #[test]
+    fn writer_rejects_what_reader_rejects() {
+        let mut t = tiny();
+        t.name = "has space".into();
+        assert!(write_v2_bytes(&t).is_err());
+        let mut t = tiny();
+        t.warps[0].pop(); // drop the EXIT
+        assert!(write_v2_bytes(&t).is_err());
+        let mut t = tiny();
+        t.warps[0][1].line_addr = 7; // address on an ALU op
+        assert!(write_v2_bytes(&t).is_err());
+    }
+}

@@ -10,20 +10,38 @@
 //! the in-memory [`KernelTrace`](crate::trace::KernelTrace) it came from
 //! (enforced by `rust/tests/trace_roundtrip.rs`).
 //!
+//! Since PR 8 the subsystem speaks **two containers** for the same IR:
+//! the textual v1 grammar above, and a binary, chunked, varint-packed
+//! **v2** ([`format2`]) with a streaming reader ([`stream::TraceStream`])
+//! whose memory use is bounded by one chunk rather than the whole file.
+//! [`read_path`] auto-detects the container by magic, so every consumer
+//! (`simulate --trace`, `trace record|info|convert`, transforms, harness
+//! trace points, store fingerprinting) accepts either version.
+//!
 //! Layout:
-//! - [`format`] — line grammar: magic/header/instruction serialisation;
-//! - [`reader`] — streaming parser producing the existing IR;
-//! - [`writer`] — serialiser for any generated (or transformed) trace;
+//! - [`format`] — v1 line grammar: magic/header/instruction serialisation;
+//! - [`format2`] — v2 binary grammar: chunked varint records, delta/RLE
+//!   payload compression, content digest;
+//! - [`reader`] — parser front door; auto-detects v1 vs v2 by magic;
+//! - [`stream`] — bounded-memory windowed ingestion over either version;
+//! - [`writer`] — v1 serialiser for any generated (or transformed) trace;
 //! - [`transform`] — composable scenario-scaling transforms (warp
 //!   subsample, instruction window, register remap).
 
 pub mod format;
+pub mod format2;
 pub mod reader;
+pub mod stream;
 pub mod transform;
 pub mod writer;
 
 pub use format::{TraceHeader, MAGIC, VERSION};
+pub use format2::{
+    read_v2, read_v2_slice, sniff_path_version, write_v2, write_v2_bytes, write_v2_path, MAGIC2,
+    VERSION2,
+};
 pub use reader::{read, read_path, read_str};
+pub use stream::{content_fingerprint_path, read_limited, LimitedLoad, TraceStream, TraceWindow};
 pub use transform::{apply_all, Transform};
 pub use writer::{write, write_path, write_string};
 

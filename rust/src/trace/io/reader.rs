@@ -15,8 +15,18 @@ use super::TraceIoError;
 use crate::isa::{Instruction, OpClass};
 use crate::trace::KernelTrace;
 
-/// Read a trace from a file path.
+/// Read a trace from a file path, auto-detecting the container version:
+/// files starting with the binary v2 magic go through
+/// [`super::format2::read_v2`], everything else through the textual v1
+/// parser. This is the single funnel behind `simulate --trace`,
+/// `trace info|convert`, [`Workload::load`](crate::trace::Workload::load)
+/// and harness trace points, so all of them accept either version.
 pub fn read_path(path: &Path) -> Result<KernelTrace, TraceIoError> {
+    use super::format2;
+    if format2::sniff_path_version(path)? == format2::VERSION2 {
+        let f = File::open(path).map_err(TraceIoError::from_io)?;
+        return format2::read_v2(BufReader::new(f));
+    }
     let f = File::open(path).map_err(TraceIoError::from_io)?;
     read(BufReader::new(f))
 }

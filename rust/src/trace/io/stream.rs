@@ -1,0 +1,307 @@
+//! Streaming trace ingestion: bounded-memory windows over `.mtrace`
+//! files of either version.
+//!
+//! [`TraceStream`] auto-detects the container (binary v2 magic vs
+//! textual v1) and yields [`TraceWindow`]s — contiguous instruction runs
+//! of a single warp, in warp-major order. For **v2** files the stream is
+//! genuinely bounded: at most one chunk (≤
+//! [`super::format2::CHUNK_INSTR_CAP`] instructions) is resident at a
+//! time, so a multi-GB trace replays in constant memory. For **v1**
+//! files the stream is a compatibility veneer — the textual parser is
+//! line-oriented and whole-file, so the trace is parsed in memory first
+//! and then re-windowed; the memory bound is a v2-only guarantee
+//! (documented in `docs/TRACES.md`).
+//!
+//! On top of the raw window iterator this module provides the two
+//! consumers the rest of the crate needs:
+//!
+//! - [`read_limited`]: decode a trace but **retain only the first
+//!   `max_warps` warps** — what `sim::run_workload` uses so replaying a
+//!   2048-warp recording on a 1-SM config never materialises the other
+//!   2016 warps (v2 path). The full file is still validated end to end
+//!   (structure, EXIT invariants, content digest).
+//! - [`content_fingerprint_path`]: the decoded-content fingerprint of a
+//!   trace file, identical to
+//!   [`KernelTrace::content_fingerprint`][crate::trace::KernelTrace::content_fingerprint]
+//!   of the parsed trace, computed while buffering one warp at a time.
+//!   This is what makes a `trace convert` output hit the same store
+//!   record as its source (`serve::store`).
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::BufReader;
+use std::path::Path;
+
+use super::format::TraceHeader;
+use super::format2::{self, V2Reader, VERSION2};
+use super::{reader, TraceIoError};
+use crate::isa::Instruction;
+use crate::trace::{fold_instruction, KernelTrace};
+use crate::util::Fnv1a;
+
+/// Window size used when re-windowing a v1 trace (matches the v2
+/// writer's chunk size so both paths hand the consumer similar slices).
+pub const V1_WINDOW_INSTRS: usize = format2::WRITER_CHUNK_INSTRS;
+
+/// One streamed slice of a trace: a contiguous instruction run belonging
+/// to `warp`. A warp may span several consecutive windows.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceWindow {
+    /// Warp index the instructions belong to (0-based, monotonic across
+    /// the stream).
+    pub warp: usize,
+    /// The decoded instructions of this window, in program order.
+    pub instrs: Vec<Instruction>,
+}
+
+enum Source {
+    V2(V2Reader<BufReader<File>>),
+    V1(VecDeque<(usize, Vec<Instruction>)>),
+}
+
+/// Incremental reader over a `.mtrace` file of either version (see the
+/// module docs for the per-version memory contract).
+pub struct TraceStream {
+    header: TraceHeader,
+    version: u32,
+    src: Source,
+}
+
+impl TraceStream {
+    /// Open `path`, probe the magic, and position the stream after the
+    /// header.
+    pub fn open(path: &Path) -> Result<Self, TraceIoError> {
+        if format2::sniff_path_version(path)? == VERSION2 {
+            let f = File::open(path).map_err(TraceIoError::from_io)?;
+            let rd = V2Reader::new(BufReader::new(f))?;
+            let header = rd.header().clone();
+            return Ok(TraceStream { header, version: VERSION2, src: Source::V2(rd) });
+        }
+        let t = reader::read_path(path)?;
+        let header = TraceHeader {
+            name: t.name,
+            kernel_id: t.kernel_id,
+            nwarps: t.warps.len(),
+        };
+        let mut q = VecDeque::new();
+        for (wi, warp) in t.warps.into_iter().enumerate() {
+            for piece in warp.chunks(V1_WINDOW_INSTRS) {
+                q.push_back((wi, piece.to_vec()));
+            }
+        }
+        Ok(TraceStream { header, version: 1, src: Source::V1(q) })
+    }
+
+    /// Header of the underlying trace (name, kernel id, warp count).
+    pub fn header(&self) -> &TraceHeader {
+        &self.header
+    }
+
+    /// Container version this stream is reading (1 or [`VERSION2`]).
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    /// Next window, or `None` once the file validated to the end.
+    pub fn next_window(&mut self) -> Result<Option<TraceWindow>, TraceIoError> {
+        match &mut self.src {
+            Source::V2(rd) => {
+                let mut instrs = Vec::new();
+                Ok(rd
+                    .next_chunk(&mut instrs)?
+                    .map(|warp| TraceWindow { warp, instrs }))
+            }
+            Source::V1(q) => Ok(q.pop_front().map(|(warp, instrs)| TraceWindow { warp, instrs })),
+        }
+    }
+
+    /// Drain the stream into a full [`KernelTrace`] (the in-memory
+    /// convenience path; equivalent to `io::read_path`).
+    pub fn into_trace(mut self) -> Result<KernelTrace, TraceIoError> {
+        let mut warps: Vec<Vec<Instruction>> = Vec::new();
+        while let Some(win) = self.next_window()? {
+            if win.warp == warps.len() {
+                warps.push(win.instrs);
+            } else {
+                warps[win.warp].extend(win.instrs);
+            }
+        }
+        Ok(KernelTrace {
+            name: self.header.name,
+            kernel_id: self.header.kernel_id,
+            warps,
+        })
+    }
+}
+
+/// Result of [`read_limited`]: the retained prefix of the trace plus the
+/// whole-file facts the simulator entry point needs to stay bit-identical
+/// with the unlimited path.
+pub struct LimitedLoad {
+    /// The trace with at most `max_warps` leading warps retained.
+    pub trace: KernelTrace,
+    /// Warp count of the **whole file** (before truncation).
+    pub total_warps: usize,
+    /// Whether any instruction **anywhere in the file** (including
+    /// dropped warps) carries a near/far annotation bit. The replay path
+    /// keys the compiler pass off this whole-file flag, exactly like the
+    /// in-memory path keys off `KernelTrace::has_annotations`.
+    pub annotated: bool,
+}
+
+/// Stream-decode `path`, retaining only the first `max_warps` warps.
+/// The entire file is still validated (and, for v2, digest-checked);
+/// only retention is truncated.
+pub fn read_limited(path: &Path, max_warps: usize) -> Result<LimitedLoad, TraceIoError> {
+    let mut s = TraceStream::open(path)?;
+    let header = s.header().clone();
+    let mut warps: Vec<Vec<Instruction>> = Vec::new();
+    let mut annotated = false;
+    while let Some(win) = s.next_window()? {
+        annotated = annotated
+            || win
+                .instrs
+                .iter()
+                .any(|i| i.src_near != 0 || i.dst_near != 0);
+        if win.warp >= max_warps {
+            continue;
+        }
+        if win.warp == warps.len() {
+            warps.push(win.instrs);
+        } else {
+            warps[win.warp].extend(win.instrs);
+        }
+    }
+    Ok(LimitedLoad {
+        trace: KernelTrace {
+            name: header.name,
+            kernel_id: header.kernel_id,
+            warps,
+        },
+        total_warps: header.nwarps,
+        annotated,
+    })
+}
+
+/// Decoded-content fingerprint of a trace file, buffering one warp at a
+/// time. Bit-identical to calling
+/// [`KernelTrace::content_fingerprint`][crate::trace::KernelTrace::content_fingerprint]
+/// on the fully parsed trace, for either container version — so the same
+/// logical trace hashes the same whether it sits in a v1 or v2 file.
+pub fn content_fingerprint_path(path: &Path) -> Result<u64, TraceIoError> {
+    let mut s = TraceStream::open(path)?;
+    let mut h = Fnv1a::new();
+    h.bytes(s.header.name.as_bytes());
+    h.word(u64::from(s.header.kernel_id));
+    h.word(s.header.nwarps as u64);
+    let mut warp_buf: Vec<Instruction> = Vec::new();
+    let mut cur_warp: Option<usize> = None;
+    while let Some(win) = s.next_window()? {
+        if cur_warp != Some(win.warp) {
+            if cur_warp.is_some() {
+                fold_warp(&mut h, &mut warp_buf);
+            }
+            cur_warp = Some(win.warp);
+        }
+        warp_buf.extend(win.instrs);
+    }
+    if cur_warp.is_some() {
+        fold_warp(&mut h, &mut warp_buf);
+    }
+    Ok(h.finish())
+}
+
+fn fold_warp(h: &mut Fnv1a, warp: &mut Vec<Instruction>) {
+    h.word(warp.len() as u64);
+    for i in warp.iter() {
+        fold_instruction(h, i);
+    }
+    warp.clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler;
+    use crate::trace::find;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("malekeh_stream_{}_{name}", std::process::id()))
+    }
+
+    fn sample(nwarps: usize) -> KernelTrace {
+        KernelTrace::generate(find("kmeans").unwrap(), nwarps, 0xC0FFEE)
+    }
+
+    #[test]
+    fn v2_stream_reassembles_the_trace() {
+        let t = sample(6);
+        let p = tmp("v2.mtrace");
+        format2::write_v2_path(&p, &t).unwrap();
+        let s = TraceStream::open(&p).unwrap();
+        assert_eq!(s.version(), VERSION2);
+        assert_eq!(s.header().nwarps, 6);
+        let back = s.into_trace().unwrap();
+        assert_eq!(back.warps, t.warps);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v1_stream_is_a_faithful_veneer() {
+        let t = sample(3);
+        let p = tmp("v1.mtrace");
+        super::super::write_path(&p, &t).unwrap();
+        let mut s = TraceStream::open(&p).unwrap();
+        assert_eq!(s.version(), 1);
+        let mut seen_warps = Vec::new();
+        let mut back: Vec<Vec<Instruction>> = vec![Vec::new(); 3];
+        while let Some(win) = s.next_window().unwrap() {
+            assert!(win.instrs.len() <= V1_WINDOW_INSTRS);
+            seen_warps.push(win.warp);
+            back[win.warp].extend(win.instrs);
+        }
+        let mut sorted = seen_warps.clone();
+        sorted.sort_unstable();
+        assert_eq!(seen_warps, sorted, "windows must be warp-major");
+        assert_eq!(back, t.warps);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn read_limited_truncates_but_validates_and_flags_the_whole_file() {
+        let mut t = sample(8);
+        // annotate ONLY the last warp: a limited load of 2 warps must
+        // still report the file as annotated
+        let last = t.warps.len() - 1;
+        t.warps[last][0].set_dst_near(0, true);
+        let p = tmp("limited.mtrace");
+        format2::write_v2_path(&p, &t).unwrap();
+        let l = read_limited(&p, 2).unwrap();
+        assert_eq!(l.trace.warps.len(), 2);
+        assert_eq!(l.total_warps, 8);
+        assert!(l.annotated, "annotation in a dropped warp was missed");
+        assert_eq!(l.trace.warps[..], t.warps[..2]);
+        // corrupting a dropped warp must still fail the load
+        let mut bytes = std::fs::read(&p).unwrap();
+        let n = bytes.len();
+        bytes[n - 20] ^= 0x01;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_limited(&p, 2).is_err(), "corruption past the limit ignored");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn streamed_fingerprint_matches_in_memory_for_both_versions() {
+        let mut t = sample(4);
+        compiler::profile_and_annotate(&mut t, 2, 12);
+        let expect = t.content_fingerprint();
+        let p1 = tmp("fp_v1.mtrace");
+        let p2 = tmp("fp_v2.mtrace");
+        super::super::write_path(&p1, &t).unwrap();
+        format2::write_v2_path(&p2, &t).unwrap();
+        assert_eq!(content_fingerprint_path(&p1).unwrap(), expect);
+        assert_eq!(content_fingerprint_path(&p2).unwrap(), expect);
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+}

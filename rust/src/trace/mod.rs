@@ -2,13 +2,14 @@
 //! Table II workload registry, and the [`Workload`] source abstraction
 //! (builtin generator vs. `.mtrace` file — see [`io`]).
 
+pub mod corpus;
 pub mod io;
 pub mod program;
 pub mod workloads;
 
 pub use io::{Transform, TraceIoError};
 pub use program::{AddrGen, ProgramBuilder, MAX_KERNEL_ID};
-pub use workloads::{find, table2, Benchmark, Suite, WarpCtx, BENCHMARKS};
+pub use workloads::{corpus, find, table2, Benchmark, Suite, WarpCtx, BENCHMARKS};
 
 use std::path::PathBuf;
 
@@ -85,18 +86,7 @@ impl KernelTrace {
         for w in &self.warps {
             h.word(w.len() as u64);
             for i in w {
-                h.word(i.op as u64);
-                h.word(u64::from(i.nsrc));
-                h.word(u64::from(i.ndst));
-                for &r in &i.srcs[..i.nsrc as usize] {
-                    h.word(u64::from(r));
-                }
-                for &r in &i.dsts[..i.ndst as usize] {
-                    h.word(u64::from(r));
-                }
-                h.word(u64::from(i.src_near));
-                h.word(u64::from(i.dst_near));
-                h.word(u64::from(i.line_addr));
+                fold_instruction(&mut h, i);
             }
         }
         h.finish()
@@ -140,6 +130,26 @@ impl KernelTrace {
     }
 }
 
+/// Fold every field of one instruction into an FNV-1a accumulator — the
+/// shared per-instruction step behind [`KernelTrace::content_fingerprint`],
+/// the v2 container's content digest ([`io::format2`]) and the streamed
+/// file fingerprint ([`io::stream::content_fingerprint_path`]). Keeping
+/// one definition is what guarantees those three agree bit for bit.
+pub(crate) fn fold_instruction(h: &mut crate::util::Fnv1a, i: &Instruction) {
+    h.word(i.op as u64);
+    h.word(u64::from(i.nsrc));
+    h.word(u64::from(i.ndst));
+    for &r in &i.srcs[..i.nsrc as usize] {
+        h.word(u64::from(r));
+    }
+    for &r in &i.dsts[..i.ndst as usize] {
+        h.word(u64::from(r));
+    }
+    h.word(u64::from(i.src_near));
+    h.word(u64::from(i.dst_near));
+    h.word(u64::from(i.line_addr));
+}
+
 /// Where a simulation's instruction streams come from: a built-in Table II
 /// generator, or an external `.mtrace` file ingested through [`io`].
 ///
@@ -176,18 +186,21 @@ impl Workload {
     }
 
     /// Memo-cache identity. Builtin workloads key by registry name (the
-    /// generator is pure), but trace files key by **content digest**, not
+    /// generator is pure), but trace files key by **byte digest**, not
     /// path: keying by path silently served stale stats after a `.mtrace`
-    /// file was edited in place between two runs of one process. An
-    /// unreadable file falls back to the path form — the subsequent
-    /// [`Workload::load`] surfaces the real I/O error.
+    /// file was edited in place between two runs of one process. The
+    /// digest is streamed in fixed-size chunks (never `fs::read`), so
+    /// keying a multi-GB v2 trace costs no memory. An unreadable file
+    /// falls back to the path form — the subsequent [`Workload::load`]
+    /// surfaces the real I/O error. (Byte digest, unlike the decoded
+    /// [`Workload::content_fingerprint`], is deliberate here: the memo
+    /// cache is per-process and cheap to miss, so distinct encodings of
+    /// one trace may occupy two slots; the persistent store unifies them.)
     pub fn cache_key(&self) -> String {
         match self {
             Workload::Builtin(name) => name.clone(),
-            Workload::TraceFile(path) => match std::fs::read(path) {
-                Ok(bytes) => {
-                    format!("trace:{:016x}", crate::util::fnv1a_bytes(&bytes))
-                }
+            Workload::TraceFile(path) => match hash_file_bytes(path) {
+                Ok(digest) => format!("trace:{digest:016x}"),
                 Err(_) => format!("trace:{}", path.display()),
             },
         }
@@ -198,13 +211,17 @@ impl Workload {
     /// ([`crate::serve::store::StoreKey`]). Builtin generators digest
     /// their generated content (a pure function of name x `nwarps` x
     /// `seed`, both of which the config fingerprint also pins); trace
-    /// files digest their raw bytes, so renaming or moving a file never
-    /// changes its identity and editing it always does.
+    /// files digest their **decoded** content via
+    /// [`io::content_fingerprint_path`], so renaming or moving a file
+    /// never changes its identity, editing it always does, and — since
+    /// the digest is over the IR rather than the container bytes — a
+    /// `trace convert`ed v2 copy of a v1 recording addresses the **same**
+    /// store record as its source (v2 files are hashed streaming, one
+    /// warp resident at a time).
     pub fn content_fingerprint(&self, nwarps: usize, seed: u64) -> Result<u64, String> {
         match self {
             Workload::Builtin(_) => Ok(self.load(nwarps, seed)?.content_fingerprint()),
-            Workload::TraceFile(path) => std::fs::read(path)
-                .map(|bytes| crate::util::fnv1a_bytes(&bytes))
+            Workload::TraceFile(path) => io::content_fingerprint_path(path)
                 .map_err(|e| format!("{}: {e}", path.display())),
         }
     }
@@ -222,6 +239,43 @@ impl Workload {
             Workload::TraceFile(path) => io::read_path(path)
                 .map_err(|e| format!("{}: {e}", path.display())),
         }
+    }
+
+    /// Materialise at most `max_warps` warps, plus the whole-source facts
+    /// the replay entry point needs ([`io::LimitedLoad`]). Builtin
+    /// generators simply generate `max_warps` warps (raw, so `annotated`
+    /// is false); v2 trace files stream-decode and never hold more than
+    /// the retained warps plus one chunk in memory; v1 trace files parse
+    /// fully (textual format) and are then truncated.
+    pub fn load_limited(
+        &self,
+        max_warps: usize,
+        seed: u64,
+    ) -> Result<io::LimitedLoad, String> {
+        match self {
+            Workload::Builtin(_) => {
+                let trace = self.load(max_warps, seed)?;
+                Ok(io::LimitedLoad { total_warps: trace.warps.len(), annotated: false, trace })
+            }
+            Workload::TraceFile(path) => io::read_limited(path, max_warps)
+                .map_err(|e| format!("{}: {e}", path.display())),
+        }
+    }
+}
+
+/// FNV-1a over a file's raw bytes, streamed in 64 KiB chunks so hashing
+/// never materialises the file.
+fn hash_file_bytes(path: &std::path::Path) -> std::io::Result<u64> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path)?;
+    let mut h = crate::util::Fnv1a::new();
+    let mut buf = [0u8; 64 * 1024];
+    loop {
+        let n = f.read(&mut buf)?;
+        if n == 0 {
+            return Ok(h.finish());
+        }
+        h.bytes(&buf[..n]);
     }
 }
 
@@ -342,27 +396,73 @@ mod tests {
     }
 
     #[test]
-    fn workload_fingerprint_is_content_not_path() {
+    fn workload_fingerprint_is_content_not_path_or_encoding() {
         use std::io::Write;
         let dir = std::env::temp_dir();
         let p1 = dir.join(format!("malekeh_wfp_a_{}.mtrace", std::process::id()));
         let p2 = dir.join(format!("malekeh_wfp_b_{}.mtrace", std::process::id()));
+        let pv2 = dir.join(format!("malekeh_wfp_c_{}.mtrace", std::process::id()));
         let t = KernelTrace::generate(find("nn").unwrap(), 2, 3);
         io::write_path(&p1, &t).unwrap();
         std::fs::copy(&p1, &p2).unwrap();
         let f1 = Workload::trace_file(&p1).content_fingerprint(0, 0).unwrap();
         let f2 = Workload::trace_file(&p2).content_fingerprint(0, 0).unwrap();
         assert_eq!(f1, f2, "identical bytes under different paths must match");
-        // editing the file in place must change the identity
+        // the fingerprint is over the DECODED trace: a byte-level change
+        // that decodes to the same instructions (a trailing comment) must
+        // NOT change the identity...
         let mut f = std::fs::OpenOptions::new().append(true).open(&p2).unwrap();
         writeln!(f, "# trailing comment").unwrap();
         drop(f);
         let f2b = Workload::trace_file(&p2).content_fingerprint(0, 0).unwrap();
-        assert_ne!(f1, f2b);
-        // builtin fingerprints pin the generated content
+        assert_eq!(f1, f2b, "comment-only edits must not change the identity");
+        // ...and neither must re-encoding to the v2 binary container — the
+        // property the persistent store needs so `trace convert` output
+        // addresses the same record
+        io::write_v2_path(&pv2, &t).unwrap();
+        let fv2 = Workload::trace_file(&pv2).content_fingerprint(0, 0).unwrap();
+        assert_eq!(f1, fv2, "v1 and v2 encodings of one trace must match");
+        // a genuine content mutation must change the identity
+        let mut m = t.clone();
+        m.warps[0][0].src_near ^= 1;
+        io::write_path(&p2, &m).unwrap();
+        let fm = Workload::trace_file(&p2).content_fingerprint(0, 0).unwrap();
+        assert_ne!(f1, fm, "instruction edits must change the identity");
+        // builtin fingerprints pin the generated content, and the file
+        // fingerprints above equal the in-memory one
+        assert_eq!(f1, t.content_fingerprint());
         let wa = Workload::builtin("nn").content_fingerprint(2, 3).unwrap();
         assert_eq!(wa, t.content_fingerprint());
         assert!(Workload::builtin("nope").content_fingerprint(1, 0).is_err());
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p2);
+        let _ = std::fs::remove_file(&pv2);
+    }
+
+    #[test]
+    fn cache_key_is_per_encoding_but_load_limited_is_not() {
+        let dir = std::env::temp_dir();
+        let p1 = dir.join(format!("malekeh_ck_v1_{}.mtrace", std::process::id()));
+        let p2 = dir.join(format!("malekeh_ck_v2_{}.mtrace", std::process::id()));
+        let t = KernelTrace::generate(find("kmeans").unwrap(), 6, 5);
+        io::write_path(&p1, &t).unwrap();
+        io::write_v2_path(&p2, &t).unwrap();
+        // memo-cache identity is the cheap byte digest: distinct per encoding
+        let k1 = Workload::trace_file(&p1).cache_key();
+        let k2 = Workload::trace_file(&p2).cache_key();
+        assert!(k1.starts_with("trace:") && k2.starts_with("trace:"));
+        assert_ne!(k1, k2, "distinct containers are distinct memo entries");
+        // limited load truncates identically for both containers
+        for p in [&p1, &p2] {
+            let l = Workload::trace_file(p).load_limited(2, 0).unwrap();
+            assert_eq!(l.total_warps, 6);
+            assert!(!l.annotated);
+            assert_eq!(l.trace.warps[..], t.warps[..2]);
+        }
+        // builtin limited load simply generates that many warps
+        let l = Workload::builtin("kmeans").load_limited(3, 5).unwrap();
+        assert_eq!(l.trace.warps.len(), 3);
+        assert_eq!(l.total_warps, 3);
         let _ = std::fs::remove_file(&p1);
         let _ = std::fs::remove_file(&p2);
     }

@@ -23,6 +23,9 @@ pub enum Suite {
     Deepbench,
     /// Synthetic drivers used by specific figures (not in Table II).
     Synthetic,
+    /// Generated-kernel corpus beyond Table II: irregular control flow,
+    /// pointer chasing, WAW churn ([`super::corpus`], `fig corpus`).
+    Corpus,
 }
 
 /// Context handed to a generator for one warp.
@@ -315,7 +318,7 @@ macro_rules! bench {
     };
 }
 
-fn seed_for(ctx: &WarpCtx, seed: u64) -> u64 {
+pub(crate) fn seed_for(ctx: &WarpCtx, seed: u64) -> u64 {
     seed ^ (ctx.warp_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
         ^ ((ctx.kernel_id as u64) << 32)
 }
@@ -555,6 +558,12 @@ pub const BENCHMARKS: &[Benchmark] = &[
     bench!("rnn_i1", Suite::Deepbench, gen_rnn_i1),
     bench!("rnn_i2", Suite::Deepbench, gen_rnn_i2),
     bench!("synthetic_phases", Suite::Synthetic, gen_phased),
+    bench!("matmul_tiled", Suite::Corpus, super::corpus::gen_matmul_tiled),
+    bench!("quicksort", Suite::Corpus, super::corpus::gen_quicksort),
+    bench!("pointer_chase", Suite::Corpus, super::corpus::gen_pointer_chase),
+    bench!("box_blur", Suite::Corpus, super::corpus::gen_box_blur),
+    bench!("prime_sieve", Suite::Corpus, super::corpus::gen_prime_sieve),
+    bench!("hazard_stress", Suite::Corpus, super::corpus::gen_hazard_stress),
 ];
 
 /// Look a benchmark up by chart name.
@@ -562,9 +571,18 @@ pub fn find(name: &str) -> Option<&'static Benchmark> {
     BENCHMARKS.iter().find(|b| b.name == name)
 }
 
-/// The Table II set (everything except synthetic drivers).
+/// The Table II set (the paper's evaluation grid — Rodinia + Deepbench
+/// only; synthetic figure drivers and the generated corpus stay out so
+/// the paper-facing figures keep their shape).
 pub fn table2() -> impl Iterator<Item = &'static Benchmark> {
-    BENCHMARKS.iter().filter(|b| b.suite != Suite::Synthetic)
+    BENCHMARKS
+        .iter()
+        .filter(|b| matches!(b.suite, Suite::Rodinia | Suite::Deepbench))
+}
+
+/// The generated-kernel corpus ([`Suite::Corpus`]), in registry order.
+pub fn corpus() -> impl Iterator<Item = &'static Benchmark> {
+    BENCHMARKS.iter().filter(|b| b.suite == Suite::Corpus)
 }
 
 #[cfg(test)]
@@ -580,6 +598,10 @@ mod tests {
     fn registry_covers_table2() {
         assert_eq!(table2().filter(|b| b.suite == Suite::Rodinia).count(), 14);
         assert_eq!(table2().filter(|b| b.suite == Suite::Deepbench).count(), 8);
+        // the corpus rides alongside but never leaks into Table II
+        assert_eq!(table2().count(), 22);
+        assert_eq!(corpus().count(), 6);
+        assert!(corpus().all(|b| b.suite == Suite::Corpus));
         assert!(find("hotspot").is_some());
         assert!(find("rnn_i2").is_some());
         assert!(find("nope").is_none());

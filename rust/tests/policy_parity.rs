@@ -1,7 +1,8 @@
-//! Policy-parity suite: every Table II benchmark replayed under every
-//! registered policy at `--sim-threads 1` (the engine's reference
-//! configuration), fingerprints pinned against the committed golden
-//! fixture `rust/tests/golden/fingerprints.txt`.
+//! Policy-parity suite: every registered benchmark (Table II plus the
+//! generated-kernel corpus) replayed under every registered policy at
+//! `--sim-threads 1` (the engine's reference configuration),
+//! fingerprints pinned against the committed golden fixture
+//! `rust/tests/golden/fingerprints.txt`.
 //!
 //! - A behavior change in any policy shows up as a fingerprint mismatch
 //!   and fails until the fixture is deliberately re-blessed:
@@ -26,7 +27,7 @@ use std::sync::Mutex;
 
 use malekeh::config::{GOLDEN_PROFILE_WARPS, GpuConfig, Scheme};
 use malekeh::sim::run_benchmark;
-use malekeh::trace::table2;
+use malekeh::trace::{corpus, table2};
 
 const GOLDEN_REL: &str = "rust/tests/golden/fingerprints.txt";
 
@@ -47,6 +48,7 @@ fn fingerprint(bench: &str, scheme: Scheme) -> u64 {
 /// worker pool (each point is an independent, deterministic simulation).
 fn compute_grid() -> BTreeMap<(String, String), u64> {
     let points: Vec<(&'static str, Scheme)> = table2()
+        .chain(corpus())
         .flat_map(|b| Scheme::all().into_iter().map(move |s| (b.name, s)))
         .collect();
     let results: Mutex<Vec<Option<u64>>> = Mutex::new(vec![None; points.len()]);
@@ -81,6 +83,7 @@ fn compute_grid() -> BTreeMap<(String, String), u64> {
 fn render_fixture(grid: &BTreeMap<(String, String), u64>) -> String {
     let mut out = String::from(
         "# Golden stats fingerprints: one `<bench> <policy> <fingerprint>` per line.\n\
+         # Grid: Table II + the generated-kernel corpus x all registered policies.\n\
          # Config: Table I baseline, num_sms=1, sim_threads=1, max_cycles=40000,\n\
          # profile_warps=2, scheme applied via GpuConfig::with_scheme.\n\
          # Bless/update: MALEKEH_BLESS_GOLDEN=1 cargo test --test policy_parity\n\
@@ -178,7 +181,7 @@ fn golden_fingerprints_match() {
 
 /// Differential configuration: 4 SMs (so `sim_threads` actually shards
 /// work) with a tighter cycle cap than the golden config — the grid is
-/// 286 points x 2 engines, and a capped run's fingerprint is just as
+/// 364 points x 2 engines, and a capped run's fingerprint is just as
 /// discriminating.
 fn differential_config(scheme: Scheme, sim_threads: usize) -> GpuConfig {
     let mut c = GpuConfig::table1_baseline().with_scheme(scheme);
@@ -195,11 +198,13 @@ fn differential_fingerprint(bench: &str, scheme: Scheme, sim_threads: usize) -> 
 
 #[test]
 fn differential_grid_is_thread_count_invariant() {
-    // every registered policy x every Table II bench on 4 SMs: the epoch
-    // engine must produce bit-identical stats at sim-threads 1 and 4 —
-    // the hardened form of the determinism contract (a policy that reads
-    // thread identity, wall clock, or unordered containers fails here)
+    // every registered policy x every registered bench (Table II +
+    // corpus) on 4 SMs: the epoch engine must produce bit-identical
+    // stats at sim-threads 1 and 4 — the hardened form of the
+    // determinism contract (a policy that reads thread identity, wall
+    // clock, or unordered containers fails here)
     let points: Vec<(&'static str, Scheme)> = table2()
+        .chain(corpus())
         .flat_map(|b| Scheme::all().into_iter().map(move |s| (b.name, s)))
         .collect();
     let failures: Mutex<Vec<String>> = Mutex::new(Vec::new());
@@ -273,6 +278,27 @@ fn related_work_schemes_are_stable_and_diverge() {
                 vs_malekeh,
                 "{scheme} (threads={threads}) is indistinguishable from malekeh \
                  on every probe bench — the policy is not wired"
+            );
+        }
+    }
+}
+
+#[test]
+fn corpus_kernels_are_mutually_distinct_workloads() {
+    // the generated corpus only earns its registry slots if each kernel
+    // actually exercises the hierarchy differently: under the pinned
+    // golden config every corpus fingerprint must differ from every
+    // other corpus kernel and from the GEMM-shaped reference
+    let mut fps: Vec<(&str, u64)> = corpus()
+        .map(|b| (b.name, fingerprint(b.name, Scheme::MALEKEH)))
+        .collect();
+    fps.push(("gemm_t1", fingerprint("gemm_t1", Scheme::MALEKEH)));
+    for i in 0..fps.len() {
+        for j in i + 1..fps.len() {
+            assert_ne!(
+                fps[i].1, fps[j].1,
+                "{} and {} simulate identically — a generator is degenerate",
+                fps[i].0, fps[j].0
             );
         }
     }

@@ -1,0 +1,151 @@
+//! Differential battery for the v2 container and streaming ingestion:
+//! every registered benchmark (Table II + generated corpus) is recorded
+//! to both `.mtrace` encodings and replayed through both ingestion paths
+//! (whole-file parse and [`TraceStream`] windows). All four combinations
+//! must reproduce the directly generated trace bit for bit — same IR,
+//! same [`Stats::fingerprint`](malekeh::stats::Stats::fingerprint) — at
+//! `--sim-threads 1` and 4. A final check pins the store contract: a
+//! `trace convert`ed file addresses the *same* persistent-store record
+//! as its source, so conversion never invalidates cached results.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use malekeh::compiler;
+use malekeh::config::{GpuConfig, Scheme};
+use malekeh::serve::{Store, StoreKey};
+use malekeh::sim::{run_trace, run_workload};
+use malekeh::trace::io::{self, TraceStream};
+use malekeh::trace::{corpus, find, table2, KernelTrace, Workload};
+
+/// Differential configuration: 4 SMs so `sim_threads` actually shards
+/// work, with a cycle cap that keeps 28 benchmarks tractable in debug CI
+/// runs (a capped run's fingerprint is just as discriminating).
+fn cfg(sim_threads: usize) -> GpuConfig {
+    let mut c = GpuConfig::table1_baseline().with_scheme(Scheme::MALEKEH);
+    c.num_sms = 4;
+    c.sim_threads = sim_threads;
+    c.max_cycles = 15_000;
+    c
+}
+
+/// Unique temp path per test process so parallel binaries never collide.
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("malekeh_parity_{}_{name}", std::process::id()))
+}
+
+/// Record `bench` to v1 and v2, ingest each through both paths, and
+/// demand IR + replay parity. Returns a description of the first
+/// divergence instead of panicking so the sweep can report all failures.
+fn check_bench(bench: &str) -> Result<(), String> {
+    let mut t = KernelTrace::generate(find(bench).unwrap(), 8, 0xC0FFEE);
+    compiler::profile_and_annotate(&mut t, 2, 12);
+    let p1 = tmp(&format!("{bench}.v1.mtrace"));
+    let p2 = tmp(&format!("{bench}.v2.mtrace"));
+    io::write_path(&p1, &t).map_err(|e| format!("{bench}: write v1: {e}"))?;
+    io::write_v2_path(&p2, &t).map_err(|e| format!("{bench}: write v2: {e}"))?;
+    let stream = |p: &PathBuf| -> Result<KernelTrace, String> {
+        TraceStream::open(p)
+            .and_then(TraceStream::into_trace)
+            .map_err(|e| format!("{bench}: stream {}: {e}", p.display()))
+    };
+    let ingested: [(&str, KernelTrace); 4] = [
+        ("v1/in-memory", io::read_path(&p1).map_err(|e| format!("{bench}: read v1: {e}"))?),
+        ("v2/in-memory", io::read_path(&p2).map_err(|e| format!("{bench}: read v2: {e}"))?),
+        ("v1/streamed", stream(&p1)?),
+        ("v2/streamed", stream(&p2)?),
+    ];
+    for (label, back) in &ingested {
+        if back.name != t.name || back.kernel_id != t.kernel_id || back.warps != t.warps {
+            return Err(format!("{bench}: {label} ingestion altered the IR"));
+        }
+    }
+    // replay parity: the directly generated trace is the reference; the
+    // annotation bits are baked into the files, so no re-annotation
+    let reference = run_trace(&cfg(1), t, 2, false).fingerprint();
+    for threads in [1usize, 4] {
+        for (label, back) in &ingested {
+            let fp = run_trace(&cfg(threads), back.clone(), 2, false).fingerprint();
+            if fp != reference {
+                return Err(format!(
+                    "{bench}: {label} at sim-threads {threads}: \
+                     {fp:016x} != reference {reference:016x}"
+                ));
+            }
+        }
+    }
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+    Ok(())
+}
+
+#[test]
+fn every_benchmark_replays_identically_across_encoding_ingestion_and_threads() {
+    let benches: Vec<&'static str> = table2().chain(corpus()).map(|b| b.name).collect();
+    assert_eq!(benches.len(), 28, "registry drifted; update this sweep");
+    let failures: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let next = AtomicUsize::new(0);
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= benches.len() {
+                    break;
+                }
+                if let Err(e) = check_bench(benches[i]) {
+                    failures.lock().unwrap().push(e);
+                }
+            });
+        }
+    });
+    let failures = failures.into_inner().unwrap();
+    assert!(
+        failures.is_empty(),
+        "encoding/ingestion parity failures:\n{}",
+        failures.join("\n")
+    );
+}
+
+#[test]
+fn converted_trace_hits_the_same_store_record() {
+    // store-key regression for the decoded-content fingerprint: a raw
+    // recording, its v2 conversion, and the builtin workload it records
+    // all address one record, so `trace convert` output is a store HIT
+    let mut c = GpuConfig::table1_baseline().with_scheme(Scheme::MALEKEH);
+    c.num_sms = 1;
+    let t = KernelTrace::generate(
+        find("kmeans").unwrap(),
+        c.num_sms * c.warps_per_sm,
+        c.seed,
+    );
+    let p1 = tmp("store_kmeans.v1.mtrace");
+    let p2 = tmp("store_kmeans.v2.mtrace");
+    io::write_path(&p1, &t).unwrap();
+    // conversion exactly as `malekeh trace convert` performs it
+    io::write_v2_path(&p2, &io::read_path(&p1).unwrap()).unwrap();
+    let w1 = Workload::trace_file(&p1);
+    let w2 = Workload::trace_file(&p2);
+    let k1 = StoreKey::for_run(&c, &w1, 2).unwrap();
+    let k2 = StoreKey::for_run(&c, &w2, 2).unwrap();
+    assert_eq!(k1, k2, "conversion changed the store address");
+    let kb = StoreKey::for_run(&c, &Workload::builtin("kmeans"), 2).unwrap();
+    assert_eq!(k1, kb, "a raw recording must address its builtin's record");
+    // and an actual round-trip: simulate the v1 file, then the v2 file
+    // must find the result already in the store
+    let dir = tmp("store_convert_dir");
+    let store = Store::open(&dir).unwrap();
+    let stats = run_workload(&c, &w1, 2).unwrap();
+    store.put(&k1, &stats).unwrap();
+    let hit = store
+        .get(&k2)
+        .expect("converted trace missed the store record");
+    assert_eq!(hit.fingerprint(), stats.fingerprint());
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+}

@@ -1,0 +1,175 @@
+//! Adversarial battery for the binary v2 parser: truncations, trailing
+//! garbage, version skew, non-canonical varints, absurd declared lengths
+//! and a seeded single-byte mutation sweep must all surface as clean
+//! `Err`s — never a panic, never an unbounded allocation. The content
+//! digest makes this total: any byte flip that survives the structural
+//! checks changes the decoded content and fails the digest instead.
+//!
+//! The second half is the transform property from `transform_props.rs`
+//! lifted onto the v2 container: subsample ∘ window ∘ remap composed on
+//! a trace round-trips through `write_v2_bytes`/`read_v2_slice`
+//! losslessly and re-encodes bit-identically (the writer is canonical).
+
+use malekeh::compiler;
+use malekeh::trace::io::{self, Transform, MAGIC2};
+use malekeh::trace::{find, KernelTrace};
+
+/// Minimal xorshift64 so the mutation sweep is seeded and reproducible
+/// without pulling in a dependency.
+struct XorShift(u64);
+
+impl XorShift {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+}
+
+/// Canonical LEB128, mirroring the writer — used to handcraft headers
+/// around hostile field values the real writer refuses to emit.
+fn uv(mut v: u64) -> Vec<u8> {
+    let mut out = Vec::new();
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+    out
+}
+
+fn sample(nwarps: usize) -> KernelTrace {
+    let mut t = KernelTrace::generate(find("hotspot").unwrap(), nwarps, 0xFEED);
+    compiler::profile_and_annotate(&mut t, 2, 12);
+    t
+}
+
+fn valid_bytes() -> Vec<u8> {
+    io::write_v2_bytes(&sample(5)).unwrap()
+}
+
+#[test]
+fn every_strict_prefix_is_rejected() {
+    let bytes = valid_bytes();
+    io::read_v2_slice(&bytes).expect("the unmutated file must parse");
+    for len in 0..bytes.len() {
+        assert!(
+            io::read_v2_slice(&bytes[..len]).is_err(),
+            "prefix of {len}/{} bytes parsed as a complete trace",
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn trailing_garbage_and_version_skew_are_rejected() {
+    let bytes = valid_bytes();
+    for tail in [&b"\x00"[..], b"\xc1", b"mtrace v2\n"] {
+        let mut padded = bytes.clone();
+        padded.extend_from_slice(tail);
+        assert!(io::read_v2_slice(&padded).is_err(), "trailing {tail:?} accepted");
+    }
+    // a future-versioned magic must be refused, not best-effort parsed
+    let mut skewed = bytes;
+    skewed[..MAGIC2.len()].copy_from_slice(b"mtrace v3\n");
+    assert!(io::read_v2_slice(&skewed).is_err(), "unknown version accepted");
+}
+
+#[test]
+fn hostile_declared_lengths_fail_without_allocating() {
+    // name_len = u64::MAX straight after the magic
+    let mut f = MAGIC2.to_vec();
+    f.extend(uv(u64::MAX));
+    assert!(io::read_v2_slice(&f).is_err(), "absurd name_len accepted");
+    // well-formed header, then a chunk declaring u64::MAX records
+    let mut g = MAGIC2.to_vec();
+    g.extend(uv(1)); // name_len
+    g.push(b'k');
+    g.extend(uv(3)); // kernel_id
+    g.extend(uv(1)); // nwarps
+    g.push(0xC1); // chunk tag
+    g.extend(uv(0)); // warp
+    g.extend(uv(u64::MAX)); // count
+    assert!(io::read_v2_slice(&g).is_err(), "absurd chunk count accepted");
+    // same header, sane count, but a payload length past the cap
+    let mut h = MAGIC2.to_vec();
+    h.extend(uv(1));
+    h.push(b'k');
+    h.extend(uv(3));
+    h.extend(uv(1));
+    h.push(0xC1);
+    h.extend(uv(0));
+    h.extend(uv(1)); // count
+    h.push(0); // ENC_RAW
+    h.extend(uv(u64::MAX)); // payload_len
+    assert!(io::read_v2_slice(&h).is_err(), "absurd payload_len accepted");
+}
+
+#[test]
+fn non_canonical_varints_are_rejected() {
+    // 0x81 0x00 decodes to 1 in plain LEB128 but is non-minimal; the
+    // format demands the canonical encoding so every file has exactly
+    // one byte representation
+    let mut f = MAGIC2.to_vec();
+    f.extend_from_slice(&[0x81, 0x00]); // name_len = 1, padded
+    f.push(b'k');
+    f.extend(uv(3));
+    f.extend(uv(1));
+    assert!(io::read_v2_slice(&f).is_err(), "non-canonical varint accepted");
+}
+
+#[test]
+fn seeded_single_byte_mutations_never_parse_and_never_panic() {
+    let bytes = valid_bytes();
+    let mut rng = XorShift(0x9E3779B97F4A7C15);
+    for round in 0..200u32 {
+        let mut mutated = bytes.clone();
+        let idx = (rng.next() % bytes.len() as u64) as usize;
+        let mask = (rng.next() % 255) as u8 + 1; // never a no-op flip
+        mutated[idx] ^= mask;
+        assert!(
+            io::read_v2_slice(&mutated).is_err(),
+            "round {round}: flipping byte {idx} with {mask:#04x} still parsed \
+             ({} bytes) — structure or digest check has a hole",
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn transformed_traces_roundtrip_v2_bit_identically() {
+    // the transform_props property on the binary container: for a grid of
+    // subsample ∘ window ∘ remap pipelines, encode → decode is lossless
+    // and decode → encode reproduces the exact bytes (canonical writer)
+    let base = sample(8);
+    for keep_one_in in [1usize, 2, 3] {
+        for (start, len) in [(0usize, 40usize), (7, 25), (100, 10_000)] {
+            let out = io::apply_all(
+                &base,
+                &[
+                    Transform::WarpSubsample { keep_one_in },
+                    Transform::InstructionWindow { start, len },
+                    Transform::RegisterRemap { pairs: vec![(2, 200), (5, 90)] },
+                ],
+            );
+            let bytes = io::write_v2_bytes(&out).unwrap();
+            let back = io::read_v2_slice(&bytes)
+                .unwrap_or_else(|e| panic!("keep {keep_one_in} window {start}+{len}: {e}"));
+            assert_eq!(back.name, out.name);
+            assert_eq!(back.kernel_id, out.kernel_id);
+            assert_eq!(back.warps, out.warps, "keep {keep_one_in} window {start}+{len}");
+            assert_eq!(
+                io::write_v2_bytes(&back).unwrap(),
+                bytes,
+                "re-encode is not bit-identical (keep {keep_one_in} window {start}+{len})"
+            );
+        }
+    }
+}
