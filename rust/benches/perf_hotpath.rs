@@ -10,14 +10,15 @@
 //! clock, report Minstr/s per workload plus the serial-vs-parallel
 //! single-point speedup on the paper's `num_sms = 10` machine.
 //!
-//! Every run also emits a machine-readable `BENCH_PR5.json` (schema:
+//! Every run also emits a machine-readable `BENCH_PR9.json` (schema:
 //! docs/EXPERIMENTS.md §Bench JSON) at the repo root: the six hot-path
 //! reference points, a best-of-N Minstr/s sweep over every Table II
 //! benchmark, the `--sim-threads 1/2/4` parallel point, and a
 //! `golden_check` block of parity-config fingerprints CI diffs against
 //! the blessed golden table. This file is the perf trajectory of record —
-//! PR 6+ must beat it (target for PR 5 itself: ≥ 1.5x Minstr/s on the
-//! reference points vs the same bench run on the pre-PR5 commit).
+//! PR 10+ must beat it (target for PR 9 itself: ≥ 1.5x Minstr/s on at
+//! least 4 of the 6 reference points vs the committed `BENCH_PR5.json`
+//! rows in docs/EXPERIMENTS.md §Perf).
 
 use std::fmt::Write as _;
 use std::time::Instant;
@@ -26,8 +27,8 @@ use malekeh::config::{GOLDEN_PROFILE_WARPS, GpuConfig, Scheme};
 use malekeh::sim::run_benchmark;
 use malekeh::trace::table2;
 
-/// The six hot-path reference points (the ≥ 1.5x PR 5 target applies to
-/// these; docs/EXPERIMENTS.md §Perf).
+/// The six hot-path reference points (the ≥ 1.5x PR 9 target applies to
+/// these, measured against the PR 5 rows; docs/EXPERIMENTS.md §Perf).
 const REFERENCE_POINTS: [(&str, Scheme); 6] = [
     ("gemm_t1", Scheme::BASELINE),
     ("gemm_t1", Scheme::MALEKEH),
@@ -184,12 +185,12 @@ fn write_bench_json(
     let mut s = String::new();
     s.push_str("{\n");
     let _ = writeln!(s, "  \"schema\": \"malekeh-bench/v1\",");
-    let _ = writeln!(s, "  \"pr\": 5,");
+    let _ = writeln!(s, "  \"pr\": 9,");
     let _ = writeln!(s, "  \"mode\": \"{}\",", if smoke { "smoke" } else { "full" });
     let _ = writeln!(s, "  \"reps\": {reps},");
     let _ = writeln!(
         s,
-        "  \"target\": {{\"min_speedup_vs_pre_pr5\": 1.5, \"applies_to\": \"hot_path\"}},"
+        "  \"target\": {{\"min_speedup_vs_pr5\": 1.5, \"applies_to\": \"hot_path\", \"min_points\": 4}},"
     );
     push_throughput_json(&mut s, "hot_path", hot);
     push_throughput_json(&mut s, "table2", t2);
@@ -226,7 +227,7 @@ fn main() {
         .iter()
         .position(|a| a == "--json")
         .and_then(|i| args.get(i + 1).cloned())
-        .unwrap_or_else(|| format!("{}/BENCH_PR5.json", env!("CARGO_MANIFEST_DIR")));
+        .unwrap_or_else(|| format!("{}/BENCH_PR9.json", env!("CARGO_MANIFEST_DIR")));
     let reps = if smoke { 1 } else { 3 };
 
     println!("== §Perf: hot-path microbenchmarks ==");
@@ -244,7 +245,7 @@ fn main() {
     }
 
     // Table II Minstr/s sweep (malekeh, num_sms = 1): the per-benchmark
-    // perf trajectory PR 6+ diffs against. Smoke caps each run so CI
+    // perf trajectory PR 10+ diffs against. Smoke caps each run so CI
     // stays fast; the full protocol runs every benchmark to completion.
     println!("\n== §Perf: Table II Minstr/s sweep (malekeh, num_sms=1) ==");
     println!("{:<24}{:>14}{:>12}", "benchmark", "Minstr/s", "instrs");

@@ -17,6 +17,7 @@
 use std::collections::VecDeque;
 
 use crate::isa::{Instruction, MAX_DST, MAX_SRC};
+use crate::sim::exec::pipe_of;
 use crate::util::Rng;
 
 /// Upper bound on cache-table entries (config.ct_entries must not exceed).
@@ -56,6 +57,12 @@ pub struct CtEntry {
 pub struct CacheTable {
     entries: [CtEntry; MAX_CT],
     n: u8,
+    /// Count of valid entries, maintained by `allocate`/`flush` so the
+    /// empty/occupancy checks on the issue hot path are O(1) instead of a
+    /// table scan. Invariant: equals `live().filter(valid).count()` —
+    /// which is why [`CacheTable::entry_mut`] callers must never toggle
+    /// `valid` directly.
+    nvalid: u8,
     tick: u32,
 }
 
@@ -63,14 +70,25 @@ impl CacheTable {
     /// `n` entries (8 in the paper).
     pub fn new(n: usize) -> Self {
         assert!(n <= MAX_CT && n >= 1);
-        CacheTable { entries: [CtEntry::default(); MAX_CT], n: n as u8, tick: 0 }
+        CacheTable { entries: [CtEntry::default(); MAX_CT], n: n as u8, nvalid: 0, tick: 0 }
     }
 
     /// Invalidate everything (CCU reallocation to a new warp, §III-C1).
+    ///
+    /// Early-returns on an already-empty table: `alloc_ocu` flushes on
+    /// every OCU allocation and an OCU table is empty in steady state, so
+    /// without this check every issued baseline instruction paid a full
+    /// entry-clearing pass for nothing
+    /// (`ct_flush_on_empty_table_is_a_no_op` pins the early return).
     pub fn flush(&mut self) {
+        if self.nvalid == 0 {
+            self.tick = 0;
+            return;
+        }
         for e in self.live_mut() {
             *e = CtEntry::default();
         }
+        self.nvalid = 0;
         self.tick = 0;
     }
 
@@ -104,14 +122,14 @@ impl CacheTable {
         self.live().iter().any(|e| e.valid && e.near)
     }
 
-    /// Any valid entries at all?
+    /// Any valid entries at all? O(1): reads the maintained valid count.
     pub fn has_values(&self) -> bool {
-        self.live().iter().any(|e| e.valid)
+        self.nvalid > 0
     }
 
-    /// Count of valid entries.
+    /// Count of valid entries. O(1): reads the maintained valid count.
     pub fn valid_count(&self) -> usize {
-        self.live().iter().filter(|e| e.valid).count()
+        self.nvalid as usize
     }
 
     /// Registers of all valid entries (allocating convenience; the hot
@@ -142,7 +160,10 @@ impl CacheTable {
         &self.live()[i]
     }
 
-    /// Mutable entry accessor.
+    /// Mutable entry accessor. Callers may update the class/lock/LRU bits
+    /// but must not toggle `valid` — validity transitions go through
+    /// [`CacheTable::allocate`] / [`CacheTable::flush`], which maintain
+    /// the O(1) valid count.
     pub fn entry_mut(&mut self, i: usize) -> &mut CtEntry {
         &mut self.live_mut()[i]
     }
@@ -192,7 +213,10 @@ impl CacheTable {
         }
         // invalid first; the policy decides only among live entries
         let i = match self.live().iter().position(|e| !e.valid) {
-            Some(i) => i,
+            Some(i) => {
+                self.nvalid += 1; // filling an empty slot; evictions swap in place
+                i
+            }
             None => victim(&*self, rng)?,
         };
         self.tick += 1;
@@ -383,6 +407,12 @@ pub struct AllocResult {
 }
 
 /// A collector unit (OCU / CCU / BOC depending on scheme flags).
+///
+/// This is the array-of-structs form. The simulator's hot path runs on
+/// [`CollectorArray`] (the structure-of-arrays layout of the same state);
+/// `Collector` is retained as the obviously-correct reference that the
+/// randomized equivalence suite (`rust/tests/soa_equivalence.rs`) drives
+/// in lockstep against the flat arrays, draw-for-draw on the RNG stream.
 #[derive(Debug, Clone)]
 pub struct Collector {
     /// An un-dispatched instruction occupies this unit.
@@ -634,6 +664,504 @@ impl Collector {
     /// the window, the value is captured there. Returns true if captured.
     pub fn boc_writeback(&mut self, seq: u64, reg: u8) -> bool {
         if let Some(bi) = self.window.iter_mut().find(|bi| bi.seq == seq) {
+            let mut hit = false;
+            for e in bi.regs_mut() {
+                if e.0 == reg && e.2 {
+                    e.1 = true;
+                    hit = true;
+                }
+            }
+            hit
+        } else {
+            false
+        }
+    }
+}
+
+// ----------------------------------------------- structure-of-arrays bank
+
+/// Maximum collector units per sub-core the packed bitmasks support.
+pub const MAX_COLLECTORS: usize = 64;
+
+/// `owner` sentinel: the unit has never been allocated to a warp.
+const NO_OWNER: u8 = u8::MAX;
+
+/// `pipe` sentinel: the unit holds no dispatchable instruction.
+const NO_PIPE: u8 = u8::MAX;
+
+/// The sub-core's collector bank in structure-of-arrays layout — the hot
+/// half of every per-cycle scan.
+///
+/// The per-unit scheduling scalars (`occupied`, `owner`, `src_ready`,
+/// `nsrc`, pipe class, `issue_cycle`, `cur_seq`) live in parallel flat
+/// arrays, with three derived facts packed into per-bank `u64` bitmasks:
+///
+/// - `occ`  — bit `ci` set iff unit `ci` is occupied,
+/// - `rdy`  — bit `ci` set iff unit `ci` is [`Collector::ready`],
+/// - `hasv`/`nearv` — mirrors of `ct.has_values()` / `ct.has_near_value()`.
+///
+/// `free_unit_reservoir`, the Malekeh dual reservoir, `build_order`'s
+/// ownership scan, and the dispatch arbitrate loop all read only these
+/// arrays/masks, so a full scan of the bank touches a handful of cache
+/// lines regardless of how big the cold payloads are. The bulky state — a
+/// 32-byte [`Instruction`], a [`CacheTable`], and (BOW only) the sliding
+/// window — sits in a cold side-table touched only on allocate / deliver /
+/// dispatch / writeback of that specific unit.
+///
+/// The value-bit mirrors are resynced after the closed set of table
+/// mutations (`alloc_ocu`'s flush, `alloc_ccu_admit`, `ccu_writeback`,
+/// `dispatched`'s OCU flush); policies never mutate a collector's table
+/// directly (per-warp RFC tables are a separate [`CacheTable`] array), so
+/// the mirror cannot go stale. The BOW windows are allocated only when the
+/// policy declares `uses_window()` — the other schemes carry no per-unit
+/// `VecDeque` at all.
+///
+/// Every operation here is the literal port of the corresponding
+/// [`Collector`] method — same branch structure, same RNG draw sequence —
+/// and `rust/tests/soa_equivalence.rs` drives both layouts in lockstep
+/// over randomized operation streams to prove it draw-for-draw.
+#[derive(Debug, Clone)]
+pub struct CollectorArray {
+    n: usize,
+    occ: u64,
+    rdy: u64,
+    hasv: u64,
+    nearv: u64,
+    owner: Box<[u8]>,
+    src_ready: Box<[u8]>,
+    nsrc: Box<[u8]>,
+    pipe: Box<[u8]>,
+    issue_cycle: Box<[u64]>,
+    cur_seq: Box<[u64]>,
+    seq_counter: Box<[u64]>,
+    // cold side-table: touched only when operating on one specific unit
+    instr: Box<[Instruction]>,
+    ct: Box<[CacheTable]>,
+    /// BOW sliding windows; empty unless [`CollectorArray::enable_windows`]
+    /// was called (only the BOW policy asks for them).
+    windows: Vec<VecDeque<BocInstr>>,
+}
+
+impl CollectorArray {
+    /// Bank of `n` units, each with `ct_entries` cache-table entries.
+    pub fn new(n: usize, ct_entries: usize) -> Self {
+        assert!(n <= MAX_COLLECTORS, "bitmasks are {MAX_COLLECTORS} bits wide");
+        CollectorArray {
+            n,
+            occ: 0,
+            rdy: 0,
+            hasv: 0,
+            nearv: 0,
+            owner: vec![NO_OWNER; n].into_boxed_slice(),
+            src_ready: vec![0; n].into_boxed_slice(),
+            nsrc: vec![0; n].into_boxed_slice(),
+            pipe: vec![NO_PIPE; n].into_boxed_slice(),
+            issue_cycle: vec![0; n].into_boxed_slice(),
+            cur_seq: vec![0; n].into_boxed_slice(),
+            seq_counter: vec![0; n].into_boxed_slice(),
+            instr: (0..n)
+                .map(|_| Instruction::new(crate::isa::OpClass::Ctrl, &[], &[]))
+                .collect(),
+            ct: (0..n).map(|_| CacheTable::new(ct_entries)).collect(),
+            windows: Vec::new(),
+        }
+    }
+
+    /// Allocate the per-unit BOW windows (satellite: the 12 non-BOW
+    /// policies never pay the `VecDeque` footprint).
+    pub fn enable_windows(&mut self) {
+        if self.windows.is_empty() {
+            self.windows = (0..self.n).map(|_| VecDeque::new()).collect();
+        }
+    }
+
+    /// Number of units.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// No units at all?
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Packed occupancy bitmask.
+    #[inline]
+    pub fn occ_mask(&self) -> u64 {
+        self.occ
+    }
+
+    /// Packed bitmask of free (unoccupied) units.
+    #[inline]
+    pub fn free_mask(&self) -> u64 {
+        !self.occ & self.unit_mask()
+    }
+
+    /// Packed readiness bitmask (`occupied && all sources ready`).
+    #[inline]
+    pub fn ready_mask(&self) -> u64 {
+        self.rdy
+    }
+
+    /// All-units mask (`n` low bits).
+    #[inline]
+    fn unit_mask(&self) -> u64 {
+        if self.n == 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.n) - 1
+        }
+    }
+
+    /// Is unit `ci` occupied?
+    #[inline]
+    pub fn occupied(&self, ci: usize) -> bool {
+        debug_assert!(ci < self.n);
+        self.occ & (1 << ci) != 0
+    }
+
+    /// All valid source operands of unit `ci` ready (dispatch condition)?
+    #[inline]
+    pub fn ready(&self, ci: usize) -> bool {
+        self.rdy & (1 << ci) != 0
+    }
+
+    /// Warp whose values live in unit `ci`'s cache table.
+    #[inline]
+    pub fn owner(&self, ci: usize) -> Option<u8> {
+        let w = self.owner[ci];
+        if w == NO_OWNER {
+            None
+        } else {
+            Some(w)
+        }
+    }
+
+    /// The instruction occupying unit `ci` (cold side-table access).
+    #[inline]
+    pub fn instr(&self, ci: usize) -> &Instruction {
+        &self.instr[ci]
+    }
+
+    /// Cycle unit `ci`'s occupying instruction was issued.
+    #[inline]
+    pub fn issue_cycle(&self, ci: usize) -> u64 {
+        self.issue_cycle[ci]
+    }
+
+    /// BOW sequence number of unit `ci`'s occupying instruction.
+    #[inline]
+    pub fn cur_seq(&self, ci: usize) -> u64 {
+        self.cur_seq[ci]
+    }
+
+    /// Execution-pipe class of unit `ci`'s instruction, as
+    /// `Pipe as u8` ([`crate::sim::exec::Pipe`]); `u8::MAX` when empty.
+    #[inline]
+    pub fn pipe_code(&self, ci: usize) -> u8 {
+        self.pipe[ci]
+    }
+
+    /// Unit `ci`'s cache table (read-only; mutations go through the ops
+    /// below so the packed value mirrors stay coherent).
+    #[inline]
+    pub fn ct(&self, ci: usize) -> &CacheTable {
+        &self.ct[ci]
+    }
+
+    /// Mirror of `ct(ci).has_values()` (bit read, no table access).
+    #[inline]
+    pub fn has_values(&self, ci: usize) -> bool {
+        self.hasv & (1 << ci) != 0
+    }
+
+    /// Mirror of `ct(ci).has_near_value()` (bit read, no table access).
+    #[inline]
+    pub fn has_near_value(&self, ci: usize) -> bool {
+        self.nearv & (1 << ci) != 0
+    }
+
+    /// Does any unit owned by `w` hold cached values? (Malekeh §IV-B1
+    /// priority scan — a bitmask walk plus one owner-byte read per
+    /// value-holding unit.)
+    pub fn warp_owns_values(&self, w: u8) -> bool {
+        let mut m = self.hasv;
+        while m != 0 {
+            let ci = m.trailing_zeros() as usize;
+            m &= m - 1;
+            if self.owner[ci] == w {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// First unit owned by warp `w` (the at-most-one-CCU invariant makes
+    /// it unique); contiguous scan of the owner byte array.
+    pub fn position_owned_by(&self, w: u8) -> Option<usize> {
+        self.owner.iter().position(|&o| o == w)
+    }
+
+    // ----------------------------------------------------- mask upkeep
+
+    /// Recompute unit `ci`'s readiness bit from the hot arrays.
+    #[inline]
+    fn update_ready(&mut self, ci: usize) {
+        let bit = 1u64 << ci;
+        if self.occ & bit != 0 && self.src_ready[ci].count_ones() as u8 == self.nsrc[ci] {
+            self.rdy |= bit;
+        } else {
+            self.rdy &= !bit;
+        }
+    }
+
+    /// Resync the value-bit mirrors of unit `ci` from its cache table
+    /// (called after every table mutation; O(ct entries)).
+    fn resync_values(&mut self, ci: usize) {
+        let bit = 1u64 << ci;
+        if self.ct[ci].has_values() {
+            self.hasv |= bit;
+        } else {
+            self.hasv &= !bit;
+        }
+        if self.ct[ci].has_near_value() {
+            self.nearv |= bit;
+        } else {
+            self.nearv &= !bit;
+        }
+    }
+
+    /// Install the hot scalars of a fresh allocation into unit `ci`.
+    fn set_hot(&mut self, ci: usize, warp: u8, instr: &Instruction, now: u64) {
+        debug_assert!(warp != NO_OWNER, "warp id {NO_OWNER} is the empty sentinel");
+        self.occ |= 1 << ci;
+        self.owner[ci] = warp;
+        self.src_ready[ci] = 0;
+        self.nsrc[ci] = instr.nsrc;
+        self.pipe[ci] = pipe_of(instr.op).map(|p| p as u8).unwrap_or(NO_PIPE);
+        self.issue_cycle[ci] = now;
+        self.instr[ci] = *instr;
+    }
+
+    // ------------------------------------------------------ operations
+
+    /// Mark source slot of unit `ci` ready (operand arrived over port S).
+    #[inline]
+    pub fn deliver(&mut self, ci: usize, slot: u8) {
+        self.src_ready[ci] |= 1 << slot;
+        self.update_ready(ci);
+    }
+
+    /// [`Collector::alloc_ocu`] on unit `ci`.
+    pub fn alloc_ocu(&mut self, ci: usize, warp: u8, instr: &Instruction, now: u64) -> AllocResult {
+        debug_assert!(!self.occupied(ci));
+        self.set_hot(ci, warp, instr, now);
+        self.ct[ci].flush(); // no-op pass in steady state (empty OCU table)
+        self.resync_values(ci);
+        let mut res = AllocResult::default();
+        for (slot, &reg) in instr.sources().iter().enumerate() {
+            res.misses.push(slot as u8, reg);
+        }
+        self.update_ready(ci);
+        res
+    }
+
+    /// [`Collector::alloc_ccu`] on unit `ci`.
+    pub fn alloc_ccu(
+        &mut self,
+        ci: usize,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+        rng: &mut Rng,
+        victim: VictimFn,
+    ) -> AllocResult {
+        // RNG-identical to the pre-admission code, like Collector::alloc_ccu
+        self.alloc_ccu_admit(ci, warp, instr, now, rng, victim, &mut |_, _| true)
+    }
+
+    /// [`Collector::alloc_ccu_admit`] on unit `ci` — same flush-on-owner-
+    /// change ordering, same per-source lookup/allocate sequence, same RNG
+    /// draws.
+    #[allow(clippy::too_many_arguments)]
+    pub fn alloc_ccu_admit(
+        &mut self,
+        ci: usize,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+        rng: &mut Rng,
+        victim: VictimFn,
+        admit: &mut dyn FnMut(usize, u8) -> bool,
+    ) -> AllocResult {
+        debug_assert!(!self.occupied(ci));
+        let mut res = AllocResult::default();
+        if self.owner[ci] != warp {
+            self.ct[ci].flush();
+            res.flushed = self.owner[ci] != NO_OWNER;
+        }
+        self.set_hot(ci, warp, instr, now);
+        let ct = &mut self.ct[ci];
+        let mut ready_bits = 0u8;
+        for (slot, &reg) in instr.sources().iter().enumerate() {
+            let near = instr.src_is_near(slot);
+            if let Some(i) = ct.lookup(reg) {
+                // hit: value already in the CCU — no bank read
+                let e = ct.entry_mut(i);
+                e.locked = true;
+                e.near = near;
+                if e.from_wb {
+                    e.from_wb = false;
+                    res.wb_reuse += 1;
+                }
+                ct.touch(i);
+                ready_bits |= 1 << slot;
+                res.hits += 1;
+            } else if admit(slot, reg) {
+                let idx = ct
+                    .allocate(reg, near, true, rng, &mut *victim)
+                    .expect("CT must fit all sources (ct_entries >= MAX_SRC)");
+                debug_assert!(idx < MAX_CT);
+                res.misses.push(slot as u8, reg);
+            } else {
+                // not admitted: bank fetch only, no table entry
+                res.misses.push(slot as u8, reg);
+            }
+        }
+        self.src_ready[ci] = ready_bits;
+        self.resync_values(ci);
+        self.update_ready(ci);
+        res
+    }
+
+    /// [`Collector::alloc_boc`] on unit `ci`. Requires
+    /// [`CollectorArray::enable_windows`].
+    pub fn alloc_boc(
+        &mut self,
+        ci: usize,
+        warp: u8,
+        instr: &Instruction,
+        now: u64,
+        window_len: usize,
+    ) -> AllocResult {
+        debug_assert!(!self.occupied(ci));
+        assert!(
+            !self.windows.is_empty(),
+            "alloc_boc needs enable_windows() (BOW-only cold state)"
+        );
+        let mut res = AllocResult::default();
+        self.set_hot(ci, warp, instr, now);
+        self.seq_counter[ci] += 1;
+        self.cur_seq[ci] = self.seq_counter[ci];
+        let window = &mut self.windows[ci];
+        let mut row = BocInstr::new(self.cur_seq[ci]);
+        let mut ready_bits = 0u8;
+        for (slot, &reg) in instr.sources().iter().enumerate() {
+            // newest-first search over the window + regs already added for
+            // this instruction (duplicate sources)
+            let hit = row.regs().iter().any(|&(r, p, _)| r == reg && p)
+                || window
+                    .iter()
+                    .rev()
+                    .any(|bi| bi.regs().iter().any(|&(r, p, _)| r == reg && p));
+            if hit {
+                ready_bits |= 1 << slot;
+                res.hits += 1;
+                row.push(reg, true, false);
+            } else {
+                res.misses.push(slot as u8, reg);
+                row.push(reg, false, false); // present once fetched
+            }
+        }
+        for &reg in instr.dests() {
+            row.push(reg, false, true); // present at writeback
+        }
+        window.push_back(row);
+        while window.len() > window_len {
+            window.pop_front(); // slid out: pending dsts go RF-only
+        }
+        self.src_ready[ci] = ready_bits;
+        self.update_ready(ci);
+        res
+    }
+
+    /// [`Collector::bank_operand_arrived`] on unit `ci`.
+    pub fn bank_operand_arrived(&mut self, ci: usize, slot: u8, reg: u8, bow: bool) {
+        self.deliver(ci, slot);
+        if bow {
+            let seq = self.cur_seq[ci];
+            if let Some(bi) = self
+                .windows
+                .get_mut(ci)
+                .and_then(|w| w.iter_mut().find(|bi| bi.seq == seq))
+            {
+                for e in bi.regs_mut() {
+                    if e.0 == reg && !e.2 {
+                        e.1 = true;
+                    }
+                }
+            }
+        }
+    }
+
+    /// [`Collector::dispatched`] on unit `ci`.
+    pub fn dispatched(&mut self, ci: usize, caching: bool) {
+        self.occ &= !(1 << ci);
+        self.src_ready[ci] = 0;
+        self.pipe[ci] = NO_PIPE;
+        self.update_ready(ci);
+        if caching {
+            self.ct[ci].unlock_all(); // lock bits only: value mirrors unchanged
+        } else {
+            self.ct[ci].flush();
+            self.resync_values(ci);
+        }
+    }
+
+    /// [`Collector::ccu_writeback`] on unit `ci`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ccu_writeback(
+        &mut self,
+        ci: usize,
+        warp: u8,
+        reg: u8,
+        near: bool,
+        rng: &mut Rng,
+        victim: VictimFn,
+        no_write_filter: bool,
+    ) -> bool {
+        if self.owner[ci] != warp || warp == NO_OWNER {
+            return false;
+        }
+        let ct = &mut self.ct[ci];
+        if let Some(i) = ct.lookup(reg) {
+            let e = ct.entry_mut(i);
+            e.near = near;
+            e.from_wb = true;
+            ct.touch(i);
+            self.resync_values(ci);
+            return true;
+        }
+        if near || no_write_filter {
+            if let Some(i) = ct.allocate(reg, near, false, rng, victim) {
+                ct.entry_mut(i).from_wb = true;
+                self.resync_values(ci);
+                return true;
+            }
+            return false;
+        }
+        false
+    }
+
+    /// [`Collector::boc_writeback`] on unit `ci`.
+    pub fn boc_writeback(&mut self, ci: usize, seq: u64, reg: u8) -> bool {
+        if let Some(bi) = self
+            .windows
+            .get_mut(ci)
+            .and_then(|w| w.iter_mut().find(|bi| bi.seq == seq))
+        {
             let mut hit = false;
             for e in bi.regs_mut() {
                 if e.0 == reg && e.2 {
@@ -1053,5 +1581,147 @@ mod tests {
         c.alloc_boc(0, &mma(&[5], &[6]), 2, 2);
         c.dispatched(true);
         assert!(!c.boc_writeback(seq1, 3), "slid out -> RF only");
+    }
+
+    // ---- O(1) valid count + empty-flush fast path (PR 9) ----
+
+    #[test]
+    fn ct_flush_on_empty_table_is_a_no_op() {
+        // alloc_ocu flushes on every allocation and an OCU table is empty
+        // in steady state; the flush must early-return without touching
+        // the entry array. Pin by planting a sentinel in a *dead* slot
+        // (valid=false never becomes visible through the public API): a
+        // full clearing pass would wipe it, the early return leaves it.
+        let mut ct = CacheTable::new(4);
+        let mut r = rng();
+        ct.allocate(7, true, false, &mut r, &mut reuse_guided_victim);
+        ct.flush(); // real flush: table had a value
+        assert!(!ct.has_values());
+        ct.entry_mut(2).reg = 0xAB; // sentinel in an invalid entry
+        ct.flush(); // empty flush: must not run the clearing pass
+        assert_eq!(ct.entry(2).reg, 0xAB, "empty flush cleared entries");
+        assert!(!ct.has_values());
+        assert!(ct.lookup(0xAB).is_none(), "sentinel is invalid, not live");
+    }
+
+    #[test]
+    fn ct_nvalid_matches_recount_under_random_ops() {
+        // the maintained count must equal a fresh scan after any mix of
+        // allocate (fill / evict / tag-update) and flush
+        let mut gen = Rng::new(0x9A71D);
+        for round in 0..300u64 {
+            let n = gen.below(MAX_CT) + 1;
+            let mut ct = CacheTable::new(n);
+            let mut r = Rng::new(round);
+            for _ in 0..gen.below(40) {
+                match gen.below(10) {
+                    0 => ct.flush(),
+                    1..=7 => {
+                        ct.allocate(
+                            gen.below(16) as u8,
+                            gen.chance(0.5),
+                            gen.chance(0.2),
+                            &mut r,
+                            &mut reuse_guided_victim,
+                        );
+                    }
+                    _ => ct.unlock_all(),
+                }
+                let recount =
+                    ct.entries().iter().filter(|e| e.valid).count();
+                assert_eq!(
+                    ct.valid_count(),
+                    recount,
+                    "round {round}: nvalid diverged from scan"
+                );
+                assert_eq!(ct.has_values(), recount > 0);
+            }
+        }
+    }
+
+    // ---- CollectorArray (SoA bank) smoke tests; the full draw-for-draw
+    // ---- lockstep battery lives in rust/tests/soa_equivalence.rs ----
+
+    #[test]
+    fn soa_masks_track_alloc_deliver_dispatch() {
+        let mut arr = CollectorArray::new(3, 8);
+        assert_eq!(arr.occ_mask(), 0);
+        assert_eq!(arr.free_mask(), 0b111);
+        let mut r = rng();
+        let i = mma(&[1, 2], &[3]);
+        arr.alloc_ccu(1, 5, &i, 0, &mut r, &mut reuse_guided_victim);
+        assert_eq!(arr.occ_mask(), 0b010);
+        assert_eq!(arr.free_mask(), 0b101);
+        assert_eq!(arr.ready_mask(), 0, "sources outstanding");
+        assert_eq!(arr.owner(1), Some(5));
+        assert!(arr.owner(0).is_none());
+        arr.bank_operand_arrived(1, 0, 1, false);
+        arr.bank_operand_arrived(1, 1, 2, false);
+        assert_eq!(arr.ready_mask(), 0b010);
+        assert!(arr.ready(1));
+        assert!(arr.has_values(1), "CCU misses allocated entries");
+        arr.dispatched(1, true);
+        assert_eq!(arr.occ_mask(), 0);
+        assert_eq!(arr.ready_mask(), 0);
+        assert!(arr.has_values(1), "caching dispatch keeps values");
+        arr.dispatched(1, false);
+        assert!(!arr.has_values(1), "OCU dispatch drops values");
+    }
+
+    #[test]
+    fn soa_value_mirrors_match_table_state() {
+        let mut arr = CollectorArray::new(2, 4);
+        let mut r = rng();
+        // near source -> both mirrors set
+        let mut i = Instruction::new(OpClass::Alu, &[1], &[2]);
+        i.set_src_near(0, true);
+        arr.alloc_ccu(0, 1, &i, 0, &mut r, &mut reuse_guided_victim);
+        assert_eq!(arr.has_values(0), arr.ct(0).has_values());
+        assert_eq!(arr.has_near_value(0), arr.ct(0).has_near_value());
+        assert!(arr.has_near_value(0));
+        arr.bank_operand_arrived(0, 0, 1, false);
+        arr.dispatched(0, true);
+        // writeback hit flips the near bit far -> mirror must follow
+        assert!(arr.ccu_writeback(0, 1, 1, false, &mut r, &mut reuse_guided_victim, true));
+        assert_eq!(arr.has_near_value(0), arr.ct(0).has_near_value());
+        assert!(!arr.has_near_value(0), "hit downgraded the only near value");
+        assert!(arr.warp_owns_values(1));
+        assert!(!arr.warp_owns_values(2));
+        assert_eq!(arr.position_owned_by(1), Some(0));
+        assert_eq!(arr.position_owned_by(9), None);
+    }
+
+    #[test]
+    fn soa_boc_requires_windows_and_matches_aos() {
+        let mut arr = CollectorArray::new(1, 8);
+        arr.enable_windows();
+        let mut c = Collector::new(8);
+        for (k, i) in [mma(&[1, 2], &[3]), mma(&[1, 4], &[5]), mma(&[3], &[6])]
+            .iter()
+            .enumerate()
+        {
+            let a = arr.alloc_boc(0, 0, i, k as u64, 3);
+            let b = c.alloc_boc(0, i, k as u64, 3);
+            assert_eq!(a.hits, b.hits, "instr {k}");
+            assert_eq!(a.misses, b.misses, "instr {k}");
+            for (slot, &reg) in i.sources().iter().enumerate() {
+                arr.bank_operand_arrived(0, slot as u8, reg, true);
+                c.bank_operand_arrived(slot as u8, reg, true);
+            }
+            let (sa, sb) = (arr.cur_seq(0), c.cur_seq);
+            assert_eq!(sa, sb);
+            arr.dispatched(0, true);
+            c.dispatched(true);
+            for &d in i.dests() {
+                assert_eq!(arr.boc_writeback(0, sa, d), c.boc_writeback(sb, d));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "enable_windows")]
+    fn soa_boc_without_windows_panics() {
+        let mut arr = CollectorArray::new(1, 8);
+        arr.alloc_boc(0, 0, &mma(&[1], &[2]), 0, 3);
     }
 }

@@ -74,6 +74,23 @@ impl Ord for WbEvent {
     }
 }
 
+/// One instruction picked for dispatch this cycle (at most one per pipe).
+/// The sub-core batches the cycle's picks and hands them to
+/// [`ExecUnits::dispatch_batch`] in a single call.
+#[derive(Debug, Clone, Copy)]
+pub struct DispatchReq {
+    /// The instruction leaving its collector.
+    pub instr: Instruction,
+    /// Local warp index within the sub-core.
+    pub warp: u8,
+    /// Collector the instruction was collected in.
+    pub collector: u8,
+    /// BOW window sequence number of the instruction.
+    pub boc_seq: u64,
+    /// Memory-system completion cycle for LSU ops (ignored otherwise).
+    pub mem_done: u64,
+}
+
 /// The sub-core's execution back-end.
 #[derive(Debug)]
 pub struct ExecUnits {
@@ -144,6 +161,18 @@ impl ExecUnits {
             }));
         }
         done
+    }
+
+    /// Dispatch one cycle's picks in a single call. The requests target
+    /// distinct pipes (at most one pick per pipe per cycle), so the
+    /// per-request effects commute: each dispatch advances only its own
+    /// pipe's accept cursor, and the event heap's total order makes the
+    /// drain sequence a function of the event *set*, not insertion order —
+    /// batching is bit-identical to the per-pipe calls it replaces.
+    pub fn dispatch_batch(&mut self, reqs: &[DispatchReq], now: u64) {
+        for r in reqs {
+            self.dispatch(&r.instr, r.warp, r.collector, r.boc_seq, now, r.mem_done);
+        }
     }
 
     /// Pop all writebacks due at or before `now`.

@@ -91,12 +91,16 @@ impl Sm {
                 return; // L2-bound: wait for the serial service phase
             }
             // event-driven fast-forward over stretches where every
-            // sub-core is stalled empty and only in-flight EU/memory
-            // events can change state (see docs/EXPERIMENTS.md §Perf)
+            // sub-core is quiescent — stalled empty, or stalled ready
+            // without consulting its policy — and only in-flight
+            // EU/memory events or a policy time gate can change state
+            // (see docs/EXPERIMENTS.md §Perf). `now` is the cycle just
+            // stepped: a gate boundary at `now + 1` must veto the skip,
+            // so the probe's horizon is anchored before the increment.
             let mut wake = u64::MAX;
             let mut quiet = true;
             for sc in &self.sub_cores {
-                match sc.next_wakeup() {
+                match sc.next_wakeup(now) {
                     None => {
                         quiet = false;
                         break;

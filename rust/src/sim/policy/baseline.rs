@@ -40,7 +40,7 @@ impl CachePolicy for BaselinePolicy {
         instr: &Instruction,
         now: u64,
     ) -> AllocResult {
-        ctx.collectors[ci].alloc_ocu(warp, instr, now)
+        ctx.collectors.alloc_ocu(ci, warp, instr, now)
     }
 
     fn capture_writeback(

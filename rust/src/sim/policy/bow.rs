@@ -5,7 +5,7 @@
 
 use crate::config::GpuConfig;
 use crate::isa::Instruction;
-use crate::sim::collector::{AllocResult, Collector};
+use crate::sim::collector::{AllocResult, CollectorArray};
 use crate::sim::exec::WbEvent;
 
 use super::{CachePolicy, CollectorChoice, PolicyCtx};
@@ -33,7 +33,7 @@ impl CachePolicy for BowPolicy {
 
     fn select_collector(&mut self, ctx: &mut PolicyCtx, warp: u8) -> CollectorChoice {
         let ci = warp as usize % ctx.collectors.len();
-        if ctx.collectors[ci].occupied {
+        if ctx.collectors.occupied(ci) {
             CollectorChoice::SkipWarp // private unit busy: this warp cannot issue
         } else {
             CollectorChoice::Unit(ci)
@@ -48,7 +48,7 @@ impl CachePolicy for BowPolicy {
         instr: &Instruction,
         now: u64,
     ) -> AllocResult {
-        ctx.collectors[ci].alloc_boc(warp, instr, now, self.window)
+        ctx.collectors.alloc_boc(ci, warp, instr, now, self.window)
     }
 
     fn capture_writeback(
@@ -62,14 +62,18 @@ impl CachePolicy for BowPolicy {
         // BOW writes every in-window destination
         let ci = ev.collector as usize;
         if ci < ctx.collectors.len() {
-            ctx.collectors[ci].boc_writeback(ev.boc_seq, reg)
+            ctx.collectors.boc_writeback(ci, ev.boc_seq, reg)
         } else {
             false
         }
     }
 
-    fn operand_arrived(&mut self, collector: &mut Collector, slot: u8, reg: u8) {
+    fn operand_arrived(&mut self, collectors: &mut CollectorArray, ci: usize, slot: u8, reg: u8) {
         // a fetched value also becomes present in the sliding window
-        collector.bank_operand_arrived(slot, reg, true);
+        collectors.bank_operand_arrived(ci, slot, reg, true);
+    }
+
+    fn uses_window(&self) -> bool {
+        true // the only scheme whose collectors carry the sliding window
     }
 }

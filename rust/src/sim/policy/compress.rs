@@ -75,7 +75,8 @@ impl CachePolicy for CompressPolicy {
         now: u64,
     ) -> AllocResult {
         let cut = self.compress_regs;
-        ctx.collectors[ci].alloc_ccu_admit(
+        ctx.collectors.alloc_ccu_admit(
+            ci,
             warp,
             instr,
             now,

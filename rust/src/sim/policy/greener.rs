@@ -82,17 +82,17 @@ impl CachePolicy for GreenerPolicy {
         instr: &Instruction,
         now: u64,
     ) -> AllocResult {
-        let mut res = ctx.collectors[ci].alloc_ocu(warp, instr, now);
+        let mut res = ctx.collectors.alloc_ocu(ci, warp, instr, now);
         if ctx.warps[warp as usize].active {
             // powered slice: any retained register may hit (filtered out of
             // the miss list in place — inline storage, no per-event heap)
             let cache = &mut ctx.rfc[warp as usize];
-            let col = &mut ctx.collectors[ci];
+            let col = &mut *ctx.collectors;
             let mut hits = 0u32;
             res.misses.retain(|slot, reg| {
                 if let Some(i) = cache.lookup(reg) {
                     cache.touch(i);
-                    col.deliver(slot);
+                    col.deliver(ci, slot);
                     hits += 1;
                     false
                 } else {
@@ -132,6 +132,28 @@ impl CachePolicy for GreenerPolicy {
     /// Power-gate wake-up: slower than the plain scheduler swap-in.
     fn activation_delay(&self) -> u64 {
         self.wakeup
+    }
+
+    /// Time-dependent gates: pending wake-ups open the issue gate, and the
+    /// idle timeout makes a resident stalled warp gateable at
+    /// `last_issue + GATE_IDLE_CYCLES + 1` — fast-forward up to whichever
+    /// boundary comes first.
+    fn quiescent_horizon(&self, warps: &[WarpState], now: u64) -> u64 {
+        let mut h = u64::MAX;
+        for w in warps {
+            if !w.active || w.done {
+                continue;
+            }
+            let gate = w.active_since + self.activation_delay();
+            if gate > now {
+                h = h.min(gate);
+            }
+            let timeout = w.last_issue + GATE_IDLE_CYCLES + 1;
+            if timeout > now {
+                h = h.min(timeout);
+            }
+        }
+        h
     }
 }
 

@@ -25,7 +25,7 @@ use crate::compiler::register_intervals;
 use crate::config::GpuConfig;
 use crate::energy::EventKind;
 use crate::isa::Instruction;
-use crate::sim::collector::{plain_lru_victim, AllocResult, Collector};
+use crate::sim::collector::{plain_lru_victim, AllocResult, CollectorArray};
 use crate::sim::exec::WbEvent;
 use crate::sim::warp::WarpState;
 
@@ -95,7 +95,7 @@ impl CachePolicy for LtrfPolicy {
         order: &mut Vec<u8>,
         greedy: Option<u8>,
         warps: &[WarpState],
-        _collectors: &[Collector],
+        _collectors: &CollectorArray,
     ) {
         let n = warps.len();
         debug_assert!(n <= 128, "selection mask is 128 bits wide");
@@ -190,17 +190,17 @@ impl CachePolicy for LtrfPolicy {
             }
         }
 
-        let mut res = ctx.collectors[ci].alloc_ocu(warp, instr, now);
+        let mut res = ctx.collectors.alloc_ocu(ci, warp, instr, now);
         if ctx.warps[wi].active {
             // staged registers hit; the rest go to the banks (and come
             // back through the fill-on-return path)
             let cache = &mut ctx.rfc[wi];
-            let col = &mut ctx.collectors[ci];
+            let col = &mut *ctx.collectors;
             let mut hits = 0u32;
             res.misses.retain(|slot, reg| {
                 if let Some(i) = cache.lookup(reg) {
                     cache.touch(i);
-                    col.deliver(slot);
+                    col.deliver(ci, slot);
                     hits += 1;
                     false
                 } else {
@@ -233,14 +233,14 @@ impl CachePolicy for LtrfPolicy {
 
     /// Fill on return: remember which warp's operand the banks produced;
     /// installed at the next allocation (this hook has no cache access).
-    fn operand_arrived(&mut self, collector: &mut Collector, slot: u8, reg: u8) {
-        if let Some(w) = collector.owner {
+    fn operand_arrived(&mut self, collectors: &mut CollectorArray, ci: usize, slot: u8, reg: u8) {
+        if let Some(w) = collectors.owner(ci) {
             if (self.n_pending as usize) < PENDING_FILLS {
                 self.pending[self.n_pending as usize] = (w, reg);
                 self.n_pending += 1;
             }
         }
-        collector.bank_operand_arrived(slot, reg, false);
+        collectors.bank_operand_arrived(ci, slot, reg, false);
     }
 
     fn should_swap_out(&self, warp: &WarpState, instr: &Instruction, now: u64) -> bool {
@@ -250,6 +250,28 @@ impl CachePolicy for LtrfPolicy {
     /// Staging an interval takes the software-prefetch latency.
     fn activation_delay(&self) -> u64 {
         self.prefetch
+    }
+
+    /// Time-dependent gates: pending prefetch completions open the issue
+    /// gate, and the interval timeout makes a resident stalled warp
+    /// swappable at `last_issue + INTERVAL_TIMEOUT + 1` — fast-forward up
+    /// to whichever boundary comes first.
+    fn quiescent_horizon(&self, warps: &[WarpState], now: u64) -> u64 {
+        let mut h = u64::MAX;
+        for w in warps {
+            if !w.active || w.done {
+                continue;
+            }
+            let gate = w.active_since + self.activation_delay();
+            if gate > now {
+                h = h.min(gate);
+            }
+            let timeout = w.last_issue + INTERVAL_TIMEOUT + 1;
+            if timeout > now {
+                h = h.min(timeout);
+            }
+        }
+        h
     }
 }
 
@@ -276,24 +298,27 @@ mod tests {
         warps[1].strand_pos = 5;
         warps[2].strand_pos = 9;
         warps[3].strand_pos = 2;
+        let empty = CollectorArray::new(0, 8);
         let mut order = Vec::new();
-        p.build_order(&mut order, None, &warps, &[]);
+        p.build_order(&mut order, None, &warps, &empty);
         // descending strand_pos; the 0/3 tie resolves to the lower id
         assert_eq!(order, vec![2, 1, 0, 3]);
         // a greedy warp is already at the front and never re-pushed
         let mut order = vec![2u8];
-        p.build_order(&mut order, Some(2), &warps, &[]);
+        p.build_order(&mut order, Some(2), &warps, &empty);
         assert_eq!(order, vec![2, 1, 0, 3]);
     }
 
     #[test]
     fn fill_buffer_is_bounded() {
+        use crate::isa::{Instruction, OpClass};
         let cfg = GpuConfig::table1_baseline();
         let mut p = LtrfPolicy::from_config(&cfg);
-        let mut c = Collector::new(8);
-        c.owner = Some(1);
+        let mut arr = CollectorArray::new(1, 8);
+        // give unit 0 an owner so arrivals are recorded
+        arr.alloc_ocu(0, 1, &Instruction::new(OpClass::Alu, &[1, 2], &[3]), 0);
         for k in 0..(PENDING_FILLS + 4) as u8 {
-            p.operand_arrived(&mut c, k % 6, k);
+            p.operand_arrived(&mut arr, 0, k % 6, k);
         }
         assert_eq!(p.n_pending as usize, PENDING_FILLS, "overflow is dropped");
     }

@@ -10,7 +10,7 @@
 
 use crate::config::GpuConfig;
 use crate::isa::Instruction;
-use crate::sim::collector::{AllocResult, Collector};
+use crate::sim::collector::{AllocResult, CollectorArray};
 use crate::sim::exec::WbEvent;
 use crate::sim::warp::WarpState;
 
@@ -43,15 +43,16 @@ impl CachePolicy for MalekehPolicy {
         order: &mut Vec<u8>,
         greedy: Option<u8>,
         warps: &[WarpState],
-        collectors: &[Collector],
+        collectors: &CollectorArray,
     ) {
         let n = warps.len() as u8;
         for w in 0..n {
             if Some(w) == greedy {
                 continue;
             }
-            let owns = collectors.iter().any(|c| c.owner == Some(w) && c.ct.has_values());
-            if owns {
+            // bitmask walk over value-holding units + one owner-byte read
+            // each — no cold CacheTable access on this scan
+            if collectors.warp_owns_values(w) {
                 order.push(w);
             }
         }
@@ -67,28 +68,31 @@ impl CachePolicy for MalekehPolicy {
     /// follow the paper's flow chart.
     fn select_collector(&mut self, ctx: &mut PolicyCtx, warp: u8) -> CollectorChoice {
         // a warp can own at most one CCU (coherence-free invariant)
-        if let Some(ci) = ctx.collectors.iter().position(|c| c.owner == Some(warp)) {
-            return if ctx.collectors[ci].occupied {
+        if let Some(ci) = ctx.collectors.position_owned_by(warp) {
+            return if ctx.collectors.occupied(ci) {
                 CollectorChoice::SkipWarp // box 4: no other CCU may be allocated
             } else {
                 CollectorChoice::Unit(ci) // box 3: reuse the owned unit
             };
         }
         // reservoir-sample the free and the far/empty-free sets in one
-        // pass (no allocation on the hot path)
+        // pass over the packed free bitmask (ascending bit order = the old
+        // per-struct scan order, so the interleaved draw sequence — one
+        // free draw, then conditionally one far draw, per unit — is
+        // unchanged; no allocation on the hot path)
         let mut nfree = 0usize;
         let mut free_pick = None;
         let mut nfar = 0usize;
         let mut far_pick = None;
-        for (i, c) in ctx.collectors.iter().enumerate() {
-            if c.occupied {
-                continue;
-            }
+        let mut free = ctx.collectors.free_mask();
+        while free != 0 {
+            let i = free.trailing_zeros() as usize;
+            free &= free - 1;
             nfree += 1;
             if ctx.rng.below(nfree) == 0 {
                 free_pick = Some(i);
             }
-            if !c.ct.has_near_value() {
+            if !ctx.collectors.has_near_value(i) {
                 nfar += 1;
                 if ctx.rng.below(nfar) == 0 {
                     far_pick = Some(i);

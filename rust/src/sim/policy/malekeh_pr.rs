@@ -33,7 +33,7 @@ impl CachePolicy for MalekehPrPolicy {
 
     fn select_collector(&mut self, ctx: &mut PolicyCtx, warp: u8) -> CollectorChoice {
         let ci = warp as usize % ctx.collectors.len();
-        if ctx.collectors[ci].occupied {
+        if ctx.collectors.occupied(ci) {
             CollectorChoice::SkipWarp // private unit busy: this warp cannot issue
         } else {
             CollectorChoice::Unit(ci)

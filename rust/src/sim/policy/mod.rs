@@ -19,6 +19,7 @@
 //! | replacement / victim choice (§IV-A1) | the [`VictimFn`] each policy passes to [`CacheTable::allocate`] |
 //! | writeback capture + write filter (§IV-A2) | [`CachePolicy::capture_writeback`] |
 //! | two-level swap-out (§VI-A) | [`CachePolicy::should_swap_out`] |
+//! | quiescent fast-forward horizon (simulator perf, not paper) | [`CachePolicy::quiescent_horizon`] |
 //!
 //! # Adding a scheme
 //!
@@ -88,7 +89,7 @@ use crate::config::GpuConfig;
 use crate::energy::EventKind;
 use crate::isa::Instruction;
 use crate::sim::collector::{
-    plain_lru_victim, reuse_guided_victim, AllocResult, CacheTable, Collector, VictimFn,
+    plain_lru_victim, reuse_guided_victim, AllocResult, CacheTable, CollectorArray, VictimFn,
 };
 use crate::sim::exec::WbEvent;
 use crate::sim::warp::WarpState;
@@ -99,8 +100,11 @@ use crate::util::Rng;
 /// fresh at each hook call from disjoint sub-core fields, so policies can
 /// combine collector mutation, RNG draws, and counter bumps in one call.
 pub struct PolicyCtx<'a> {
-    /// Collector units (2 shared, or one per warp for private schemes).
-    pub collectors: &'a mut [Collector],
+    /// The collector bank in SoA layout (2 shared units, or one per warp
+    /// for private schemes). Policies scan its hot arrays/bitmasks
+    /// (`free_mask`, `ready_mask`, `owner`, value mirrors) without
+    /// touching the cold `CacheTable`/window payloads.
+    pub collectors: &'a mut CollectorArray,
     /// RFC per-warp cache tables (empty unless the policy is two-level).
     pub rfc: &'a mut [CacheTable],
     /// Warp state, indexed by local warp id.
@@ -162,7 +166,7 @@ pub trait CachePolicy: Send {
         order: &mut Vec<u8>,
         greedy: Option<u8>,
         warps: &[WarpState],
-        _collectors: &[Collector],
+        _collectors: &CollectorArray,
     ) {
         for w in 0..warps.len() as u8 {
             if Some(w) != greedy {
@@ -205,10 +209,11 @@ pub trait CachePolicy: Send {
         port_free: bool,
     ) -> bool;
 
-    /// A bank-fetched operand arrived over port S. Default: mark the slot
-    /// ready; window-tracking policies (BOW) also record the value.
-    fn operand_arrived(&mut self, collector: &mut Collector, slot: u8, reg: u8) {
-        collector.bank_operand_arrived(slot, reg, false);
+    /// A bank-fetched operand arrived over port S for collector `ci`.
+    /// Default: mark the slot ready; window-tracking policies (BOW) also
+    /// record the value.
+    fn operand_arrived(&mut self, collectors: &mut CollectorArray, ci: usize, slot: u8, reg: u8) {
+        collectors.bank_operand_arrived(ci, slot, reg, false);
     }
 
     /// Two-level scheduler: should this *stalled* active warp be swapped
@@ -221,28 +226,51 @@ pub trait CachePolicy: Send {
     fn activation_delay(&self) -> u64 {
         4
     }
+
+    /// Does this scheme keep a per-collector sliding window (BOW)? The
+    /// sub-core allocates the window side-table only when true, so the
+    /// other schemes carry no per-unit `VecDeque` at all.
+    fn uses_window(&self) -> bool {
+        false
+    }
+
+    /// Earliest future cycle at which this policy's *time-dependent* state
+    /// could change an issue decision while every warp is stall-ready and
+    /// the policy was not consulted (see `SubCore::next_wakeup`). The
+    /// quiescent fast-forward never skips past this horizon. Policies
+    /// whose gates depend on time (activation delays, idle timeouts)
+    /// override it; the default of `now` means "never skip", which is
+    /// always safe — including for external registry policies that predate
+    /// this hook.
+    fn quiescent_horizon(&self, _warps: &[WarpState], now: u64) -> u64 {
+        now
+    }
 }
 
 // --------------------------------------------------------- shared helpers
 
 /// Reservoir-sample a free collector unit — the baseline OCU allocator's
 /// uniform pick, one RNG draw per free unit, no allocation on the hot path.
-pub fn free_unit_reservoir(collectors: &[Collector], rng: &mut Rng) -> Option<usize> {
+/// Iterates the packed free bitmask (ascending bit order = ascending unit
+/// index, the same candidate sequence as the old per-struct scan, so the
+/// RNG draw stream is unchanged).
+pub fn free_unit_reservoir(collectors: &CollectorArray, rng: &mut Rng) -> Option<usize> {
     let mut seen = 0usize;
     let mut pick = None;
-    for (i, c) in collectors.iter().enumerate() {
-        if !c.occupied {
-            seen += 1;
-            if rng.below(seen) == 0 {
-                pick = Some(i);
-            }
+    let mut free = collectors.free_mask();
+    while free != 0 {
+        let i = free.trailing_zeros() as usize;
+        free &= free - 1;
+        seen += 1;
+        if rng.below(seen) == 0 {
+            pick = Some(i);
         }
     }
     pick
 }
 
-/// CCU-family allocation: delegate to [`Collector::alloc_ccu`] with the
-/// policy's victim chooser.
+/// CCU-family allocation: delegate to [`CollectorArray::alloc_ccu`] with
+/// the policy's victim chooser.
 pub fn ccu_allocate(
     ctx: &mut PolicyCtx,
     ci: usize,
@@ -251,7 +279,7 @@ pub fn ccu_allocate(
     now: u64,
     victim: VictimFn,
 ) -> AllocResult {
-    ctx.collectors[ci].alloc_ccu(warp, instr, now, ctx.rng, victim)
+    ctx.collectors.alloc_ccu(ci, warp, instr, now, ctx.rng, victim)
 }
 
 /// CCU-family writeback capture: one write port per CCU (§IV-A2) — the
@@ -269,7 +297,7 @@ pub fn ccu_capture(
     let ci = ev.collector as usize;
     if port_free && ci < ctx.collectors.len() {
         ctx.stats.energy.add(EventKind::OctOp, 1);
-        ctx.collectors[ci].ccu_writeback(ev.warp, reg, near, ctx.rng, victim, no_write_filter)
+        ctx.collectors.ccu_writeback(ci, ev.warp, reg, near, ctx.rng, victim, no_write_filter)
     } else {
         false
     }
@@ -342,15 +370,19 @@ mod tests {
 
     #[test]
     fn free_unit_reservoir_is_uniform_and_deterministic() {
-        let mut cols: Vec<Collector> = (0..4).map(|_| Collector::new(8)).collect();
-        cols[1].occupied = true;
+        use crate::isa::OpClass;
+        let mut cols = CollectorArray::new(4, 8);
+        let i = Instruction::new(OpClass::Alu, &[1], &[2]);
+        cols.alloc_ocu(1, 0, &i, 0); // occupy unit 1
         let mut a = Rng::new(9);
         let mut b = Rng::new(9);
         let pa = free_unit_reservoir(&cols, &mut a);
         let pb = free_unit_reservoir(&cols, &mut b);
         assert_eq!(pa, pb, "same seed, same pick");
         assert!(matches!(pa, Some(0 | 2 | 3)), "occupied unit never picked");
-        cols.iter_mut().for_each(|c| c.occupied = true);
+        for ci in [0usize, 2, 3] {
+            cols.alloc_ocu(ci, 0, &i, 0);
+        }
         assert_eq!(free_unit_reservoir(&cols, &mut a), None);
     }
 
@@ -384,7 +416,7 @@ mod tests {
         }
         let warps: Vec<WarpState> = (0..4).map(|i| WarpState::new(i)).collect();
         let mut order = vec![2u8]; // greedy already pushed by the sub-core
-        P.build_order(&mut order, Some(2), &warps, &[]);
+        P.build_order(&mut order, Some(2), &warps, &CollectorArray::new(0, 8));
         assert_eq!(order, vec![2, 0, 1, 3]);
     }
 }

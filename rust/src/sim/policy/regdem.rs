@@ -102,11 +102,11 @@ impl CachePolicy for RegdemPolicy {
         instr: &Instruction,
         now: u64,
     ) -> AllocResult {
-        let mut res = ctx.collectors[ci].alloc_ocu(warp, instr, now);
+        let mut res = ctx.collectors.alloc_ocu(ci, warp, instr, now);
         // demoted sources never reach the RF banks: deliver them through
         // the spill path (the penalty was already paid in selection) and
         // charge the shared-memory traffic to the energy model
-        let col = &mut ctx.collectors[ci];
+        let col = &mut *ctx.collectors;
         let spill = &mut self.spill;
         let cutoff = self.cutoff;
         let energy = &mut ctx.stats.energy;
@@ -114,7 +114,7 @@ impl CachePolicy for RegdemPolicy {
         res.misses.retain(|slot, reg| {
             if reg >= cutoff {
                 spill.spill_read(energy);
-                col.deliver(slot);
+                col.deliver(ci, slot);
                 spilled += 1;
                 false
             } else {

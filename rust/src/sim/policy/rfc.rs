@@ -50,17 +50,17 @@ impl CachePolicy for RfcPolicy {
         instr: &Instruction,
         now: u64,
     ) -> AllocResult {
-        let mut res = ctx.collectors[ci].alloc_ocu(warp, instr, now);
+        let mut res = ctx.collectors.alloc_ocu(ci, warp, instr, now);
         if ctx.warps[warp as usize].active {
             // filter cache hits out of the miss list in place (the list is
             // inline fixed-capacity storage — no per-instruction Vec)
             let cache = &mut ctx.rfc[warp as usize];
-            let col = &mut ctx.collectors[ci];
+            let col = &mut *ctx.collectors;
             let mut hits = 0u32;
             res.misses.retain(|slot, reg| {
                 if let Some(i) = cache.lookup(reg) {
                     cache.touch(i);
-                    col.deliver(slot);
+                    col.deliver(ci, slot);
                     hits += 1;
                     false
                 } else {
@@ -93,5 +93,22 @@ impl CachePolicy for RfcPolicy {
     /// Deactivate only on long-latency (load) stalls (§VI-A).
     fn should_swap_out(&self, warp: &WarpState, instr: &Instruction, _now: u64) -> bool {
         warp.blocked_on_load(instr)
+    }
+
+    /// The only time-dependent gate is the activation delay: a quiescent
+    /// sub-core may fast-forward until the next pending activation opens
+    /// its issue gate (swap-out is load-blocked, i.e. time-independent).
+    fn quiescent_horizon(&self, warps: &[WarpState], now: u64) -> u64 {
+        let mut h = u64::MAX;
+        for w in warps {
+            if !w.active || w.done {
+                continue;
+            }
+            let gate = w.active_since + self.activation_delay();
+            if gate > now {
+                h = h.min(gate);
+            }
+        }
+        h
     }
 }

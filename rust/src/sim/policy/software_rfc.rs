@@ -12,6 +12,10 @@ use crate::sim::warp::WarpState;
 
 use super::{free_unit_reservoir, CachePolicy, CollectorChoice, PolicyCtx};
 
+/// Cycles a mid-strand warp may sit stalled before the strand timeout
+/// releases it (§VI-A; also bounds the quiescent fast-forward horizon).
+const STRAND_TIMEOUT: u64 = 64;
+
 /// Compiler-managed RFC + two-level scheduler with strands.
 pub struct SoftwareRfcPolicy {
     entries: usize,
@@ -55,12 +59,12 @@ impl CachePolicy for SoftwareRfcPolicy {
         instr: &Instruction,
         now: u64,
     ) -> AllocResult {
-        let mut res = ctx.collectors[ci].alloc_ocu(warp, instr, now);
+        let mut res = ctx.collectors.alloc_ocu(ci, warp, instr, now);
         if ctx.warps[warp as usize].active {
             // filter cache hits out of the miss list in place (the list is
             // inline fixed-capacity storage — no per-instruction Vec)
             let cache = &mut ctx.rfc[warp as usize];
-            let col = &mut ctx.collectors[ci];
+            let col = &mut *ctx.collectors;
             let mut hits = 0u32;
             res.misses.retain(|slot, reg| {
                 // compiler-managed: only near-marked operands can live in
@@ -69,7 +73,7 @@ impl CachePolicy for SoftwareRfcPolicy {
                 let hit = if allowed { cache.lookup(reg) } else { None };
                 if let Some(i) = hit {
                     cache.touch(i);
-                    col.deliver(slot);
+                    col.deliver(ci, slot);
                     hits += 1;
                     false
                 } else {
@@ -104,6 +108,29 @@ impl CachePolicy for SoftwareRfcPolicy {
     /// timeout) — short ALU-dependence stalls keep it resident and idle,
     /// the state-2 cost of Fig 10.
     fn should_swap_out(&self, warp: &WarpState, _instr: &Instruction, now: u64) -> bool {
-        warp.strand_pos >= self.strand_len || now.saturating_sub(warp.last_issue) > 64
+        warp.strand_pos >= self.strand_len
+            || now.saturating_sub(warp.last_issue) > STRAND_TIMEOUT
+    }
+
+    /// Time-dependent gates: pending activations open the issue gate, and
+    /// the strand timeout makes a resident stalled warp swappable at
+    /// `last_issue + STRAND_TIMEOUT + 1` — fast-forward up to whichever
+    /// boundary comes first.
+    fn quiescent_horizon(&self, warps: &[WarpState], now: u64) -> u64 {
+        let mut h = u64::MAX;
+        for w in warps {
+            if !w.active || w.done {
+                continue;
+            }
+            let gate = w.active_since + self.activation_delay();
+            if gate > now {
+                h = h.min(gate);
+            }
+            let timeout = w.last_issue + STRAND_TIMEOUT + 1;
+            if timeout > now {
+                h = h.min(timeout);
+            }
+        }
+        h
     }
 }

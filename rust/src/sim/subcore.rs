@@ -25,8 +25,8 @@ use std::sync::Arc;
 use crate::config::{GpuConfig, SthldMode};
 use crate::energy::EventKind;
 use crate::isa::{Instruction, OpClass};
-use crate::sim::collector::{CacheTable, Collector, MAX_CT};
-use crate::sim::exec::{pipe_of, ExecUnits, Pipe, WbEvent, NPIPES};
+use crate::sim::collector::{CacheTable, CollectorArray, MAX_CT};
+use crate::sim::exec::{DispatchReq, ExecUnits, Pipe, WbEvent, NPIPES};
 use crate::sim::memory::{L1Cache, L1Fetch, MemPort};
 use crate::sim::policy::{CachePolicy, CollectorChoice, PolicyCtx};
 use crate::sim::regfile::{Grant, ReadReq, RegFileBanks, WriteReq};
@@ -63,8 +63,10 @@ pub struct SubCore {
     /// Warp state, indexed by local warp id.
     pub warps: Vec<WarpState>,
     streams: Vec<Arc<Vec<Instruction>>>,
-    /// Collector units (2 shared, or one per warp for private schemes).
-    pub collectors: Vec<Collector>,
+    /// Collector bank in SoA layout (2 shared units, or one per warp for
+    /// private schemes): hot scheduling scalars in flat arrays + packed
+    /// occupancy/ready bitmasks, cold payloads in a side-table.
+    pub collectors: CollectorArray,
     /// RFC per-warp caches (empty unless the policy is two-level).
     rfc: Vec<CacheTable>,
     banks: RegFileBanks,
@@ -81,6 +83,15 @@ pub struct SubCore {
 
     /// Scheduler state of the most recent cycle (fast-forward guard).
     pub last_state: SchedState,
+    /// Did the most recent `issue` pass consult the policy's
+    /// `select_collector`? A consulted policy may have mutated private
+    /// state (wait counters, reservoirs), so a StallReady cycle that
+    /// consulted can never be fast-forwarded.
+    policy_consulted: bool,
+    /// Did the most recent `update_active_set` change any warp's active
+    /// flag? A changing active set has not reached its fixed point, so
+    /// the next cycles are not repeats of this one.
+    active_set_changed: bool,
     /// Local counters, merged by the SM at the end of the run.
     pub stats: Stats,
     /// Live (not yet exited) warps.
@@ -93,6 +104,7 @@ pub struct SubCore {
     port_used: Vec<u8>,
     grant_buf: Vec<Grant>,
     rfc_flush_buf: Vec<u8>,
+    dispatch_buf: Vec<DispatchReq>,
 }
 
 impl SubCore {
@@ -117,20 +129,29 @@ impl SubCore {
             SthldMode::Static(v) => v,
             SthldMode::Dynamic => 0,
         };
+        // the policy is built before the collector bank: only window-based
+        // schemes (BOW) pay for the per-unit instruction windows
+        let policy = cfg.scheme.build_policy(cfg);
+        let mut collectors = CollectorArray::new(ncol, cfg.ct_entries);
+        if policy.uses_window() {
+            collectors.enable_windows();
+        }
         SubCore {
-            policy: cfg.scheme.build_policy(cfg),
+            policy,
             two_level,
             collector_ports: cfg.collector_ports.max(1) as u8,
             live_warps: nwarps,
             warps,
             streams,
-            collectors: (0..ncol).map(|_| Collector::new(cfg.ct_entries)).collect(),
+            collectors,
             rfc,
             banks: RegFileBanks::new(cfg.banks_per_sub_core),
             eu: ExecUnits::new(cfg),
             rng: Rng::new(seed),
             last_issued: None,
             last_state: SchedState::StallEmpty,
+            policy_consulted: true,
+            active_set_changed: false,
             swap_cursor: 0,
             wait_counter: 0,
             sthld,
@@ -140,6 +161,7 @@ impl SubCore {
             port_used: vec![0u8; ncol],
             grant_buf: Vec::with_capacity(8),
             rfc_flush_buf: Vec::with_capacity(MAX_CT),
+            dispatch_buf: Vec::with_capacity(NPIPES),
         }
     }
 
@@ -149,7 +171,7 @@ impl SubCore {
             && !self.eu.busy()
             && self.banks.pending_reads() == 0
             && self.banks.pending_writes() == 0
-            && self.collectors.iter().all(|c| !c.occupied)
+            && self.collectors.occ_mask() == 0
     }
 
     /// One cycle. L2-bound loads queue on `port` and defer their dispatch
@@ -224,29 +246,51 @@ impl SubCore {
     // ------------------------------------------------------------- dispatch
 
     fn dispatch(&mut self, now: u64, l1: &mut L1Cache, port: &mut MemPort) {
-        // per pipe, oldest ready collector first
-        for pipe_idx in 0..NPIPES {
-            let pipe = match pipe_idx {
+        // per pipe, oldest ready collector first. A pipe's dispatch only
+        // advances that pipe's own accept cursor and never changes another
+        // pipe's candidate set (a collector's pipe class is fixed by its
+        // opcode), so acceptance can be hoisted, the four per-pipe scans
+        // fused into ONE pass over the ready bitmask, and the picks pushed
+        // through the EU in a single batched call.
+        let rdy = self.collectors.ready_mask();
+        if rdy == 0 {
+            return;
+        }
+        let mut accept = [false; NPIPES];
+        for (p, a) in accept.iter_mut().enumerate() {
+            let pipe = match p {
                 0 => Pipe::Alu,
                 1 => Pipe::Sfu,
                 2 => Pipe::Mma,
                 _ => Pipe::Lsu,
             };
-            if !self.eu.can_accept(pipe, now) {
+            *a = self.eu.can_accept(pipe, now);
+        }
+        // fused scan: ascending collector index, strict `<` on issue_cycle
+        // — the same oldest-first / lowest-index tie-break the per-pipe
+        // scans produced
+        let mut best: [Option<(usize, u64)>; NPIPES] = [None; NPIPES];
+        let mut m = rdy;
+        while m != 0 {
+            let ci = m.trailing_zeros() as usize;
+            m &= m - 1;
+            let p = self.collectors.pipe_code(ci) as usize;
+            if p >= NPIPES || !accept[p] {
                 continue;
             }
-            let mut best: Option<(usize, u64)> = None;
-            for (i, c) in self.collectors.iter().enumerate() {
-                if c.ready() && pipe_of(c.instr.op) == Some(pipe) {
-                    if best.map_or(true, |(_, t)| c.issue_cycle < t) {
-                        best = Some((i, c.issue_cycle));
-                    }
-                }
+            let t = self.collectors.issue_cycle(ci);
+            if best[p].map_or(true, |(_, bt)| t < bt) {
+                best[p] = Some((ci, t));
             }
-            let Some((ci, _)) = best else { continue };
-            let instr = self.collectors[ci].instr;
-            let warp = self.collectors[ci]
-                .owner
+        }
+        let mut reqs = std::mem::take(&mut self.dispatch_buf);
+        reqs.clear();
+        for slot in best.iter() {
+            let Some((ci, _)) = *slot else { continue };
+            let instr = *self.collectors.instr(ci);
+            let warp = self
+                .collectors
+                .owner(ci)
                 .expect("occupied collector has an owner");
             let mem_done = match instr.op {
                 OpClass::LdGlobal => {
@@ -268,11 +312,20 @@ impl SubCore {
                 OpClass::StGlobal => l1.store(instr.line_addr as u64, now),
                 _ => 0,
             };
-            let seq = self.collectors[ci].cur_seq;
-            let caching = self.policy.caching();
-            self.eu.dispatch(&instr, warp, ci as u8, seq, now, mem_done);
-            self.collectors[ci].dispatched(caching);
+            reqs.push(DispatchReq {
+                instr,
+                warp,
+                collector: ci as u8,
+                boc_seq: self.collectors.cur_seq(ci),
+                mem_done,
+            });
         }
+        self.eu.dispatch_batch(&reqs, now);
+        let caching = self.policy.caching();
+        for r in &reqs {
+            self.collectors.dispatched(r.collector as usize, caching);
+        }
+        self.dispatch_buf = reqs;
     }
 
     // --------------------------------------------------- operand collection
@@ -289,7 +342,7 @@ impl SubCore {
         for g in &self.grant_buf {
             let r = g.req;
             self.policy
-                .operand_arrived(&mut self.collectors[r.collector as usize], r.slot, r.reg);
+                .operand_arrived(&mut self.collectors, r.collector as usize, r.slot, r.reg);
             self.stats.rf_bank_reads += 1;
             self.stats.bank_conflict_wait += g.waited;
             self.stats.energy.add(EventKind::BankRead, 1);
@@ -368,6 +421,7 @@ impl SubCore {
                 .find(|&p| !self.warps[p].active && !self.warps[p].done);
             if let Some(p) = repl {
                 self.swap_cursor = p;
+                self.active_set_changed = true;
                 self.warps[w].active = false;
                 if !self.rfc.is_empty() {
                     // RFC is write-back (energy is its whole point): on
@@ -387,12 +441,15 @@ impl SubCore {
                 self.warps[p].active_since = now;
                 self.warps[p].strand_pos = 0;
             } else if done {
+                self.active_set_changed = true;
                 self.warps[w].active = false;
             }
         }
     }
 
     fn issue(&mut self, now: u64) {
+        self.policy_consulted = false;
+        self.active_set_changed = false;
         self.update_active_set(now);
         self.build_order();
         let order = std::mem::take(&mut self.order_buf);
@@ -435,6 +492,7 @@ impl SubCore {
             }
 
             // collector selection (and issue gating) per policy
+            self.policy_consulted = true;
             let choice = self.policy.select_collector(&mut policy_ctx!(self), w);
             let ci = match choice {
                 CollectorChoice::Unit(ci) => ci,
@@ -499,19 +557,44 @@ impl SubCore {
         self.last_state = state;
     }
 
-    /// Fast-forward probe: if nothing can happen before the next writeback
-    /// event, return that event's cycle. `None` = must simulate
-    /// cycle-by-cycle (work is queued or a warp is ready).
-    pub fn next_wakeup(&self) -> Option<u64> {
-        if self.last_state != SchedState::StallEmpty {
-            return None; // a warp was ready (or waiting-stalled)
+    /// Fast-forward probe: if nothing can happen before the next event
+    /// cycle, return that cycle. `None` = must simulate cycle-by-cycle
+    /// (work is queued, a warp issued, or the next cycle is not a repeat
+    /// of this one).
+    ///
+    /// Two quiescent shapes fast-forward:
+    /// - **StallEmpty** (no warp ready): the EU event heap is the only
+    ///   future driver — skip to its next event.
+    /// - **StallReady** (ready warps, none can issue): only safe when the
+    ///   policy was *not* consulted this cycle (a gated two-level stall —
+    ///   consulting could mutate policy-private state) and the active set
+    ///   reached its fixed point. Then the cycle repeats verbatim until an
+    ///   EU writeback lands or a policy time gate (activation delay, idle
+    ///   timeout) opens — [`CachePolicy::quiescent_horizon`] bounds the
+    ///   skip; its conservative default (`now`) disables it per policy.
+    ///
+    /// Both shapes additionally require idle banks and an empty ready
+    /// bitmask, so writeback/dispatch/collection phases are provably
+    /// no-ops across the skipped range.
+    pub fn next_wakeup(&self, now: u64) -> Option<u64> {
+        if self.last_state == SchedState::Issued {
+            return None; // the machine is making progress
         }
         if self.banks.pending_reads() > 0 || self.banks.pending_writes() > 0 {
             return None; // bank traffic drains next cycle
         }
-        if self.collectors.iter().any(|c| c.ready()) {
+        if self.collectors.ready_mask() != 0 {
             return None; // a dispatch is pending
         }
+        if self.last_state == SchedState::StallReady {
+            if self.policy_consulted || self.active_set_changed {
+                return None;
+            }
+            let horizon = self.policy.quiescent_horizon(&self.warps, now);
+            let wake = self.eu.next_event_cycle().unwrap_or(u64::MAX).min(horizon);
+            return if wake == u64::MAX { None } else { Some(wake) };
+        }
+        // StallEmpty
         if self.live_warps == 0 && !self.eu.busy() {
             return Some(u64::MAX); // fully drained
         }
@@ -519,10 +602,15 @@ impl SubCore {
         self.eu.next_event_cycle()
     }
 
-    /// Account `n` skipped all-stall cycles (fast-forward bookkeeping must
-    /// match what `step` would have recorded).
+    /// Account `n` skipped quiescent cycles (fast-forward bookkeeping must
+    /// match what `step` would have recorded: the scheduler state repeats,
+    /// so the skipped cycles replay `last_state`).
     pub fn bulk_stall(&mut self, n: u64) {
-        self.stats.sched_stall_empty += n;
+        if self.last_state == SchedState::StallReady {
+            self.stats.sched_stall_ready += n;
+        } else {
+            self.stats.sched_stall_empty += n;
+        }
         self.stats
             .energy
             .add(EventKind::LeakProxy, n * self.collectors.len() as u64);

@@ -1,0 +1,428 @@
+//! Randomized lockstep equivalence of the SoA hot path against the AoS
+//! reference.
+//!
+//! [`CollectorArray`] (flat arrays + packed bitmasks, the simulator's hot
+//! path) and the retained [`Collector`] struct (the obviously-correct
+//! array-of-structs form) are driven through identical randomized
+//! operation streams with twin same-seeded RNGs. After every operation the
+//! complete observable state must match — per-unit flags, the packed
+//! ready/occupancy masks against a per-unit recompute, the value-bit
+//! mirrors against the cache tables — and the scan helpers
+//! (`free_unit_reservoir`, the Malekeh dual reservoir, the owns-values
+//! priority order) must match the AoS per-struct scans **draw-for-draw**:
+//! same picks AND same number of RNG draws, verified by comparing the next
+//! raw output of both streams.
+//!
+//! Over 550 seeded runs (OCU, CCU, CCU-with-admission, and BOW-window
+//! variants) this pins the bit-identity contract the SoA rework rests on.
+
+use malekeh::isa::{Instruction, OpClass};
+use malekeh::sim::collector::{
+    plain_lru_victim, reuse_guided_victim, AllocResult, Collector, CollectorArray,
+};
+use malekeh::sim::policy::free_unit_reservoir;
+use malekeh::util::Rng;
+
+const CT_ENTRIES: usize = 8;
+const BOW_WINDOW: usize = 4;
+const NREGS: u8 = 16; // small register space => frequent hits/evictions
+const NWARPS: u8 = 6;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Ocu,
+    Ccu,
+    CcuAdmit,
+    Boc,
+}
+
+/// Random instruction over a small register window; near bits are set
+/// randomly in CCU modes so the near/far paths (write filter, far
+/// reservoir, victim choice) are all exercised.
+fn rand_instr(d: &mut Rng, near_bits: bool) -> Instruction {
+    let ops = [
+        OpClass::Alu,
+        OpClass::Sfu,
+        OpClass::Mma,
+        OpClass::LdGlobal,
+        OpClass::StGlobal,
+        OpClass::LdShared,
+    ];
+    let op = ops[d.below(ops.len())];
+    let nsrc = 1 + d.below(3);
+    let srcs: Vec<u8> = (0..nsrc).map(|_| d.below(NREGS as usize) as u8).collect();
+    let dsts: Vec<u8> = if d.below(4) == 0 {
+        Vec::new()
+    } else {
+        vec![d.below(NREGS as usize) as u8]
+    };
+    let mut i = Instruction::new(op, &srcs, &dsts);
+    if near_bits {
+        for s in 0..nsrc {
+            if d.below(2) == 0 {
+                i.set_src_near(s, true);
+            }
+        }
+    }
+    i
+}
+
+/// AoS reference of `free_unit_reservoir`: the old per-struct scan.
+fn free_unit_reservoir_aos(cols: &[Collector], rng: &mut Rng) -> Option<usize> {
+    let mut seen = 0usize;
+    let mut pick = None;
+    for (i, c) in cols.iter().enumerate() {
+        if c.occupied {
+            continue;
+        }
+        seen += 1;
+        if rng.below(seen) == 0 {
+            pick = Some(i);
+        }
+    }
+    pick
+}
+
+/// AoS reference of the Malekeh dual reservoir (§IV-B2): per free unit in
+/// ascending order, one `free` draw always, then one `far` draw iff the
+/// unit holds no near value — the exact interleaving the SoA bitmask loop
+/// must reproduce.
+fn dual_reservoir_aos(cols: &[Collector], rng: &mut Rng) -> (Option<usize>, Option<usize>) {
+    let mut nfree = 0usize;
+    let mut free_pick = None;
+    let mut nfar = 0usize;
+    let mut far_pick = None;
+    for (i, c) in cols.iter().enumerate() {
+        if c.occupied {
+            continue;
+        }
+        nfree += 1;
+        if rng.below(nfree) == 0 {
+            free_pick = Some(i);
+        }
+        if !c.ct.has_near_value() {
+            nfar += 1;
+            if rng.below(nfar) == 0 {
+                far_pick = Some(i);
+            }
+        }
+    }
+    (free_pick, far_pick)
+}
+
+/// SoA port of the dual reservoir, written the way `MalekehPolicy`
+/// iterates the packed free bitmask.
+fn dual_reservoir_soa(arr: &CollectorArray, rng: &mut Rng) -> (Option<usize>, Option<usize>) {
+    let mut nfree = 0usize;
+    let mut free_pick = None;
+    let mut nfar = 0usize;
+    let mut far_pick = None;
+    let mut free = arr.free_mask();
+    while free != 0 {
+        let i = free.trailing_zeros() as usize;
+        free &= free - 1;
+        nfree += 1;
+        if rng.below(nfree) == 0 {
+            free_pick = Some(i);
+        }
+        if !arr.has_near_value(i) {
+            nfar += 1;
+            if rng.below(nfar) == 0 {
+                far_pick = Some(i);
+            }
+        }
+    }
+    (free_pick, far_pick)
+}
+
+/// AoS reference of `CollectorArray::warp_owns_values`.
+fn warp_owns_values_aos(cols: &[Collector], w: u8) -> bool {
+    cols.iter().any(|c| c.ct.has_values() && c.owner == Some(w))
+}
+
+fn assert_alloc_eq(a: &AllocResult, b: &AllocResult, seed: u64, step: usize) {
+    assert_eq!(a.hits, b.hits, "hits: seed {seed} step {step}");
+    assert_eq!(a.wb_reuse, b.wb_reuse, "wb_reuse: seed {seed} step {step}");
+    assert_eq!(a.flushed, b.flushed, "flushed: seed {seed} step {step}");
+    assert_eq!(
+        a.misses.as_slice(),
+        b.misses.as_slice(),
+        "miss list: seed {seed} step {step}"
+    );
+}
+
+/// Full observable-state comparison after each operation.
+fn assert_state_eq(cols: &[Collector], arr: &CollectorArray, seed: u64, step: usize) {
+    assert_eq!(cols.len(), arr.len());
+    let mut occ = 0u64;
+    let mut rdy = 0u64;
+    for (ci, c) in cols.iter().enumerate() {
+        let tag = format!("seed {seed} step {step} unit {ci}");
+        assert_eq!(c.occupied, arr.occupied(ci), "occupied: {tag}");
+        assert_eq!(c.ready(), arr.ready(ci), "ready: {tag}");
+        assert_eq!(c.owner, arr.owner(ci), "owner: {tag}");
+        if c.occupied {
+            assert_eq!(c.instr, *arr.instr(ci), "instr: {tag}");
+            assert_eq!(c.issue_cycle, arr.issue_cycle(ci), "issue_cycle: {tag}");
+        }
+        assert_eq!(c.cur_seq, arr.cur_seq(ci), "cur_seq: {tag}");
+        // value-bit mirrors vs the reference tables
+        assert_eq!(c.ct.has_values(), arr.has_values(ci), "hasv mirror: {tag}");
+        assert_eq!(
+            c.ct.has_near_value(),
+            arr.has_near_value(ci),
+            "nearv mirror: {tag}"
+        );
+        // and the SoA cold table itself must track the reference table
+        assert_eq!(c.ct.valid_count(), arr.ct(ci).valid_count(), "valid_count: {tag}");
+        for reg in 0..NREGS {
+            assert_eq!(c.ct.lookup(reg), arr.ct(ci).lookup(reg), "lookup({reg}): {tag}");
+        }
+        if c.occupied {
+            occ |= 1 << ci;
+        }
+        if c.ready() {
+            rdy |= 1 << ci;
+        }
+    }
+    assert_eq!(occ, arr.occ_mask(), "occ mask: seed {seed} step {step}");
+    assert_eq!(rdy, arr.ready_mask(), "ready mask: seed {seed} step {step}");
+    assert_eq!(
+        !occ & ((1u64 << cols.len()) - 1),
+        arr.free_mask(),
+        "free mask: seed {seed} step {step}"
+    );
+
+    // scan helpers, draw-for-draw: same pick AND same draw count (the
+    // trailing next_u64 comparison fails if either side drew a different
+    // number of times)
+    let mut ra = Rng::new(seed ^ 0x5ca1ab1e ^ step as u64);
+    let mut rb = ra.clone();
+    assert_eq!(
+        free_unit_reservoir_aos(cols, &mut ra),
+        free_unit_reservoir(arr, &mut rb),
+        "reservoir pick: seed {seed} step {step}"
+    );
+    assert_eq!(ra.next_u64(), rb.next_u64(), "reservoir draws: seed {seed} step {step}");
+
+    let mut ra = Rng::new(seed ^ 0xdeadbea7 ^ step as u64);
+    let mut rb = ra.clone();
+    assert_eq!(
+        dual_reservoir_aos(cols, &mut ra),
+        dual_reservoir_soa(arr, &mut rb),
+        "dual reservoir: seed {seed} step {step}"
+    );
+    assert_eq!(ra.next_u64(), rb.next_u64(), "dual draws: seed {seed} step {step}");
+
+    // Malekeh §IV-B1 priority order from the bitmask walk vs the AoS scan
+    for w in 0..NWARPS {
+        assert_eq!(
+            warp_owns_values_aos(cols, w),
+            arr.warp_owns_values(w),
+            "owns-values: seed {seed} step {step} warp {w}"
+        );
+    }
+    for w in 0..NWARPS {
+        assert_eq!(
+            cols.iter().position(|c| c.owner == Some(w)),
+            arr.position_owned_by(w),
+            "position_owned_by: seed {seed} step {step} warp {w}"
+        );
+    }
+}
+
+/// Drive both layouts through one randomized operation stream.
+fn lockstep(seed: u64, mode: Mode, steps: usize) {
+    let mut driver = Rng::new(seed);
+    let nunits = 1 + driver.below(8);
+    let mut cols: Vec<Collector> = (0..nunits).map(|_| Collector::new(CT_ENTRIES)).collect();
+    let mut arr = CollectorArray::new(nunits, CT_ENTRIES);
+    if mode == Mode::Boc {
+        arr.enable_windows();
+    }
+    // twin op-RNG streams: every RNG-consuming operation draws from both
+    let mut rng_a = Rng::new(seed ^ 0xabcd_1234);
+    let mut rng_b = rng_a.clone();
+    let near_bits = matches!(mode, Mode::Ccu | Mode::CcuAdmit);
+
+    for step in 0..steps {
+        match driver.below(10) {
+            // ---- allocate on a random free unit
+            0..=3 => {
+                let Some(ci) = (0..nunits).find(|&i| !cols[i].occupied) else {
+                    continue;
+                };
+                let warp = driver.below(NWARPS as usize) as u8;
+                let instr = rand_instr(&mut driver, near_bits);
+                let now = step as u64;
+                let (ra, rb) = match mode {
+                    Mode::Ocu => (
+                        cols[ci].alloc_ocu(warp, &instr, now),
+                        arr.alloc_ocu(ci, warp, &instr, now),
+                    ),
+                    Mode::Ccu => (
+                        cols[ci].alloc_ccu(warp, &instr, now, &mut rng_a, &mut reuse_guided_victim),
+                        arr.alloc_ccu(ci, warp, &instr, now, &mut rng_b, &mut reuse_guided_victim),
+                    ),
+                    Mode::CcuAdmit => (
+                        cols[ci].alloc_ccu_admit(
+                            warp,
+                            &instr,
+                            now,
+                            &mut rng_a,
+                            &mut plain_lru_victim,
+                            &mut |_, reg| reg < NREGS / 2,
+                        ),
+                        arr.alloc_ccu_admit(
+                            ci,
+                            warp,
+                            &instr,
+                            now,
+                            &mut rng_b,
+                            &mut plain_lru_victim,
+                            &mut |_, reg| reg < NREGS / 2,
+                        ),
+                    ),
+                    Mode::Boc => (
+                        cols[ci].alloc_boc(warp, &instr, now, BOW_WINDOW),
+                        arr.alloc_boc(ci, warp, &instr, now, BOW_WINDOW),
+                    ),
+                };
+                assert_alloc_eq(&ra, &rb, seed, step);
+            }
+            // ---- a bank operand arrives for a pending source slot
+            4..=5 => {
+                let mut pending: Vec<(usize, u8)> = Vec::new();
+                for (i, c) in cols.iter().enumerate() {
+                    if !c.occupied || c.ready() {
+                        continue;
+                    }
+                    for s in 0..c.instr.nsrc {
+                        if c.src_ready & (1 << s) == 0 {
+                            pending.push((i, s));
+                        }
+                    }
+                }
+                if pending.is_empty() {
+                    continue;
+                }
+                let (ci, slot) = pending[driver.below(pending.len())];
+                let reg = cols[ci].instr.srcs[slot as usize];
+                let bow = mode == Mode::Boc;
+                cols[ci].bank_operand_arrived(slot, reg, bow);
+                arr.bank_operand_arrived(ci, slot, reg, bow);
+            }
+            // ---- dispatch a ready unit
+            6..=7 => {
+                let ready: Vec<usize> = (0..nunits).filter(|&i| cols[i].ready()).collect();
+                if ready.is_empty() {
+                    continue;
+                }
+                let ci = ready[driver.below(ready.len())];
+                let caching = matches!(mode, Mode::Ccu | Mode::CcuAdmit);
+                cols[ci].dispatched(caching);
+                arr.dispatched(ci, caching);
+            }
+            // ---- a writeback targets a random unit
+            8 => {
+                let ci = driver.below(nunits);
+                let reg = driver.below(NREGS as usize) as u8;
+                if mode == Mode::Boc {
+                    let seq = 1 + driver.below((cols[ci].cur_seq as usize).max(1)) as u64;
+                    assert_eq!(
+                        cols[ci].boc_writeback(seq, reg),
+                        arr.boc_writeback(ci, seq, reg),
+                        "boc_writeback: seed {seed} step {step}"
+                    );
+                } else {
+                    let warp = driver.below(NWARPS as usize) as u8;
+                    let near = driver.below(2) == 0;
+                    let no_filter = driver.below(4) == 0;
+                    assert_eq!(
+                        cols[ci].ccu_writeback(
+                            warp,
+                            reg,
+                            near,
+                            &mut rng_a,
+                            &mut reuse_guided_victim,
+                            no_filter,
+                        ),
+                        arr.ccu_writeback(
+                            ci,
+                            warp,
+                            reg,
+                            near,
+                            &mut rng_b,
+                            &mut reuse_guided_victim,
+                            no_filter,
+                        ),
+                        "ccu_writeback: seed {seed} step {step}"
+                    );
+                }
+            }
+            // ---- operand delivered over the collector port (policy hit)
+            _ => {
+                let occupied: Vec<usize> =
+                    (0..nunits).filter(|&i| cols[i].occupied && !cols[i].ready()).collect();
+                if occupied.is_empty() {
+                    continue;
+                }
+                let ci = occupied[driver.below(occupied.len())];
+                let c = &cols[ci];
+                let slots: Vec<u8> =
+                    (0..c.instr.nsrc).filter(|&s| c.src_ready & (1 << s) == 0).collect();
+                let slot = slots[driver.below(slots.len())];
+                cols[ci].deliver(slot);
+                arr.deliver(ci, slot);
+            }
+        }
+        assert_state_eq(&cols, &arr, seed, step);
+    }
+    // twin op-RNG streams consumed the same number of draws end to end
+    assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "op rng streams: seed {seed}");
+}
+
+#[test]
+fn ocu_lockstep_matches_aos() {
+    for seed in 0..150u64 {
+        lockstep(seed, Mode::Ocu, 60);
+    }
+}
+
+#[test]
+fn ccu_lockstep_matches_aos_draw_for_draw() {
+    for seed in 0..125u64 {
+        lockstep(seed, Mode::Ccu, 80);
+    }
+    for seed in 0..125u64 {
+        lockstep(1000 + seed, Mode::CcuAdmit, 80);
+    }
+}
+
+#[test]
+fn bow_window_lockstep_matches_aos() {
+    for seed in 0..150u64 {
+        lockstep(2000 + seed, Mode::Boc, 80);
+    }
+}
+
+#[test]
+fn empty_and_full_banks_are_degenerate_but_consistent() {
+    // 0 units: every mask empty, every scan returns nothing
+    let arr = CollectorArray::new(0, CT_ENTRIES);
+    assert!(arr.is_empty());
+    assert_eq!(arr.free_mask(), 0);
+    assert_eq!(arr.ready_mask(), 0);
+    let mut r = Rng::new(3);
+    assert_eq!(free_unit_reservoir(&arr, &mut r), None);
+    // full bank: reservoir returns None and draws nothing
+    let mut arr = CollectorArray::new(3, CT_ENTRIES);
+    let i = Instruction::new(OpClass::Alu, &[1], &[2]);
+    for ci in 0..3 {
+        arr.alloc_ocu(ci, ci as u8, &i, 0);
+    }
+    let mut ra = Rng::new(5);
+    let mut rb = ra.clone();
+    assert_eq!(free_unit_reservoir(&arr, &mut ra), None);
+    assert_eq!(ra.next_u64(), rb.next_u64(), "no draws on a full bank");
+}
