@@ -287,6 +287,7 @@ impl Runner {
             self.cache.lock().unwrap().insert(k, stats.clone());
             return stats;
         }
+        // simlint: allow(wallclock) reason="progress-log timing only; never enters Stats"
         let t0 = Instant::now();
         let stats = run_workload(&cfg, workload, self.opts.profile_warps)
             .unwrap_or_else(|e| panic!("[{name}] {e}"));

@@ -189,6 +189,7 @@ impl Runner {
                         break;
                     }
                     let p = todo[i];
+                    // simlint: allow(wallclock) reason="progress-log timing; never enters Stats"
                     let t0 = Instant::now();
                     // persistent store first (no-op without --store), then
                     // simulate-and-publish — same tiering as the serial path

@@ -37,13 +37,17 @@
 //! Both properties are enforced by `rust/tests/parallel_determinism.rs`
 //! and CI fingerprint diffs. Code in the parallel sections must therefore
 //! avoid wall-clock reads, thread identity, unordered float reduction,
-//! and iteration over unordered containers.
+//! and iteration over unordered containers. Those obligations are also
+//! checked *statically*: `malekeh lint` (the [`lint`] module) enforces
+//! them as six token-level rules over `rust/src` — see `docs/LINTS.md`
+//! for the catalog mapping each contract to the rule that pins it.
 pub mod cli;
 pub mod compiler;
 pub mod config;
 pub mod energy;
 pub mod harness;
 pub mod isa;
+pub mod lint;
 pub mod runtime;
 pub mod serve;
 pub mod sim;

@@ -1,0 +1,425 @@
+//! Comment- and string-aware Rust tokenizer for the simlint pass.
+//!
+//! Deliberately tiny and std-only: just enough lexical structure for
+//! identifier-exact pattern matching (`unwrap_or_else` never matches
+//! `unwrap`), directive extraction from plain `//` comments, the
+//! `#[cfg(test)]` region exemption, and fn-item segmentation with brace
+//! tracking. This is not a parser — the rules in [`super::rules`] match
+//! short token windows, and anything inside string/char literals or
+//! comments is invisible to them by construction.
+
+/// Lexical class of one token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword (`fn`, `match`, `unwrap`, ...).
+    Ident,
+    /// Numeric literal (value not kept — rules never need it).
+    Num,
+    /// String/byte-string literal, raw or not (contents dropped).
+    Str,
+    /// Character or byte literal.
+    Char,
+    /// Lifetime (`'a`) — kept distinct so it never looks like a char.
+    Lifetime,
+    /// Any single punctuation byte; multi-byte operators such as `::`
+    /// appear as consecutive tokens.
+    Punct,
+}
+
+/// One token with its source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// Lexical class.
+    pub kind: Kind,
+    /// Identifier text, or the single punctuation character; literals
+    /// keep an empty string.
+    pub text: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// Inside a `#[cfg(test)]` item — exempt from every rule.
+    pub in_test: bool,
+}
+
+impl Tok {
+    /// Exact identifier match.
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == Kind::Ident && self.text == s
+    }
+
+    /// Exact punctuation match.
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == Kind::Punct && self.text.len() == 1 && self.text.as_bytes()[0] == c as u8
+    }
+}
+
+/// One `// simlint: ...` comment. Doc comments (`///`, `//!`) are never
+/// parsed as directives, so grammar examples in rustdoc stay inert.
+#[derive(Debug, Clone)]
+pub enum Directive {
+    /// `hot` — the next `fn` item is on the allocation-free hot path.
+    Hot {
+        /// Directive line.
+        line: u32,
+    },
+    /// `allow(<rule>) reason="..."` — suppress findings of `rule` on
+    /// this line or the next one. A missing reason is itself reported.
+    Allow {
+        /// Directive line.
+        line: u32,
+        /// Rule name inside the parentheses.
+        rule: String,
+        /// The mandatory justification, if present and non-empty.
+        reason: Option<String>,
+    },
+    /// Anything else after `simlint:` — reported, never ignored.
+    Bad {
+        /// Directive line.
+        line: u32,
+        /// What was malformed about it.
+        what: String,
+    },
+}
+
+impl Directive {
+    /// Source line of the directive.
+    pub fn line(&self) -> u32 {
+        match self {
+            Directive::Hot { line }
+            | Directive::Allow { line, .. }
+            | Directive::Bad { line, .. } => *line,
+        }
+    }
+}
+
+/// One `fn` item: name, declaration line, and the token range of its
+/// body (between, not including, the braces).
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    /// Function name.
+    pub name: String,
+    /// Line of the `fn` keyword.
+    pub line: u32,
+    /// Token-index range of the body.
+    pub body: std::ops::Range<usize>,
+    /// Declared hot via a `hot` directive directly above it.
+    pub hot: bool,
+}
+
+/// A fully lexed source file.
+#[derive(Debug)]
+pub struct LexedFile {
+    /// Token stream (comments/whitespace dropped, literals opaque).
+    pub toks: Vec<Tok>,
+    /// All simlint directives, in source order.
+    pub directives: Vec<Directive>,
+    /// All fn items, in source order (nested fns included).
+    pub fns: Vec<FnSpan>,
+    /// Lines of `hot` directives with no following `fn` to attach to.
+    pub hot_dangling: Vec<u32>,
+}
+
+/// Lex a file: scan, mark `#[cfg(test)]` regions, segment fn items, and
+/// attach `hot` markers to the first fn at or below each one.
+pub fn lex(src: &str) -> LexedFile {
+    let (mut toks, directives) = scan(src);
+    mark_test_regions(&mut toks);
+    let mut fns = segment_fns(&toks);
+    let mut hot_dangling = Vec::new();
+    for d in &directives {
+        if let Directive::Hot { line } = d {
+            match fns.iter_mut().find(|f| f.line >= *line) {
+                Some(f) => f.hot = true,
+                None => hot_dangling.push(*line),
+            }
+        }
+    }
+    LexedFile { toks, directives, fns, hot_dangling }
+}
+
+/// Character-level scan: tokens plus directive comments.
+fn scan(src: &str) -> (Vec<Tok>, Vec<Directive>) {
+    let b = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut directives = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_ascii_whitespace() {
+            i += 1;
+        } else if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            let start = i + 2;
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            if let Some(d) = parse_directive(&src[start..i], line) {
+                directives.push(d);
+            }
+        } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            // rust block comments nest
+            let mut depth = 1u32;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if let Some(next) = raw_string_end(b, i, &mut line) {
+            toks.push(Tok { kind: Kind::Str, text: String::new(), line, in_test: false });
+            i = next;
+        } else if c == b'"' || (c == b'b' && b.get(i + 1) == Some(&b'"')) {
+            let at = line;
+            i += if c == b'b' { 2 } else { 1 };
+            while i < b.len() && b[i] != b'"' {
+                if b[i] == b'\\' {
+                    i += 1; // the escaped byte is consumed below
+                }
+                if i < b.len() {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            i += 1; // closing quote
+            toks.push(Tok { kind: Kind::Str, text: String::new(), line: at, in_test: false });
+        } else if c == b'\'' || (c == b'b' && b.get(i + 1) == Some(&b'\'')) {
+            let start = if c == b'b' { i + 1 } else { i };
+            let (kind, next) = char_or_lifetime(b, start);
+            toks.push(Tok { kind, text: lifetime_text(b, start, next, kind), line, in_test: false });
+            i = next;
+        } else if c == b'_' || c.is_ascii_alphabetic() {
+            let start = i;
+            while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Ident,
+                text: src[start..i].to_string(),
+                line,
+                in_test: false,
+            });
+        } else if c.is_ascii_digit() {
+            // greedy alphanumeric run covers hex and suffixes; a `.` is
+            // only part of the number when a digit follows (so `0..n`
+            // stays a range)
+            while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                i += 1;
+            }
+            if i + 1 < b.len() && b[i] == b'.' && b[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                    i += 1;
+                }
+            }
+            toks.push(Tok { kind: Kind::Num, text: String::new(), line, in_test: false });
+        } else {
+            toks.push(Tok {
+                kind: Kind::Punct,
+                text: (c as char).to_string(),
+                line,
+                in_test: false,
+            });
+            i += 1;
+        }
+    }
+    (toks, directives)
+}
+
+/// If position `i` starts a raw (byte) string (`r"`, `r#..#"`, `br"`),
+/// consume it and return the index just past it; `line` is advanced over
+/// embedded newlines. Raw *identifiers* (`r#match`) are left alone.
+fn raw_string_end(b: &[u8], i: usize, line: &mut u32) -> Option<usize> {
+    let mut j = i;
+    if b.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while b.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) != Some(&b'"') {
+        return None; // `r#ident` or plain ident starting with r/br
+    }
+    j += 1;
+    while j < b.len() {
+        if b[j] == b'\n' {
+            *line += 1;
+            j += 1;
+        } else if b[j] == b'"' && closes_raw(b, j + 1, hashes) {
+            return Some(j + 1 + hashes);
+        } else {
+            j += 1;
+        }
+    }
+    Some(j)
+}
+
+/// `hashes` consecutive `#` bytes at `at` (the raw-string terminator).
+fn closes_raw(b: &[u8], at: usize, hashes: usize) -> bool {
+    at + hashes <= b.len() && b[at..at + hashes].iter().all(|&h| h == b'#')
+}
+
+/// Disambiguate `'a` (lifetime) from `'x'` / `'\n'` (char literal),
+/// starting at the `'`. Returns the kind and the index just past it.
+fn char_or_lifetime(b: &[u8], i: usize) -> (Kind, usize) {
+    match b.get(i + 1) {
+        Some(&b'\\') => {
+            // escaped char literal: scan to the closing quote
+            let mut j = i + 2;
+            while j < b.len() && b[j] != b'\'' {
+                j += 1;
+            }
+            (Kind::Char, j + 1)
+        }
+        Some(&c) if c == b'_' || c.is_ascii_alphabetic() => {
+            let mut j = i + 1;
+            while j < b.len() && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+                j += 1;
+            }
+            if b.get(j) == Some(&b'\'') {
+                (Kind::Char, j + 1) // 'x'
+            } else {
+                (Kind::Lifetime, j) // 'a in a generic position
+            }
+        }
+        Some(_) if b.get(i + 2) == Some(&b'\'') => (Kind::Char, i + 3), // '{' etc.
+        _ => (Kind::Punct, i + 1), // stray quote; valid rust never gets here
+    }
+}
+
+/// Lifetime tokens keep their name; other quote-introduced tokens don't
+/// need text.
+fn lifetime_text(b: &[u8], start: usize, end: usize, kind: Kind) -> String {
+    if kind == Kind::Lifetime {
+        String::from_utf8_lossy(&b[start + 1..end]).into_owned()
+    } else {
+        String::new()
+    }
+}
+
+/// Parse one line comment body (text after `//`) as a directive.
+fn parse_directive(comment: &str, line: u32) -> Option<Directive> {
+    let t = comment.trim();
+    // `///` and `//!` bodies start with '/' or '!' here: doc comments
+    if t.starts_with('/') || t.starts_with('!') {
+        return None;
+    }
+    let rest = t.strip_prefix("simlint:")?.trim();
+    if rest == "hot" {
+        return Some(Directive::Hot { line });
+    }
+    if let Some(r) = rest.strip_prefix("allow(") {
+        let Some(close) = r.find(')') else {
+            return Some(Directive::Bad { line, what: format!("unclosed allow( in {t:?}") });
+        };
+        let rule = r[..close].trim().to_string();
+        let tail = r[close + 1..].trim();
+        let reason = tail
+            .strip_prefix("reason=\"")
+            .and_then(|x| x.find('"').map(|q| x[..q].to_string()))
+            .filter(|s| !s.is_empty());
+        return Some(Directive::Allow { line, rule, reason });
+    }
+    Some(Directive::Bad { line, what: format!("unrecognised simlint directive {rest:?}") })
+}
+
+/// Mark every token belonging to a `#[cfg(test)]` item as test-only.
+fn mark_test_regions(toks: &mut [Tok]) {
+    let mut i = 0usize;
+    while i + 6 < toks.len() {
+        let is_attr = toks[i].is_punct('#')
+            && toks[i + 1].is_punct('[')
+            && toks[i + 2].is_ident("cfg")
+            && toks[i + 3].is_punct('(')
+            && toks[i + 4].is_ident("test")
+            && toks[i + 5].is_punct(')')
+            && toks[i + 6].is_punct(']');
+        if !is_attr {
+            i += 1;
+            continue;
+        }
+        // the attribute governs the next item: up to its `;`, or the
+        // matching close of its `{` body
+        let mut j = i + 7;
+        let mut depth = 0usize;
+        while j < toks.len() {
+            if toks[j].is_punct('{') {
+                depth += 1;
+            } else if toks[j].is_punct('}') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if toks[j].is_punct(';') && depth == 0 {
+                break;
+            }
+            j += 1;
+        }
+        let end = j.min(toks.len() - 1);
+        for t in &mut toks[i..=end] {
+            t.in_test = true;
+        }
+        i = end + 1;
+    }
+}
+
+/// Find every `fn` item and its brace-matched body range.
+fn segment_fns(toks: &[Tok]) -> Vec<FnSpan> {
+    let mut fns = Vec::new();
+    for i in 0..toks.len() {
+        if !toks[i].is_ident("fn") {
+            continue;
+        }
+        // `fn` in a function-pointer type has no name ident after it
+        let Some(name) = toks.get(i + 1).filter(|t| t.kind == Kind::Ident) else {
+            continue;
+        };
+        // body = first `{` before any `;` (a `;` means a bodyless trait
+        // method declaration)
+        let mut j = i + 2;
+        while j < toks.len() && !toks[j].is_punct('{') && !toks[j].is_punct(';') {
+            j += 1;
+        }
+        if j >= toks.len() || toks[j].is_punct(';') {
+            continue;
+        }
+        let mut depth = 0usize;
+        let mut k = j;
+        while k < toks.len() {
+            if toks[k].is_punct('{') {
+                depth += 1;
+            } else if toks[k].is_punct('}') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            k += 1;
+        }
+        fns.push(FnSpan {
+            name: name.text.clone(),
+            line: toks[i].line,
+            body: j + 1..k.min(toks.len()),
+            hot: false,
+        });
+    }
+    fns
+}

@@ -1,0 +1,393 @@
+//! simlint: the determinism & hot-path contract checker.
+//!
+//! The repo's correctness story rests on contracts that runtime tests
+//! can only check after the fact — bit-identical fingerprints at any
+//! thread count, RNG-draw-order preservation across policies, the PR 5
+//! allocation-free hot path, zero scheme dispatch in the sub-core. This
+//! pass checks them *statically*, at review time: a small comment- and
+//! string-aware tokenizer ([`lexer`]) feeds six token-window rules
+//! ([`rules`]) scoped by path. `malekeh lint` runs it over `rust/src`;
+//! `rust/tests/simlint_self.rs` pins every rule with firing and
+//! non-firing fixtures. The full rule catalog lives in `docs/LINTS.md`.
+//!
+//! # Directives
+//!
+//! Plain `//` comments (doc comments are inert):
+//!
+//! - `simlint: hot` — the next `fn` item is on the per-cycle hot path
+//!   and must not allocate.
+//! - `simlint: allow(<rule>) reason="<why>"` — suppress `<rule>` on the
+//!   same line or the next one. The reason is mandatory, an allow that
+//!   suppresses nothing is itself reported, and every suppression is
+//!   counted against the committed baseline
+//!   (`rust/tests/golden/simlint_baseline.json`) so the total can only
+//!   ratchet down.
+
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use lexer::Directive;
+
+/// Rule registry: `(name, one-line contract)`. The names are the only
+/// valid arguments to `allow(...)`.
+pub const RULES: &[(&str, &str)] = &[
+    (rules::SCHEME_DISPATCH, "no Scheme:: or scheme matching in the sim hot path"),
+    (rules::HOT_PATH_ALLOC, "no heap allocation inside `simlint: hot` functions"),
+    (rules::UNORDERED_ITERATION, "no HashMap/HashSet iteration in sim/, harness/, serve/store.rs"),
+    (rules::RNG_DISCIPLINE, "RNG draws only in sim/policy/ or the generator allowlist"),
+    (rules::WALLCLOCK, "no Instant/SystemTime/std::env in the deterministic core"),
+    (rules::SERVE_PANIC, "no unwrap/expect/panic!/indexing in serve/ request handling"),
+];
+
+/// Pseudo-rule for malformed/unused directives. Not suppressible — a
+/// broken suppression must never silence itself.
+pub const DIRECTIVE_RULE: &str = "directive";
+
+/// One finding: a rule firing at a source line, possibly suppressed.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule name (or [`DIRECTIVE_RULE`]).
+    pub rule: String,
+    /// Path relative to the linted root, `/`-separated.
+    pub file: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// What fired and why it matters.
+    pub message: String,
+    /// `Some(reason)` when an `allow` directive suppressed it.
+    pub allowed: Option<String>,
+}
+
+impl Finding {
+    /// Suppressed by a justified allow?
+    pub fn is_allowed(&self) -> bool {
+        self.allowed.is_some()
+    }
+}
+
+/// Every finding from one run, in (file, line, rule) order.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// All findings, suppressed ones included.
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    /// Findings no allow covers — these fail the run.
+    pub fn unsuppressed(&self) -> Vec<&Finding> {
+        self.findings.iter().filter(|f| !f.is_allowed()).collect()
+    }
+
+    /// Suppression count per rule (every rule present, zeros included),
+    /// the quantity the committed baseline ratchets.
+    pub fn allow_counts(&self) -> BTreeMap<String, u64> {
+        let mut counts: BTreeMap<String, u64> =
+            RULES.iter().map(|(r, _)| (r.to_string(), 0)).collect();
+        for f in self.findings.iter().filter(|f| f.is_allowed()) {
+            *counts.entry(f.rule.clone()).or_insert(0) += 1;
+        }
+        counts
+    }
+
+    /// Human-readable listing plus a one-line summary.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message));
+            if let Some(reason) = &f.allowed {
+                out.push_str(&format!(" (allowed: {reason})"));
+            }
+            out.push('\n');
+        }
+        let allows: Vec<String> = self
+            .allow_counts()
+            .iter()
+            .filter(|(_, &n)| n > 0)
+            .map(|(r, n)| format!("{r}={n}"))
+            .collect();
+        out.push_str(&format!(
+            "simlint: {} finding(s), {} unsuppressed, allows: {}\n",
+            self.findings.len(),
+            self.unsuppressed().len(),
+            if allows.is_empty() { "none".to_string() } else { allows.join(" ") }
+        ));
+        out
+    }
+
+    /// Machine-readable report (the CI artifact).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str("  \"version\": 1,\n");
+        out.push_str(&format!("  \"total\": {},\n", self.findings.len()));
+        out.push_str(&format!("  \"unsuppressed\": {},\n", self.unsuppressed().len()));
+        out.push_str("  \"allows\": {");
+        let counts = self.allow_counts();
+        let body: Vec<String> =
+            counts.iter().map(|(r, n)| format!("\"{}\": {n}", json_escape(r))).collect();
+        out.push_str(&body.join(", "));
+        out.push_str("},\n");
+        out.push_str("  \"findings\": [\n");
+        for (i, f) in self.findings.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"allowed\": {}, \
+                 \"message\": \"{}\"{}}}{}\n",
+                json_escape(&f.rule),
+                json_escape(&f.file),
+                f.line,
+                f.is_allowed(),
+                json_escape(&f.message),
+                match &f.allowed {
+                    Some(r) => format!(", \"reason\": \"{}\"", json_escape(r)),
+                    None => String::new(),
+                },
+                if i + 1 < self.findings.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ]\n}");
+        out
+    }
+}
+
+/// Minimal JSON string escaping (the only JSON writer dependency-free
+/// crates get).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Lint one file's source. `rel` is its path relative to the linted
+/// root (`/`-separated) — rule scoping keys off it.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let lexed = lexer::lex(src);
+    let mut findings = Vec::new();
+    rules::check_file(rel, &lexed, &mut findings);
+
+    // apply suppressions: a justified allow covers matching findings on
+    // its own line or the next one
+    let mut used = vec![false; lexed.directives.len()];
+    for f in &mut findings {
+        for (di, d) in lexed.directives.iter().enumerate() {
+            if let Directive::Allow { line, rule, reason: Some(reason) } = d {
+                if *rule == f.rule && (*line == f.line || *line + 1 == f.line) {
+                    f.allowed = Some(reason.clone());
+                    used[di] = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    // directive hygiene: malformed, reasonless, unknown-rule, or unused
+    // suppressions are findings themselves, and can't be suppressed
+    for (di, d) in lexed.directives.iter().enumerate() {
+        match d {
+            Directive::Bad { line, what } => {
+                findings.push(directive_finding(rel, *line, what.clone()));
+            }
+            Directive::Allow { line, rule, reason } => {
+                if !RULES.iter().any(|(r, _)| rule.as_str() == *r) {
+                    let msg = format!("allow({rule}) names no rule");
+                    findings.push(directive_finding(rel, *line, msg));
+                } else if reason.is_none() {
+                    let msg = format!("allow({rule}) missing mandatory reason=\"...\"");
+                    findings.push(directive_finding(rel, *line, msg));
+                } else if !used[di] {
+                    let msg = format!("unused allow({rule}) — nothing it covers fires here");
+                    findings.push(directive_finding(rel, *line, msg));
+                }
+            }
+            Directive::Hot { .. } => {}
+        }
+    }
+    for line in &lexed.hot_dangling {
+        findings.push(directive_finding(rel, *line, "hot marker attaches to no fn".to_string()));
+    }
+
+    findings.sort_by(|a, b| (a.line, &a.rule, &a.message).cmp(&(b.line, &b.rule, &b.message)));
+    findings
+}
+
+fn directive_finding(rel: &str, line: u32, message: String) -> Finding {
+    Finding {
+        rule: DIRECTIVE_RULE.to_string(),
+        file: rel.to_string(),
+        line,
+        message,
+        allowed: None,
+    }
+}
+
+/// Lint every `.rs` file under `src_root` (normally `rust/src`), in
+/// sorted path order so reports are byte-stable.
+pub fn run_tree(src_root: &Path) -> Result<Report, String> {
+    let mut files = Vec::new();
+    collect_rs(src_root, src_root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for rel in &files {
+        let path = src_root.join(rel);
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        findings.extend(lint_source(rel, &src));
+    }
+    Ok(Report { findings })
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<(), String> {
+    let entries = std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("{}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(root, &path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .map_err(|e| format!("{}: {e}", path.display()))?
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------- baseline -----------------------------------
+
+/// The committed suppression budget
+/// (`rust/tests/golden/simlint_baseline.json`). CI compares every run
+/// against it: new findings or new allows fail; a cleaner tree fails
+/// too, with instructions to re-bless smaller — the ratchet only goes
+/// down.
+pub mod baseline {
+    use std::collections::BTreeMap;
+
+    use super::{json_escape, Report, RULES};
+
+    /// Parsed baseline.
+    #[derive(Debug, Default, PartialEq, Eq)]
+    pub struct Baseline {
+        /// Unsuppressed findings the baseline tolerates (always 0 —
+        /// bless refuses anything else; kept explicit in the file so a
+        /// hand edit that raises it is visible in review).
+        pub unsuppressed: u64,
+        /// Allow count per rule.
+        pub allows: BTreeMap<String, u64>,
+    }
+
+    /// Render the baseline a report would bless.
+    pub fn render(report: &Report) -> String {
+        let mut out = String::from("{\n");
+        out.push_str("  \"version\": 1,\n");
+        out.push_str(&format!("  \"unsuppressed\": {},\n", report.unsuppressed().len()));
+        out.push_str("  \"allows\": {\n");
+        let counts = report.allow_counts();
+        let body: Vec<String> = counts
+            .iter()
+            .map(|(r, n)| format!("    \"{}\": {n}", json_escape(r)))
+            .collect();
+        out.push_str(&body.join(",\n"));
+        out.push_str("\n  }\n}\n");
+        out
+    }
+
+    /// Parse a baseline file. Tolerant scanner for the fixed shape
+    /// [`render`] emits (std has no JSON parser and the crate stays
+    /// dependency-free).
+    pub fn parse(text: &str) -> Result<Baseline, String> {
+        let unsuppressed = field_u64(text, "unsuppressed")
+            .ok_or_else(|| "baseline: missing \"unsuppressed\"".to_string())?;
+        let mut allows = BTreeMap::new();
+        let allows_at = text
+            .find("\"allows\"")
+            .ok_or_else(|| "baseline: missing \"allows\"".to_string())?;
+        let open = text[allows_at..]
+            .find('{')
+            .ok_or_else(|| "baseline: allows is not an object".to_string())?;
+        let body_start = allows_at + open + 1;
+        let close = text[body_start..]
+            .find('}')
+            .ok_or_else(|| "baseline: unclosed allows object".to_string())?;
+        for pair in text[body_start..body_start + close].split(',') {
+            let pair = pair.trim();
+            if pair.is_empty() {
+                continue;
+            }
+            let (key, value) = pair
+                .split_once(':')
+                .ok_or_else(|| format!("baseline: bad allows entry {pair:?}"))?;
+            let key = key.trim().trim_matches('"').to_string();
+            let value: u64 = value
+                .trim()
+                .parse()
+                .map_err(|_| format!("baseline: bad count in {pair:?}"))?;
+            allows.insert(key, value);
+        }
+        Ok(Baseline { unsuppressed, allows })
+    }
+
+    /// `"name": <u64>` scan for top-level scalar fields.
+    fn field_u64(text: &str, name: &str) -> Option<u64> {
+        let at = text.find(&format!("\"{name}\""))?;
+        let rest = &text[at..];
+        let colon = rest.find(':')?;
+        let digits: String = rest[colon + 1..]
+            .trim_start()
+            .chars()
+            .take_while(|c| c.is_ascii_digit())
+            .collect();
+        digits.parse().ok()
+    }
+
+    /// Enforce the ratchet. Any unsuppressed finding fails; per-rule
+    /// allow counts must match the baseline exactly — higher means new
+    /// suppressions slipped in, lower means the tree got cleaner and
+    /// the baseline must be re-blessed smaller.
+    pub fn check(report: &Report, base: &Baseline) -> Result<(), String> {
+        let bad = report.unsuppressed();
+        if !bad.is_empty() {
+            let mut msg = format!("{} unsuppressed finding(s):\n", bad.len());
+            for f in bad.iter().take(20) {
+                msg.push_str(&format!("  {}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+            }
+            if bad.len() > 20 {
+                msg.push_str(&format!("  ... and {} more\n", bad.len() - 20));
+            }
+            return Err(msg);
+        }
+        let counts = report.allow_counts();
+        for (rule, _) in RULES {
+            let got = counts.get(*rule).copied().unwrap_or(0);
+            let want = base.allows.get(*rule).copied().unwrap_or(0);
+            if got > want {
+                return Err(format!(
+                    "rule {rule}: {got} allow(s) vs baseline {want} — a new suppression \
+                     needs review; fix the finding or re-bless deliberately"
+                ));
+            }
+            if got < want {
+                return Err(format!(
+                    "rule {rule}: {got} allow(s) vs baseline {want} — the tree got cleaner; \
+                     ratchet down with `malekeh lint --baseline <file> --bless`"
+                ));
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,424 @@
+//! The six simlint rules.
+//!
+//! Each rule is a token-window matcher scoped by repo-relative path
+//! (relative to `rust/src`, `/`-separated). Tokens inside `#[cfg(test)]`
+//! items are exempt everywhere — the contracts govern shipped simulator
+//! code, not its tests. The contract each rule encodes, with the fix
+//! guidance, is catalogued in `docs/LINTS.md`.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{Kind, LexedFile, Tok};
+use super::Finding;
+
+/// `scheme-dispatch`: sub-core and collector decide nothing by scheme.
+pub const SCHEME_DISPATCH: &str = "scheme-dispatch";
+/// `hot-path-alloc`: no heap allocation in `hot`-marked functions.
+pub const HOT_PATH_ALLOC: &str = "hot-path-alloc";
+/// `unordered-iteration`: no HashMap/HashSet iteration where order can
+/// leak into fingerprints or on-disk bytes.
+pub const UNORDERED_ITERATION: &str = "unordered-iteration";
+/// `rng-discipline`: RNG draws only at policy decision points or in the
+/// allowlisted workload generators.
+pub const RNG_DISCIPLINE: &str = "rng-discipline";
+/// `wallclock`: no wall-clock or process-environment reads in the
+/// deterministic core.
+pub const WALLCLOCK: &str = "wallclock";
+/// `serve-panic`: the daemon degrades, it never dies.
+pub const SERVE_PANIC: &str = "serve-panic";
+
+/// Run every rule over one lexed file, appending findings.
+pub fn check_file(rel: &str, lexed: &LexedFile, out: &mut Vec<Finding>) {
+    scheme_dispatch(rel, lexed, out);
+    hot_path_alloc(rel, lexed, out);
+    unordered_iteration(rel, lexed, out);
+    rng_discipline(rel, lexed, out);
+    wallclock(rel, lexed, out);
+    serve_panic(rel, lexed, out);
+}
+
+fn finding(rule: &str, rel: &str, line: u32, message: String) -> Finding {
+    Finding { rule: rule.to_string(), file: rel.to_string(), line, message, allowed: None }
+}
+
+/// Live (non-test) token at `i`, if any.
+fn live(toks: &[Tok], i: usize) -> Option<&Tok> {
+    toks.get(i).filter(|t| !t.in_test)
+}
+
+/// `toks[i..]` starts the path `first::second` (identifier-exact).
+fn is_path2(toks: &[Tok], i: usize, first: &str, second: &str) -> bool {
+    toks[i].is_ident(first)
+        && toks.get(i + 1).is_some_and(|t| t.is_punct(':'))
+        && toks.get(i + 2).is_some_and(|t| t.is_punct(':'))
+        && toks.get(i + 3).is_some_and(|t| t.is_ident(second))
+}
+
+/// `toks[i..]` is the method call `.name(` (identifier-exact).
+fn is_method_call(toks: &[Tok], i: usize, names: &[&str]) -> Option<&'static str> {
+    if !toks[i].is_punct('.') {
+        return None;
+    }
+    let m = toks.get(i + 1)?;
+    if m.kind != Kind::Ident || !toks.get(i + 2).is_some_and(|t| t.is_punct('(')) {
+        return None;
+    }
+    names.iter().find(|&&n| m.text == n).copied()
+}
+
+// --------------------------- scheme-dispatch --------------------------------
+
+/// The PR 4 registry contract: every scheme-varying decision lives in
+/// `sim/policy/`. A `Scheme::` reference or a `match` on a scheme field
+/// in the sub-core/collector hot paths means a decision leaked out.
+fn scheme_dispatch(rel: &str, lexed: &LexedFile, out: &mut Vec<Finding>) {
+    if rel != "sim/subcore.rs" && rel != "sim/collector.rs" {
+        return;
+    }
+    let toks = &lexed.toks;
+    for i in 0..toks.len() {
+        let Some(t) = live(toks, i) else { continue };
+        if t.is_ident("Scheme")
+            && toks.get(i + 1).is_some_and(|t| t.is_punct(':'))
+            && toks.get(i + 2).is_some_and(|t| t.is_punct(':'))
+        {
+            out.push(finding(
+                SCHEME_DISPATCH,
+                rel,
+                t.line,
+                "`Scheme::` reference outside the policy layer".to_string(),
+            ));
+        }
+        if t.is_ident("match") {
+            // scan the scrutinee (everything before the arm block)
+            for j in i + 1..(i + 40).min(toks.len()) {
+                if toks[j].is_punct('{') {
+                    break;
+                }
+                if toks[j].is_ident("scheme") {
+                    out.push(finding(
+                        SCHEME_DISPATCH,
+                        rel,
+                        t.line,
+                        "match on a scheme field — dispatch belongs in sim/policy".to_string(),
+                    ));
+                    break;
+                }
+            }
+        }
+    }
+}
+
+// --------------------------- hot-path-alloc ---------------------------------
+
+const ALLOC_TYPES: &[&str] =
+    &["Vec", "VecDeque", "Box", "String", "HashMap", "HashSet", "BTreeMap", "BTreeSet"];
+const ALLOC_CTORS: &[&str] = &["new", "with_capacity"];
+const ALLOC_METHODS: &[&str] = &["collect", "to_vec", "to_string", "to_owned"];
+const ALLOC_MACROS: &[&str] = &["vec", "format"];
+
+/// The PR 5 steady-state contract: functions marked `hot` run every
+/// cycle and must not touch the heap — capacity is pre-allocated in
+/// constructors and reused via caller-owned scratch buffers.
+fn hot_path_alloc(rel: &str, lexed: &LexedFile, out: &mut Vec<Finding>) {
+    let toks = &lexed.toks;
+    for f in lexed.fns.iter().filter(|f| f.hot) {
+        for i in f.body.clone() {
+            let Some(t) = live(toks, i) else { continue };
+            if let Some(m) = is_method_call(toks, i, ALLOC_METHODS) {
+                out.push(finding(
+                    HOT_PATH_ALLOC,
+                    rel,
+                    t.line,
+                    format!("`.{m}()` allocates inside hot fn `{}`", f.name),
+                ));
+            }
+            if t.kind == Kind::Ident
+                && ALLOC_TYPES.contains(&t.text.as_str())
+                && toks.get(i + 1).is_some_and(|x| x.is_punct(':'))
+                && toks.get(i + 2).is_some_and(|x| x.is_punct(':'))
+                && toks
+                    .get(i + 3)
+                    .is_some_and(|x| x.kind == Kind::Ident && ALLOC_CTORS.contains(&x.text.as_str()))
+            {
+                let ctor = toks[i + 3].text.as_str();
+                let msg = format!("`{}::{ctor}` allocates inside hot fn `{}`", t.text, f.name);
+                out.push(finding(HOT_PATH_ALLOC, rel, t.line, msg));
+            }
+            if t.kind == Kind::Ident
+                && ALLOC_MACROS.contains(&t.text.as_str())
+                && toks.get(i + 1).is_some_and(|x| x.is_punct('!'))
+            {
+                out.push(finding(
+                    HOT_PATH_ALLOC,
+                    rel,
+                    t.line,
+                    format!("`{}!` allocates inside hot fn `{}`", t.text, f.name),
+                ));
+            }
+        }
+    }
+}
+
+// ------------------------- unordered-iteration ------------------------------
+
+const ITER_METHODS: &[&str] =
+    &["iter", "iter_mut", "into_iter", "keys", "values", "values_mut", "drain", "retain"];
+
+/// Iteration order over `HashMap`/`HashSet` is randomized per process;
+/// in `sim/`, `harness/`, and the store's on-disk path it can leak into
+/// fingerprints or bytes. Names are collected from `name: HashMap<..>`
+/// annotations (fields, params, struct literals) and `= HashMap::new()`
+/// initializers within the same file — a deliberate, documented
+/// heuristic (docs/LINTS.md).
+fn unordered_iteration(rel: &str, lexed: &LexedFile, out: &mut Vec<Finding>) {
+    if !(rel.starts_with("sim/") || rel.starts_with("harness/") || rel == "serve/store.rs") {
+        return;
+    }
+    let toks = &lexed.toks;
+    let mut names: BTreeSet<&str> = BTreeSet::new();
+    for i in 0..toks.len() {
+        if toks[i].kind != Kind::Ident {
+            continue;
+        }
+        // `name: [&][mut] [std::collections::]Hash{Map,Set}`
+        if toks.get(i + 1).is_some_and(|t| t.is_punct(':'))
+            && !toks.get(i + 2).is_some_and(|t| t.is_punct(':'))
+        {
+            let mut j = i + 2;
+            let mut hops = 0;
+            while let Some(t) = toks.get(j) {
+                if hops > 8 {
+                    break;
+                }
+                if t.is_ident("HashMap") || t.is_ident("HashSet") {
+                    names.insert(toks[i].text.as_str());
+                    break;
+                }
+                let skip = t.is_punct('&')
+                    || t.is_punct(':')
+                    || t.kind == Kind::Lifetime
+                    || t.is_ident("mut")
+                    || t.is_ident("std")
+                    || t.is_ident("collections");
+                if !skip {
+                    break;
+                }
+                j += 1;
+                hops += 1;
+            }
+        }
+        // `name = Hash{Map,Set}::...` (untyped let bindings)
+        if toks.get(i + 1).is_some_and(|t| t.is_punct('='))
+            && toks
+                .get(i + 2)
+                .is_some_and(|t| t.is_ident("HashMap") || t.is_ident("HashSet"))
+        {
+            names.insert(toks[i].text.as_str());
+        }
+    }
+    if names.is_empty() {
+        return;
+    }
+    for i in 0..toks.len() {
+        let Some(t) = live(toks, i) else { continue };
+        // `name.iter()` and friends
+        if t.kind == Kind::Ident && names.contains(t.text.as_str()) {
+            if let Some(m) = is_method_call(toks, i + 1, ITER_METHODS) {
+                out.push(finding(
+                    UNORDERED_ITERATION,
+                    rel,
+                    t.line,
+                    format!(
+                        "`.{m}()` iterates unordered container `{}` — use BTreeMap/BTreeSet \
+                         or a sorted drain",
+                        t.text
+                    ),
+                ));
+            }
+        }
+        // `for x in [&][mut] name`
+        if t.is_ident("in") {
+            let mut j = i + 1;
+            while toks.get(j).is_some_and(|x| x.is_punct('&') || x.is_ident("mut")) {
+                j += 1;
+            }
+            if let Some(x) = toks.get(j) {
+                if x.kind == Kind::Ident
+                    && names.contains(x.text.as_str())
+                    && toks.get(j + 1).is_some_and(|n| n.is_punct('{') || n.is_punct('.'))
+                {
+                    // `in map {` (whole-map loop) or `in map.xxx` handled
+                    // above; only flag the brace form here to avoid
+                    // double-reporting
+                    if toks[j + 1].is_punct('{') {
+                        out.push(finding(
+                            UNORDERED_ITERATION,
+                            rel,
+                            t.line,
+                            format!("for-loop over unordered container `{}`", x.text),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+// --------------------------- rng-discipline ---------------------------------
+
+/// Draw methods whose names are unique to `util::rng::Rng` in this tree.
+const DRAWS: &[&str] = &["next_u64", "next_u32", "below", "chance", "pick", "shuffle", "geometric"];
+/// Draw methods with common names: flagged only on an rng-ish receiver.
+const DRAWS_AMBIGUOUS: &[&str] = &["range", "f64"];
+
+/// RNG-draw-order preservation (the PR 4 parity contract): every policy
+/// must see the same draw sequence, so draw sites live in `sim/policy/`
+/// decision points or the allowlisted seeded workload generators.
+fn rng_discipline(rel: &str, lexed: &LexedFile, out: &mut Vec<Finding>) {
+    let allowlisted = rel.starts_with("sim/policy/")
+        || rel == "util/rng.rs"
+        || rel == "trace/program.rs"
+        || rel == "trace/workloads.rs"
+        || rel == "trace/corpus.rs";
+    if allowlisted {
+        return;
+    }
+    let toks = &lexed.toks;
+    for i in 0..toks.len() {
+        let Some(t) = live(toks, i) else { continue };
+        if let Some(m) = is_method_call(toks, i, DRAWS) {
+            out.push(finding(
+                RNG_DISCIPLINE,
+                rel,
+                t.line,
+                format!("RNG draw `.{m}()` outside sim/policy/ and the generator allowlist"),
+            ));
+        } else if let Some(m) = is_method_call(toks, i, DRAWS_AMBIGUOUS) {
+            // `.range(`/`.f64(` collide with std names; require an
+            // rng-named receiver to fire
+            let rng_receiver =
+                i > 0 && toks[i - 1].kind == Kind::Ident && toks[i - 1].text.contains("rng");
+            if rng_receiver {
+                out.push(finding(
+                    RNG_DISCIPLINE,
+                    rel,
+                    t.line,
+                    format!("RNG draw `.{m}()` outside sim/policy/ and the generator allowlist"),
+                ));
+            }
+        }
+    }
+}
+
+// ------------------------------ wallclock -----------------------------------
+
+const ENV_READS: &[&str] = &["var", "vars", "var_os", "args", "temp_dir", "current_dir"];
+
+/// A simulation is a pure function of `(GpuConfig, workload, seed)`:
+/// wall-clock and process-environment reads in the deterministic core
+/// would make results machine- or invocation-dependent. The CLI shell
+/// (`main.rs`, `cli.rs`), the daemon (`serve/`), the artifact loader
+/// (`runtime/`), and this linter are exempt by path.
+fn wallclock(rel: &str, lexed: &LexedFile, out: &mut Vec<Finding>) {
+    let exempt = rel == "main.rs"
+        || rel == "cli.rs"
+        || rel.starts_with("serve/")
+        || rel.starts_with("runtime/")
+        || rel.starts_with("lint/");
+    if exempt {
+        return;
+    }
+    let toks = &lexed.toks;
+    for i in 0..toks.len() {
+        let Some(t) = live(toks, i) else { continue };
+        if is_path2(toks, i, "Instant", "now") || is_path2(toks, i, "SystemTime", "now") {
+            out.push(finding(
+                WALLCLOCK,
+                rel,
+                t.line,
+                format!("`{}::now()` in the deterministic core", t.text),
+            ));
+        }
+        if is_path2(toks, i, "std", "env") {
+            out.push(finding(
+                WALLCLOCK,
+                rel,
+                t.line,
+                "`std::env` read in the deterministic core".to_string(),
+            ));
+        } else if t.is_ident("env")
+            && toks.get(i + 1).is_some_and(|x| x.is_punct(':'))
+            && toks.get(i + 2).is_some_and(|x| x.is_punct(':'))
+            && toks
+                .get(i + 3)
+                .is_some_and(|x| x.kind == Kind::Ident && ENV_READS.contains(&x.text.as_str()))
+        {
+            out.push(finding(
+                WALLCLOCK,
+                rel,
+                t.line,
+                format!("`env::{}` read in the deterministic core", toks[i + 3].text),
+            ));
+        }
+    }
+}
+
+// ------------------------------ serve-panic ---------------------------------
+
+const PANIC_MACROS: &[&str] =
+    &["panic", "unreachable", "todo", "unimplemented", "assert", "assert_eq", "assert_ne"];
+
+/// The serving contract: a hostile or malformed request produces a
+/// protocol-level `ERR` reply or a logged connection drop — never a
+/// daemon death. `unwrap`/`expect`/panicking macros/slice-indexing in
+/// `serve/` request handling are all one bad input away from an abort.
+fn serve_panic(rel: &str, lexed: &LexedFile, out: &mut Vec<Finding>) {
+    if !rel.starts_with("serve/") {
+        return;
+    }
+    let toks = &lexed.toks;
+    for i in 0..toks.len() {
+        let Some(t) = live(toks, i) else { continue };
+        if let Some(m) = is_method_call(toks, i, &["unwrap", "expect"]) {
+            out.push(finding(
+                SERVE_PANIC,
+                rel,
+                t.line,
+                format!("`.{m}()` can panic the daemon — return a protocol error instead"),
+            ));
+        }
+        if t.kind == Kind::Ident
+            && PANIC_MACROS.contains(&t.text.as_str())
+            && toks.get(i + 1).is_some_and(|x| x.is_punct('!'))
+        {
+            out.push(finding(
+                SERVE_PANIC,
+                rel,
+                t.line,
+                format!("`{}!` in request handling — the daemon must degrade, not die", t.text),
+            ));
+        }
+        // index/slice expressions: `expr[...]` panics on out-of-bounds.
+        // An expression position is a `[` directly after an ident, `)`,
+        // or `]` (attributes `#[...]` and type/array syntax never are).
+        if t.is_punct('[') && i > 0 {
+            // a `[` after a keyword opens an array literal or slice
+            // pattern, not an index expression
+            const KEYWORDS: &[&str] =
+                &["let", "mut", "in", "return", "if", "else", "match", "ref", "box"];
+            let p = &toks[i - 1];
+            let indexes = (p.kind == Kind::Ident && !KEYWORDS.contains(&p.text.as_str()))
+                || p.is_punct(')')
+                || p.is_punct(']');
+            if indexes {
+                out.push(finding(
+                    SERVE_PANIC,
+                    rel,
+                    t.line,
+                    "slice/array index can panic — use `.get()` and handle the miss".to_string(),
+                ));
+            }
+        }
+    }
+}

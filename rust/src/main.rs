@@ -13,6 +13,7 @@
 //!   submit             submit one simulation to a running daemon
 //!   serve-ctl          ping/stats/shutdown a running daemon
 //!   store              inspect or garbage-collect a result store
+//!   lint               static determinism/hot-path contract check (simlint)
 //!   list               list benchmarks and schemes
 //!
 //! Common options: `--scheme S`, `--sms N`, `--quick`, `--full`,
@@ -58,6 +59,7 @@ fn run(args: &[String]) -> Result<(), String> {
         "submit" => cmd_submit(&cli),
         "serve-ctl" => cmd_serve_ctl(&cli),
         "store" => cmd_store(&cli),
+        "lint" => cmd_lint(&cli),
         "list" => cmd_list(),
         "policies" => cmd_policies(),
         "" | "help" | "--help" => {
@@ -93,6 +95,8 @@ fn print_help() {
            submit --trace <daemon-side file> [--addr H:P]   submit a .mtrace replay\n\
            serve-ctl <ping|stats|shutdown> [--addr H:P]\n\
            store <info|gc --budget BYTES> [--store DIR]\n\
+           lint [--path DIR] [--format text|json] [--baseline FILE] [--bless]\n\
+                 [--rules]                             simlint (docs/LINTS.md)\n\
            list                                        benchmarks + schemes\n\
            policies                                    the scheme registry, one\n\
                                                        line per policy\n\
@@ -637,6 +641,60 @@ fn cmd_store(cli: &Cli) -> Result<(), String> {
             );
         }
         other => return Err(format!("unknown store subcommand {other:?} (info|gc)")),
+    }
+    Ok(())
+}
+
+/// `malekeh lint`: run simlint over `rust/src` (or `--path DIR`).
+///
+/// Without `--baseline`, any unsuppressed finding fails. With
+/// `--baseline FILE` the run is compared against the committed
+/// suppression budget (exact per-rule allow counts — the ratchet);
+/// `--bless` rewrites the baseline from a clean run. `--format json`
+/// prints the machine-readable report CI uploads as an artifact.
+fn cmd_lint(cli: &Cli) -> Result<(), String> {
+    if cli.has_flag("rules") {
+        for (name, contract) in malekeh::lint::RULES {
+            println!("{name:20} {contract}");
+        }
+        return Ok(());
+    }
+    let root = PathBuf::from(cli.opt_or("path", "rust/src"));
+    if !root.is_dir() {
+        return Err(format!(
+            "{}: not a directory (run from the repo root, or pass --path <src dir>)",
+            root.display()
+        ));
+    }
+    let report = malekeh::lint::run_tree(&root)?;
+    match cli.opt_or("format", "text") {
+        "text" => print!("{}", report.to_text()),
+        "json" => println!("{}", report.to_json()),
+        other => return Err(format!("bad --format {other:?} (text|json)")),
+    }
+    if let Some(file) = cli.options.get("baseline") {
+        if cli.has_flag("bless") {
+            if !report.unsuppressed().is_empty() {
+                return Err(
+                    "refusing to bless a baseline with unsuppressed findings — fix or allow \
+                     them first"
+                        .to_string(),
+                );
+            }
+            std::fs::write(file, malekeh::lint::baseline::render(&report))
+                .map_err(|e| format!("{file}: {e}"))?;
+            eprintln!("blessed {file}");
+            return Ok(());
+        }
+        let text = std::fs::read_to_string(file).map_err(|e| format!("{file}: {e}"))?;
+        let base = malekeh::lint::baseline::parse(&text)?;
+        malekeh::lint::baseline::check(&report, &base)?;
+        eprintln!("lint: clean against baseline {file}");
+        return Ok(());
+    }
+    let bad = report.unsuppressed().len();
+    if bad > 0 {
+        return Err(format!("lint: {bad} unsuppressed finding(s)"));
     }
     Ok(())
 }

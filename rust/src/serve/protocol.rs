@@ -51,24 +51,26 @@ pub fn escape(s: &str) -> String {
 }
 
 /// Inverse of [`escape`]. Unknown or truncated `%xx` sequences error
-/// rather than passing through silently.
+/// rather than passing through silently. Byte-iterator based: hostile
+/// input must not be able to panic the daemon via an out-of-bounds
+/// index (the serve-panic contract).
 pub fn unescape(s: &str) -> Result<String, String> {
-    let bytes = s.as_bytes();
-    let mut out = Vec::with_capacity(bytes.len());
-    let mut i = 0;
-    while i < bytes.len() {
-        if bytes[i] == b'%' {
-            let hex = bytes
-                .get(i + 1..i + 3)
-                .ok_or_else(|| format!("truncated escape in {s:?}"))?;
-            let hex = std::str::from_utf8(hex).map_err(|_| format!("bad escape in {s:?}"))?;
-            out.push(
-                u8::from_str_radix(hex, 16).map_err(|_| format!("bad escape %{hex} in {s:?}"))?,
-            );
-            i += 3;
+    let mut out = Vec::with_capacity(s.len());
+    let mut it = s.bytes();
+    while let Some(b) = it.next() {
+        if b == b'%' {
+            let (hi, lo) = match (it.next(), it.next()) {
+                (Some(hi), Some(lo)) => (hi, lo),
+                _ => return Err(format!("truncated escape in {s:?}")),
+            };
+            match ((hi as char).to_digit(16), (lo as char).to_digit(16)) {
+                (Some(h), Some(l)) => out.push((h * 16 + l) as u8),
+                _ => {
+                    return Err(format!("bad escape %{}{} in {s:?}", hi as char, lo as char));
+                }
+            }
         } else {
-            out.push(bytes[i]);
-            i += 1;
+            out.push(b);
         }
     }
     String::from_utf8(out).map_err(|_| format!("escape decoded to non-UTF8 in {s:?}"))

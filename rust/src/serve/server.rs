@@ -22,7 +22,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use crate::config::{GpuConfig, Scheme};
 use crate::sim::run_workload;
@@ -167,23 +167,41 @@ impl Server {
     }
 }
 
+/// Job-table lock that recovers from poisoning: a thread that panicked
+/// while holding the lock must not take every future request down with
+/// it (the serve-panic contract — degrade, don't die; the table is a
+/// plain state record, valid after any partial update).
+fn lock_table(shared: &Shared) -> MutexGuard<'_, Table> {
+    shared.table.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Condvar wait with the same poisoning recovery as [`lock_table`].
+fn wait_table<'a>(shared: &'a Shared, t: MutexGuard<'a, Table>) -> MutexGuard<'a, Table> {
+    shared.cv.wait(t).unwrap_or_else(|p| p.into_inner())
+}
+
 /// Worker: pop queued jobs, simulate, persist, publish.
 fn worker_loop(shared: &Shared) {
     loop {
         // claim one queued job (or exit on shutdown)
         let (id, cfg, workload, profile_warps) = {
-            let mut t = shared.table.lock().unwrap();
+            let mut t = lock_table(shared);
             loop {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
                 if let Some(id) = t.queue.pop_front() {
-                    t.jobs[id].state = JobState::Running;
+                    // a queue entry without a job would be a table bug;
+                    // drop it rather than index and abort the worker
+                    let Some(j) = t.jobs.get_mut(id) else {
+                        eprintln!("serve: queued job {id} missing from the table");
+                        continue;
+                    };
+                    j.state = JobState::Running;
                     shared.cv.notify_all();
-                    let j = &t.jobs[id];
                     break (id, j.cfg.clone(), j.workload.clone(), j.profile_warps);
                 }
-                t = shared.cv.wait(t).unwrap();
+                t = wait_table(shared, t);
             }
         };
         let outcome = run_workload(&cfg, &workload, profile_warps);
@@ -196,16 +214,20 @@ fn worker_loop(shared: &Shared) {
                 }
             }
         }
-        let mut t = shared.table.lock().unwrap();
+        let mut t = lock_table(shared);
         match outcome {
             Ok(stats) => {
-                t.jobs[id].stats = Some(stats);
-                t.jobs[id].state = JobState::Done;
+                if let Some(j) = t.jobs.get_mut(id) {
+                    j.stats = Some(stats);
+                    j.state = JobState::Done;
+                }
                 t.sims_completed += 1;
             }
             Err(e) => {
-                t.jobs[id].error = Some(e);
-                t.jobs[id].state = JobState::Failed;
+                if let Some(j) = t.jobs.get_mut(id) {
+                    j.error = Some(e);
+                    j.state = JobState::Failed;
+                }
                 t.sims_failed += 1;
             }
         }
@@ -236,11 +258,17 @@ fn submit(shared: &Shared, spec: &JobSpec) -> Result<(u64, JobState), String> {
     // the content address also validates the workload (unknown benchmark
     // or unreadable trace file fails here, before a job exists)
     let key = StoreKey::for_run(&cfg, &workload, profile_warps)?;
-    let mut t = shared.table.lock().unwrap();
+    let mut t = lock_table(shared);
     t.submitted += 1;
     if let Some(&id) = t.index.get(&key) {
         t.dedup_hits += 1;
-        return Ok((id as u64, t.jobs[id].state));
+        // the index only maps to pushed job ids; report rather than
+        // index if the table is ever inconsistent
+        let state = t.jobs.get(id).map(|j| j.state);
+        return match state {
+            Some(state) => Ok((id as u64, state)),
+            None => Err(format!("job table inconsistent for id {id}")),
+        };
     }
     let mut job = Job {
         cfg,
@@ -277,7 +305,7 @@ fn stats_json(shared: &Shared) -> String {
         },
         None => (0, 0),
     };
-    let t = shared.table.lock().unwrap();
+    let t = lock_table(shared);
     format!(
         "{{\"jobs\":{},\"submitted\":{},\"dedup_hits\":{},\"store_hits\":{},\
          \"sims_completed\":{},\"sims_failed\":{},\"store_records\":{records},\
@@ -295,7 +323,7 @@ fn stats_json(shared: &Shared) -> String {
 /// in the connection handler's thread.
 fn dispatch(shared: &Shared, req: Request) -> Response {
     let job_state = |id: u64| -> Result<JobState, String> {
-        let t = shared.table.lock().unwrap();
+        let t = lock_table(shared);
         t.jobs
             .get(id as usize)
             .map(|j| j.state)
@@ -312,20 +340,22 @@ fn dispatch(shared: &Shared, req: Request) -> Response {
             Err(e) => Response::Err(e),
         },
         Request::Wait(id) => {
-            let mut t = shared.table.lock().unwrap();
-            if id as usize >= t.jobs.len() {
-                return Response::Err(format!("no such job {id}"));
-            }
-            while matches!(t.jobs[id as usize].state, JobState::Queued | JobState::Running) {
+            let mut t = lock_table(shared);
+            loop {
+                let Some(state) = t.jobs.get(id as usize).map(|j| j.state) else {
+                    return Response::Err(format!("no such job {id}"));
+                };
+                if !matches!(state, JobState::Queued | JobState::Running) {
+                    return Response::Ok(Response::job_payload(id, state));
+                }
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return Response::Err("server shutting down".to_string());
                 }
-                t = shared.cv.wait(t).unwrap();
+                t = wait_table(shared, t);
             }
-            Response::Ok(Response::job_payload(id, t.jobs[id as usize].state))
         }
         Request::Result(id) => {
-            let t = shared.table.lock().unwrap();
+            let t = lock_table(shared);
             match t.jobs.get(id as usize) {
                 None => Response::Err(format!("no such job {id}")),
                 Some(j) => match (j.state, &j.stats, &j.error) {

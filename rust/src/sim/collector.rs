@@ -73,6 +73,7 @@ impl CacheTable {
         CacheTable { entries: [CtEntry::default(); MAX_CT], n: n as u8, nvalid: 0, tick: 0 }
     }
 
+    // simlint: hot
     /// Invalidate everything (CCU reallocation to a new warp, §III-C1).
     ///
     /// Early-returns on an already-empty table: `alloc_ocu` flushes on
@@ -104,11 +105,13 @@ impl CacheTable {
         &mut self.entries[..self.n as usize]
     }
 
+    // simlint: hot
     /// Find a valid entry holding `reg`.
     pub fn lookup(&self, reg: u8) -> Option<usize> {
         self.live().iter().position(|e| e.valid && e.reg == reg)
     }
 
+    // simlint: hot
     /// Bump LRU recency of entry `i`.
     pub fn touch(&mut self, i: usize) {
         self.tick += 1;
@@ -139,6 +142,7 @@ impl CacheTable {
         self.live().iter().filter(|e| e.valid).map(|e| e.reg).collect()
     }
 
+    // simlint: hot
     /// Registers of all valid entries, written into `out` (cleared first).
     /// The RFC write-back flush calls this every warp deactivation; a
     /// reused buffer stops growing after warm-up, so the steady state is
@@ -148,6 +152,7 @@ impl CacheTable {
         out.extend(self.live().iter().filter(|e| e.valid).map(|e| e.reg));
     }
 
+    // simlint: hot
     /// Unlock all entries (instruction dispatched, §III-C1).
     pub fn unlock_all(&mut self) {
         for e in self.live_mut() {
@@ -173,6 +178,7 @@ impl CacheTable {
         self.live()
     }
 
+    // simlint: hot
     /// Install `(reg, near, locked)`, evicting through `victim` if needed.
     ///
     /// Mechanism common to every policy: a present tag is updated in place
@@ -233,6 +239,7 @@ impl CacheTable {
         Some(i)
     }
 
+    // simlint: hot
     /// Least-recently-used unlocked entry (the plain-LRU building block).
     pub fn lru_victim(&self) -> Option<usize> {
         self.live()
@@ -244,6 +251,7 @@ impl CacheTable {
     }
 }
 
+// simlint: hot
 /// The paper's replacement chooser (§IV-A1), after invalid-first: a random
 /// unlocked entry among those with *far* reuse, otherwise LRU.
 ///
@@ -262,6 +270,7 @@ pub fn reuse_guided_victim(ct: &CacheTable, rng: &mut Rng) -> Option<usize> {
     if nfar == 0 {
         return ct.lru_victim();
     }
+    // simlint: allow(rng-discipline) reason="replacement decision point; draws the policy Rng"
     let k = rng.below(nfar);
     ct.entries()
         .iter()
@@ -271,6 +280,7 @@ pub fn reuse_guided_victim(ct: &CacheTable, rng: &mut Rng) -> Option<usize> {
         .map(|(i, _)| i)
 }
 
+// simlint: hot
 /// Plain LRU over unlocked entries (Fig 17's traditional replacement; no
 /// RNG draws, matching the pre-refactor `traditional` path bit-exactly).
 pub fn plain_lru_victim(ct: &CacheTable, _rng: &mut Rng) -> Option<usize> {
@@ -342,6 +352,7 @@ impl PartialEq for MissList {
 impl Eq for MissList {}
 
 impl MissList {
+    // simlint: hot
     /// Append one missing `(slot, reg)`; panics past [`MAX_SRC`].
     #[inline]
     pub fn push(&mut self, slot: u8, reg: u8) {
@@ -367,6 +378,7 @@ impl MissList {
         self.len == 0
     }
 
+    // simlint: hot
     /// Keep only the entries `keep` returns true for, preserving order —
     /// the in-place replacement for the old drain-into-a-new-`Vec`
     /// filtering in the RFC policies.
@@ -883,6 +895,7 @@ impl CollectorArray {
         self.nearv & (1 << ci) != 0
     }
 
+    // simlint: hot
     /// Does any unit owned by `w` hold cached values? (Malekeh §IV-B1
     /// priority scan — a bitmask walk plus one owner-byte read per
     /// value-holding unit.)
@@ -906,6 +919,7 @@ impl CollectorArray {
 
     // ----------------------------------------------------- mask upkeep
 
+    // simlint: hot
     /// Recompute unit `ci`'s readiness bit from the hot arrays.
     #[inline]
     fn update_ready(&mut self, ci: usize) {
@@ -917,6 +931,7 @@ impl CollectorArray {
         }
     }
 
+    // simlint: hot
     /// Resync the value-bit mirrors of unit `ci` from its cache table
     /// (called after every table mutation; O(ct entries)).
     fn resync_values(&mut self, ci: usize) {
@@ -933,6 +948,7 @@ impl CollectorArray {
         }
     }
 
+    // simlint: hot
     /// Install the hot scalars of a fresh allocation into unit `ci`.
     fn set_hot(&mut self, ci: usize, warp: u8, instr: &Instruction, now: u64) {
         debug_assert!(warp != NO_OWNER, "warp id {NO_OWNER} is the empty sentinel");
@@ -947,6 +963,7 @@ impl CollectorArray {
 
     // ------------------------------------------------------ operations
 
+    // simlint: hot
     /// Mark source slot of unit `ci` ready (operand arrived over port S).
     #[inline]
     pub fn deliver(&mut self, ci: usize, slot: u8) {
@@ -954,6 +971,7 @@ impl CollectorArray {
         self.update_ready(ci);
     }
 
+    // simlint: hot
     /// [`Collector::alloc_ocu`] on unit `ci`.
     pub fn alloc_ocu(&mut self, ci: usize, warp: u8, instr: &Instruction, now: u64) -> AllocResult {
         debug_assert!(!self.occupied(ci));
@@ -968,6 +986,7 @@ impl CollectorArray {
         res
     }
 
+    // simlint: hot
     /// [`Collector::alloc_ccu`] on unit `ci`.
     pub fn alloc_ccu(
         &mut self,
@@ -982,6 +1001,7 @@ impl CollectorArray {
         self.alloc_ccu_admit(ci, warp, instr, now, rng, victim, &mut |_, _| true)
     }
 
+    // simlint: hot
     /// [`Collector::alloc_ccu_admit`] on unit `ci` — same flush-on-owner-
     /// change ordering, same per-source lookup/allocate sequence, same RNG
     /// draws.
@@ -1036,6 +1056,7 @@ impl CollectorArray {
         res
     }
 
+    // simlint: hot
     /// [`Collector::alloc_boc`] on unit `ci`. Requires
     /// [`CollectorArray::enable_windows`].
     pub fn alloc_boc(
@@ -1087,6 +1108,7 @@ impl CollectorArray {
         res
     }
 
+    // simlint: hot
     /// [`Collector::bank_operand_arrived`] on unit `ci`.
     pub fn bank_operand_arrived(&mut self, ci: usize, slot: u8, reg: u8, bow: bool) {
         self.deliver(ci, slot);
@@ -1106,6 +1128,7 @@ impl CollectorArray {
         }
     }
 
+    // simlint: hot
     /// [`Collector::dispatched`] on unit `ci`.
     pub fn dispatched(&mut self, ci: usize, caching: bool) {
         self.occ &= !(1 << ci);
@@ -1120,6 +1143,7 @@ impl CollectorArray {
         }
     }
 
+    // simlint: hot
     /// [`Collector::ccu_writeback`] on unit `ci`.
     #[allow(clippy::too_many_arguments)]
     pub fn ccu_writeback(
@@ -1155,6 +1179,7 @@ impl CollectorArray {
         false
     }
 
+    // simlint: hot
     /// [`Collector::boc_writeback`] on unit `ci`.
     pub fn boc_writeback(&mut self, ci: usize, seq: u64, reg: u8) -> bool {
         if let Some(bi) = self

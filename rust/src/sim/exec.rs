@@ -119,12 +119,14 @@ impl ExecUnits {
         }
     }
 
+    // simlint: hot
     /// Can `pipe` accept an instruction at `now`?
     #[inline]
     pub fn can_accept(&self, pipe: Pipe, now: u64) -> bool {
         self.next_accept[pipe as usize] <= now
     }
 
+    // simlint: hot
     /// Dispatch `instr` at `now`. `mem_done` is the memory-system
     /// completion cycle for LSU ops (ignored otherwise). `collector` and
     /// `boc_seq` identify the producing collector for cache writeback.
@@ -163,6 +165,7 @@ impl ExecUnits {
         done
     }
 
+    // simlint: hot
     /// Dispatch one cycle's picks in a single call. The requests target
     /// distinct pipes (at most one pick per pipe per cycle), so the
     /// per-request effects commute: each dispatch advances only its own
@@ -175,6 +178,7 @@ impl ExecUnits {
         }
     }
 
+    // simlint: hot
     /// Pop all writebacks due at or before `now`.
     pub fn drain_due(&mut self, now: u64, out: &mut Vec<WbEvent>) {
         while let Some(Reverse(ev)) = self.events.peek() {
@@ -186,11 +190,13 @@ impl ExecUnits {
         }
     }
 
+    // simlint: hot
     /// Any instructions still in flight?
     pub fn busy(&self) -> bool {
         !self.events.is_empty()
     }
 
+    // simlint: hot
     /// Cycle of the next completion (for idle fast-forward).
     pub fn next_event_cycle(&self) -> Option<u64> {
         self.events.peek().map(|Reverse(e)| e.cycle)

@@ -27,7 +27,7 @@
 //! request set, simulation results are bit-identical at any
 //! `sim_threads` worker count (see `docs/ARCHITECTURE.md`).
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::energy::{EnergyCounts, EventKind};
 
@@ -316,10 +316,17 @@ pub struct L1Cache {
     mshrs: usize,
     /// line -> completion cycle of the outstanding fill
     /// (`PENDING_FILL` while the L2 latency is still unserved).
-    outstanding: HashMap<u64, u64>,
+    ///
+    /// Ordered map by design: `retain`/`iter` below walk it, and the
+    /// simlint `unordered-iteration` rule bans hash-order walks in
+    /// `sim/` — every current use (per-entry retain, count, max) is
+    /// order-insensitive, but BTreeMap keeps that true by construction
+    /// instead of by audit (`mshr_bookkeeping_is_insertion_order_free`
+    /// pins it).
+    outstanding: BTreeMap<u64, u64>,
     /// Lines whose deferred primary miss has not retried yet (the retry is
     /// counted as the miss; later same-line loads count as MSHR merges).
-    deferred_primary: HashSet<u64>,
+    deferred_primary: BTreeSet<u64>,
     /// L1 lookups.
     pub accesses: u64,
     /// L1 hits.
@@ -333,8 +340,8 @@ impl L1Cache {
             tags: TagStore::new(bytes, line_bytes, ways),
             latency,
             mshrs,
-            outstanding: HashMap::new(),
-            deferred_primary: HashSet::new(),
+            outstanding: BTreeMap::new(),
+            deferred_primary: BTreeSet::new(),
             accesses: 0,
             hits: 0,
         }
@@ -580,6 +587,40 @@ mod tests {
         // spills never touch cache-event counters (zero-entry contract)
         assert_eq!(e.get(EventKind::CcuRead), 0);
         assert_eq!(e.get(EventKind::CcuWrite), 0);
+    }
+
+    #[test]
+    fn mshr_bookkeeping_is_insertion_order_free() {
+        // the MSHR map is walked by retain/count/max in load_or_defer and
+        // resolve_fill; none of those may depend on the order the misses
+        // were installed. Drive the same miss set through two caches in
+        // permuted insertion orders (fills resolve in the canonical sorted
+        // order either way, as the L2 serial phase guarantees) and require
+        // identical completion cycles and counters. mshrs=2 so the
+        // back-pressure count/max path is exercised, not just retain.
+        let run = |order: &[u64]| {
+            let mut l1 = L1Cache::new(64 * 1024, 128, 4, 28, 2);
+            let mut port = MemPort::new(0);
+            for &l in order {
+                assert_eq!(l1.load_or_defer(l, 0, &mut port), L1Fetch::Deferred);
+            }
+            let mut fills: Vec<u64> = order.to_vec();
+            fills.sort_unstable();
+            for &l in &fills {
+                l1.resolve_fill(l, 100 + l, 0);
+            }
+            let mut out = Vec::new();
+            for &l in &fills {
+                match l1.load_or_defer(l, 1, &mut port) {
+                    L1Fetch::Miss(c) => out.push((l, c)),
+                    other => panic!("want Miss for line {l}, got {other:?}"),
+                }
+            }
+            (out, l1.accesses, l1.hits)
+        };
+        let a = run(&[3, 11, 7, 5, 2]);
+        let b = run(&[7, 2, 3, 11, 5]);
+        assert_eq!(a, b, "MSHR outcomes must not depend on miss insertion order");
     }
 
     #[test]

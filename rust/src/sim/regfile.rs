@@ -59,6 +59,7 @@ impl RegFileBanks {
         }
     }
 
+    // simlint: hot
     /// Bank index for a register of a warp (Turing-style interleave: the
     /// warp offset spreads the same register of different warps).
     #[inline]
@@ -66,28 +67,33 @@ impl RegFileBanks {
         (reg as usize + warp as usize) % self.nbanks
     }
 
+    // simlint: hot
     /// Queue a read request.
     pub fn push_read(&mut self, req: ReadReq) {
         let b = self.bank_of(req.reg, req.warp);
         self.read_q[b].push_back(req);
     }
 
+    // simlint: hot
     /// Queue a write request.
     pub fn push_write(&mut self, w: WriteReq) {
         let b = self.bank_of(w.reg, w.warp);
         self.write_q[b].push_back(w);
     }
 
+    // simlint: hot
     /// Total queued reads (for idle detection).
     pub fn pending_reads(&self) -> usize {
         self.read_q.iter().map(|q| q.len()).sum()
     }
 
+    // simlint: hot
     /// Total queued writes.
     pub fn pending_writes(&self) -> usize {
         self.write_q.iter().map(|q| q.len()).sum()
     }
 
+    // simlint: hot
     /// One arbitration cycle. `port_used[collector]` counts operands
     /// already delivered to each collector this cycle (updated in place);
     /// `ports_per_collector` is the crossbar output width per collector.

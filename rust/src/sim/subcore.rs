@@ -174,6 +174,7 @@ impl SubCore {
             && self.collectors.occ_mask() == 0
     }
 
+    // simlint: hot
     /// One cycle. L2-bound loads queue on `port` and defer their dispatch
     /// (the SM treats a non-empty port as its synchronization boundary).
     pub fn step(&mut self, now: u64, l1: &mut L1Cache, port: &mut MemPort) {
@@ -189,6 +190,7 @@ impl SubCore {
 
     // ------------------------------------------------------------ writeback
 
+    // simlint: hot
     /// Stable insertion sort of one cycle's (small) writeback batch by
     /// `(collector, far-destination-last)` — byte-identical ordering to
     /// the stable `sort_by_key` it replaces, but never allocating the
@@ -206,6 +208,7 @@ impl SubCore {
         }
     }
 
+    // simlint: hot
     fn writeback(&mut self, now: u64) {
         let mut buf = std::mem::take(&mut self.wb_buf);
         buf.clear();
@@ -245,6 +248,7 @@ impl SubCore {
 
     // ------------------------------------------------------------- dispatch
 
+    // simlint: hot
     fn dispatch(&mut self, now: u64, l1: &mut L1Cache, port: &mut MemPort) {
         // per pipe, oldest ready collector first. A pipe's dispatch only
         // advances that pipe's own accept cursor and never changes another
@@ -330,6 +334,7 @@ impl SubCore {
 
     // --------------------------------------------------- operand collection
 
+    // simlint: hot
     fn collect_operands(&mut self, now: u64) {
         self.port_used.iter_mut().for_each(|p| *p = 0);
         self.grant_buf.clear();
@@ -355,6 +360,7 @@ impl SubCore {
 
     // ---------------------------------------------------------------- issue
 
+    // simlint: hot
     /// Build the warp priority order for this cycle into `order_buf`: the
     /// greedy warp first, then the policy's priority order.
     fn build_order(&mut self) {
@@ -366,6 +372,7 @@ impl SubCore {
         self.policy.build_order(&mut self.order_buf, greedy, &self.warps, &self.collectors);
     }
 
+    // simlint: hot
     /// Scoreboard-level readiness of warp `w`.
     fn warp_ready(&self, w: usize) -> bool {
         let warp = &self.warps[w];
@@ -375,10 +382,12 @@ impl SubCore {
         }
     }
 
+    // simlint: hot
     fn any_ready(&self) -> bool {
         (0..self.warps.len()).any(|w| self.warp_ready(w))
     }
 
+    // simlint: hot
     /// Two-level scheduler bookkeeping: swap active warps out when the
     /// policy says so — long-latency stalls (hardware RFC) or strand
     /// boundaries (software RFC / LTRF), §VI-A. Short-latency stalls leave
@@ -447,6 +456,7 @@ impl SubCore {
         }
     }
 
+    // simlint: hot
     fn issue(&mut self, now: u64) {
         self.policy_consulted = false;
         self.active_set_changed = false;
@@ -557,6 +567,7 @@ impl SubCore {
         self.last_state = state;
     }
 
+    // simlint: hot
     /// Fast-forward probe: if nothing can happen before the next event
     /// cycle, return that cycle. `None` = must simulate cycle-by-cycle
     /// (work is queued, a warp issued, or the next cycle is not a repeat
@@ -602,6 +613,7 @@ impl SubCore {
         self.eu.next_event_cycle()
     }
 
+    // simlint: hot
     /// Account `n` skipped quiescent cycles (fast-forward bookkeeping must
     /// match what `step` would have recorded: the scheduler state repeats,
     /// so the skipped cycles replay `last_state`).

@@ -328,21 +328,20 @@ fn fifo_and_belady_fingerprints_are_stable_and_distinct() {
 #[test]
 fn hot_paths_carry_no_scheme_dispatch() {
     // the refactor's acceptance gate: sub-core and collector decide
-    // nothing by scheme — matching on Scheme in these files means a
-    // decision leaked out of the policy layer
-    for file in ["rust/src/sim/subcore.rs", "rust/src/sim/collector.rs"] {
-        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join(file);
-        let src = std::fs::read_to_string(&path).unwrap();
-        let body = src.split("#[cfg(test)]").next().unwrap();
-        assert!(
-            !body.contains("Scheme::"),
-            "{file}: Scheme:: reference in non-test code"
-        );
-        assert!(
-            !body.contains("match self.scheme") && !body.contains(".scheme {"),
-            "{file}: scheme dispatch in non-test code"
-        );
-    }
+    // nothing by scheme — a Scheme:: reference or a match on a scheme
+    // field in those files means a decision leaked out of the policy
+    // layer. Enforced through the simlint engine (token-level, comment-
+    // and string-aware), which replaced this test's original literal
+    // grep; `malekeh lint` runs the same rule tree-wide.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let report = malekeh::lint::run_tree(&root).expect("lint run over rust/src");
+    let leaks: Vec<String> = report
+        .findings
+        .iter()
+        .filter(|f| f.rule == malekeh::lint::rules::SCHEME_DISPATCH && !f.is_allowed())
+        .map(|f| format!("{}:{}: {}", f.file, f.line, f.message))
+        .collect();
+    assert!(leaks.is_empty(), "scheme dispatch leaked into the hot path:\n{}", leaks.join("\n"));
 }
 
 #[test]

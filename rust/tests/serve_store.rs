@@ -212,6 +212,72 @@ fn rewritten_trace_file_is_a_cache_miss_not_stale_stats() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Satellite regression for the serve-panic contract: hostile or
+/// malformed input must produce a protocol-level `ERR` (or at worst a
+/// dropped connection) — never a daemon death. Exercises every parse
+/// path a client controls, then proves the daemon still serves real
+/// work afterwards.
+#[test]
+fn daemon_survives_hostile_input() {
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::TcpStream;
+
+    let server = Server::bind(ServerOpts {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        store_dir: None,
+    })
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let daemon = std::thread::spawn(move || server.run().unwrap());
+
+    // raw socket: read the greeting, then a volley of malformed requests
+    // — every one must come back as a one-line ERR on a live connection
+    let mut sock = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("MALEKEH-SERVE/1"), "{line:?}");
+    for bad in [
+        "SUBMIT bench=%zz",          // non-hex percent escape
+        "SUBMIT bench=%",            // truncated escape
+        "SUBMIT bench=x spurious",   // token without =
+        "SUBMIT scheme=malekeh",     // no workload at all
+        "SUBMIT bench=x sms=no",     // unparseable number
+        "STATUS 99999",              // job that never existed
+        "RESULT notanid",            // malformed job id
+        "FROBNICATE all the things", // unknown verb
+    ] {
+        sock.write_all(format!("{bad}\n").as_bytes()).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR "), "{bad:?} must ERR, got {line:?}");
+    }
+    drop(reader);
+    drop(sock);
+
+    // truncated frame: binary junk with no terminating newline, then a
+    // hard close; the handler may drop the connection, the daemon not
+    let mut sock = TcpStream::connect(&addr).unwrap();
+    let mut greeting = [0u8; 4];
+    sock.read_exact(&mut greeting).unwrap();
+    sock.write_all(&[0xff, 0xfe, 0x00, 0x80, b'S', b'U', b'B']).unwrap();
+    drop(sock);
+
+    // the daemon is still up and still does real work
+    let mut client = Client::connect(&addr).unwrap();
+    assert!(client.ping().unwrap().starts_with("pong"), "daemon must survive the volley");
+    let spec = {
+        let mut s = JobSpec::bench("nn");
+        s.overrides.push(("max_cycles".to_string(), "5000".to_string()));
+        s
+    };
+    let (id, _) = client.submit(&spec).unwrap();
+    assert_eq!(client.wait(id).unwrap(), JobState::Done);
+    client.shutdown().unwrap();
+    daemon.join().unwrap();
+}
+
 /// Pull the 16-hex-digit `fingerprint` field out of a stats JSON line.
 fn json_fingerprint(json: &str) -> u64 {
     let tag = "\"fingerprint\":\"";

@@ -1,0 +1,307 @@
+//! simlint self-test: every rule pinned with firing and non-firing
+//! fixtures, the directive grammar exercised end-to-end (suppression
+//! placement, mandatory reasons, unused allows, dangling hot markers),
+//! the baseline ratchet, and the shipped tree held to exactly the allow
+//! counts the committed `rust/tests/golden/simlint_baseline.json`
+//! records. Fixtures are lexed, not compiled — they only need to look
+//! like the Rust the rules match.
+
+use std::path::Path;
+
+use malekeh::lint::{baseline, DIRECTIVE_RULE, Finding, lint_source, Report, rules};
+
+/// Findings that survive suppression for one fixture file.
+fn unsup(rel: &str, src: &str) -> Vec<Finding> {
+    lint_source(rel, src).into_iter().filter(|f| !f.is_allowed()).collect()
+}
+
+/// How many findings of `rule` are in `fs`.
+fn fired(fs: &[Finding], rule: &str) -> usize {
+    fs.iter().filter(|f| f.rule == rule).count()
+}
+
+// ---------------------------- scheme-dispatch --------------------------------
+
+#[test]
+fn scheme_dispatch_fires_on_scheme_refs_in_hot_files() {
+    let fs = unsup("sim/subcore.rs", "fn f() -> u32 { Scheme::MALEKEH as u32 }\n");
+    assert_eq!(fired(&fs, rules::SCHEME_DISPATCH), 1, "{fs:?}");
+    let fs = unsup("sim/collector.rs", "fn f(&self) { match self.scheme { _ => {} } }\n");
+    assert_eq!(fired(&fs, rules::SCHEME_DISPATCH), 1, "{fs:?}");
+}
+
+#[test]
+fn scheme_dispatch_ignores_the_policy_layer_and_tests() {
+    let src = "fn f() -> u32 { Scheme::MALEKEH as u32 }\n";
+    assert!(unsup("sim/policy/registry.rs", src).is_empty());
+    assert!(unsup("sim/gpu.rs", src).is_empty(), "only subcore/collector are in scope");
+    let src = "#[cfg(test)]\nmod tests {\n    fn f() { let s = Scheme::MALEKEH; }\n}\n";
+    assert!(unsup("sim/subcore.rs", src).is_empty(), "cfg(test) items are exempt");
+}
+
+// ---------------------------- hot-path-alloc ---------------------------------
+
+#[test]
+fn hot_path_alloc_fires_inside_hot_fns() {
+    let src = r#"
+// simlint: hot
+fn step(xs: &[u8]) {
+    let v: Vec<u8> = Vec::new();
+    let s = format!("{}", v.len());
+    let w: Vec<u8> = xs.iter().copied().collect();
+    let _ = (s, w);
+}
+"#;
+    let fs = unsup("sim/subcore.rs", src);
+    assert_eq!(fired(&fs, rules::HOT_PATH_ALLOC), 3, "Vec::new + format! + collect: {fs:?}");
+}
+
+#[test]
+fn hot_path_alloc_ignores_unmarked_fns_and_reuse() {
+    let src = r#"
+fn cold() -> Vec<u8> {
+    Vec::with_capacity(8)
+}
+// simlint: hot
+fn step(buf: &mut Vec<u8>) {
+    buf.clear();
+    buf.push(1);
+}
+"#;
+    assert!(unsup("sim/subcore.rs", src).is_empty(), "scratch reuse in a hot fn is fine");
+}
+
+#[test]
+fn hot_marker_attaches_to_the_next_fn_only() {
+    let src = r#"
+fn before() -> Vec<u8> { Vec::new() }
+// simlint: hot
+fn marked(n: u64) -> u64 { n + 1 }
+fn after() -> Vec<u8> { Vec::new() }
+"#;
+    assert!(unsup("sim/subcore.rs", src).is_empty());
+}
+
+// -------------------------- unordered-iteration ------------------------------
+
+#[test]
+fn unordered_iteration_fires_on_hash_walks_in_scope() {
+    let src = r#"
+fn f(m: &HashMap<u64, u64>, s: HashSet<u32>) -> usize {
+    let n = m.values().count();
+    for x in s {
+        let _ = x;
+    }
+    n
+}
+"#;
+    let fs = unsup("harness/mod.rs", src);
+    assert_eq!(fired(&fs, rules::UNORDERED_ITERATION), 2, "{fs:?}");
+}
+
+#[test]
+fn unordered_iteration_allows_lookups_ordered_maps_and_other_layers() {
+    let src = r#"
+fn f(m: &std::collections::HashMap<u64, u64>, b: &BTreeMap<u64, u64>) -> u64 {
+    let hit = m.get(&3).copied().unwrap_or(0);
+    let walked: u64 = b.keys().sum();
+    hit + walked
+}
+"#;
+    assert!(unsup("sim/memory.rs", src).is_empty(), "point lookups and BTree walks are fine");
+    let src = "fn f(m: &HashMap<u64, u64>) { for k in m.keys() { let _ = k; } }\n";
+    assert!(unsup("stats.rs", src).is_empty(), "outside sim/, harness/, serve/store.rs");
+}
+
+// ---------------------------- rng-discipline ---------------------------------
+
+#[test]
+fn rng_discipline_fires_outside_the_allowlist() {
+    let fs = unsup("sim/memory.rs", "fn f(rng: &mut Rng) -> usize { rng.below(4) }\n");
+    assert_eq!(fired(&fs, rules::RNG_DISCIPLINE), 1, "{fs:?}");
+    // ambiguous draw names fire only with an rng-named receiver
+    let fs = unsup("sim/memory.rs", "fn f(rng: &mut Rng) -> u64 { rng.range(1, 5) }\n");
+    assert_eq!(fired(&fs, rules::RNG_DISCIPLINE), 1, "{fs:?}");
+}
+
+#[test]
+fn rng_discipline_ignores_the_policy_layer_and_non_rng_receivers() {
+    let src = "fn f(rng: &mut Rng) -> usize { rng.below(4) }\n";
+    assert!(unsup("sim/policy/malekeh.rs", src).is_empty());
+    assert!(unsup("trace/workloads.rs", src).is_empty(), "seeded generators are allowlisted");
+    let src = "fn f(axis: &Axis) -> (f64, f64) { axis.range(0, 4) }\n";
+    assert!(unsup("sim/memory.rs", src).is_empty(), "`.range()` on a non-rng receiver");
+}
+
+// ------------------------------- wallclock -----------------------------------
+
+#[test]
+fn wallclock_fires_in_the_deterministic_core() {
+    let fs = unsup("sim/gpu.rs", "fn f() -> u64 { let t = Instant::now(); t.as_secs() }\n");
+    assert_eq!(fired(&fs, rules::WALLCLOCK), 1, "{fs:?}");
+    let fs = unsup("harness/mod.rs", "fn f() -> bool { env::var(\"MALEKEH_X\").is_ok() }\n");
+    assert_eq!(fired(&fs, rules::WALLCLOCK), 1, "{fs:?}");
+}
+
+#[test]
+fn wallclock_exempts_the_cli_shell_daemon_and_linter() {
+    let src = "fn f() -> Instant { Instant::now() }\n";
+    for rel in ["main.rs", "cli.rs", "serve/server.rs", "runtime/mod.rs", "lint/mod.rs"] {
+        assert!(unsup(rel, src).is_empty(), "{rel} is exempt by path");
+    }
+}
+
+// ------------------------------ serve-panic ----------------------------------
+
+#[test]
+fn serve_panic_fires_on_panicky_request_handling() {
+    let src = r#"
+fn handle(line: &str, buf: &[u8]) -> u8 {
+    let n: u64 = line.parse().unwrap();
+    if n > 9 {
+        panic!("bad request");
+    }
+    buf[0]
+}
+"#;
+    let fs = unsup("serve/server.rs", src);
+    assert_eq!(fired(&fs, rules::SERVE_PANIC), 3, "unwrap + panic! + index: {fs:?}");
+}
+
+#[test]
+fn serve_panic_ignores_recovery_idioms_and_other_layers() {
+    let src = r#"
+fn lock(m: &Mutex<u64>) -> u64 {
+    let g = m.lock().unwrap_or_else(|p| p.into_inner());
+    let [a, b] = [1u64, 2u64];
+    *g + a + b
+}
+"#;
+    assert!(unsup("serve/server.rs", src).is_empty(), "poison recovery and patterns are fine");
+    let src = "fn f(v: &[u8]) -> u8 { v[0] }\n";
+    assert!(unsup("sim/memory.rs", src).is_empty(), "indexing is fine outside serve/");
+}
+
+// ------------------------------ directives -----------------------------------
+
+#[test]
+fn allow_suppresses_on_its_own_line_and_the_next() {
+    let above = r#"
+fn f(rng: &mut Rng) -> usize {
+    // simlint: allow(rng-discipline) reason="fixture"
+    rng.below(4)
+}
+"#;
+    let report = Report { findings: lint_source("sim/memory.rs", above) };
+    assert!(report.unsuppressed().is_empty(), "{:?}", report.findings);
+    assert_eq!(report.allow_counts()["rng-discipline"], 1);
+
+    let same = concat!(
+        "fn f(rng: &mut Rng) -> usize { rng.below(4) }",
+        " // simlint: allow(rng-discipline) reason=\"fixture\"\n"
+    );
+    let report = Report { findings: lint_source("sim/memory.rs", same) };
+    assert!(report.unsuppressed().is_empty(), "{:?}", report.findings);
+    assert_eq!(report.allow_counts()["rng-discipline"], 1);
+}
+
+#[test]
+fn broken_directives_are_findings_themselves() {
+    // reasonless: the draw stays unsuppressed AND the allow is reported
+    let src = r#"
+fn f(rng: &mut Rng) -> usize {
+    // simlint: allow(rng-discipline)
+    rng.below(4)
+}
+"#;
+    let fs = lint_source("sim/memory.rs", src);
+    assert_eq!(fired(&fs, rules::RNG_DISCIPLINE), 1, "{fs:?}");
+    assert_eq!(fired(&fs, DIRECTIVE_RULE), 1, "{fs:?}");
+    assert!(fs.iter().all(|f| !f.is_allowed()), "a reasonless allow suppresses nothing");
+
+    // unknown rule name
+    let fs = lint_source("sim/memory.rs", "// simlint: allow(bogus) reason=\"x\"\nfn f() {}\n");
+    assert_eq!(fired(&fs, DIRECTIVE_RULE), 1, "{fs:?}");
+
+    // allow that covers nothing
+    let src = "// simlint: allow(wallclock) reason=\"stale\"\nfn f() -> u64 { 3 }\n";
+    let fs = lint_source("sim/memory.rs", src);
+    assert_eq!(fired(&fs, DIRECTIVE_RULE), 1, "{fs:?}");
+
+    // hot marker with no fn below it
+    let fs = lint_source("sim/memory.rs", "struct S;\n// simlint: hot\n");
+    assert_eq!(fired(&fs, DIRECTIVE_RULE), 1, "{fs:?}");
+
+    // unrecognised directive body
+    let fs = lint_source("sim/memory.rs", "// simlint: allo(rng-discipline)\nfn f() {}\n");
+    assert_eq!(fired(&fs, DIRECTIVE_RULE), 1, "{fs:?}");
+}
+
+#[test]
+fn doc_comments_never_parse_as_directives() {
+    let src = "/// `// simlint: allow(wallclock) reason=\"x\"` is the grammar\nfn f() {}\n";
+    assert!(lint_source("sim/memory.rs", src).is_empty());
+}
+
+// -------------------------- baseline & the tree ------------------------------
+
+#[test]
+fn baseline_round_trips_and_ratchets_both_directions() {
+    let allowed = Finding {
+        rule: "wallclock".to_string(),
+        file: "harness/mod.rs".to_string(),
+        line: 1,
+        message: "fixture".to_string(),
+        allowed: Some("fixture".to_string()),
+    };
+    let report = Report { findings: vec![allowed.clone()] };
+    let base = baseline::parse(&baseline::render(&report)).expect("round-trip");
+    assert_eq!(base.unsuppressed, 0);
+    assert_eq!(base.allows["wallclock"], 1);
+    baseline::check(&report, &base).expect("exact counts pass");
+
+    // a new suppression fails against a cleaner baseline...
+    let empty = Report { findings: Vec::new() };
+    let base0 = baseline::parse(&baseline::render(&empty)).expect("round-trip");
+    assert!(baseline::check(&report, &base0).is_err(), "new allow must fail");
+    // ...and a cleaner tree fails a stale baseline until re-blessed
+    assert!(baseline::check(&empty, &base).is_err(), "stale baseline must fail");
+
+    // any unsuppressed finding fails regardless of allow counts
+    let mut live = allowed;
+    live.allowed = None;
+    let report = Report { findings: vec![live] };
+    assert!(baseline::check(&report, &base0).is_err(), "unsuppressed finding must fail");
+}
+
+#[test]
+fn shipped_tree_is_clean_with_the_committed_allows() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let report = malekeh::lint::run_tree(&root).expect("lint rust/src");
+    let bad: Vec<String> = report
+        .unsuppressed()
+        .iter()
+        .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message))
+        .collect();
+    assert!(bad.is_empty(), "unsuppressed findings:\n{}", bad.join("\n"));
+    let counts = report.allow_counts();
+    assert_eq!(counts["rng-discipline"], 1, "{counts:?}");
+    assert_eq!(counts["wallclock"], 2, "{counts:?}");
+    let silent: u64 = counts
+        .iter()
+        .filter(|(r, _)| r.as_str() != "rng-discipline" && r.as_str() != "wallclock")
+        .map(|(_, n)| *n)
+        .sum();
+    assert_eq!(silent, 0, "every other rule runs allow-free: {counts:?}");
+}
+
+#[test]
+fn committed_baseline_matches_the_tree_byte_for_byte() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = malekeh::lint::run_tree(&manifest.join("rust/src")).expect("lint rust/src");
+    let path = manifest.join("rust/tests/golden/simlint_baseline.json");
+    let text = std::fs::read_to_string(&path).expect("committed baseline");
+    let base = baseline::parse(&text).expect("parse baseline");
+    baseline::check(&report, &base).expect("tree must match the committed baseline");
+    assert_eq!(text, baseline::render(&report), "baseline drifted from --bless output");
+}
